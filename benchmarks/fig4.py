@@ -1,0 +1,71 @@
+"""Paper Fig. 4 + §4.2: schedule visualisation and jitter absorption.
+
+Two scenarios from the paper:
+  left : glred ~ spmv       -> l = 1 already hides everything
+  right: glred >> spmv      -> staggered reductions make l >= 2 pay
+
+Plus the robustness claim: with log-normal glred jitter, deeper pipelines
+absorb run-time variance (mean iteration time grows slower with jitter).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.schedule_sim import iteration_time
+
+BAL = {"spmv": 100e-6, "axpy1": 2e-6, "glred": 100e-6}    # balanced (left)
+COMM = {"spmv": 10e-6, "axpy1": 1e-6, "glred": 300e-6}    # comm-bound (right)
+
+
+def ascii_schedule(l, kernels, n=4):
+    """Textual Fig. 4: per-iteration [issue ... wait] spans of reductions."""
+    t_body = kernels["spmv"] + (2 * l + 3) * kernels["axpy1"]
+    lines = []
+    for i in range(n):
+        issue = (i + 1) * t_body
+        use = (i + l) * t_body
+        lines.append(
+            f"  iter {i}: body [{i*t_body*1e6:7.1f},{issue*1e6:7.1f}]us  "
+            f"glred req({i}) in flight until iter {i+l} "
+            f"(~{(use-issue)*1e6:.1f}us window)")
+    return "\n".join(lines)
+
+
+def run(verbose=True):
+    if verbose:
+        print("== Fig. 4 schedule scenarios ==")
+    res = {}
+    for name, k in (("balanced", BAL), ("comm-bound", COMM)):
+        ts = {}
+        for m, l in [("cg", 0), ("plcg", 1), ("plcg", 2), ("plcg", 3)]:
+            ts[(m, l)] = iteration_time(m, l, k, jitter=0.0)
+        res[name] = ts
+        if verbose:
+            print(f"-- {name}: glred/spmv = {k['glred']/k['spmv']:.1f}")
+            for (m, l), t in ts.items():
+                nm = "CG" if m == "cg" else f"p({l})-CG"
+                print(f"   {nm:>8s}: {t*1e6:7.1f} us/iter")
+    # left: l>=2 adds <10% over l=1; right: l=2 gives >25% over l=1
+    left_ok = res["balanced"][("plcg", 2)] > 0.9 * res["balanced"][("plcg", 1)]
+    right_ok = res["comm-bound"][("plcg", 2)] < 0.75 * res["comm-bound"][("plcg", 1)]
+
+    if verbose:
+        print("-- staggering window (comm-bound, l=2):")
+        print(ascii_schedule(2, COMM))
+        print("== jitter absorption (comm-bound) ==")
+    jit_ok = True
+    for jitter in (0.0, 0.25, 0.5, 1.0):
+        t1 = iteration_time("plcg", 1, COMM, jitter=jitter, n_iters=2000)
+        t3 = iteration_time("plcg", 3, COMM, jitter=jitter, n_iters=2000)
+        if verbose:
+            print(f"   jitter {jitter:4.2f}: p(1) {t1*1e6:7.1f} us | "
+                  f"p(3) {t3*1e6:7.1f} us | ratio {t1/t3:.2f}")
+        if jitter >= 0.5:
+            jit_ok &= t3 < t1
+    assert left_ok and right_ok and jit_ok, "Fig. 4 claims failed"
+    return res
+
+
+if __name__ == "__main__":
+    run()

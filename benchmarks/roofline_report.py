@@ -1,0 +1,57 @@
+"""§Roofline report: renders the dry-run JSON records into the
+EXPERIMENTS.md table (per arch × shape × mesh: three terms, dominant
+bottleneck, MODEL_FLOPS ratio, roofline-bound MFU)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+
+def load(paths):
+    recs = []
+    for p in paths:
+        if os.path.exists(p):
+            with open(p) as f:
+                recs.extend(json.load(f))
+    return recs
+
+
+def fmt_row(r) -> str:
+    uf = r.get("useful_fraction")
+    mfu = r.get("mfu")
+    return (f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute']:.2e} | {r['t_memory']:.2e} "
+            f"| {r['t_collective']:.2e} | {r['dominant']} "
+            f"| {uf:.3f} | {mfu:.3f} |"
+            if uf is not None and mfu is not None else
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute']:.2e} | {r['t_memory']:.2e} "
+            f"| {r['t_collective']:.2e} | {r['dominant']} | - | - |")
+
+
+def render(recs) -> str:
+    hdr = ("| arch | shape | mesh | t_compute (s) | t_memory (s) "
+           "| t_collective (s) | dominant | useful | MFU-bound |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(fmt_row(r) for r in recs)
+
+
+def run(paths=("results/roofline_baseline.json",
+              "results/roofline_optimized.json"), verbose=True):
+    recs = load(paths)
+    if not recs:
+        if verbose:
+            print("== Roofline report: no dry-run JSON found (run "
+                  "`python -m repro.launch.dryrun --all --roofline --out "
+                  "results/roofline_baseline.json` first) ==")
+        return None
+    txt = render(recs)
+    if verbose:
+        print("== Roofline report ==")
+        print(txt)
+    return txt
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,34 @@
+"""Benchmark aggregator: one entry per paper table/figure + roofline report.
+
+    PYTHONPATH=src python -m benchmarks.run
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import fig2, fig3, fig4, roofline_report, table1
+
+
+def main():
+    t0 = time.time()
+    failures = []
+    for name, mod in [("table1", table1), ("fig2", fig2), ("fig3", fig3),
+                      ("fig4", fig4)]:
+        print(f"\n{'='*70}\nBENCH {name}\n{'='*70}")
+        try:
+            mod.run(verbose=True)
+            print(f"[{name}] PASS")
+        except AssertionError as e:
+            failures.append((name, str(e)))
+            print(f"[{name}] FAIL: {e}")
+    print(f"\n{'='*70}\nBENCH roofline report\n{'='*70}")
+    roofline_report.run()
+    print(f"\nTotal: {time.time()-t0:.1f}s; "
+          f"{'ALL PASS' if not failures else f'FAILURES: {failures}'}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Scaling study: sweep pipeline depth l and node count with the
+schedule-simulator + hardware profiles, for YOUR problem size — a planning
+tool for picking l (the paper: 'the pipeline length is a parameter that
+can be chosen depending on the problem and hardware setup').
+
+    PYTHONPATH=src python examples/scaling_study.py --n 8000000 --hw cori
+"""
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.schedule_sim import iteration_time
+from benchmarks.timing_model import CORI, V5E, stencil_kernel_times
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=8_000_000)
+    ap.add_argument("--hw", choices=["cori", "v5e"], default="cori")
+    ap.add_argument("--stencil", type=int, default=7)
+    ap.add_argument("--jitter", type=float, default=0.15)
+    args = ap.parse_args()
+    hw = CORI if args.hw == "cori" else V5E
+
+    nodes_list = [8, 32, 128, 512, 1024, 4096]
+    print(f"problem: {args.n/1e6:.0f}M unknowns, {args.stencil}-pt stencil, "
+          f"{hw.name}, glred jitter {args.jitter}")
+    print(f"{'nodes':>6s} | {'CG':>9s} | " +
+          " | ".join(f"{f'p({l})-CG':>9s}" for l in (1, 2, 3, 5)) +
+          " | best")
+    for nodes in nodes_list:
+        p = nodes * 16 if hw is CORI else nodes
+        k = stencil_kernel_times(hw, args.n, p, stencil_pts=args.stencil,
+                                 prec_factor=3.0)
+        t_cg = iteration_time("cg", 0, k, jitter=args.jitter)
+        ts = {l: iteration_time("plcg", l, k, jitter=args.jitter)
+              for l in (1, 2, 3, 5)}
+        best = min(ts, key=ts.get)
+        print(f"{nodes:>6d} | {t_cg*1e6:>7.1f}us | " +
+              " | ".join(f"{ts[l]*1e6:>7.1f}us" for l in (1, 2, 3, 5)) +
+              f" | l={best} ({t_cg/ts[best]:.1f}x CG)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""repro — production-grade JAX framework reproducing and extending
+
+  "Improving strong scaling of the Conjugate Gradient method for solving
+   large linear systems using global reduction pipelining"
+  (Cools, Ghysels, Cornelis, Vanroose — EuroMPI'19)
+
+Layers
+------
+core/      p(l)-CG (deep pipelined CG, Alg. 1), classic CG, Ghysels p-CG,
+           Chebyshev shifts, pipelined-reduction runtime.
+linalg/    Stencil / diagonal / dense SPD operators, preconditioners,
+           domain-decomposed (halo-exchange) variants.
+kernels/   Pallas TPU kernels (stencil SpMV, fused dot-block, fused AXPY,
+           split-KV decode attention) with jnp oracles.
+models/    LM architecture zoo (dense GQA / MoE / SSM / hybrid / enc-dec / VLM).
+configs/   The 10 assigned architecture configs + reduced smoke variants.
+train/     AdamW + ZeRO-1, pipelined gradient reduction (the paper's technique
+           applied to data-parallel training), checkpointing, data pipeline.
+serve/     KV-cache decode path.
+launch/    Production meshes, multi-pod dry-run, train/serve drivers.
+utils/     HLO collective analysis, roofline terms.
+"""
+
+__version__ = "1.0.0"

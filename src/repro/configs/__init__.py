@@ -1,0 +1,36 @@
+"""Assigned architecture registry: ``--arch <id>`` resolves here.
+
+Each module exposes ``config()`` (the exact published hyperparameters) and
+``smoke_config()`` (a reduced same-family config for CPU smoke tests).
+"""
+
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = [
+    "seamless-m4t-large-v2",
+    "qwen3-1.7b",
+    "command-r-plus-104b",
+    "smollm-135m",
+    "stablelm-12b",
+    "qwen2-vl-7b",
+    "arctic-480b",
+    "deepseek-moe-16b",
+    "zamba2-2.7b",
+    "rwkv6-7b",
+    # the paper's own "architectures" — CG benchmark problems
+    "laplace2d",
+    "icesheet3d",
+]
+
+_MOD = {i: i.replace("-", "_").replace(".", "p") for i in ARCH_IDS}
+
+
+def get_config(arch_id: str, smoke: bool = False):
+    mod = importlib.import_module(f"repro.configs.{_MOD[arch_id]}")
+    return mod.smoke_config() if smoke else mod.config()
+
+
+def lm_arch_ids():
+    return [i for i in ARCH_IDS if i not in ("laplace2d", "icesheet3d")]

@@ -1,0 +1,14 @@
+"""Stand-in for the Blatter/Pattyn ice-sheet system (PETSc SNES ex48):
+anisotropic 3D 7-point stencil, thin-sheet eps_z (DESIGN.md §10).
+Paper sizes: 100x100x50 / 150x150x100 / 200x200x150 finite elements."""
+from repro.configs.laplace2d import CGProblem
+
+
+def config():
+    return CGProblem(name="icesheet3d", kind="stencil3d",
+                     nx=256, ny=200, nz=152, eps_z=0.01, prec="blockjacobi")
+
+
+def smoke_config():
+    return CGProblem(name="icesheet3d-smoke", kind="stencil3d",
+                     nx=16, ny=12, nz=8, eps_z=0.01)

@@ -1,0 +1,22 @@
+from repro.core.types import SolveResult, SolverOps
+from repro.core import classic_cg, ghysels_pcg, pipelined_cg, reference
+from repro.core.chebyshev import chebyshev_shifts, power_method, shifts_for_operator
+
+SOLVERS = {
+    "cg": classic_cg.solve,
+    "pcg": ghysels_pcg.solve,          # Ghysels p-CG (~p(1)-CG)
+    "pipelcg": pipelined_cg.solve,     # deep pipelined p(l)-CG (Alg. 1)
+}
+
+__all__ = [
+    "SolveResult",
+    "SolverOps",
+    "classic_cg",
+    "ghysels_pcg",
+    "pipelined_cg",
+    "reference",
+    "chebyshev_shifts",
+    "power_method",
+    "shifts_for_operator",
+    "SOLVERS",
+]

@@ -1,0 +1,60 @@
+"""Auxiliary-basis shifts for p(l)-CG (paper §2.2, Eq. 25).
+
+The auxiliary basis Z = P_l(A) V is not orthogonal; its conditioning is
+governed by ||P_l(A)||_2.  Chebyshev shifts on [lambda_min, lambda_max]
+minimize that norm; the spectral interval is estimated a priori with a few
+power-method iterations (as the paper prescribes).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def chebyshev_shifts(lam_min: float, lam_max: float, l: int, dtype=jnp.float64):
+    """sigma_i = (lmax+lmin)/2 + (lmax-lmin)/2 * cos((2i+1)pi/(2l)),  i=0..l-1."""
+    i = jnp.arange(l, dtype=dtype)
+    mid = (lam_max + lam_min) / 2.0
+    rad = (lam_max - lam_min) / 2.0
+    return mid + rad * jnp.cos((2.0 * i + 1.0) * jnp.pi / (2.0 * l))
+
+
+def power_method(apply_a, n: int, iters: int = 20, key=None, dtype=jnp.float64):
+    """Estimate lambda_max of the SPD operator with a few power iterations.
+    Returns (lam_max_estimate, final_vector)."""
+    key = jax.random.PRNGKey(0) if key is None else key
+    v0 = jax.random.normal(key, (n,), dtype)
+    v0 = v0 / jnp.linalg.norm(v0)
+
+    def body(_, carry):
+        v, lam = carry
+        w = apply_a(v)
+        lam = jnp.vdot(v, w)
+        nw = jnp.linalg.norm(w)
+        return w / jnp.where(nw == 0, 1.0, nw), lam
+
+    v, lam = jax.lax.fori_loop(0, iters, body, (v0, jnp.zeros((), dtype)))
+    return lam, v
+
+
+def shifts_for_operator(op, l: int, safety: float = 1.05, dtype=jnp.float64,
+                        prec=None):
+    """Shift vector for an operator: analytic bounds if available, else a
+    power-method lambda_max and lambda_min ~ 0 (the paper's PETSc runs use
+    the conservative interval [0, 2] after Jacobi-type scaling).
+
+    With ``prec`` the bounds are estimated for the PRECONDITIONED operator
+    M^{-1}A (similar to an SPD matrix, so the power method applies) — the
+    basis polynomial P_l acts on M^{-1}A in preconditioned p(l)-CG, so
+    shifts from the unpreconditioned spectrum would be badly mis-scaled."""
+    if prec is not None:
+        apply = lambda v: prec.apply(op.apply(v))
+        lam, _ = power_method(apply, op.n, iters=30, dtype=dtype)
+        return chebyshev_shifts(0.0, float(lam) * safety, l, dtype=dtype)
+    try:
+        lmin, lmax = op.eig_bounds()
+    except NotImplementedError:
+        lam, _ = power_method(op.apply, op.n, dtype=dtype)
+        lmin, lmax = 0.0, float(lam) * safety
+    return chebyshev_shifts(lmin, lmax, l, dtype=dtype)

@@ -1,0 +1,348 @@
+"""Deep pipelined Conjugate Gradients — p(l)-CG (Alg. 1 of the paper).
+
+Faithful JAX implementation with production storage: the l+1 auxiliary
+bases Z^(0..l) live in ring buffers (window max(l+1,3) per basis), the G
+matrix and Hessenberg entries in sliding windows of size O(l) — total
+vector storage O(l) irrespective of iteration count (cf. the paper's
+4l+1-vector budget, Table 1).
+
+The communication structure per iteration i is exactly the paper's:
+
+  * ONE SPMV (+ preconditioner)                                (K1)
+  * ONE fused dot-product block of 2l+1 entries — the single
+    MPI_Iallreduce of G(i-2l+1:i+1, i+1)                       (K5)
+  * its result is FIRST READ at iteration i+l (lines 8-10)     (MPI_Wait)
+
+so the reduction initiated at iteration i has l iterations of SPMVs, AXPYs
+and l-1 other in-flight reductions between initiation and first use.  On
+TPU the overlap is realized by XLA's latency-hiding scheduler when the
+iteration window is unrolled (``unroll`` parameter; see DESIGN.md §2) —
+the lowered HLO then carries l independent all-reduce chains in flight,
+the staggering of Fig. 4 (bottom).
+
+Breakdown handling: square-root breakdown (line 10/11) triggers an explicit
+restart from the current iterate (§2.2), implemented as a state re-init
+inside the while-loop.  Convergence uses the recursive residual M-norm
+|zeta_{i-l}| relative to the *original* residual norm.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import SolveResult, SolverOps
+
+
+class _Cycle(NamedTuple):
+    """Per-restart-cycle state (re-initialized on breakdown)."""
+
+    x: jax.Array        # (N,) current iterate (x_{i-l-1} of the cycle)
+    ZK: jax.Array       # (l+1, RB, N) ring buffers of the auxiliary bases
+    U: jax.Array        # (3, N) ring of unpreconditioned vectors u_{i-1..i+1}
+    G: jax.Array        # (W, W) sliding window of the basis-transform matrix
+    gam: jax.Array      # (W,) gamma ring  (Hessenberg diagonal)
+    dlt: jax.Array      # (W,) delta ring  (Hessenberg off-diagonal)
+    p_prev: jax.Array   # (N,) search direction p_{i-l-1}
+    eta_prev: jax.Array # scalar eta_{i-l-1}
+    zet_prev: jax.Array # scalar zeta_{i-l-1}
+    i: jax.Array        # cycle-local iteration counter
+    norm0_cycle: jax.Array
+
+
+class _State(NamedTuple):
+    cyc: _Cycle
+    tot: jax.Array        # global iteration counter (monotone — termination)
+    upd: jax.Array        # number of solution updates (CG-comparable iters)
+    restarts: jax.Array
+    converged: jax.Array
+    breakdown: jax.Array
+    hist: jax.Array
+    norm0: jax.Array      # original residual M-norm (stopping reference)
+
+
+def solve(
+    ops: SolverOps,
+    b: jax.Array,
+    l: int,
+    x0: jax.Array | None = None,
+    tol: float = 1e-6,
+    maxit: int = 1000,
+    sigmas: jax.Array | None = None,
+    max_restarts: int = 10,
+    unroll: int = 1,
+) -> SolveResult:
+    """Solve A x = b with p(l)-CG.  ``l`` is the pipeline depth (static)."""
+    assert l >= 1
+    n = b.shape[0]
+    dtype = b.dtype
+    sig = jnp.zeros((l,), dtype) if sigmas is None else jnp.asarray(sigmas, dtype)
+    assert sig.shape == (l,)
+
+    RB = max(l + 1, 3)        # per-basis ring length
+    W = 3 * l + 4             # G / Hessenberg window
+    tot_max = maxit + (max_restarts + 1) * (l + 1)
+    H = tot_max + 2
+
+    zeros_n = jnp.zeros((n,), dtype)
+
+    # ----------------------------------------------------------- helpers --
+    def g_get(G, r, c, valid=True):
+        v = G[jnp.mod(r, W), jnp.mod(c, W)]
+        return jnp.where(valid, v, jnp.zeros((), dtype))
+
+    def g_set(G, r, c, val):
+        return G.at[jnp.mod(r, W), jnp.mod(c, W)].set(val)
+
+    def ring_get(arr, idx, valid=True):  # 1-D scalar rings (gam / dlt)
+        return jnp.where(valid, arr[jnp.mod(idx, W)], jnp.zeros((), dtype))
+
+    def zk_get(ZK, k, j):    # k static, j traced
+        return jax.lax.dynamic_index_in_dim(ZK[k], jnp.mod(j, RB), axis=0,
+                                            keepdims=False)
+
+    def zk_set(ZK, k, j, vec):
+        return ZK.at[k, jnp.mod(j, RB)].set(vec)
+
+    def u_get(U, j):
+        return jax.lax.dynamic_index_in_dim(U, jnp.mod(j, 3), axis=0,
+                                            keepdims=False)
+
+    def u_set(U, j, vec):
+        return U.at[jnp.mod(j, 3)].set(vec)
+
+    # ------------------------------------------------------------- init ---
+    def init_cycle(x) -> _Cycle:
+        u0_raw = b - ops.apply_a(x)
+        r0_raw = ops.prec(u0_raw)
+        eta0 = jnp.sqrt(jnp.abs(ops.dot_block(u0_raw[None], r0_raw)[0]))
+        safe = jnp.where(eta0 == 0, jnp.ones((), dtype), eta0)
+        v0 = r0_raw / safe
+        ZK = jnp.zeros((l + 1, RB, n), dtype)
+        ZK = ZK.at[:, 0, :].set(v0[None, :])          # z_0^(k) = v_0 for all k
+        U = jnp.zeros((3, n), dtype).at[0].set(u0_raw / safe)
+        G = jnp.zeros((W, W), dtype).at[0, 0].set(1.0)
+        return _Cycle(
+            x=x, ZK=ZK, U=U, G=G,
+            gam=jnp.zeros((W,), dtype), dlt=jnp.zeros((W,), dtype),
+            p_prev=zeros_n, eta_prev=jnp.ones((), dtype),
+            zet_prev=jnp.zeros((), dtype),
+            i=jnp.int32(0), norm0_cycle=eta0,
+        )
+
+    # -------------------------------------------------------- iteration ---
+    def iteration(st: _State) -> _State:
+        c = st.cyc
+        i = c.i
+        im = i - l                     # index of the Hessenberg column built
+        ge_l = i >= l
+
+        # ---- (K1) SPMV + preconditioner (lines 3-4) ----------------------
+        z_top = zk_get(c.ZK, l, i)                     # z_i^(l)
+        az = ops.apply_a(z_top)
+        sig_i = jnp.where(i < l, sig[jnp.clip(i, 0, l - 1)], jnp.zeros((), dtype))
+        u_new = az - sig_i * u_get(c.U, i)             # u_{i+1} (pre-normalized)
+        z_new = ops.prec(u_new)                        # z_{i+1}^(l) candidate
+
+        # ---- pipeline-fill copies (lines 5-7): bases k = i+1 .. l-1 ------
+        ZK = c.ZK
+        for k in range(l):              # static loop; masked dynamic writes
+            do_copy = (i < l - 1) & (k >= i + 1)
+            cur = zk_get(ZK, k, i + 1)
+            ZK = zk_set(ZK, k, i + 1, jnp.where(do_copy, z_new, cur))
+
+        # ================= i >= l: finalize the reduction from iter i-l ===
+        def late_phase(args):
+            ZK, G, gam, dlt, u_new, z_new = args
+            col = i - l + 1            # G column whose dots arrived (MPI_Wait)
+
+            # ---- (K2) lines 9-10: correct column `col` -------------------
+            for t in range(l - 1):     # j = i-2l+2 .. i-l   (sequential in j)
+                j = i - 2 * l + 2 + t
+                jv = j >= 0
+                ssum = jnp.zeros((), dtype)
+                for s in range(l + 1 + t):          # k = i-3l+1+s  (<= j-1)
+                    k_ = i - 3 * l + 1 + s
+                    kv = (k_ >= 0) & jv
+                    ssum += g_get(G, k_, j, kv) * g_get(G, k_, col, kv)
+                denom = jnp.where(jv, g_get(G, j, j, jv), jnp.ones((), dtype))
+                denom = jnp.where(denom == 0, jnp.ones((), dtype), denom)
+                val = (g_get(G, j, col, jv) - ssum) / denom
+                G = g_set(G, j, col, jnp.where(jv, val, g_get(G, j, col, jv)))
+
+            ssum = jnp.zeros((), dtype)
+            for s in range(2 * l):                   # k = i-3l+1 .. i-l
+                k_ = i - 3 * l + 1 + s
+                kv = k_ >= 0
+                ssum += jnp.square(g_get(G, k_, col, kv))
+            arg = g_get(G, col, col) - ssum
+            breakdown = (arg <= 0) | ~jnp.isfinite(arg)       # line 11
+            sq = jnp.sqrt(jnp.where(breakdown, jnp.ones((), dtype), arg))
+            G = g_set(G, col, col, sq)
+
+            # ---- (K3) lines 12-18: new Hessenberg column -----------------
+            g_mm = g_get(G, im, im)
+            g_mm_safe = jnp.where(g_mm == 0, jnp.ones((), dtype), g_mm)
+            g_mp = g_get(G, im, im + 1)
+            g_prev = g_get(G, im - 1, im, im >= 1)
+            d_prev = ring_get(dlt, im - 1, im >= 1)
+            sig_im = sig[jnp.clip(im, 0, l - 1)]
+            gam_early = (g_mp + sig_im * g_mm - g_prev * d_prev) / g_mm_safe
+            dlt_early = sq / g_mm_safe
+            gam_late = (
+                g_mm * ring_get(gam, im - l) + g_mp * ring_get(dlt, im - l)
+                - g_prev * d_prev
+            ) / g_mm_safe
+            dlt_late = sq * ring_get(dlt, im - l) / g_mm_safe
+            early = i < 2 * l
+            gam_new = jnp.where(early, gam_early, gam_late)
+            dlt_new = jnp.where(early, dlt_early, dlt_late)
+            gam = gam.at[jnp.mod(im, W)].set(gam_new)
+            dlt = dlt.at[jnp.mod(im, W)].set(dlt_new)
+            dlt_safe = jnp.where(dlt_new == 0, jnp.ones((), dtype), dlt_new)
+
+            # ---- (K4) lines 19-21: stable basis recurrences --------------
+            d2 = ring_get(dlt, im - 1, im >= 1)       # delta_{i-l-1}
+            for k in range(l):                        # z^(k)_{i-l+k+1}
+                j = i - l + k + 1
+                zk1 = zk_get(ZK, k + 1, j)
+                zm1 = zk_get(ZK, k, j - 1)
+                zm2 = zk_get(ZK, k, j - 2)            # coeff d2 = 0 masks j-2 < 0
+                vec = (zk1 + (sig[k] - gam_new) * zm1 - d2 * zm2) / dlt_safe
+                ZK = zk_set(ZK, k, j, vec)
+            zm1 = zk_get(ZK, l, i)
+            zm2 = zk_get(ZK, l, i - 1)
+            z_new = (z_new - gam_new * zm1 - d2 * zm2) / dlt_safe     # line 20
+            u_new = (u_new - gam_new * u_get(c.U, i) - d2 * u_get(c.U, i - 1)) \
+                / dlt_safe                                            # line 21
+            return (ZK, G, gam, dlt, u_new, z_new), breakdown
+
+        def early_phase(args):
+            return args, jnp.asarray(False)
+
+        (ZK, G, gam, dlt, u_new, z_new), breakdown = jax.lax.cond(
+            ge_l, late_phase, early_phase, (ZK, c.G, c.gam, c.dlt, u_new, z_new)
+        )
+
+        ZK = zk_set(ZK, l, i + 1, z_new)
+        U = u_set(c.U, i + 1, u_new)
+
+        # ---- (K5) line 23: initiate the dot block — ONE fused reduction --
+        vs, valids, rows = [], [], []
+        for t in range(l + 1):                     # V-range: j = i-2l+1 .. i-l+1
+            j = i - 2 * l + 1 + t
+            vs.append(zk_get(ZK, 0, j))
+            valids.append(j >= 0)
+            rows.append(j)
+        for t in range(l):                         # Z-range: j = i-l+2 .. i+1
+            j = i - l + 2 + t
+            vs.append(zk_get(ZK, l, j))
+            valids.append(j >= 0)
+            rows.append(j)
+        mat = jnp.stack(vs)                        # (2l+1, N)
+        dots = ops.dot_block(mat, u_new)           # single global reduction
+        for t in range(2 * l + 1):
+            val = jnp.where(valids[t], dots[t], jnp.zeros((), dtype))
+            G = g_set(G, rows[t], i + 1,
+                      jnp.where(valids[t], val, g_get(G, rows[t], i + 1)))
+
+        # ---- (K6) lines 24-32: D-Lanczos solution update ------------------
+        gam0 = ring_get(gam, jnp.int32(0))
+        gam_im = ring_get(gam, im, ge_l)
+        d_prev = ring_get(dlt, im - 1, im >= 1)
+
+        is_first = i == l
+        eta0_safe = jnp.where(gam0 == 0, jnp.ones((), dtype), gam0)
+        p_first = zk_get(ZK, 0, jnp.int32(0)) / eta0_safe
+        zet_first = c.norm0_cycle
+
+        do_upd = i >= l + 1
+        eta_prev_safe = jnp.where(c.eta_prev == 0, jnp.ones((), dtype), c.eta_prev)
+        lam = d_prev / eta_prev_safe
+        eta_new = gam_im - lam * d_prev
+        eta_new_safe = jnp.where(eta_new == 0, jnp.ones((), dtype), eta_new)
+        zet_new = -lam * c.zet_prev
+        p_new = (zk_get(ZK, 0, im) - d_prev * c.p_prev) / eta_new_safe
+        x_new = c.x + c.zet_prev * c.p_prev        # x_{i-l} from previous pair
+
+        x = jnp.where(do_upd, x_new, c.x)
+        p_prev = jnp.where(is_first, p_first, jnp.where(do_upd, p_new, c.p_prev))
+        eta_prev = jnp.where(is_first, gam0, jnp.where(do_upd, eta_new, c.eta_prev))
+        zet_prev = jnp.where(is_first, zet_first,
+                             jnp.where(do_upd, zet_new, c.zet_prev))
+
+        upd = st.upd + jnp.where(do_upd, 1, 0).astype(jnp.int32)
+        rnorm = jnp.abs(zet_new)
+        # On a breakdown iteration the freshly computed scalars are garbage
+        # (the restart discards them) — never record/converge on them.
+        ok = do_upd & ~breakdown
+        hist = jax.lax.cond(
+            ok,
+            lambda h: h.at[jnp.clip(upd, 0, H - 1)].set(rnorm),
+            lambda h: h,
+            st.hist,
+        )
+        converged = st.converged | (ok & (rnorm / st.norm0 < tol))
+
+        cyc = _Cycle(
+            x=x, ZK=ZK, U=U, G=G, gam=gam, dlt=dlt, p_prev=p_prev,
+            eta_prev=eta_prev, zet_prev=zet_prev, i=i + 1,
+            norm0_cycle=c.norm0_cycle,
+        )
+        return _State(
+            cyc=cyc, tot=st.tot + 1, upd=upd, restarts=st.restarts,
+            converged=converged, breakdown=breakdown, hist=hist, norm0=st.norm0,
+        )
+
+    def do_restart(st: _State) -> _State:
+        cyc = init_cycle(st.cyc.x)
+        # A breakdown at a converged iterate is a "lucky breakdown": the
+        # freshly computed residual M-norm at restart tells us directly.
+        lucky = cyc.norm0_cycle / st.norm0 < tol
+        return _State(
+            cyc=cyc, tot=st.tot + 1, upd=st.upd, restarts=st.restarts + 1,
+            converged=st.converged | lucky, breakdown=jnp.asarray(False),
+            hist=st.hist, norm0=st.norm0,
+        )
+
+    def body(st: _State) -> _State:
+        return jax.lax.cond(st.breakdown, do_restart, iteration, st)
+
+    def cond(st: _State) -> jax.Array:
+        return (
+            (~st.converged)
+            & (st.tot < tot_max)
+            & (st.upd < maxit)
+            & (st.restarts <= max_restarts)
+        )
+
+    cyc0 = init_cycle(jnp.zeros_like(b) if x0 is None else x0.astype(dtype))
+    norm0 = cyc0.norm0_cycle
+    hist0 = jnp.full((H,), -1.0, dtype).at[0].set(norm0)
+    st0 = _State(
+        cyc=cyc0, tot=jnp.int32(0), upd=jnp.int32(0), restarts=jnp.int32(0),
+        converged=norm0 == 0.0, breakdown=jnp.asarray(False),
+        hist=hist0, norm0=norm0,
+    )
+
+    if unroll > 1:
+        # Unrolled driver: expose an (unroll)-iteration window to XLA so the
+        # latency-hiding scheduler can stagger the in-flight reductions
+        # (DESIGN.md §2).  Semantics identical to unroll=1.
+        def body_u(st: _State) -> _State:
+            for _ in range(unroll):
+                st = jax.lax.cond(cond(st), body, lambda s: s, st)
+            return st
+
+        final = jax.lax.while_loop(cond, body_u, st0)
+    else:
+        final = jax.lax.while_loop(cond, body, st0)
+
+    return SolveResult(
+        x=final.cyc.x, iters=final.upd, restarts=final.restarts,
+        converged=final.converged, res_history=final.hist, norm0=final.norm0,
+    )

@@ -1,0 +1,307 @@
+"""Plain NumPy reference implementations (oracles) of the CG family.
+
+These follow the paper's pseudo-code as literally as possible, with full
+(non-ring-buffer) storage, and exist purely for validation: the JAX
+implementations in ``classic_cg.py`` / ``ghysels_pcg.py`` /
+``pipelined_cg.py`` are tested element-wise against them.
+
+``pl_cg_reference`` is Alg. 1 of the paper (preconditioned l-length
+pipelined CG) line-by-line, including the pipeline-fill copies (line 5-7),
+dot-product finalization (8-10), square-root breakdown check + explicit
+restart (10-11, §2.2), Hessenberg updates (12-18), stable multi-basis
+recurrences (19-21), dot-product initiation (23), and the D-Lanczos
+solution update (24-32).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+
+
+Apply = Callable[[np.ndarray], np.ndarray]
+
+
+@dataclasses.dataclass
+class RefResult:
+    x: np.ndarray
+    iters: int            # number of *solution* updates performed (CG-equivalent its)
+    restarts: int
+    converged: bool
+    res_history: list     # recursive residual norms |zeta_j| (M-norm for prec.)
+    true_res: float       # final true residual ||b - A x||_2
+
+
+def _dot(a, b):
+    return float(np.dot(a, b))
+
+
+def classic_cg_reference(
+    apply_a: Apply,
+    b: np.ndarray,
+    x0: Optional[np.ndarray] = None,
+    prec: Optional[Apply] = None,
+    tol: float = 1e-6,
+    maxit: int = 1000,
+) -> RefResult:
+    """Textbook preconditioned CG (2 global reductions per iteration)."""
+    n = b.shape[0]
+    x = np.zeros(n) if x0 is None else x0.copy()
+    minv = (lambda v: v) if prec is None else prec
+    r = b - apply_a(x)
+    u = minv(r)
+    p = u.copy()
+    gamma = _dot(r, u)
+    norm0 = np.sqrt(gamma)
+    hist = [norm0]
+    converged = False
+    it = 0
+    for it in range(1, maxit + 1):
+        s = apply_a(p)
+        alpha = gamma / _dot(s, p)          # reduction 1
+        x += alpha * p
+        r -= alpha * s
+        u = minv(r)
+        gamma_new = _dot(r, u)              # reduction 2
+        hist.append(np.sqrt(abs(gamma_new)))
+        if np.sqrt(abs(gamma_new)) / norm0 < tol:
+            converged = True
+            break
+        beta = gamma_new / gamma
+        gamma = gamma_new
+        p = u + beta * p
+    return RefResult(x, it, 0, converged, hist, float(np.linalg.norm(b - apply_a(x))))
+
+
+def ghysels_pcg_reference(
+    apply_a: Apply,
+    b: np.ndarray,
+    x0: Optional[np.ndarray] = None,
+    prec: Optional[Apply] = None,
+    tol: float = 1e-6,
+    maxit: int = 1000,
+) -> RefResult:
+    """Ghysels & Vanroose pipelined CG [19] (p-CG): 1 fused reduction + 1 SPMV
+    per iteration; reduction overlaps the SPMV of the same iteration."""
+    n = b.shape[0]
+    x = np.zeros(n) if x0 is None else x0.copy()
+    minv = (lambda v: v) if prec is None else prec
+    r = b - apply_a(x)
+    u = minv(r)
+    w = apply_a(u)
+    gamma_old, alpha = 0.0, 0.0
+    z = q = s = p = np.zeros(n)
+    norm0 = np.sqrt(_dot(r, u))
+    hist = [norm0]
+    converged = False
+    it = 0
+    for it in range(1, maxit + 1):
+        gamma = _dot(r, u)
+        delta = _dot(w, u)                  # fused single reduction {gamma, delta, ||r||}
+        m = minv(w)                         # overlapped with the reduction
+        nvec = apply_a(m)                   # overlapped with the reduction (the SPMV)
+        if it > 1:
+            beta = gamma / gamma_old
+            alpha = gamma / (delta - beta * gamma / alpha)
+        else:
+            beta = 0.0
+            alpha = gamma / delta
+        z = nvec + beta * z
+        q = m + beta * q
+        s = w + beta * s
+        p = u + beta * p
+        x = x + alpha * p
+        r = r - alpha * s
+        u = u - alpha * q
+        w = w - alpha * z
+        gamma_old = gamma
+        hist.append(np.sqrt(abs(_dot(r, minv(r)))))
+        if hist[-1] / norm0 < tol:
+            converged = True
+            break
+    return RefResult(x, it, 0, converged, hist, float(np.linalg.norm(b - apply_a(x))))
+
+
+class SqrtBreakdown(Exception):
+    pass
+
+
+def pl_cg_reference(
+    apply_a: Apply,
+    b: np.ndarray,
+    l: int,
+    x0: Optional[np.ndarray] = None,
+    prec: Optional[Apply] = None,
+    tol: float = 1e-6,
+    maxit: int = 1000,
+    sigmas: Optional[np.ndarray] = None,
+    max_restarts: int = 10,
+) -> RefResult:
+    """Alg. 1 (preconditioned p(l)-CG), full-storage NumPy oracle."""
+    sig = np.zeros(l) if sigmas is None else np.asarray(sigmas, dtype=np.float64)
+    assert sig.shape == (l,)
+    n = b.shape[0]
+    x_run = np.zeros(n) if x0 is None else np.asarray(x0, dtype=np.float64).copy()
+    minv = (lambda v: v) if prec is None else prec
+
+    hist: list = []
+    total_updates = 0
+    restarts = 0
+    converged = False
+    # Convergence is relative to the *original* residual M-norm, also across
+    # breakdown restarts.
+    r0 = minv(b - apply_a(x_run))
+    norm0_orig = float(np.sqrt(np.dot(b - apply_a(x_run), r0)))
+
+    while True:
+        try:
+            x_run, nupd, converged, sub_hist = _pl_cg_cycle(
+                apply_a, b, l, x_run, minv, tol, max(maxit - total_updates, 1), sig,
+                hist_prefix=hist, norm0_orig=norm0_orig,
+            )
+            hist = sub_hist
+            total_updates += nupd
+            break
+        except SqrtBreakdown:
+            restarts += 1
+            # Explicit restart from the current iterate (paper §2.2).
+            x_run, nupd, sub_hist = _pl_cg_partial_state
+            total_updates += nupd
+            hist = sub_hist
+            if restarts > max_restarts:
+                break
+            continue
+    return RefResult(
+        x_run, total_updates, restarts, converged, hist,
+        float(np.linalg.norm(b - apply_a(x_run))),
+    )
+
+
+_pl_cg_partial_state = None  # (x, nupd, hist) stashed when a breakdown fires
+
+
+def _pl_cg_cycle(apply_a, b, l, x0, minv, tol, maxit, sig, hist_prefix, norm0_orig):
+    """One p(l)-CG cycle (until convergence, breakdown, or maxit updates)."""
+    global _pl_cg_partial_state
+    n = b.shape[0]
+    m = maxit
+    mw = m + 2 * l + 4
+
+    # Full storage of the l+1 auxiliary bases Z^(k), the unpreconditioned
+    # vectors u_j, the Hessenberg entries, and the G matrix.
+    Z = [dict() for _ in range(l + 1)]      # Z[k][j] -> vector z_j^(k)
+    U = dict()
+    G = np.zeros((mw, mw))
+    gam = np.zeros(mw)
+    dlt = np.zeros(mw)
+    eta = np.zeros(mw)
+    zet = np.zeros(mw)
+    P = dict()
+
+    x = x0.copy()
+    # line 1
+    u0_raw = b - apply_a(x)
+    r0_raw = minv(u0_raw)
+    eta0 = np.sqrt(_dot(u0_raw, r0_raw))
+    norm0 = eta0
+    hist = list(hist_prefix) + ([norm0] if not hist_prefix else [])
+    if eta0 == 0.0:
+        return x, 0, True, hist
+    v0 = r0_raw / eta0
+    for k in range(l + 1):
+        Z[k][0] = v0.copy()
+    U[0] = u0_raw / eta0
+    G[0, 0] = 1.0
+
+    nupd = 0
+    converged = False
+    for i in range(0, m + l + 1):
+        # lines 3-4: SPMV + preconditioner
+        az = apply_a(Z[l][i])
+        u_new = az - sig[i] * U[i] if i < l else az
+        U[i + 1] = u_new
+        Z[l][i + 1] = minv(u_new)
+
+        # lines 5-7: pipeline fill copies
+        if i < l - 1:
+            for k in range(i + 1, l):
+                Z[k][i + 1] = Z[l][i + 1].copy()
+
+        if i >= l:
+            c = i - l + 1  # column being finalized
+            # line 9: correct the Z-dot entries of column c
+            for j in range(i - 2 * l + 2, i - l + 1):  # j = i-2l+2 .. i-l
+                if j < 0:
+                    continue
+                ssum = 0.0
+                for k in range(max(0, i - 3 * l + 1), j):
+                    ssum += G[k, j] * G[k, c]
+                G[j, c] = (G[j, c] - ssum) / G[j, j]
+            # line 10: diagonal entry (Cholesky step)
+            ssum = 0.0
+            for k in range(max(0, i - 3 * l + 1), c):
+                ssum += G[k, c] ** 2
+            arg = G[c, c] - ssum
+            # line 11: breakdown check
+            if arg <= 0.0:
+                _pl_cg_partial_state = (x.copy(), nupd, hist)
+                raise SqrtBreakdown()
+            G[c, c] = np.sqrt(arg)
+
+            # lines 12-18: new Hessenberg column
+            im = i - l
+            g_im_im = G[im, im]
+            g_im_ip = G[im, im + 1]
+            g_prev = G[im - 1, im] if im >= 1 else 0.0
+            d_prev = dlt[im - 1] if im >= 1 else 0.0
+            if i < 2 * l:
+                gam[im] = (g_im_ip + sig[im] * g_im_im - g_prev * d_prev) / g_im_im
+                dlt[im] = G[im + 1, im + 1] / g_im_im
+            else:
+                gam[im] = (
+                    g_im_im * gam[im - l] + g_im_ip * dlt[im - l] - g_prev * d_prev
+                ) / g_im_im
+                dlt[im] = (G[im + 1, im + 1] * dlt[im - l]) / g_im_im
+
+            # lines 19-21: stable recurrences for all l+1 bases
+            for k in range(l):  # line 19, k = 0..l-1
+                j = i - l + k + 1
+                zm1 = Z[k][j - 1]
+                zm2 = Z[k][j - 2] if j >= 2 else np.zeros(n)
+                d2 = dlt[im - 1] if im >= 1 else 0.0
+                Z[k][j] = (
+                    Z[k + 1][j] + (sig[k] - gam[im]) * zm1 - d2 * zm2
+                ) / dlt[im]
+            d2 = dlt[im - 1] if im >= 1 else 0.0
+            zm2 = Z[l][i - 1] if i >= 1 else np.zeros(n)
+            Z[l][i + 1] = (Z[l][i + 1] - gam[im] * Z[l][i] - d2 * zm2) / dlt[im]
+            U[i + 1] = (U[i + 1] - gam[im] * U[i] - d2 * U[i - 1]) / dlt[im]
+
+        # line 23: initiate the dot-product block of column i+1
+        for j in range(max(0, i - 2 * l + 1), i - l + 2):
+            if j < 0 or j not in Z[0]:
+                continue
+            G[j, i + 1] = _dot(U[i + 1], Z[0][j])
+        for j in range(max(0, i - l + 2), i + 2):
+            G[j, i + 1] = _dot(U[i + 1], Z[l][j])
+
+        # lines 24-32: D-Lanczos solution update
+        if i == l:
+            eta[0] = gam[0]
+            zet[0] = norm0
+            P[0] = Z[0][0] / eta[0]
+        elif i >= l + 1:
+            im = i - l
+            lam = dlt[im - 1] / eta[im - 1]
+            eta[im] = gam[im] - lam * dlt[im - 1]
+            zet[im] = -lam * zet[im - 1]
+            P[im] = (Z[0][im] - dlt[im - 1] * P[im - 1]) / eta[im]
+            x = x + zet[im - 1] * P[im - 1]
+            nupd += 1
+            hist.append(abs(zet[im]))
+            if abs(zet[im]) / norm0_orig < tol:
+                converged = True
+                break
+    return x, nupd, converged, hist

@@ -1,0 +1,54 @@
+"""Common solver interfaces.
+
+``SolverOps`` abstracts the three things a Krylov solver needs from the
+execution substrate, so the *same* solver code runs single-device or under
+``shard_map`` on a production mesh:
+
+  apply_a    A @ x          (distributed: halo exchange + local stencil)
+  prec       M^{-1} x       (distributed: communication-free block solve)
+  dot_block  (K,N)@(N,)->(K,)  ALL inner products of one iteration fused
+             into ONE global reduction — this is the paper's single
+             ``MPI_Iallreduce`` of the G-column (distributed: one psum).
+
+The solvers never call more than one ``dot_block`` per iteration (p-CG,
+p(l)-CG) or two (classic CG) — exactly the reduction counts of Table 1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SolveResult(NamedTuple):
+    x: jax.Array           # approximate solution
+    iters: jax.Array       # number of solution updates (CG-comparable count)
+    restarts: jax.Array    # breakdown restarts performed (p(l)-CG only)
+    converged: jax.Array   # bool
+    res_history: jax.Array # recursive residual M-norms, -1 padded
+    norm0: jax.Array       # initial residual M-norm
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverOps:
+    apply_a: Callable[[jax.Array], jax.Array]
+    prec: Callable[[jax.Array], jax.Array]
+    dot_block: Callable[[jax.Array, jax.Array], jax.Array]
+
+    @staticmethod
+    def local(op, prec=None) -> "SolverOps":
+        """Single-device ops (tests, small problems)."""
+        pfun = (lambda v: v) if prec is None else (lambda v: prec.apply(v))
+        return SolverOps(
+            apply_a=lambda v: op.apply(v),
+            prec=pfun,
+            dot_block=lambda mat, vec: mat @ vec,
+        )
+
+
+def dot1(ops: SolverOps, a: jax.Array, b: jax.Array) -> jax.Array:
+    """Single global dot through the fused-block path."""
+    return ops.dot_block(a[None, :], b)[0]

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the compute hot spots (ops.py = public wrappers,
+ref.py = pure-jnp oracles, one module per kernel)."""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

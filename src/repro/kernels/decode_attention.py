@@ -1,0 +1,114 @@
+"""Pallas split-KV decode attention (flash-decoding style) for the serving
+path (decode_32k / long_500k shapes).
+
+One new query token attends to a long KV cache.  The cache's sequence axis
+is blocked; an online-softmax accumulator (m, l, acc) lives in VMEM scratch
+and is carried across the sequence grid dimension.  GQA is handled by
+processing one KV head per grid cell with its G = H/H_kv query heads.
+
+Cross-device split-KV (cache sharded over "model") happens OUTSIDE the
+kernel: with ``return_stats=True`` the kernel emits the *unnormalized*
+accumulator plus (m, l); the serve layer merges shards with one pmax + one
+fused psum of O(H·D) — never O(S) — traffic (DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG_INF = -1e30
+
+
+def _decode_attn_kernel(
+    scale, block_s, q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref,
+    acc_ref, mm_ref, ll_ref,
+):
+    s_idx = pl.program_id(2)
+    ns = pl.num_programs(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        mm_ref[...] = jnp.full_like(mm_ref, _NEG_INF)
+        ll_ref[...] = jnp.zeros_like(ll_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (G, D)
+    k = k_ref[0, 0].astype(jnp.float32)          # (BS, D)
+    v = v_ref[0, 0].astype(jnp.float32)          # (BS, D)
+    kv_len = len_ref[0, 0]
+
+    scores = (q @ k.T) * scale                   # (G, BS)
+    col = s_idx * block_s + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    scores = jnp.where(col < kv_len, scores, _NEG_INF)
+
+    m_prev = mm_ref[...]                         # (G, 1)
+    m_cur = jnp.max(scores, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(scores - m_new)                  # (G, BS)
+    alpha = jnp.exp(m_prev - m_new)              # (G, 1)
+    ll_ref[...] = ll_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + p @ v
+    mm_ref[...] = m_new
+
+    @pl.when(s_idx == ns - 1)
+    def _fin():
+        o_ref[0, 0] = acc_ref[...].astype(o_ref.dtype)   # UNNORMALIZED
+        m_ref[0, 0] = mm_ref[...]
+        l_ref[0, 0] = ll_ref[...]
+
+
+def decode_attention_stats(
+    q: jax.Array,        # (B, Hkv, G, D)  — grouped query heads
+    k: jax.Array,        # (B, Hkv, S, D)
+    v: jax.Array,        # (B, Hkv, S, D)
+    kv_len: jax.Array,   # (1, 1) int32 — valid cache length (masking)
+    *,
+    block_s: int = 512,
+    interpret: bool = False,
+):
+    """Returns (o_unnorm (B,Hkv,G,D) f32, m (B,Hkv,G,1) f32, l (B,Hkv,G,1) f32).
+
+    Final attention = o_unnorm / l; with sharded KV, merge stats across
+    shards first (see repro.models.attention.merge_decode_shards).
+    """
+    b, hkv, g, d = q.shape
+    _, _, s, _ = k.shape
+    assert s % block_s == 0, (s, block_s)
+    ns = s // block_s
+    scale = 1.0 / math.sqrt(d)
+
+    kernel = functools.partial(_decode_attn_kernel, scale, block_s)
+    from jax.experimental.pallas import tpu as pltpu
+
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid=(b, hkv, ns),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda ib, ih, isq: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, 1, block_s, d), lambda ib, ih, isq: (ib, ih, isq, 0)),
+            pl.BlockSpec((1, 1, block_s, d), lambda ib, ih, isq: (ib, ih, isq, 0)),
+            pl.BlockSpec((1, 1), lambda ib, ih, isq: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda ib, ih, isq: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, 1, g, 1), lambda ib, ih, isq: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, 1, g, 1), lambda ib, ih, isq: (ib, ih, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hkv, g, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, g, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, kv_len)
+    return o, m, l

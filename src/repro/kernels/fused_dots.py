@@ -1,0 +1,52 @@
+"""Pallas kernel for the fused dot-product block — the paper's (K5).
+
+p(l)-CG computes 2l+1 (sym-optimized: l+1) inner products against ONE shared
+operand u per iteration (Alg. 1 line 23).  Done naively that is 2l+1 full
+HBM passes over u plus one over each basis vector; fused, u is streamed ONCE
+and every basis row is read once: arithmetic intensity rises from ~1/8 to
+~(K)/(K+1) flop/byte — this kernel makes the local dot contribution
+bandwidth-optimal before the single psum.
+
+Layout: mat (K, N) row-major (the K basis vectors), vec (N,).  Grid over N
+in blocks; a (K, 1) f32 accumulator output block is revisited by every grid
+step (index_map -> (0, 0)), relying on TPU's sequential grid execution.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fused_dots_kernel(mat_ref, vec_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    m = mat_ref[...].astype(jnp.float32)      # (K, BN)
+    v = vec_ref[...].astype(jnp.float32)      # (BN, 1)
+    o_ref[...] += m @ v
+
+
+def fused_dots(
+    mat: jax.Array, vec: jax.Array, *, block_n: int = 16384, interpret: bool = False
+) -> jax.Array:
+    """All K inner products mat @ vec in one HBM pass.  N must be a multiple
+    of block_n (ops.py pads with zeros, which do not change the result)."""
+    k, n = mat.shape
+    assert vec.shape == (n,)
+    assert n % block_n == 0, (n, block_n)
+    nb = n // block_n
+    out = pl.pallas_call(
+        _fused_dots_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((k, block_n), lambda i: (0, i)),
+            pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((k, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, 1), jnp.float32),
+        interpret=interpret,
+    )(mat, vec[:, None])
+    return out[:, 0].astype(mat.dtype)

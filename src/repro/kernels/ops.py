@@ -1,0 +1,126 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Each wrapper (a) pads shapes to kernel-friendly multiples (zero padding is
+exact for every kernel here), (b) picks TPU-aligned block shapes, and
+(c) falls back to ``interpret=True`` off-TPU so the same call sites work on
+this CPU container (system prompt: TPU is the TARGET, interpret mode is the
+validation vehicle).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _da
+from repro.kernels import fused_axpy as _fa
+from repro.kernels import fused_dots as _fd
+from repro.kernels import stencil_spmv as _ss
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def stencil2d5_apply(g: jax.Array, interpret: bool | None = None) -> jax.Array:
+    interpret = _interpret_default() if interpret is None else interpret
+    nx, ny = g.shape
+    bx = 8
+    while bx * 2 <= min(nx, 256) and nx % (bx * 2) == 0:
+        bx *= 2
+    nxp, nyp = _round_up(nx, bx), _round_up(ny, 128 if ny >= 128 else 8)
+    gp = jnp.pad(g, ((0, nxp - nx), (0, nyp - ny)))
+    out = _ss.stencil2d5(gp, block_x=bx, interpret=interpret)
+    return out[:nx, :ny]
+
+
+@partial(jax.jit, static_argnames=("eps_z", "interpret"))
+def stencil3d7_apply(
+    g: jax.Array, eps_z: float = 1.0, interpret: bool | None = None
+) -> jax.Array:
+    interpret = _interpret_default() if interpret is None else interpret
+    nx, ny, nz = g.shape
+    bx = 8 if nx % 8 == 0 else (4 if nx % 4 == 0 else (2 if nx % 2 == 0 else 1))
+    nzp = _round_up(nz, 128 if nz >= 128 else 8)
+    gp = jnp.pad(g, ((0, 0), (0, 0), (0, nzp - nz)))
+    out = _ss.stencil3d7(gp, eps_z=eps_z, block_x=bx, interpret=interpret)
+    return out[:, :, :nz]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def fused_dots(mat: jax.Array, vec: jax.Array, interpret: bool | None = None):
+    interpret = _interpret_default() if interpret is None else interpret
+    k, n = mat.shape
+    bn = min(16384, _round_up(n, 128))
+    npad = _round_up(n, bn)
+    matp = jnp.pad(mat, ((0, 0), (0, npad - n)))
+    vecp = jnp.pad(vec, (0, npad - n))
+    return _fd.fused_dots(matp, vecp, block_n=bn, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def fused_axpy3(zk1, zm1, zm2, c1, c2, scale, interpret: bool | None = None):
+    interpret = _interpret_default() if interpret is None else interpret
+    (n,) = zk1.shape
+    bn = min(65536, _round_up(n, 128))
+    npad = _round_up(n, bn)
+    pad = lambda v: jnp.pad(v, (0, npad - n))
+    out = _fa.fused_axpy3(
+        pad(zk1), pad(zm1), pad(zm2), c1, c2, scale, block_n=bn,
+        interpret=interpret,
+    )
+    return out[:n]
+
+
+@partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attention(
+    q: jax.Array,       # (B, H, D)
+    k: jax.Array,       # (B, S, Hkv, D)
+    v: jax.Array,       # (B, S, Hkv, D)
+    kv_len: jax.Array | int,
+    block_s: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Single-token GQA decode attention over a (possibly padded) KV cache.
+    Returns (B, H, D) in q.dtype."""
+    interpret = _interpret_default() if interpret is None else interpret
+    b, h, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    sp = _round_up(s, block_s)
+    kp = jnp.pad(k, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+    qg = q.reshape(b, hkv, g, d)
+    kt = jnp.transpose(kp, (0, 2, 1, 3))     # (B, Hkv, S, D)
+    vt = jnp.transpose(vp, (0, 2, 1, 3))
+    ln = jnp.full((1, 1), kv_len, jnp.int32)
+    o, m, l = _da.decode_attention_stats(
+        qg, kt, vt, ln, block_s=block_s, interpret=interpret
+    )
+    out = o / jnp.maximum(l, 1e-30)
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+def decode_attention_stats(q, k, v, kv_len, block_s: int = 512, interpret=None):
+    """Unnormalized (o, m, l) for cross-shard split-KV combine."""
+    interpret = _interpret_default() if interpret is None else interpret
+    b, h, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    sp = _round_up(s, block_s)
+    kp = jnp.pad(k, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+    qg = q.reshape(b, hkv, g, d)
+    kt = jnp.transpose(kp, (0, 2, 1, 3))
+    vt = jnp.transpose(vp, (0, 2, 1, 3))
+    ln = jnp.full((1, 1), kv_len, jnp.int32)
+    return _da.decode_attention_stats(
+        qg, kt, vt, ln, block_s=block_s, interpret=interpret
+    )

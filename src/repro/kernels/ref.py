@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def stencil2d5_ref(g: jax.Array) -> jax.Array:
+    p = jnp.pad(g, 1)
+    return 4.0 * g - p[:-2, 1:-1] - p[2:, 1:-1] - p[1:-1, :-2] - p[1:-1, 2:]
+
+
+def stencil3d7_ref(g: jax.Array, eps_z: float = 1.0) -> jax.Array:
+    p = jnp.pad(g, 1)
+    ez = jnp.asarray(eps_z, g.dtype)
+    return (
+        (4.0 + 2.0 * ez) * g
+        - p[:-2, 1:-1, 1:-1] - p[2:, 1:-1, 1:-1]
+        - p[1:-1, :-2, 1:-1] - p[1:-1, 2:, 1:-1]
+        - ez * p[1:-1, 1:-1, :-2] - ez * p[1:-1, 1:-1, 2:]
+    )
+
+
+def fused_dots_ref(mat: jax.Array, vec: jax.Array) -> jax.Array:
+    return (mat.astype(jnp.float32) @ vec.astype(jnp.float32)).astype(mat.dtype)
+
+
+def fused_axpy3_ref(zk1, zm1, zm2, c1, c2, scale):
+    out = (
+        zk1.astype(jnp.float32)
+        + jnp.float32(c1) * zm1.astype(jnp.float32)
+        + jnp.float32(c2) * zm2.astype(jnp.float32)
+    ) * jnp.float32(scale)
+    return out.astype(zk1.dtype)
+
+
+def decode_attention_ref(q, k, v, kv_len):
+    """q (B,Hkv,G,D), k/v (B,Hkv,S,D), kv_len scalar int -> (B,Hkv,G,D) f32.
+
+    Normalized output (the oracle for o_unnorm / l)."""
+    b, hkv, g, d = q.shape
+    s = k.shape[2]
+    scale = 1.0 / math.sqrt(d)
+    scores = jnp.einsum(
+        "bhgd,bhsd->bhgs", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    mask = jnp.arange(s)[None, None, None, :] < kv_len
+    scores = jnp.where(mask, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhgs,bhsd->bhgd", w, v.astype(jnp.float32))

@@ -1,0 +1,101 @@
+"""Pallas TPU kernels for stencil SPMV — the paper's (K1) hot spot.
+
+TPU-native rethink of the PETSc CSR SpMV (DESIGN.md §8): the benchmark
+matrices are stencils, so instead of gather-bound CSR we tile the *grid*
+into VMEM row blocks.  Each program instance loads a contiguous
+(BX, ny[, nz]) tile plus two one-row/one-plane halo refs prepared by the
+wrapper — every load is contiguous and (8,128)-tileable, no gathers.
+
+Block-shape guidance (ops.py enforces): BX multiple of 8, trailing dim
+padded to a multiple of 128.  VMEM footprint per program:
+  2D : (BX+2+3·BX) · ny · 4 B   — g tile, 2 halo rows, out
+  3D : ~5 · BX · ny · nz · 4 B
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# ---------------------------------------------------------------- 2D 5-pt --
+
+def _stencil2d5_kernel(g_ref, up_ref, dn_ref, o_ref):
+    g = g_ref[...]                       # (BX, ny)
+    gx = jnp.concatenate([up_ref[...], g, dn_ref[...]], axis=0)   # (BX+2, ny)
+    left = jnp.pad(g[:, :-1], ((0, 0), (1, 0)))    # neighbour j-1
+    right = jnp.pad(g[:, 1:], ((0, 0), (0, 1)))    # neighbour j+1
+    o_ref[...] = 4.0 * g - gx[:-2] - gx[2:] - left - right
+
+
+def stencil2d5(g: jax.Array, *, block_x: int = 256, interpret: bool = False):
+    """5-point Laplacian on an (nx, ny) grid, homogeneous Dirichlet BCs.
+
+    The wrapper (ops.py) guarantees nx % block_x == 0; halo rows for block i
+    are the last row of block i-1 and the first row of block i+1 (zeros at
+    the domain boundary).
+    """
+    nx, ny = g.shape
+    assert nx % block_x == 0, (nx, block_x)
+    nb = nx // block_x
+    gb = g.reshape(nb, block_x, ny)
+    zrow = jnp.zeros((1, ny), g.dtype)
+    up = jnp.concatenate([zrow, gb[:-1, -1, :]], axis=0)     # (nb, ny)
+    dn = jnp.concatenate([gb[1:, 0, :], zrow], axis=0)       # (nb, ny)
+
+    return pl.pallas_call(
+        _stencil2d5_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block_x, ny), lambda i: (i, 0)),
+            pl.BlockSpec((1, ny), lambda i: (i, 0)),
+            pl.BlockSpec((1, ny), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_x, ny), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nx, ny), g.dtype),
+        interpret=interpret,
+    )(g, up, dn)
+
+
+# ---------------------------------------------------------------- 3D 7-pt --
+
+def _stencil3d7_kernel(eps_z, g_ref, up_ref, dn_ref, o_ref):
+    g = g_ref[...]                       # (BX, ny, nz)
+    gx = jnp.concatenate([up_ref[...], g, dn_ref[...]], axis=0)
+    gy1 = jnp.pad(g[:, :-1, :], ((0, 0), (1, 0), (0, 0)))
+    gy2 = jnp.pad(g[:, 1:, :], ((0, 0), (0, 1), (0, 0)))
+    gz1 = jnp.pad(g[:, :, :-1], ((0, 0), (0, 0), (1, 0)))
+    gz2 = jnp.pad(g[:, :, 1:], ((0, 0), (0, 0), (0, 1)))
+    ez = jnp.asarray(eps_z, g.dtype)
+    o_ref[...] = (
+        (4.0 + 2.0 * ez) * g - gx[:-2] - gx[2:] - gy1 - gy2 - ez * gz1 - ez * gz2
+    )
+
+
+def stencil3d7(
+    g: jax.Array, eps_z: float = 1.0, *, block_x: int = 8, interpret: bool = False
+):
+    """Anisotropic 7-point Laplacian on an (nx, ny, nz) grid (Dirichlet)."""
+    nx, ny, nz = g.shape
+    assert nx % block_x == 0, (nx, block_x)
+    nb = nx // block_x
+    gb = g.reshape(nb, block_x, ny, nz)
+    zpl = jnp.zeros((1, ny, nz), g.dtype)
+    up = jnp.concatenate([zpl, gb[:-1, -1]], axis=0)         # (nb, ny, nz)
+    dn = jnp.concatenate([gb[1:, 0], zpl], axis=0)
+
+    return pl.pallas_call(
+        functools.partial(_stencil3d7_kernel, eps_z),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block_x, ny, nz), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, ny, nz), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, ny, nz), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_x, ny, nz), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nx, ny, nz), g.dtype),
+        interpret=interpret,
+    )(g, up, dn)

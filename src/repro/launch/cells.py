@@ -1,0 +1,216 @@
+"""(architecture × input-shape × mesh) cell construction for the dry-run.
+
+A *cell* is a concrete lowering target: step function + ShapeDtypeStruct
+arguments + in/out shardings.  Shapes per the assignment:
+
+    train_4k      seq 4 096,   global_batch 256   -> train_step
+    prefill_32k   seq 32 768,  global_batch 32    -> prefill
+    decode_32k    seq 32 768,  global_batch 128   -> serve_step (1 token)
+    long_500k     seq 524 288, global_batch 1     -> serve_step; ONLY for
+                  sub-quadratic-state archs (zamba2, rwkv6) — the 8 pure
+                  full-attention archs skip it (DESIGN.md §5)
+
+No arrays are ever allocated here (eval_shape / ShapeDtypeStruct only).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, lm_arch_ids
+from repro.launch import sharding as shd
+from repro.launch.mesh import dp_axes
+from repro.models import LM
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+from repro.train.train_step import make_train_step
+
+SHAPES = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524288, batch=1, kind="decode"),
+}
+
+SUBQUADRATIC = ("ssm", "hybrid")
+
+
+def applicable(cfg, shape_name: str) -> bool:
+    if shape_name == "long_500k":
+        return cfg.family in SUBQUADRATIC
+    return True
+
+
+def fsdp_for(cfg, mesh) -> bool:
+    """FSDP weight sharding when TP alone cannot hold bf16 params in HBM."""
+    n = cfg.param_count()
+    per_chip = 2.0 * n / mesh.shape["model"]
+    return per_chip > 4e9
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape_name: str
+    fn: Callable
+    args: tuple
+    in_shardings: Any
+    out_shardings: Any
+    cfg: Any
+    tokens_per_step: float
+    model_flops: float
+
+
+def _batch_structs(cfg, seq: int, batch: int):
+    b = {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        b["patch_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "encdec":
+        b["enc_embeds"] = jax.ShapeDtypeStruct(
+            (batch, seq // cfg.enc_frames_ratio, cfg.d_model), jnp.bfloat16)
+    return b
+
+
+def layer_unit(cfg) -> int:
+    """Depth of one homogeneous repeat unit (hybrid: a full period)."""
+    return cfg.shared_attn_period if cfg.family == "hybrid" else 1
+
+
+def build_cell(arch: str, shape_name: str, mesh,
+               kv_seq_shard: bool = False, pipeline_l: int = 0,
+               depth_units: int | None = None,
+               pure_dp: bool = False) -> Cell:
+    """Assemble one dry-run cell (no allocation).  ``depth_units`` reduces
+    the model to that many repeat units (roofline extrapolation pass) —
+    sharding decisions (FSDP etc.) still follow the FULL config.
+    ``pure_dp`` replicates all weights and data-parallelizes the batch over
+    EVERY mesh axis (the §Perf hillclimb for small collective-bound archs:
+    no tensor parallelism means no per-layer activation all-reduces)."""
+    spec = SHAPES[shape_name]
+    seq, batch, kind = spec["seq"], spec["batch"], spec["kind"]
+    cfg = get_config(arch).replace(
+        param_dtype="bfloat16", compute_dtype="bfloat16", max_seq=seq)
+    assert applicable(cfg, shape_name), (arch, shape_name)
+    fsdp = fsdp_for(cfg, mesh)          # decided on the FULL config
+    if depth_units is not None:
+        u = layer_unit(cfg)
+        cfg = cfg.replace(
+            n_layers=depth_units * u,
+            n_enc_layers=(depth_units if cfg.family == "encdec"
+                          else cfg.n_enc_layers))
+    model = LM(cfg)
+    dsz = mesh.shape.get("data", 1)
+
+    params_shape = jax.eval_shape(
+        lambda: model.init(jax.random.PRNGKey(0)))
+    pspecs = shd.param_specs(params_shape, fsdp=fsdp, data_size=dsz)
+    dp = dp_axes(mesh)
+    dpx = dp if len(dp) > 1 else dp[0]
+    if pure_dp:
+        pspecs = jax.tree.map(
+            lambda s: P(), pspecs, is_leaf=lambda x: isinstance(x, P))
+        dpx = tuple(mesh.axis_names)        # batch over ALL axes
+    psh = shd.to_shardings(mesh, pspecs)
+
+    n_params = cfg.param_count()
+    n_active = cfg.active_param_count()
+
+    if kind == "train":
+        opt_cfg = AdamWConfig()
+        opt_shape = jax.eval_shape(adamw_init, params_shape)
+        ospecs = shd.opt_state_specs(params_shape, mesh, fsdp=fsdp)
+        bstructs = _batch_structs(cfg, seq, batch)
+        bspecs = shd.batch_specs(cfg, mesh)
+        if pure_dp:
+            flat_p = jax.tree_util.tree_flatten_with_path(params_shape)[0]
+            tdef = jax.tree_util.tree_structure(params_shape)
+            ztree = jax.tree_util.tree_unflatten(
+                tdef, [shd.zero1_spec(P(), l.shape, mesh) for _, l in flat_p])
+            ospecs = {"master": ztree, "m": ztree, "v": ztree,
+                      "step": P(), "prev_norm": P()}
+            bspecs = jax.tree.map(
+                lambda s: P(dpx, *s[1:]), bspecs,
+                is_leaf=lambda x: isinstance(x, P))
+        osh = shd.to_shardings(mesh, ospecs)
+        bsh = shd.to_shardings(mesh, bspecs)
+        msh = NamedSharding(mesh, P())
+        metrics_sh = {"loss": msh, "ce": msh, "aux": msh,
+                      "grad_norm": msh, "lr": msh, "clip_scale": msh}
+        tokens = float(batch * seq)
+        if pipeline_l > 0:
+            # the paper's technique on the training loop: depth-l delayed
+            # gradient ring (ZeRO-sharded -> push is a reduce-scatter, the
+            # paper's glred, consumed l steps later)
+            from repro.train.train_step import (init_grad_ring,
+                                                make_pipelined_train_step)
+            opt_cfg = AdamWConfig(delayed_norm=True)
+            step = make_pipelined_train_step(model, opt_cfg, pipeline_l)
+            ring_shape = jax.eval_shape(
+                lambda p: init_grad_ring(p, pipeline_l), params_shape)
+            rspecs = shd.grad_ring_specs(params_shape, mesh, fsdp=fsdp)
+            rsh = shd.to_shardings(mesh, rspecs)
+            idx = jax.ShapeDtypeStruct((), jnp.int32)
+            return Cell(arch, shape_name, step,
+                        (params_shape, opt_shape, ring_shape, idx, bstructs),
+                        (psh, osh, rsh, msh, bsh),
+                        (psh, osh, rsh, metrics_sh), cfg,
+                        tokens, 6.0 * n_active * tokens)
+        step = make_train_step(model, opt_cfg)
+        return Cell(arch, shape_name, step,
+                    (params_shape, opt_shape, bstructs),
+                    (psh, osh, bsh), (psh, osh, metrics_sh), cfg,
+                    tokens, 6.0 * n_active * tokens)
+
+    if kind == "prefill":
+        prompt = seq - (cfg.n_patches if cfg.family == "vlm" else 0)
+        bstructs = _batch_structs(cfg, prompt, batch)
+        bstructs.pop("labels")
+        bspecs = shd.batch_specs(cfg, mesh)
+        bspecs.pop("labels")
+        bsh = shd.to_shardings(mesh, bspecs)
+        cache_shape = jax.eval_shape(lambda: model.init_cache(batch, seq))
+        cspecs = shd.cache_specs(cfg, mesh, batch, kv_seq_shard)
+        csh = shd.to_shardings(mesh, cspecs)
+
+        def fn(params, b):
+            return model.prefill(params, b, seq)
+
+        lsh = NamedSharding(mesh, P(dpx, None, "model"))
+        tokens = float(batch * seq)
+        return Cell(arch, shape_name, fn, (params_shape, bstructs),
+                    (psh, bsh), (lsh, csh), cfg,
+                    tokens, 2.0 * n_active * tokens)
+
+    # decode: one new token against a seq-length cache
+    cache_shape = jax.eval_shape(lambda: model.init_cache(batch, seq))
+    cspecs = shd.cache_specs(cfg, mesh, batch, kv_seq_shard)
+    csh = shd.to_shardings(mesh, cspecs)
+    tok = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+    tsh = NamedSharding(mesh, P(dpx if batch > 1 else None, None))
+    lsh = NamedSharding(mesh, P(dpx if batch > 1 else None, None, "model"))
+
+    def fn(params, token, cache):
+        return model.decode_step(params, token, cache)
+
+    tokens = float(batch)
+    return Cell(arch, shape_name, fn, (params_shape, tok, cache_shape),
+                (psh, tsh, csh), (lsh, csh), cfg,
+                tokens, 2.0 * n_active * tokens)
+
+
+def all_cells() -> list[tuple[str, str]]:
+    out = []
+    for arch in lm_arch_ids():
+        cfg = get_config(arch)
+        for shape_name in SHAPES:
+            if applicable(cfg, shape_name):
+                out.append((arch, shape_name))
+    return out

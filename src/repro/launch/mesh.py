@@ -1,0 +1,29 @@
+"""Production meshes.
+
+Single pod : (16, 16)    = 256 chips, axes ("data", "model")
+Multi-pod  : (2, 16, 16) = 512 chips, axes ("pod", "data", "model")
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets --xla_force_host_platform_device_count=512 before
+first jax init; tests/benches must keep seeing 1 device).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    """The data-parallel axes of a production mesh (gradient-reduction
+    domain — the paper's 'global' communicator)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def n_chips(mesh) -> int:
+    return mesh.devices.size

@@ -1,0 +1,187 @@
+"""Sharding rules: param/optimizer/batch/cache PartitionSpecs per mesh.
+
+Megatron-style tensor parallelism over "model" (column-parallel in-proj,
+row-parallel out-proj, vocab-sharded embeddings, EP for experts), data
+parallelism over ("pod","data"), and ZeRO-1 optimizer-state sharding that
+greedily places the DP axes on the largest still-unsharded divisible dim
+of each state leaf (this is what lets command-r/arctic optimizer state fit
+16 GB HBM).
+
+The rules are heuristic per leaf NAME+shape; GSPMD propagates the rest.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import dp_axes
+
+# leaf names whose LAST dim is column-parallel (output features on "model")
+_COL = {"wq", "wk", "wv", "wi", "wg", "wr", "w_in", "router", "cm_k",
+        "cm_r", "lora_a", "wlora_a"}
+# leaf names whose SECOND-TO-LAST dim is row-parallel (input features)
+_ROW = {"wo", "w_out", "cm_v", "proj"}
+_COL_BIAS = {"bq", "bk", "bv", "bi"}
+_EP = {"wi", "wg", "wo"}          # under a "moe" subtree: dim 1 = experts
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(f"#{p.idx}")
+    return out
+
+
+# §Perf hillclimb flag: shard MoE experts with TP on the expert hidden dim
+# (column/row-parallel INSIDE each expert) instead of EP on the expert dim.
+# Keeps the dispatched activations replicated over "model" and turns the
+# per-layer expert-weight all-gather into a (much smaller) output psum.
+MOE_TP = False
+
+
+def spec_for_param(path, shape, fsdp: bool = False, data_size: int = 16) -> P:
+    names = _path_names(path)
+    leaf = names[-1]
+    nd = len(shape)
+    if leaf == "table":                       # (V, D) vocab-sharded embed
+        spec = [
+            "model", None]
+    elif "moe" in names and leaf in _EP and nd == 4:
+        if MOE_TP:
+            # (L, E, D, F) column-parallel / (L, E, F, D) row-parallel
+            spec = [None, None, None, "model"] if leaf in ("wi", "wg") \
+                else [None, None, "model", None]
+        else:
+            spec = [None, "model", None, None]  # (L, E, D, F): EP on experts
+    elif leaf in _COL and nd >= 2:
+        spec = [None] * (nd - 1) + ["model"]
+    elif leaf in _ROW and nd >= 2:
+        spec = [None] * (nd - 2) + ["model", None]
+    elif leaf in _COL_BIAS and nd >= 1:
+        spec = [None] * (nd - 1) + ["model"]
+    else:
+        return P()                             # small: replicated
+    if fsdp and nd >= 2:
+        # weight-storage sharding over "data" (ZeRO-3/FSDP): skip the
+        # stacked-layer dim (scan slices it), pick the largest free dim
+        start = 1 if names[0] in ("layers", "enc_layers") else 0
+        cands = [i for i in range(start, nd)
+                 if spec[i] is None and shape[i] % data_size == 0]
+        if cands:
+            spec[max(cands, key=lambda i: shape[i])] = "data"
+    return P(*spec)
+
+
+def param_specs(params_shape, fsdp: bool = False, data_size: int = 16) -> Any:
+    """Pytree of PartitionSpec matching a params (shape) tree."""
+    flat = jax.tree_util.tree_flatten_with_path(params_shape)[0]
+    treedef = jax.tree_util.tree_structure(params_shape)
+    return jax.tree_util.tree_unflatten(
+        treedef,
+        [spec_for_param(p, l.shape, fsdp, data_size) for p, l in flat])
+
+
+def zero1_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Add DP-axis sharding to an optimizer-state leaf: place the still-
+    unused DP axes (combined, else "data") on the largest dim that is
+    unsharded and divisible — ZeRO-1."""
+    cur = list(spec) + [None] * (len(shape) - len(spec))
+    used = {a for c in cur if c is not None
+            for a in (c if isinstance(c, tuple) else (c,))}
+    dp = tuple(a for a in dp_axes(mesh) if a not in used)
+    if not dp:
+        return P(*cur)
+    dp_total = int(np.prod([mesh.shape[a] for a in dp]))
+    tries = [(dp, dp_total)]
+    if len(dp) > 1:
+        tries.append(((dp[-1],), mesh.shape[dp[-1]]))
+    for axes, size in tries:
+        order = sorted(range(len(shape)), key=lambda i: -shape[i])
+        for i in order:
+            if cur[i] is None and shape[i] % size == 0 and shape[i] >= size:
+                cur[i] = axes if len(axes) > 1 else axes[0]
+                return P(*cur)
+    return P(*cur)
+
+
+def opt_state_specs(params_shape, mesh: Mesh, fsdp: bool = False) -> Any:
+    """Specs for the AdamW state {master, m, v, step, prev_norm}."""
+    pspecs = param_specs(params_shape, fsdp=fsdp,
+                         data_size=mesh.shape.get("data", 1))
+    flat_p = jax.tree_util.tree_flatten_with_path(params_shape)[0]
+    flat_s = jax.tree.leaves(pspecs, is_leaf=lambda x: isinstance(x, P))
+    treedef = jax.tree_util.tree_structure(params_shape)
+    zl = [zero1_spec(s, l.shape, mesh)
+          for (_, l), s in zip(flat_p, flat_s)]
+    ztree = jax.tree_util.tree_unflatten(treedef, zl)
+    return {
+        "master": ztree, "m": ztree, "v": ztree,
+        "step": P(), "prev_norm": P(),
+    }
+
+
+def grad_ring_specs(params_shape, mesh: Mesh, fsdp: bool = False) -> Any:
+    """The in-flight gradient ring (l, *param): ZeRO-sharded like the
+    optimizer state (the push is then a reduce-scatter — the paper's glred
+    — and the pop an all-gather, both in the delayed window)."""
+    pspecs = param_specs(params_shape, fsdp=fsdp,
+                         data_size=mesh.shape.get("data", 1))
+    flat_p = jax.tree_util.tree_flatten_with_path(params_shape)[0]
+    flat_s = jax.tree.leaves(pspecs, is_leaf=lambda x: isinstance(x, P))
+    treedef = jax.tree_util.tree_structure(params_shape)
+    out = [P(None, *zero1_spec(s, l.shape, mesh))
+           for (_, l), s in zip(flat_p, flat_s)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_specs(cfg, mesh: Mesh) -> Any:
+    dp = dp_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+    out = {"tokens": P(dp, None), "labels": P(dp, None)}
+    if cfg.family == "vlm":
+        out["patch_embeds"] = P(dp, None, None)
+    if cfg.family == "encdec":
+        out["enc_embeds"] = P(dp, None, None)
+    return out
+
+
+def cache_specs(cfg, mesh: Mesh, batch: int, kv_seq_axis: bool = False) -> Any:
+    """KV caches: heads on "model" (baseline, when n_kv divides the model
+    axis) or sequence on "model" (split-KV — also the fallback for archs
+    with few KV heads, e.g. GQA kv=8 on model=16).  SSM states: heads on
+    "model"."""
+    dp = dp_axes(mesh)
+    dp = (dp if len(dp) > 1 else dp[0]) if batch > 1 else None
+    fam = cfg.family
+    msz = mesh.shape.get("model", 1)
+    if not kv_seq_axis and cfg.n_kv % msz != 0:
+        kv_seq_axis = True                       # heads don't divide: split-KV
+    kv = P(None, dp, "model", None, None) if kv_seq_axis \
+        else P(None, dp, None, "model", None)
+    if fam in ("dense", "vlm", "moe"):
+        return {"k": kv, "v": kv, "pos": P()}
+    if fam == "encdec":
+        return {"k": kv, "v": kv, "ck": kv, "cv": kv, "pos": P()}
+    if fam == "ssm":
+        return {"layers": {"s": P(None, dp, "model", None, None),
+                           "x_tm": P(None, dp, None),
+                           "x_cm": P(None, dp, None)},
+                "pos": P()}
+    if fam == "hybrid":
+        return {"layers": {"ssm": P(None, dp, "model", None, None),
+                           "conv": P(None, dp, None, "model")},
+                "shared_k": kv, "shared_v": kv, "pos": P()}
+    raise ValueError(fam)
+
+
+def to_shardings(mesh: Mesh, specs):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))

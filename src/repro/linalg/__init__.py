@@ -1,0 +1,25 @@
+from repro.linalg.operators import (
+    DenseSPD,
+    DiagonalOp,
+    Stencil2D5,
+    Stencil3D7,
+    Stencil3D27,
+    laplacian_2d_spectrum,
+)
+from repro.linalg.preconditioners import (
+    BlockJacobi,
+    IdentityPrec,
+    JacobiPrec,
+)
+
+__all__ = [
+    "DenseSPD",
+    "DiagonalOp",
+    "Stencil2D5",
+    "Stencil3D7",
+    "Stencil3D27",
+    "laplacian_2d_spectrum",
+    "BlockJacobi",
+    "IdentityPrec",
+    "JacobiPrec",
+]

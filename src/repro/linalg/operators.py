@@ -1,0 +1,258 @@
+"""SPD linear operators used by the CG solvers.
+
+The paper's benchmark problems are (a) a 2D 5-point finite-difference
+Laplacian (PETSc KSP ex2), (b) a diagonal "toy" matrix carrying the 2D
+Laplacian spectrum (the extremely communication-bound regime of Fig. 3/4),
+and (c) a 3D FEM ice-sheet system (SNES ex48), which we stand in for with
+anisotropic 3D stencils (see DESIGN.md §10).
+
+All operators act on flat vectors of length ``n`` and are pure-JAX; the
+stencil operators optionally route their hot loop through the Pallas
+kernels in ``repro.kernels`` (``use_kernel=True``).
+
+TPU adaptation note: the paper's PETSc backend stores general CSR (AIJ)
+matrices; CSR SpMV is gather-bound and TPU-hostile.  Every benchmark matrix
+in the paper is structurally a stencil, so we implement stencils natively
+(shift-add on the grid; contiguous VMEM tiles in the kernel) — the
+TPU-idiomatic equivalent of the same operator.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class LinearOperator:
+    """SPD operator interface consumed by the solvers.
+
+    Attributes
+    ----------
+    n : global problem size (flat vector length).
+    """
+
+    n: int
+
+    def apply(self, x: jax.Array) -> jax.Array:  # A @ x
+        raise NotImplementedError
+
+    def diag(self) -> jax.Array:  # diagonal of A (for Jacobi-type preconditioners)
+        raise NotImplementedError
+
+    def to_dense(self) -> np.ndarray:  # small problems only (tests)
+        eye = np.eye(self.n, dtype=np.float64)
+        cols = [np.asarray(self.apply(jnp.asarray(eye[:, j]))) for j in range(self.n)]
+        return np.stack(cols, axis=1)
+
+    # Analytic spectral bounds where known; used for Chebyshev shifts.
+    def eig_bounds(self) -> tuple[float, float]:
+        raise NotImplementedError
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        return self.apply(x)
+
+
+@dataclasses.dataclass(frozen=True)
+class DiagonalOp(LinearOperator):
+    """A = diag(d).  The paper's "one-point stencil" communication-bound toy."""
+
+    d: jax.Array
+
+    @property
+    def n(self) -> int:  # type: ignore[override]
+        return int(self.d.shape[0])
+
+    def apply(self, x: jax.Array) -> jax.Array:
+        return self.d.astype(x.dtype) * x
+
+    def diag(self) -> jax.Array:
+        return self.d
+
+    def eig_bounds(self) -> tuple[float, float]:
+        return float(jnp.min(self.d)), float(jnp.max(self.d))
+
+
+def laplacian_2d_spectrum(nx: int, ny: int, dtype=jnp.float64) -> jax.Array:
+    """Eigenvalues of the unscaled 2D 5-point Laplacian (Dirichlet), as a flat
+    vector of length nx*ny:  4 - 2cos(i pi/(nx+1)) - 2cos(j pi/(ny+1))."""
+    i = jnp.arange(1, nx + 1, dtype=dtype)
+    j = jnp.arange(1, ny + 1, dtype=dtype)
+    li = 2.0 - 2.0 * jnp.cos(i * jnp.pi / (nx + 1))
+    lj = 2.0 - 2.0 * jnp.cos(j * jnp.pi / (ny + 1))
+    return (li[:, None] + lj[None, :]).reshape(-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class Stencil2D5(LinearOperator):
+    """Unscaled 2D 5-point Laplacian with homogeneous Dirichlet BCs on an
+    nx-by-ny grid (row-major, x outer / y inner):  (A x)_{ij} =
+    4 x_{ij} - x_{i±1,j} - x_{i,j±1}.  PETSc KSP ex2's matrix."""
+
+    nx: int
+    ny: int
+    use_kernel: bool = False
+
+    @property
+    def n(self) -> int:  # type: ignore[override]
+        return self.nx * self.ny
+
+    def apply(self, x: jax.Array) -> jax.Array:
+        if self.use_kernel:
+            from repro.kernels import ops as kops
+
+            return kops.stencil2d5_apply(x.reshape(self.nx, self.ny)).reshape(-1)
+        g = x.reshape(self.nx, self.ny)
+        p = jnp.pad(g, 1)
+        out = (
+            4.0 * g
+            - p[:-2, 1:-1]
+            - p[2:, 1:-1]
+            - p[1:-1, :-2]
+            - p[1:-1, 2:]
+        )
+        return out.reshape(-1)
+
+    def diag(self) -> jax.Array:
+        return jnp.full((self.n,), 4.0)
+
+    def eig_bounds(self) -> tuple[float, float]:
+        lmin = (2 - 2 * np.cos(np.pi / (self.nx + 1))) + (2 - 2 * np.cos(np.pi / (self.ny + 1)))
+        lmax = (2 - 2 * np.cos(self.nx * np.pi / (self.nx + 1))) + (
+            2 - 2 * np.cos(self.ny * np.pi / (self.ny + 1))
+        )
+        return float(lmin), float(lmax)
+
+
+@dataclasses.dataclass(frozen=True)
+class Stencil3D7(LinearOperator):
+    """Anisotropic 3D 7-point Laplacian, Dirichlet BCs, nx×ny×nz grid.
+
+    ``eps_z`` < 1 mimics the thin-sheet vertical/horizontal aspect-ratio
+    anisotropy of the Blatter/Pattyn ice-sheet system (SNES ex48 stand-in):
+    (A x) = 2(1+1+eps_z) x - x_{i±1} - x_{j±1} - eps_z x_{k±1}.
+    """
+
+    nx: int
+    ny: int
+    nz: int
+    eps_z: float = 1.0
+    use_kernel: bool = False
+
+    @property
+    def n(self) -> int:  # type: ignore[override]
+        return self.nx * self.ny * self.nz
+
+    def apply(self, x: jax.Array) -> jax.Array:
+        if self.use_kernel:
+            from repro.kernels import ops as kops
+
+            return kops.stencil3d7_apply(
+                x.reshape(self.nx, self.ny, self.nz), self.eps_z
+            ).reshape(-1)
+        g = x.reshape(self.nx, self.ny, self.nz)
+        p = jnp.pad(g, 1)
+        ez = jnp.asarray(self.eps_z, dtype=x.dtype)
+        out = (
+            (4.0 + 2.0 * ez) * g
+            - p[:-2, 1:-1, 1:-1]
+            - p[2:, 1:-1, 1:-1]
+            - p[1:-1, :-2, 1:-1]
+            - p[1:-1, 2:, 1:-1]
+            - ez * p[1:-1, 1:-1, :-2]
+            - ez * p[1:-1, 1:-1, 2:]
+        )
+        return out.reshape(-1)
+
+    def diag(self) -> jax.Array:
+        return jnp.full((self.n,), 4.0 + 2.0 * self.eps_z)
+
+    def eig_bounds(self) -> tuple[float, float]:
+        def b(n):
+            return 2 - 2 * np.cos(np.pi / (n + 1)), 2 - 2 * np.cos(n * np.pi / (n + 1))
+
+        (ax, bx), (ay, by), (az, bz) = b(self.nx), b(self.ny), b(self.nz)
+        return float(ax + ay + self.eps_z * az), float(bx + by + self.eps_z * bz)
+
+
+@dataclasses.dataclass(frozen=True)
+class Stencil3D27(LinearOperator):
+    """3D 27-point stencil (trilinear FEM mass-like coupling): centre weight
+    ``c``, face -1, edge -1/2, corner -1/4, scaled to stay SPD.  The denser
+    stencil regime of FEM discretizations such as SNES ex48."""
+
+    nx: int
+    ny: int
+    nz: int
+    centre: float = 13.0  # > sum(|off-diag|) = 6 + 12/2 + 8/4 = 14 ⇒ use diag-dominant 14.5
+    use_kernel: bool = False
+
+    def __post_init__(self):
+        if self.centre <= 14.0:
+            object.__setattr__(self, "centre", 14.5)
+
+    @property
+    def n(self) -> int:  # type: ignore[override]
+        return self.nx * self.ny * self.nz
+
+    def apply(self, x: jax.Array) -> jax.Array:
+        g = x.reshape(self.nx, self.ny, self.nz)
+        p = jnp.pad(g, 1)
+        out = self.centre * g
+        for di in (-1, 0, 1):
+            for dj in (-1, 0, 1):
+                for dk in (-1, 0, 1):
+                    order = abs(di) + abs(dj) + abs(dk)
+                    if order == 0:
+                        continue
+                    w = {1: 1.0, 2: 0.5, 3: 0.25}[order]
+                    out = out - w * p[
+                        1 + di : 1 + di + self.nx,
+                        1 + dj : 1 + dj + self.ny,
+                        1 + dk : 1 + dk + self.nz,
+                    ]
+        return out.reshape(-1)
+
+    def diag(self) -> jax.Array:
+        return jnp.full((self.n,), self.centre)
+
+    def eig_bounds(self) -> tuple[float, float]:
+        # Gershgorin: centre ± 14 (loose but safe for Chebyshev shifts).
+        return float(self.centre - 14.0), float(self.centre + 14.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseSPD(LinearOperator):
+    """Explicit dense SPD matrix (property tests / oracles)."""
+
+    a: jax.Array
+
+    @property
+    def n(self) -> int:  # type: ignore[override]
+        return int(self.a.shape[0])
+
+    def apply(self, x: jax.Array) -> jax.Array:
+        return self.a @ x
+
+    def diag(self) -> jax.Array:
+        return jnp.diagonal(self.a)
+
+    def to_dense(self) -> np.ndarray:
+        return np.asarray(self.a, dtype=np.float64)
+
+    def eig_bounds(self) -> tuple[float, float]:
+        w = np.linalg.eigvalsh(np.asarray(self.a, dtype=np.float64))
+        return float(w[0]), float(w[-1])
+
+
+def random_spd(key: jax.Array, n: int, cond: float = 1e3, dtype=jnp.float64) -> DenseSPD:
+    """Random SPD matrix with prescribed condition number (log-uniform spectrum)."""
+    k1, k2 = jax.random.split(key)
+    q, _ = jnp.linalg.qr(jax.random.normal(k1, (n, n), dtype=dtype))
+    lam = jnp.logspace(0.0, jnp.log10(cond), n, dtype=dtype)
+    lam = lam * (1.0 + 0.01 * jax.random.uniform(k2, (n,), dtype=dtype))
+    return DenseSPD(a=(q * lam) @ q.T)

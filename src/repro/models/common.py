@@ -1,0 +1,149 @@
+"""Shared building blocks: norms, MLPs, rotary embeddings, initializers."""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def apply_norm(cfg, x, p):
+    if cfg.norm == "rms":
+        return rms_norm(x, p["scale"])
+    return layer_norm(x, p["scale"], p.get("bias"))
+
+
+def norm_params(cfg, d, dtype):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if cfg.norm == "layer":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+# ------------------------------------------------------------------ MLP ---
+
+def mlp_params(key, d_model, d_ff, act, dtype, bias=False, out_scale=1.0):
+    k1, k2, k3 = jax.random.split(key, 3)
+    std = 0.02
+    p = {}
+    if act == "swiglu":
+        p["wi"] = jax.random.normal(k1, (d_model, d_ff), dtype) * std
+        p["wg"] = jax.random.normal(k2, (d_model, d_ff), dtype) * std
+    else:
+        p["wi"] = jax.random.normal(k1, (d_model, d_ff), dtype) * std
+    p["wo"] = jax.random.normal(k3, (d_ff, d_model), dtype) * std * out_scale
+    if bias:
+        p["bi"] = jnp.zeros((d_ff,), dtype)
+        p["bo"] = jnp.zeros((d_model,), dtype)
+    return p
+
+
+def mlp_apply(p, x, act: str):
+    h = x @ p["wi"].astype(x.dtype)
+    if "bi" in p:
+        h = h + p["bi"].astype(x.dtype)
+    if act == "swiglu":
+        h = jax.nn.silu(h) * (x @ p["wg"].astype(x.dtype))
+    elif act == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        h = jax.nn.relu(h)
+    out = h @ p["wo"].astype(x.dtype)
+    if "bo" in p:
+        out = out + p["bo"].astype(x.dtype)
+    return out
+
+
+# ---------------------------------------------------------------- rotary --
+
+def rope_freqs(head_dim: int, theta: float, positions: jax.Array) -> tuple:
+    """positions (..., T) -> cos/sin (..., T, head_dim//2) in f32."""
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (B, T, H, D); cos/sin (B, T, half) or (T, half)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def mrope_freqs(head_dim: int, theta: float, pos3: jax.Array, sections) -> tuple:
+    """M-RoPE (qwen2-vl): pos3 (B, 3, T) = (t, h, w) position ids; the
+    half-dim frequency bands are split into ``sections`` (sum = head_dim//2),
+    each band rotated by its own coordinate."""
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    inv = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = pos3.astype(jnp.float32)[..., None] * inv          # (B, 3, T, half)
+    pieces_c, pieces_s = [], []
+    start = 0
+    for axis, sec in enumerate(sections):
+        a = ang[:, axis, :, start : start + sec]
+        pieces_c.append(jnp.cos(a))
+        pieces_s.append(jnp.sin(a))
+        start += sec
+    return jnp.concatenate(pieces_c, -1), jnp.concatenate(pieces_s, -1)
+
+
+def text_pos3(positions: jax.Array) -> jax.Array:
+    """(B, T) -> (B, 3, T): text tokens use t = h = w = pos (qwen2-vl)."""
+    return jnp.broadcast_to(positions[:, None, :], (positions.shape[0], 3, positions.shape[1]))
+
+
+# ------------------------------------------------------------- embedding --
+
+def embed_params(key, vocab_padded, d_model, dtype):
+    return {"table": jax.random.normal(key, (vocab_padded, d_model), dtype) * 0.02}
+
+
+def embed_lookup(p, tokens):
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed(p, x):
+    """Logits (B, T, Vp). Vocab-padded entries are masked by the loss."""
+    return x @ p["table"].astype(x.dtype).T
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, vocab: int) -> jax.Array:
+    """Mean CE over all positions; padded vocab tail masked out."""
+    vp = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    if vp > vocab:
+        neg = jnp.full((vp - vocab,), -1e30, jnp.float32)
+        logits = logits.at[..., vocab:].add(neg)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

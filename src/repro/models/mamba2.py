@@ -1,0 +1,152 @@
+"""Mamba2 (SSD) block — the zamba2-2.7b backbone.
+
+State-space recurrence per head (P = head channels, N = ssm_state):
+
+    S_t = a_t · S_{t-1} + dt_t · (x_t ⊗ B_t)        a_t = exp(-dt_t·exp(A_log))
+    y_t = S_t · C_t + D ⊙ x_t
+
+Training uses a `lax.scan` over time (compile-friendly, O(1) HLO in T);
+decode carries S explicitly — O(1) state per token, which is why zamba2
+RUNS the long_500k shape that full-attention archs must skip.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+
+CONV_W = 4
+
+
+def mamba2_params(key, cfg, dtype, out_scale=1.0):
+    d = cfg.d_model
+    d_in = 2 * d
+    n = cfg.ssm_state
+    hp = cfg.ssm_head_dim
+    h = d_in // hp
+    ks = jax.random.split(key, 8)
+    std = 0.02
+    return {
+        # fused input projection: [z, x, B, C, dt]
+        "w_in": jax.random.normal(ks[0], (d, 2 * d_in + 2 * n + h), dtype) * std,
+        "conv_x": jax.random.normal(ks[1], (CONV_W, d_in), dtype) * std,
+        "conv_b": jax.random.normal(ks[2], (CONV_W, n), dtype) * std,
+        "conv_c": jax.random.normal(ks[3], (CONV_W, n), dtype) * std,
+        "a_log": jnp.zeros((h,), dtype),
+        "dt_bias": jnp.zeros((h,), dtype),
+        "d_skip": jnp.ones((h,), dtype),
+        "norm": jnp.ones((d_in,), dtype),
+        "w_out": jax.random.normal(ks[4], (d_in, d), dtype) * std * out_scale,
+    }
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv: x (B, T, C), w (W, C)."""
+    pads = [jnp.zeros_like(x[:, :1])] * (CONV_W - 1)
+    xs = jnp.concatenate(pads + [x], axis=1)
+    out = sum(
+        xs[:, i : i + x.shape[1]] * w[i][None, None, :] for i in range(CONV_W)
+    )
+    return jax.nn.silu(out)
+
+
+def _split_in(cfg, proj):
+    d_in = 2 * cfg.d_model
+    n = cfg.ssm_state
+    h = d_in // cfg.ssm_head_dim
+    z, xi, bmat, cmat, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1
+    )
+    return z, xi, bmat, cmat, dt
+
+
+def mamba2_apply(p, cfg, x, return_state: bool = False):
+    """Training/prefill pass.  x (B, T, D) -> (B, T, D)
+    (+ decode-ready state when ``return_state``)."""
+    b, t, d = x.shape
+    d_in = 2 * d
+    n = cfg.ssm_state
+    hp = cfg.ssm_head_dim
+    h = d_in // hp
+
+    proj = x @ p["w_in"].astype(x.dtype)
+    z, xi, bm, cmat, dt = _split_in(cfg, proj)
+    xbc_raw = jnp.concatenate([xi, bm, cmat], axis=-1)   # pre-conv history
+    xi = _causal_conv(xi, p["conv_x"].astype(x.dtype))
+    bm = _causal_conv(bm, p["conv_b"].astype(x.dtype))
+    cmat = _causal_conv(cmat, p["conv_c"].astype(x.dtype))
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = jnp.exp(-dt * jnp.exp(p["a_log"].astype(jnp.float32)))      # (B,T,H)
+    xh = xi.reshape(b, t, h, hp).astype(jnp.float32)
+    bm32, cm32 = bm.astype(jnp.float32), cmat.astype(jnp.float32)
+
+    def step(s, inp):
+        a_t, dt_t, x_t, b_t, c_t = inp
+        s = s * a_t[:, :, None, None] + (
+            dt_t[:, :, None, None] * x_t[..., None] * b_t[:, None, None, :]
+        )
+        y = jnp.einsum("bhpn,bn->bhp", s, c_t)
+        return s, y
+
+    s0 = jnp.zeros((b, h, hp, n), jnp.float32)
+    xs = (
+        jnp.moveaxis(a, 1, 0), jnp.moveaxis(dt, 1, 0), jnp.moveaxis(xh, 1, 0),
+        jnp.moveaxis(bm32, 1, 0), jnp.moveaxis(cm32, 1, 0),
+    )
+    s_fin, ys = jax.lax.scan(step, s0, xs)
+    y = jnp.moveaxis(ys, 0, 1)                                      # (B,T,H,P)
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] * xh
+    y = y.reshape(b, t, d_in).astype(x.dtype)
+    y = cm.rms_norm(y * jax.nn.silu(z), p["norm"])
+    out = y @ p["w_out"].astype(x.dtype)
+    if not return_state:
+        return out
+    pad = jnp.zeros((b, max(CONV_W - 1 - t, 0), xbc_raw.shape[-1]), x.dtype)
+    conv_hist = jnp.concatenate([pad, xbc_raw[:, -(CONV_W - 1):]], axis=1)
+    return out, {"ssm": s_fin, "conv": conv_hist}
+
+
+def mamba2_init_state(cfg, batch, dtype=jnp.float32):
+    d_in = 2 * cfg.d_model
+    h = d_in // cfg.ssm_head_dim
+    return {
+        "ssm": jnp.zeros((batch, h, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, CONV_W - 1, d_in + 2 * cfg.ssm_state), dtype),
+    }
+
+
+def mamba2_decode(p, cfg, x, state):
+    """One-token step.  x (B, 1, D) -> ((B, 1, D), new_state)."""
+    b, _, d = x.shape
+    d_in = 2 * d
+    n = cfg.ssm_state
+    hp = cfg.ssm_head_dim
+    h = d_in // hp
+
+    proj = x @ p["w_in"].astype(x.dtype)
+    z, xi, bm, cmat, dt = _split_in(cfg, proj)
+    xbc = jnp.concatenate([xi, bm, cmat], axis=-1)[:, 0]            # (B, C)
+    hist = jnp.concatenate([state["conv"], xbc[:, None]], axis=1)   # (B, W, C)
+    wfull = jnp.concatenate(
+        [p["conv_x"], p["conv_b"], p["conv_c"]], axis=-1
+    ).astype(x.dtype)
+    conv = jax.nn.silu(jnp.einsum("bwc,wc->bc", hist, wfull))
+    xi, bm, cmat = jnp.split(conv, [d_in, d_in + n], axis=-1)
+
+    dt = jax.nn.softplus(
+        dt[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )                                                               # (B, H)
+    a = jnp.exp(-dt * jnp.exp(p["a_log"].astype(jnp.float32)))
+    xh = xi.reshape(b, h, hp).astype(jnp.float32)
+    s = state["ssm"] * a[:, :, None, None] + (
+        dt[:, :, None, None] * xh[..., None] * bm.astype(jnp.float32)[:, None, None, :]
+    )
+    y = jnp.einsum("bhpn,bn->bhp", s, cmat.astype(jnp.float32))
+    y = y + p["d_skip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(b, 1, d_in).astype(x.dtype)
+    y = cm.rms_norm(y * jax.nn.silu(z), p["norm"])
+    out = y @ p["w_out"].astype(x.dtype)
+    return out, {"ssm": s, "conv": hist[:, 1:]}

@@ -1,0 +1,576 @@
+"""Model assembly for all assigned architecture families.
+
+Parameters are nested dicts with per-layer leaves STACKED on a leading L
+dimension, consumed by ``lax.scan`` over layers (+ ``jax.checkpoint``) so
+the lowered HLO is O(1) in depth — this is what keeps the 64-layer
+command-r dry-run compile tractable and is the production remat policy.
+
+Entry points (uniform across families):
+    init(key)                          -> params
+    loss_fn(params, batch)             -> (loss, metrics)      [train_4k]
+    prefill(params, batch)             -> (logits_last, cache) [prefill_32k]
+    decode_step(params, token, cache)  -> (logits, cache)      [decode_*]
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import common as cm
+from repro.models import mamba2 as mb
+from repro.models import moe as moe_mod
+from repro.models import rwkv6 as rk
+from repro.models.config import ArchConfig
+
+Params = Any
+
+# Layer-scan unroll control.  The dry-run's roofline pass sets this to True
+# on REDUCED-depth configs so XLA cost_analysis counts every layer (a rolled
+# scan body is counted once); production/smoke paths keep the rolled scan.
+SCAN_UNROLL: int | bool = 1
+
+
+def _scan(body, init, xs):
+    return jax.lax.scan(body, init, xs, unroll=SCAN_UNROLL)
+
+
+def _dt(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+def _stack(key, n, make):
+    return jax.vmap(make)(jax.random.split(key, n))
+
+
+# ===========================================================================
+@dataclasses.dataclass(frozen=True)
+class LM:
+    cfg: ArchConfig
+
+    # ------------------------------------------------------------- init --
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        pdt = _dt(cfg.param_dtype)
+        k_emb, k_lyr, k_head, k_extra = jax.random.split(key, 4)
+        out_scale = 1.0 / max(1.0, (2.0 * cfg.n_layers) ** 0.5)
+        p: dict = {
+            "embed": cm.embed_params(k_emb, cfg.vocab_padded, cfg.d_model, pdt),
+            "head": cm.embed_params(k_head, cfg.vocab_padded, cfg.d_model, pdt),
+            "final_norm": cm.norm_params(cfg, cfg.d_model, pdt),
+        }
+
+        def dense_layer(k):
+            k1, k2 = jax.random.split(k)
+            return {
+                "attn": attn.attn_params(k1, cfg, dtype=pdt, out_scale=out_scale),
+                "mlp": cm.mlp_params(k2, cfg.d_model, cfg.d_ff, cfg.act, pdt,
+                                     bias=cfg.bias, out_scale=out_scale),
+                "ln1": cm.norm_params(cfg, cfg.d_model, pdt),
+                "ln2": cm.norm_params(cfg, cfg.d_model, pdt),
+            }
+
+        fam = cfg.family
+        if fam in ("dense", "vlm"):
+            p["layers"] = _stack(k_lyr, cfg.n_layers, dense_layer)
+        elif fam == "moe":
+            def moe_layer(k):
+                k1, k2 = jax.random.split(k)
+                return {
+                    "attn": attn.attn_params(k1, cfg, dtype=pdt, out_scale=out_scale),
+                    "moe": moe_mod.moe_params(k2, cfg, pdt, out_scale=out_scale),
+                    "ln1": cm.norm_params(cfg, cfg.d_model, pdt),
+                    "ln2": cm.norm_params(cfg, cfg.d_model, pdt),
+                }
+            p["layers"] = _stack(k_lyr, cfg.n_layers, moe_layer)
+        elif fam == "ssm":
+            p["layers"] = _stack(k_lyr, cfg.n_layers,
+                                 lambda k: rk.rwkv6_params(k, cfg, pdt, out_scale))
+        elif fam == "hybrid":
+            p["layers"] = _stack(k_lyr, cfg.n_layers,
+                                 lambda k: mb.mamba2_params(k, cfg, pdt, out_scale))
+            # weight-SHARED attention block over concat([h, embed]) (2d)
+            ks = jax.random.split(k_extra, 3)
+            shared_cfg = cfg.replace(head_dim=2 * cfg.d_model // cfg.n_heads)
+            p["shared"] = {
+                "attn": attn.attn_params(ks[0], shared_cfg, d_model=2 * cfg.d_model,
+                                         dtype=pdt, out_scale=out_scale),
+                "ln": cm.norm_params(cfg, 2 * cfg.d_model, pdt),
+                "proj": jax.random.normal(
+                    ks[1], (shared_cfg.n_heads * shared_cfg.hd, cfg.d_model), pdt
+                ) * 0.02 * out_scale,
+                "mlp": cm.mlp_params(ks[2], cfg.d_model, cfg.d_ff, cfg.act,
+                                     pdt, out_scale=out_scale),
+                "ln2": cm.norm_params(cfg, cfg.d_model, pdt),
+            }
+        elif fam == "encdec":
+            p["enc_layers"] = _stack(k_extra, cfg.n_enc_layers, dense_layer)
+            p["enc_norm"] = cm.norm_params(cfg, cfg.d_model, pdt)
+
+            def dec_layer(k):
+                k1, k2 = jax.random.split(k)
+                d = dense_layer(k1)
+                d["cross"] = attn.attn_params(k2, cfg, dtype=pdt, out_scale=out_scale)
+                d["ln3"] = cm.norm_params(cfg, cfg.d_model, pdt)
+                return d
+            p["layers"] = _stack(k_lyr, cfg.n_layers, dec_layer)
+        else:
+            raise ValueError(fam)
+        return p
+
+    # ------------------------------------------------------- positional --
+    def _cos_sin(self, positions, batch_shape=None, pos3=None):
+        cfg = self.cfg
+        if cfg.mrope_sections:
+            assert pos3 is not None
+            return cm.mrope_freqs(cfg.hd, cfg.rope_theta, pos3, cfg.mrope_sections)
+        return cm.rope_freqs(cfg.hd, cfg.rope_theta, positions)
+
+    # --------------------------------------------------------- forward ---
+    def _dense_block(self, p, x, cos_sin, enc_out=None):
+        cfg = self.cfg
+        if cfg.parallel_block:
+            h = cm.apply_norm(cfg, x, p["ln1"])
+            x = x + attn.attention_train(p["attn"], cfg, h, cos_sin) \
+                + cm.mlp_apply(p["mlp"], h, cfg.act)
+            return x, 0.0
+        x = x + attn.attention_train(
+            p["attn"], cfg, cm.apply_norm(cfg, x, p["ln1"]), cos_sin)
+        if "cross" in p:
+            x = x + attn.attention_train(
+                p["cross"], cfg, cm.apply_norm(cfg, x, p["ln3"]),
+                None, kv_override=enc_out, causal=False)
+        if "moe" in p:
+            y, aux = moe_mod.moe_apply(
+                p["moe"], cfg, cm.apply_norm(cfg, x, p["ln2"]))
+            return x + y, aux
+        x = x + cm.mlp_apply(
+            p["mlp"], cm.apply_norm(cfg, x, p["ln2"]), cfg.act)
+        return x, 0.0
+
+    def _backbone(self, params, x, cos_sin, enc_kv=None):
+        """Scan-over-layers trunk.  Returns (x, aux_loss)."""
+        cfg = self.cfg
+        fam = cfg.family
+
+        if fam in ("dense", "vlm", "moe", "encdec"):
+            def body(carry, p_l):
+                x = carry
+                x, aux = self._dense_block(p_l, x, cos_sin, enc_kv)
+                return x, aux
+            x, auxs = _scan(
+                jax.checkpoint(body), x, params["layers"])
+            return x, jnp.sum(jnp.asarray(auxs))
+
+        if fam == "ssm":
+            b = x.shape[0]
+            st = rk.rwkv6_init_state(cfg, b)
+
+            def body(x, p_l):
+                y, _ = rk.rwkv6_block(p_l, cfg, x, st)
+                return y, 0.0
+            x, _ = _scan(jax.checkpoint(body), x, params["layers"])
+            return x, jnp.zeros(())
+
+        if fam == "hybrid":
+            x0 = x                                           # original embeds
+            period = cfg.shared_attn_period
+            n_groups = cfg.n_layers // period
+
+            def mamba_body(x, p_l):
+                return x + mb.mamba2_apply(p_l, cfg, x), None
+
+            layers = params["layers"]
+            for gi in range(n_groups):
+                grp = jax.tree.map(
+                    lambda a: a[gi * period : (gi + 1) * period], layers)
+                x, _ = _scan(jax.checkpoint(mamba_body), x, grp)
+                # shared attention block on concat([h, embed])
+                sh = params["shared"]
+                hcat = jnp.concatenate([x, x0], axis=-1)
+                hcat = cm.apply_norm(cfg, hcat, sh["ln"])
+                scfg = cfg.replace(head_dim=2 * cfg.d_model // cfg.n_heads)
+                q, k, v = attn.qkv(sh["attn"], scfg, hcat)
+                cos, sin = cm.rope_freqs(
+                    scfg.hd, cfg.rope_theta, jnp.arange(x.shape[1]))
+                q = cm.apply_rope(q, cos, sin)
+                k = cm.apply_rope(k, cos, sin)
+                o = attn.flash_attention(q, k, v, causal=True)
+                o = o.reshape(x.shape[0], x.shape[1], -1)
+                x = x + o @ sh["proj"].astype(x.dtype)
+                x = x + cm.mlp_apply(
+                    sh["mlp"], cm.apply_norm(cfg, x, sh["ln2"]), cfg.act)
+            return x, jnp.zeros(())
+        raise ValueError(fam)
+
+    def _encode(self, params, enc_embeds):
+        """Encoder stack (full self-attention) -> hidden states."""
+        cfg = self.cfg
+        t = enc_embeds.shape[1]
+        cos_sin = cm.rope_freqs(cfg.hd, cfg.rope_theta, jnp.arange(t))
+
+        def body(x, p_l):
+            x = x + attn.attention_train(
+                p_l["attn"], cfg, cm.apply_norm(cfg, x, p_l["ln1"]),
+                cos_sin, causal=False)
+            x = x + cm.mlp_apply(
+                p_l["mlp"], cm.apply_norm(cfg, x, p_l["ln2"]), cfg.act)
+            return x, None
+        x, _ = _scan(jax.checkpoint(body), enc_embeds,
+                            params["enc_layers"])
+        return cm.apply_norm(cfg, x, params["enc_norm"])
+
+    def forward(self, params, batch):
+        """Logits for the full sequence.  Returns (logits, aux)."""
+        cfg = self.cfg
+        cdt = _dt(cfg.compute_dtype)
+        tokens = batch["tokens"]
+        b, t = tokens.shape
+        x = cm.embed_lookup(params["embed"], tokens).astype(cdt)
+        pos = jnp.arange(t)
+        pos3 = None
+        enc_kv = None
+
+        if cfg.family == "vlm":
+            patches = batch["patch_embeds"].astype(cdt)      # (B, P, D)
+            np_ = patches.shape[1]
+            x = jnp.concatenate([patches, x], axis=1)
+            side = int(np_ ** 0.5) or 1
+            grid = jnp.arange(np_)
+            img3 = jnp.stack([jnp.zeros((np_,), jnp.int32),
+                              grid // side, grid % side])
+            txt3 = cm.text_pos3(jnp.broadcast_to(np_ + pos, (b, t)))
+            pos3 = jnp.concatenate(
+                [jnp.broadcast_to(img3[None], (b, 3, np_)), txt3], axis=-1)
+            cos_sin = self._cos_sin(None, pos3=pos3)
+        elif cfg.family == "encdec":
+            enc_hidden = self._encode(
+                params, batch["enc_embeds"].astype(cdt))
+            # cross-attention K/V computed per layer from enc_hidden; pass
+            # hidden states and let each layer project (kv_override path
+            # projects inside attention_train via its own wk/wv)
+            enc_kv = enc_hidden
+            cos_sin = self._cos_sin(pos)
+        elif cfg.family in ("ssm",):
+            cos_sin = None
+        else:
+            cos_sin = self._cos_sin(pos)
+
+        if cfg.family == "encdec":
+            x, aux = self._backbone_encdec(params, x, cos_sin, enc_kv)
+        else:
+            x, aux = self._backbone(params, x, cos_sin)
+
+        if cfg.family == "vlm":
+            x = x[:, batch["patch_embeds"].shape[1]:]
+        x = cm.apply_norm(cfg, x, params["final_norm"])
+        logits = cm.unembed(params["head"], x)
+        return logits, aux
+
+    def _backbone_encdec(self, params, x, cos_sin, enc_hidden):
+        cfg = self.cfg
+
+        def body(x, p_l):
+            h = cm.apply_norm(cfg, x, p_l["ln1"])
+            x = x + attn.attention_train(p_l["attn"], cfg, h, cos_sin)
+            # cross attention: project enc_hidden with this layer's k/v
+            hq = cm.apply_norm(cfg, x, p_l["ln3"])
+            q, _, _ = attn.qkv(p_l["cross"], cfg, hq)
+            _, k, v = attn.qkv(p_l["cross"], cfg, enc_hidden)
+            o = attn.flash_attention(q, k, v, causal=False)
+            x = x + o.reshape(*x.shape[:2], -1) @ p_l["cross"]["wo"].astype(x.dtype)
+            x = x + cm.mlp_apply(
+                p_l["mlp"], cm.apply_norm(cfg, x, p_l["ln2"]), cfg.act)
+            return x, None
+        x, _ = _scan(jax.checkpoint(body), x, params["layers"])
+        return x, jnp.zeros(())
+
+    # ------------------------------------------------------------ loss ---
+    def loss_fn(self, params, batch):
+        cfg = self.cfg
+        logits, aux = self.forward(params, batch)
+        ce = cm.cross_entropy(logits, batch["labels"], cfg.vocab)
+        loss = ce + cfg.router_aux_weight * aux
+        return loss, {"ce": ce, "aux": aux}
+
+    # ========================================================== serving ===
+    def init_cache(self, batch_size: int, max_seq: int):
+        cfg = self.cfg
+        cdt = _dt(cfg.compute_dtype)
+        fam = cfg.family
+        if fam in ("dense", "vlm", "moe"):
+            shape = (cfg.n_layers, batch_size, max_seq, cfg.n_kv, cfg.hd)
+            return {"k": jnp.zeros(shape, cdt), "v": jnp.zeros(shape, cdt),
+                    "pos": jnp.zeros((), jnp.int32)}
+        if fam == "ssm":
+            st = rk.rwkv6_init_state(cfg, batch_size)
+            return {
+                "layers": jax.tree.map(
+                    lambda a: jnp.broadcast_to(
+                        a[None], (cfg.n_layers, *a.shape)).copy(), st),
+                "pos": jnp.zeros((), jnp.int32),
+            }
+        if fam == "hybrid":
+            st = mb.mamba2_init_state(cfg, batch_size, cdt)
+            n_groups = cfg.n_layers // cfg.shared_attn_period
+            scfg = cfg.replace(head_dim=2 * cfg.d_model // cfg.n_heads)
+            kv = (n_groups, batch_size, max_seq, cfg.n_kv, scfg.hd)
+            return {
+                "layers": jax.tree.map(
+                    lambda a: jnp.broadcast_to(
+                        a[None], (cfg.n_layers, *a.shape)).copy(), st),
+                "shared_k": jnp.zeros(kv, cdt),
+                "shared_v": jnp.zeros(kv, cdt),
+                "pos": jnp.zeros((), jnp.int32),
+            }
+        if fam == "encdec":
+            shape = (cfg.n_layers, batch_size, max_seq, cfg.n_kv, cfg.hd)
+            enc_t = max_seq // cfg.enc_frames_ratio
+            cross = (cfg.n_layers, batch_size, enc_t, cfg.n_kv, cfg.hd)
+            return {"k": jnp.zeros(shape, cdt), "v": jnp.zeros(shape, cdt),
+                    "ck": jnp.zeros(cross, cdt), "cv": jnp.zeros(cross, cdt),
+                    "pos": jnp.zeros((), jnp.int32)}
+        raise ValueError(fam)
+
+    def prefill(self, params, batch, max_seq: int):
+        """Process the full prompt, returning (last-position logits, cache)
+        ready for decode_step.  batch as in loss_fn (no labels needed)."""
+        cfg = self.cfg
+        cdt = _dt(cfg.compute_dtype)
+        fam = cfg.family
+        tokens = batch["tokens"]
+        b, t = tokens.shape
+        x = cm.embed_lookup(params["embed"], tokens).astype(cdt)
+        pos = jnp.arange(t)
+        n_pre = 0
+
+        if fam == "vlm":
+            patches = batch["patch_embeds"].astype(cdt)
+            n_pre = patches.shape[1]
+            x = jnp.concatenate([patches, x], axis=1)
+            side = int(n_pre ** 0.5) or 1
+            grid = jnp.arange(n_pre)
+            img3 = jnp.stack([jnp.zeros((n_pre,), jnp.int32),
+                              grid // side, grid % side])
+            txt3 = cm.text_pos3(jnp.broadcast_to(n_pre + pos, (b, t)))
+            pos3 = jnp.concatenate(
+                [jnp.broadcast_to(img3[None], (b, 3, n_pre)), txt3], -1)
+            cos_sin = self._cos_sin(None, pos3=pos3)
+        elif fam in ("ssm",):
+            cos_sin = None
+        else:
+            cos_sin = self._cos_sin(pos)
+        tt = t + n_pre
+
+        def pad_cache(k):          # (B, T, Hkv, hd) -> (B, S, Hkv, hd)
+            return jnp.pad(k, ((0, 0), (0, max_seq - tt), (0, 0), (0, 0)))
+
+        if fam in ("dense", "vlm", "moe", "encdec"):
+            enc_hidden = None
+            if fam == "encdec":
+                enc_hidden = self._encode(
+                    params, batch["enc_embeds"].astype(cdt))
+
+            def body(x, p_l):
+                h = cm.apply_norm(cfg, x, p_l["ln1"])
+                q, k, v = attn.qkv(p_l["attn"], cfg, h)
+                if cos_sin is not None:
+                    q = cm.apply_rope(q, *cos_sin)
+                    k = cm.apply_rope(k, *cos_sin)
+                o = attn.flash_attention(q, k, v, causal=True)
+                o = o.reshape(b, tt, -1) @ p_l["attn"]["wo"].astype(x.dtype)
+                ys = {"k": pad_cache(k), "v": pad_cache(v)}
+                if cfg.parallel_block:
+                    x = x + o + cm.mlp_apply(p_l["mlp"], h, cfg.act)
+                    return x, ys
+                x = x + o
+                if "cross" in p_l:
+                    hq = cm.apply_norm(cfg, x, p_l["ln3"])
+                    qc, _, _ = attn.qkv(p_l["cross"], cfg, hq)
+                    _, ck, cv = attn.qkv(p_l["cross"], cfg, enc_hidden)
+                    oc = attn.flash_attention(qc, ck, cv, causal=False)
+                    x = x + oc.reshape(b, tt, -1) \
+                        @ p_l["cross"]["wo"].astype(x.dtype)
+                    ys["ck"], ys["cv"] = ck, cv
+                h2 = cm.apply_norm(cfg, x, p_l["ln2"])
+                if "moe" in p_l:
+                    y, _ = moe_mod.moe_apply(p_l["moe"], cfg, h2)
+                    x = x + y
+                else:
+                    x = x + cm.mlp_apply(p_l["mlp"], h2, cfg.act)
+                return x, ys
+
+            x, caches = _scan(jax.checkpoint(body), x, params["layers"])
+            cache = {"k": caches["k"], "v": caches["v"],
+                     "pos": jnp.asarray(tt, jnp.int32)}
+            if fam == "encdec":
+                cache["ck"], cache["cv"] = caches["ck"], caches["cv"]
+
+        elif fam == "ssm":
+            st0 = rk.rwkv6_init_state(cfg, b)
+
+            def body(x, p_l):
+                y, st = rk.rwkv6_block(p_l, cfg, x, st0)
+                return y, st
+            x, sts = _scan(jax.checkpoint(body), x, params["layers"])
+            cache = {"layers": sts, "pos": jnp.asarray(tt, jnp.int32)}
+
+        elif fam == "hybrid":
+            x0 = x
+            period = cfg.shared_attn_period
+            n_groups = cfg.n_layers // period
+            scfg = cfg.replace(head_dim=2 * cfg.d_model // cfg.n_heads)
+            states, sks, svs = [], [], []
+            for gi in range(n_groups):
+                sl = slice(gi * period, (gi + 1) * period)
+                grp = jax.tree.map(lambda a: a[sl], params["layers"])
+
+                def body(x, p_l):
+                    y, st = mb.mamba2_apply(p_l, cfg, x, return_state=True)
+                    return x + y, st
+                x, st = _scan(jax.checkpoint(body), x, grp)
+                states.append(st)
+                sh = params["shared"]
+                hcat = cm.apply_norm(
+                    cfg, jnp.concatenate([x, x0], -1), sh["ln"])
+                q, k, v = attn.qkv(sh["attn"], scfg, hcat)
+                cos, sin = cm.rope_freqs(scfg.hd, cfg.rope_theta, pos)
+                q = cm.apply_rope(q, cos, sin)
+                k = cm.apply_rope(k, cos, sin)
+                o = attn.flash_attention(q, k, v, causal=True)
+                x = x + o.reshape(b, tt, -1) @ sh["proj"].astype(x.dtype)
+                x = x + cm.mlp_apply(
+                    sh["mlp"], cm.apply_norm(cfg, x, sh["ln2"]), cfg.act)
+                sks.append(pad_cache(k))
+                svs.append(pad_cache(v))
+            cache = {
+                "layers": jax.tree.map(
+                    lambda *xs: jnp.concatenate(xs, 0), *states),
+                "shared_k": jnp.stack(sks), "shared_v": jnp.stack(svs),
+                "pos": jnp.asarray(tt, jnp.int32),
+            }
+        else:
+            raise ValueError(fam)
+
+        xl = cm.apply_norm(cfg, x[:, -1:], params["final_norm"])
+        return cm.unembed(params["head"], xl), cache
+
+    def decode_step(self, params, token, cache):
+        """token (B, 1) int32 -> (logits (B, 1, Vp), new cache)."""
+        cfg = self.cfg
+        cdt = _dt(cfg.compute_dtype)
+        fam = cfg.family
+        pos = cache["pos"]
+        b = token.shape[0]
+        x = cm.embed_lookup(params["embed"], token).astype(cdt)
+        posb = jnp.full((1,), pos, jnp.int32)
+        if cfg.mrope_sections:
+            pos3 = jnp.broadcast_to(posb[None, None, :], (b, 3, 1))
+            cos_sin = cm.mrope_freqs(cfg.hd, cfg.rope_theta, pos3,
+                                     cfg.mrope_sections)
+        else:
+            cos_sin = cm.rope_freqs(cfg.hd, cfg.rope_theta, posb)
+
+        if fam in ("dense", "vlm", "moe"):
+            def body(x, layer):
+                p_l, kc, vc = layer
+                h = cm.apply_norm(cfg, x, p_l["ln1"])
+                o, kc, vc = attn.decode_step(p_l["attn"], cfg, h, kc, vc,
+                                             pos, cos_sin)
+                if cfg.parallel_block:
+                    x = x + o + cm.mlp_apply(p_l["mlp"], h, cfg.act)
+                    return x, (kc, vc)
+                x = x + o
+                h2 = cm.apply_norm(cfg, x, p_l["ln2"])
+                if "moe" in p_l:
+                    y, _ = moe_mod.moe_apply(p_l["moe"], cfg, h2)
+                    x = x + y
+                else:
+                    x = x + cm.mlp_apply(p_l["mlp"], h2, cfg.act)
+                return x, (kc, vc)
+
+            x, (kc, vc) = _scan(
+                body, x, (params["layers"], cache["k"], cache["v"]))
+            cache = dict(cache, k=kc, v=vc, pos=pos + 1)
+
+        elif fam == "ssm":
+            def body(x, layer):
+                p_l, st = layer
+                y, st = rk.rwkv6_block(p_l, cfg, x, st)
+                return y, st
+            x, st = _scan(body, x, (params["layers"], cache["layers"]))
+            cache = dict(cache, layers=st, pos=pos + 1)
+
+        elif fam == "hybrid":
+            period = cfg.shared_attn_period
+            n_groups = cfg.n_layers // period
+            x0 = x
+            scfg = cfg.replace(head_dim=2 * cfg.d_model // cfg.n_heads)
+            new_states = []
+            sk, sv = cache["shared_k"], cache["shared_v"]
+            sks, svs = [], []
+            for gi in range(n_groups):
+                sl = slice(gi * period, (gi + 1) * period)
+                grp = jax.tree.map(lambda a: a[sl], params["layers"])
+                sts = jax.tree.map(lambda a: a[sl], cache["layers"])
+
+                def body(x, layer):
+                    p_l, st = layer
+                    y, st = mb.mamba2_decode(p_l, cfg, x, st)
+                    return x + y, st
+                x, st_new = _scan(body, x, (grp, sts))
+                new_states.append(st_new)
+                sh = params["shared"]
+                hcat = cm.apply_norm(
+                    cfg, jnp.concatenate([x, x0], -1), sh["ln"])
+                q, k, v = attn.qkv(sh["attn"], scfg, hcat)
+                cos, sin = cm.rope_freqs(scfg.hd, cfg.rope_theta, posb)
+                q = cm.apply_rope(q, cos, sin)
+                k = cm.apply_rope(k, cos, sin)
+                kg = jax.lax.dynamic_update_slice_in_dim(
+                    sk[gi], k.astype(sk.dtype), pos, axis=1)
+                vg = jax.lax.dynamic_update_slice_in_dim(
+                    sv[gi], v.astype(sv.dtype), pos, axis=1)
+                o = attn.decode_attention_jnp(q[:, 0], kg, vg, pos + 1)
+                x = x + o.reshape(b, 1, -1) @ sh["proj"].astype(x.dtype)
+                x = x + cm.mlp_apply(
+                    sh["mlp"], cm.apply_norm(cfg, x, sh["ln2"]), cfg.act)
+                sks.append(kg)
+                svs.append(vg)
+            cache = dict(
+                cache,
+                layers=jax.tree.map(
+                    lambda *xs: jnp.concatenate(xs, 0), *new_states),
+                shared_k=jnp.stack(sks), shared_v=jnp.stack(svs),
+                pos=pos + 1,
+            )
+
+        elif fam == "encdec":
+            def body(x, layer):
+                p_l, kc, vc, ck, cv = layer
+                h = cm.apply_norm(cfg, x, p_l["ln1"])
+                o, kc, vc = attn.decode_step(p_l["attn"], cfg, h, kc, vc,
+                                             pos, cos_sin)
+                x = x + o
+                hq = cm.apply_norm(cfg, x, p_l["ln3"])
+                q, _, _ = attn.qkv(p_l["cross"], cfg, hq)
+                oc = attn.decode_attention_jnp(q[:, 0], ck, cv, ck.shape[1])
+                x = x + oc.reshape(b, 1, -1) @ p_l["cross"]["wo"].astype(x.dtype)
+                x = x + cm.mlp_apply(
+                    p_l["mlp"], cm.apply_norm(cfg, x, p_l["ln2"]), cfg.act)
+                return x, (kc, vc)
+            x, (kc, vc) = _scan(
+                body, x, (params["layers"], cache["k"], cache["v"],
+                          cache["ck"], cache["cv"]))
+            cache = dict(cache, k=kc, v=vc, pos=pos + 1)
+        else:
+            raise ValueError(fam)
+
+        x = cm.apply_norm(cfg, x, params["final_norm"])
+        return cm.unembed(params["head"], x), cache

@@ -1,0 +1,128 @@
+"""Mixture-of-Experts FFN (GShard-style dispatch, TPU-native).
+
+Covers both assigned MoE flavours:
+  arctic-480b    : 128 experts, top-2, PLUS a dense-FFN residual branch
+  deepseek-moe   : 64 fine-grained routed experts top-6 PLUS 2 shared
+                   (always-on) experts
+
+Dispatch is the capacity-based einsum formulation (no sorting/gather):
+top-k masks -> position-in-expert by cumsum -> one-hot capacity slot ->
+dispatch/combine einsums.  Experts are EP-sharded over the "model" mesh
+axis (weights (E, ...) with E split); GSPMD turns the dispatch einsums
+into all-to-alls.  Tokens over capacity are dropped (residual passes them
+through) — standard GShard semantics.
+
+The router's load-balance aux loss is a *global* reduction over the batch;
+under the paper's technique it joins the same delayed-reduction window as
+the gradient psum (train/pipelined.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+
+
+def moe_params(key, cfg, dtype, out_scale=1.0):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 6)
+    std = 0.02
+    p = {
+        "router": jax.random.normal(ks[0], (d, e), dtype) * std,
+        "wi": jax.random.normal(ks[1], (e, d, f), dtype) * std,
+        "wg": jax.random.normal(ks[2], (e, d, f), dtype) * std,
+        "wo": jax.random.normal(ks[3], (e, f, d), dtype) * std * out_scale,
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.n_shared_experts * f
+        p["shared"] = cm.mlp_params(ks[4], d, fs, "swiglu", dtype, out_scale=out_scale)
+    if cfg.dense_residual:
+        fd = cfg.dense_ff or f
+        p["dense"] = cm.mlp_params(ks[5], d, fd, "swiglu", dtype, out_scale=out_scale)
+    return p
+
+
+GROUP_SIZE = 1024        # tokens per dispatch group (GShard "S")
+
+# §Perf hillclimb flag: when True, the dispatch/expert tensors carry
+# explicit sharding constraints (experts -> "model") so the expert compute
+# is local to the EP shard and the only collective left is the combine
+# psum (row-parallel pattern).  Baseline False = GSPMD decides alone.
+CONSTRAIN_EP = False
+
+
+def _constrain(x, spec):
+    if not CONSTRAIN_EP:
+        return x
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def _top_k_dispatch(probs: jax.Array, k: int, capacity: int):
+    """probs (G, S, E) -> (dispatch, combine) both (G, S, E, C).
+
+    Position-in-expert via per-GROUP cumsum (GShard top-2 generalized to
+    top-k by sequential choice peeling) — no cross-group coordination, so
+    groups shard freely over the DP axes."""
+    g, s, e = probs.shape
+    remaining = probs
+    fill = jnp.zeros((g, e), jnp.int32)
+    dispatch = jnp.zeros((g, s, e, capacity), probs.dtype)
+    combine = jnp.zeros((g, s, e, capacity), probs.dtype)
+    for _ in range(k):
+        idx = jnp.argmax(remaining, axis=-1)                 # (G, S)
+        mask = jax.nn.one_hot(idx, e, dtype=probs.dtype)     # (G, S, E)
+        pos = jnp.cumsum(mask, axis=1) - mask + fill[:, None, :]
+        in_cap = pos < capacity
+        mask_kept = mask * in_cap
+        slot = jax.nn.one_hot(
+            (pos * mask).sum(-1).astype(jnp.int32), capacity,
+            dtype=probs.dtype)                               # (G, S, C)
+        sel = mask_kept[..., None] * slot[:, :, None, :]     # (G, S, E, C)
+        gate = (probs * mask).sum(-1, keepdims=True)         # (G, S, 1)
+        dispatch = dispatch + sel
+        combine = combine + sel * gate[..., None]
+        fill = fill + mask_kept.sum(1).astype(jnp.int32)
+        remaining = remaining * (1.0 - mask)
+    return dispatch, combine
+
+
+def moe_apply(p, cfg, x):
+    """x (B, T, D) -> (out (B, T, D), aux_loss scalar)."""
+    b, t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    n = b * t
+    sg = min(GROUP_SIZE, n)
+    assert n % sg == 0, (n, sg)
+    ng = n // sg
+    xg = x.reshape(ng, sg, d)
+
+    logits = (xg @ p["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                  # (G, S, E)
+
+    # load-balance aux loss (Switch/GShard): E * sum_e(frac_e * prob_e),
+    # averaged over groups; == 1 exactly at perfect balance
+    top1 = jax.nn.one_hot(jnp.argmax(probs, -1), e, dtype=jnp.float32)
+    aux = e * jnp.mean(jnp.sum(
+        jnp.mean(top1, axis=1) * jnp.mean(probs, axis=1), axis=-1))
+
+    capacity = max(int(cfg.capacity_factor * k * sg / e), 4)
+    dispatch, combine = _top_k_dispatch(probs.astype(x.dtype), k, capacity)
+
+    xe = jnp.einsum("gsd,gsec->gecd", xg, dispatch)          # all-to-all in
+    xe = _constrain(xe, (None, "model", None, None))
+    h = jnp.einsum("gecd,edf->gecf", xe, p["wi"].astype(x.dtype))
+    gt = jnp.einsum("gecd,edf->gecf", xe, p["wg"].astype(x.dtype))
+    h = jax.nn.silu(h) * gt
+    h = _constrain(h, (None, "model", None, None))
+    ye = jnp.einsum("gecf,efd->gecd", h, p["wo"].astype(x.dtype))
+    ye = _constrain(ye, (None, "model", None, None))
+    out = jnp.einsum("gecd,gsec->gsd", ye, combine)          # combine psum
+
+    if "shared" in p:
+        out = out + cm.mlp_apply(p["shared"], xg, "swiglu")
+    if "dense" in p:
+        out = out + cm.mlp_apply(p["dense"], xg, "swiglu")
+    return out.reshape(b, t, d), aux

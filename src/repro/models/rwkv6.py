@@ -1,0 +1,136 @@
+"""RWKV6 "Finch" block (rwkv6-7b) — attention-free, data-dependent decay.
+
+Time mixing per head (N = head dim, state S is N×N):
+
+    y_t = r_t · (diag(u)·k_t v_tᵀ + S_{t-1})
+    S_t = diag(w_t) · S_{t-1} + k_t v_tᵀ          w_t = exp(-exp(w0 + lora(x)))
+
+The decay w_t is per-channel and DATA-DEPENDENT (the Finch contribution
+over RWKV5).  Token-shift interpolations use the ddlerp form with low-rank
+adapters.  Training scans over time; decode carries (S, x_prev) — O(1)
+state, so rwkv6 RUNS long_500k.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+
+LORA_SHIFT = 32
+LORA_DECAY = 64
+_MIX = ("r", "k", "v", "g", "w")
+
+
+def rwkv6_params(key, cfg, dtype, out_scale=1.0):
+    d = cfg.d_model
+    ks = jax.random.split(key, 16)
+    std = 0.02
+    p = {
+        "mu_base": jnp.full((d,), 0.5, dtype),
+        "lora_a": jax.random.normal(ks[0], (d, 5 * LORA_SHIFT), dtype) * std,
+        "lora_b": jax.random.normal(ks[1], (5, LORA_SHIFT, d), dtype) * std,
+        "w0": jnp.full((d,), -2.0, dtype),
+        "wlora_a": jax.random.normal(ks[2], (d, LORA_DECAY), dtype) * std,
+        "wlora_b": jax.random.normal(ks[3], (LORA_DECAY, d), dtype) * std,
+        "u": jax.random.normal(ks[4], (d,), dtype) * std,   # bonus
+        "wr": jax.random.normal(ks[5], (d, d), dtype) * std,
+        "wk": jax.random.normal(ks[6], (d, d), dtype) * std,
+        "wv": jax.random.normal(ks[7], (d, d), dtype) * std,
+        "wg": jax.random.normal(ks[8], (d, d), dtype) * std,
+        "wo": jax.random.normal(ks[9], (d, d), dtype) * std * out_scale,
+        "ln_x": jnp.ones((d,), dtype),
+        # channel mix
+        "mu_ck": jnp.full((d,), 0.5, dtype),
+        "mu_cr": jnp.full((d,), 0.5, dtype),
+        "cm_k": jax.random.normal(ks[10], (d, int(3.5 * d)), dtype) * std,
+        "cm_v": jax.random.normal(ks[11], (int(3.5 * d), d), dtype) * std * out_scale,
+        "cm_r": jax.random.normal(ks[12], (d, d), dtype) * std,
+        "mu_mix": jax.random.normal(ks[13], (5, d), dtype) * std,
+    }
+    return p
+
+
+def _ddlerp(p, x, x_prev):
+    """Data-dependent token-shift: five mixed inputs (r,k,v,g,w)."""
+    xx = x_prev - x
+    base = x + xx * p["mu_base"].astype(x.dtype)
+    lo = jnp.tanh(base @ p["lora_a"].astype(x.dtype))        # (..., 5*R)
+    lo = lo.reshape(*lo.shape[:-1], 5, LORA_SHIFT)
+    dyn = jnp.einsum("...fr,frd->...fd", lo, p["lora_b"].astype(x.dtype))
+    mu = p["mu_mix"].astype(x.dtype) + dyn                   # (..., 5, D)
+    return x[..., None, :] + xx[..., None, :] * mu           # (..., 5, D)
+
+
+def _decay(p, xw):
+    lo = jnp.tanh(xw @ p["wlora_a"].astype(xw.dtype)) @ p["wlora_b"].astype(xw.dtype)
+    return jnp.exp(
+        -jnp.exp(jnp.clip(p["w0"].astype(jnp.float32) + lo.astype(jnp.float32), -8.0, 2.0))
+    )                                                        # (..., D) in (0,1)
+
+
+def time_mix(p, cfg, x, x_prev, state):
+    """Sequence form.  x (B, T, D); x_prev (B, D) last token of prev chunk;
+    state (B, H, N, N) f32.  Returns (y, x_last, state)."""
+    b, t, d = x.shape
+    n = cfg.ssm_head_dim if cfg.ssm_head_dim else 64
+    h = d // n
+
+    xs = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    mixed = _ddlerp(p, x, xs)                                # (B,T,5,D)
+    xr, xk, xv, xg, xw = (mixed[:, :, i] for i in range(5))
+    r = (xr @ p["wr"].astype(x.dtype)).reshape(b, t, h, n).astype(jnp.float32)
+    k = (xk @ p["wk"].astype(x.dtype)).reshape(b, t, h, n).astype(jnp.float32)
+    v = (xv @ p["wv"].astype(x.dtype)).reshape(b, t, h, n).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["wg"].astype(x.dtype))
+    w = _decay(p, xw).reshape(b, t, h, n)                    # f32
+    u = p["u"].astype(jnp.float32).reshape(h, n)
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp                             # (B,H,N)
+        kv = k_t[..., None] * v_t[..., None, :]              # (B,H,N,N)
+        y = jnp.einsum("bhn,bhnm->bhm", r_t, u[None, :, :, None] * kv + s)
+        s = w_t[..., None] * s + kv
+        return s, y
+
+    xs_t = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state, xs_t)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, t, d)              # f32
+    y = cm.rms_norm(y.astype(x.dtype), p["ln_x"])            # group-norm stand-in
+    y = (y * g) @ p["wo"].astype(x.dtype)
+    return y, x[:, -1], state
+
+
+def channel_mix(p, x, x_prev):
+    xs = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    xx = xs - x
+    xk = x + xx * p["mu_ck"].astype(x.dtype)
+    xr = x + xx * p["mu_cr"].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(xk @ p["cm_k"].astype(x.dtype)))
+    return jax.nn.sigmoid(xr @ p["cm_r"].astype(x.dtype)) * (
+        kk @ p["cm_v"].astype(x.dtype)
+    ), x[:, -1]
+
+
+def rwkv6_init_state(cfg, batch):
+    d = cfg.d_model
+    n = cfg.ssm_head_dim if cfg.ssm_head_dim else 64
+    h = d // n
+    return {
+        "s": jnp.zeros((batch, h, n, n), jnp.float32),
+        "x_tm": jnp.zeros((batch, d), jnp.float32),
+        "x_cm": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def rwkv6_block(p, cfg, x, state):
+    """Full block (time mix + channel mix) in sequence form."""
+    dt = x.dtype
+    y, x_tm, s = time_mix(
+        p, cfg, x, state["x_tm"].astype(dt), state["s"]
+    )
+    x = x + y
+    y2, x_cm = channel_mix(p, x, state["x_cm"].astype(dt))
+    return x + y2, {"s": s, "x_tm": x_tm.astype(jnp.float32),
+                    "x_cm": x_cm.astype(jnp.float32)}

@@ -1,0 +1,7 @@
+from repro.parallel.distributed import (
+    distributed_solve,
+    make_solver_mesh,
+    partitioned_solver_ops,
+)
+
+__all__ = ["distributed_solve", "make_solver_mesh", "partitioned_solver_ops"]

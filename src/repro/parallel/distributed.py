@@ -1,0 +1,263 @@
+"""Distributed execution of the CG solver family under ``shard_map``.
+
+This is the paper's MPI rank layout mapped to a JAX mesh (DESIGN.md §2):
+
+  * the solution vector is DOMAIN-DECOMPOSED: each device owns a contiguous
+    block of grid rows (the paper's per-rank sub-domain);
+  * the SPMV is a halo exchange (``lax.ppermute`` of one boundary plane in
+    each direction — point-to-point neighbour communication, the MPI halo
+    send/recv) followed by a purely local stencil application;
+  * the preconditioner is communication-free (Jacobi / block-Jacobi with
+    blocks interior to a shard — the paper's "limited communication
+    preconditioner" that motivates longer pipelines);
+  * ALL inner products of one iteration form ONE fused ``lax.psum`` — the
+    single ``MPI_Iallreduce`` of the G-column block (Alg. 2, line 11).
+
+The solvers themselves (``repro.core``) are substrate-agnostic: the same
+code runs locally or distributed, because every global operation goes
+through ``SolverOps``.  Under ``shard_map`` the p(l)-CG data-dependency
+structure means the ``psum`` issued at iteration i has no consumer for l
+loop iterations — XLA's latency-hiding scheduler can keep l reductions in
+flight (the Iallreduce/Wait window of Fig. 1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import classic_cg, ghysels_pcg, pipelined_cg
+from repro.core.types import SolveResult, SolverOps
+from repro.linalg.operators import (
+    DiagonalOp,
+    LinearOperator,
+    Stencil2D5,
+    Stencil3D7,
+    Stencil3D27,
+)
+from repro.linalg.preconditioners import BlockJacobi, IdentityPrec, JacobiPrec
+
+
+def make_solver_mesh(n_shards: int | None = None, devices=None) -> Mesh:
+    """1-D mesh over all (or the first ``n_shards``) devices.
+
+    The solver path flattens whatever production mesh exists into a single
+    "shards" axis: CG's domain decomposition is rank-structured, exactly as
+    in the paper's MPI runs.
+    """
+    devs = jax.devices() if devices is None else devices
+    n = len(devs) if n_shards is None else n_shards
+    return Mesh(np.asarray(devs[:n]).reshape(n), ("shards",))
+
+
+# --------------------------------------------------------------------------
+# Halo exchange (the MPI neighbour send/recv).
+# --------------------------------------------------------------------------
+
+def _halo_first_dim(g: jax.Array, axis: str) -> tuple[jax.Array, jax.Array]:
+    """Exchange one boundary plane along the (sharded) first grid dim.
+
+    Returns (plane_above, plane_below) for this shard.  ``ppermute`` leaves
+    zeros where no neighbour exists — which is exactly the homogeneous
+    Dirichlet boundary condition of the operators.
+    """
+    n = lax.axis_size(axis)
+    if n == 1:
+        z = jnp.zeros_like(g[:1])
+        return z, z
+    above = lax.ppermute(g[-1:], axis, [(i, i + 1) for i in range(n - 1)])
+    below = lax.ppermute(g[:1], axis, [(i, i - 1) for i in range(1, n)])
+    return above, below
+
+
+def _apply_2d5_local(x: jax.Array, nxl: int, ny: int, axis: str) -> jax.Array:
+    g = x.reshape(nxl, ny)
+    up, dn = _halo_first_dim(g, axis)
+    gp = jnp.concatenate([up, g, dn], axis=0)          # (nxl+2, ny)
+    gy = jnp.pad(g, ((0, 0), (1, 1)))
+    out = 4.0 * g - gp[:-2] - gp[2:] - gy[:, :-2] - gy[:, 2:]
+    return out.reshape(-1)
+
+
+def _apply_3d7_local(
+    x: jax.Array, nxl: int, ny: int, nz: int, eps_z: float, axis: str
+) -> jax.Array:
+    g = x.reshape(nxl, ny, nz)
+    up, dn = _halo_first_dim(g, axis)
+    gp = jnp.concatenate([up, g, dn], axis=0)
+    gy = jnp.pad(g, ((0, 0), (1, 1), (0, 0)))
+    gz = jnp.pad(g, ((0, 0), (0, 0), (1, 1)))
+    ez = jnp.asarray(eps_z, dtype=x.dtype)
+    out = (
+        (4.0 + 2.0 * ez) * g
+        - gp[:-2] - gp[2:]
+        - gy[:, :-2, :] - gy[:, 2:, :]
+        - ez * gz[:, :, :-2] - ez * gz[:, :, 2:]
+    )
+    return out.reshape(-1)
+
+
+def _apply_3d27_local(
+    x: jax.Array, nxl: int, ny: int, nz: int, centre: float, axis: str
+) -> jax.Array:
+    g = x.reshape(nxl, ny, nz)
+    up, dn = _halo_first_dim(g, axis)
+    gp = jnp.concatenate([up, g, dn], axis=0)          # (nxl+2, ny, nz)
+    gp = jnp.pad(gp, ((0, 0), (1, 1), (1, 1)))         # pad y,z of halo too
+    out = jnp.asarray(centre, x.dtype) * g
+    for di in (-1, 0, 1):
+        for dj in (-1, 0, 1):
+            for dk in (-1, 0, 1):
+                order = abs(di) + abs(dj) + abs(dk)
+                if order == 0:
+                    continue
+                w = {1: 1.0, 2: 0.5, 3: 0.25}[order]
+                out = out - w * gp[
+                    1 + di : 1 + di + nxl,
+                    1 + dj : 1 + dj + ny,
+                    1 + dk : 1 + dk + nz,
+                ]
+    return out.reshape(-1)
+
+
+# --------------------------------------------------------------------------
+# Partitioning of operators / preconditioners into (sharded arrays, builder).
+# --------------------------------------------------------------------------
+
+def _partition_op(op: LinearOperator, n_shards: int):
+    """Return (arrays, build) where ``arrays`` is a pytree of global arrays
+    sharded over the solver axis, and ``build(local_arrays, axis)`` yields
+    the local apply function (for use INSIDE shard_map)."""
+    if isinstance(op, DiagonalOp):
+        arrays = {"d": op.d}
+
+        def build(loc, axis):
+            return lambda x: loc["d"].astype(x.dtype) * x
+
+        return arrays, build
+
+    if isinstance(op, Stencil2D5):
+        assert op.nx % n_shards == 0, (op.nx, n_shards)
+        nxl = op.nx // n_shards
+        return {}, lambda loc, axis: partial(
+            _apply_2d5_local, nxl=nxl, ny=op.ny, axis=axis
+        )
+
+    if isinstance(op, Stencil3D7):
+        assert op.nx % n_shards == 0, (op.nx, n_shards)
+        nxl = op.nx // n_shards
+        return {}, lambda loc, axis: partial(
+            _apply_3d7_local, nxl=nxl, ny=op.ny, nz=op.nz, eps_z=op.eps_z, axis=axis
+        )
+
+    if isinstance(op, Stencil3D27):
+        assert op.nx % n_shards == 0, (op.nx, n_shards)
+        nxl = op.nx // n_shards
+        return {}, lambda loc, axis: partial(
+            _apply_3d27_local, nxl=nxl, ny=op.ny, nz=op.nz, centre=op.centre,
+            axis=axis,
+        )
+
+    raise TypeError(f"no distributed implementation for {type(op).__name__}")
+
+
+def _partition_prec(prec, op: LinearOperator, n_shards: int):
+    if prec is None or isinstance(prec, IdentityPrec):
+        return {}, lambda loc, axis: (lambda x: x)
+    if isinstance(prec, JacobiPrec):
+        arrays = {"inv_diag": prec.inv_diag}
+        return arrays, lambda loc, axis: (
+            lambda x: loc["inv_diag"].astype(x.dtype) * x
+        )
+    if isinstance(prec, BlockJacobi):
+        nb, bs, _ = prec.inv_blocks.shape
+        assert (op.n // n_shards) % bs == 0, (
+            "block-Jacobi blocks must be interior to a shard "
+            f"(local size {op.n // n_shards}, block {bs})"
+        )
+
+        def build(loc, axis):
+            def apply(x):
+                inv = loc["inv_blocks"]
+                nbl = inv.shape[0]
+                y = jnp.einsum(
+                    "nij,nj->ni", inv.astype(x.dtype), x.reshape(nbl, bs)
+                )
+                return y.reshape(-1)
+
+            return apply
+
+        return {"inv_blocks": prec.inv_blocks}, build
+    raise TypeError(f"no distributed implementation for {type(prec).__name__}")
+
+
+def partitioned_solver_ops(op, prec, n_shards: int, axis: str = "shards"):
+    """(arrays, build) for a full SolverOps: build(local_arrays, axis) must be
+    called inside shard_map; dot_block is ONE fused psum over ``axis``."""
+    op_arrays, op_build = _partition_op(op, n_shards)
+    pr_arrays, pr_build = _partition_prec(prec, op, n_shards)
+    arrays = {"op": op_arrays, "prec": pr_arrays}
+
+    def build(loc) -> SolverOps:
+        apply_a = op_build(loc["op"], axis)
+        prec_fn = pr_build(loc["prec"], axis)
+
+        def dot_block(mat, vec):
+            # (K5): all local contributions + ONE global reduction.
+            return lax.psum(mat @ vec, axis)
+
+        return SolverOps(apply_a=apply_a, prec=prec_fn, dot_block=dot_block)
+
+    return arrays, build
+
+
+_METHODS = {
+    "cg": lambda ops, b, kw: classic_cg.solve(ops, b, **kw),
+    "pcg": lambda ops, b, kw: ghysels_pcg.solve(ops, b, **kw),
+    "plcg": lambda ops, b, kw: pipelined_cg.solve(ops, b, **kw),
+}
+
+
+def distributed_solve(
+    mesh: Mesh,
+    op: LinearOperator,
+    b: jax.Array,
+    method: str = "plcg",
+    prec=None,
+    jit: bool = True,
+    **kwargs,
+):
+    """Solve A x = b with the chosen CG variant, domain-decomposed over
+    ``mesh`` (1-D).  Returns (callable_or_result, lowered-compatible fn).
+
+    ``kwargs`` are forwarded to the solver (l, tol, maxit, sigmas, unroll...).
+    """
+    axis = mesh.axis_names[0]
+    n_shards = mesh.devices.size
+    assert b.shape[0] % n_shards == 0
+    arrays, build = partitioned_solver_ops(op, prec, n_shards, axis)
+
+    def run(b_local, local_arrays):
+        ops = build(local_arrays)
+        return _METHODS[method](ops, b_local, kwargs)
+
+    out_specs = SolveResult(
+        x=P(axis), iters=P(), restarts=P(), converged=P(),
+        res_history=P(), norm0=P(),
+    )
+    arr_specs = jax.tree.map(lambda _: P(axis), arrays)
+    fn = jax.shard_map(
+        run, mesh=mesh, in_specs=(P(axis), arr_specs), out_specs=out_specs,
+        check_vma=False,
+    )
+    if not jit:
+        return fn, arrays
+    jfn = jax.jit(fn)
+    return jfn(b, arrays)

@@ -1,0 +1,8 @@
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+from repro.train.data import SyntheticData
+from repro.train.train_step import make_train_step, make_pipelined_train_step
+
+__all__ = [
+    "AdamWConfig", "adamw_init", "adamw_update",
+    "SyntheticData", "make_train_step", "make_pipelined_train_step",
+]

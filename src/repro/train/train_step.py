@@ -1,0 +1,93 @@
+"""Train steps: synchronous baseline + the paper's technique transferred to
+data-parallel training (global-reduction pipelining of the gradient psum).
+
+``make_train_step``      — standard: grads -> clip -> AdamW, one fused
+                           gradient all-reduce on the critical path.
+``make_pipelined_train_step`` — the p(l)-CG transform (DESIGN.md §4):
+  a depth-l ring buffer of in-flight gradient trees rides in the training
+  state; the gradients computed at step i are APPLIED at step i+l.  The
+  gradient all-reduce of step i therefore has l full train-step bodies of
+  forward/backward compute (and l-1 other reductions) between issue and
+  first use — the Iallreduce/Wait window of Alg. 2, realized through
+  XLA's latency-hiding scheduler when the driver unrolls l+1 steps.
+  l=0 recovers synchronous training bit-exactly.
+
+Staleness note (recorded, not hidden): delayed application is *stale
+gradient descent* with bounded staleness l — the same
+accuracy-vs-synchronization trade the paper makes for CG (its deep
+pipelines delay convergence via restarts, §4.2).  examples/train_lm.py
+measures the loss-curve effect.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optimizer import AdamWConfig, adamw_update
+
+
+def make_train_step(model, opt_cfg: AdamWConfig) -> Callable:
+    def step_fn(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss_fn, has_aux=True)(params, batch)
+        params, opt_state, om = adamw_update(opt_cfg, grads, opt_state, params)
+        return params, opt_state, {"loss": loss, **metrics, **om}
+    return step_fn
+
+
+def init_grad_ring(params, l: int):
+    """l in-flight gradient slots (zeros = warmup no-ops)."""
+    zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+    return jax.tree.map(
+        lambda z: jnp.broadcast_to(z[None], (max(l, 1), *z.shape)).copy()
+        if l > 0 else z[None][:0], zeros)
+
+
+def make_pipelined_train_step(model, opt_cfg: AdamWConfig, l: int) -> Callable:
+    """Returns step_fn(params, opt_state, ring, step_idx, batch).
+
+    ring holds the l most recent gradient trees; the tree POPPED (slot
+    step_idx % l) is applied, the fresh tree is PUSHED into its place."""
+    if l == 0:
+        base = make_train_step(model, opt_cfg)
+
+        def sync_fn(params, opt_state, ring, step_idx, batch):
+            params, opt_state, m = base(params, opt_state, batch)
+            return params, opt_state, ring, m
+        return sync_fn
+
+    def step_fn(params, opt_state, ring, step_idx, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss_fn, has_aux=True)(params, batch)
+        slot = jnp.mod(step_idx, l)
+        # pop the l-steps-old gradients — MPI_Wait(req(i-l))
+        old = jax.tree.map(
+            lambda r: jax.lax.dynamic_index_in_dim(r, slot, 0, keepdims=False),
+            ring)
+        # push fresh gradients — MPI_Iallreduce(req(i)); their reduction is
+        # not consumed for another l steps
+        ring = jax.tree.map(
+            lambda r, g: jax.lax.dynamic_update_index_in_dim(
+                r, g.astype(jnp.float32), slot, 0),
+            ring, grads)
+        params, opt_state, om = adamw_update(opt_cfg, old, opt_state, params)
+        return params, opt_state, ring, {"loss": loss, **metrics, **om}
+    return step_fn
+
+
+def run_steps(step_fn, params, opt_state, data, n_steps: int, l: int = 0,
+              start_step: int = 0, unroll: int = 1):
+    """Host-side driver used by examples/tests (jits one step)."""
+    jfn = jax.jit(step_fn)
+    ring = init_grad_ring(params, l)
+    history = []
+    for i in range(start_step, start_step + n_steps):
+        batch = data.batch_at(i)
+        params, opt_state, ring, m = jfn(
+            params, opt_state, ring, jnp.asarray(i, jnp.int32), batch)
+        history.append({k: float(v) for k, v in m.items()})
+    return params, opt_state, ring, history

@@ -1,0 +1,11 @@
+from repro.utils.hlo import collective_bytes, count_collectives, parse_shape_bytes
+from repro.utils.roofline import HW_V5E, RooflineTerms, roofline_terms
+
+__all__ = [
+    "collective_bytes",
+    "count_collectives",
+    "parse_shape_bytes",
+    "HW_V5E",
+    "RooflineTerms",
+    "roofline_terms",
+]

@@ -1,0 +1,132 @@
+"""HLO text analysis: collective operations and their byte volumes.
+
+``compiled.cost_analysis()`` reports FLOPs and HBM bytes but NOT collective
+traffic; we recover it by parsing the (optimized) HLO text and summing the
+tensor sizes of every collective op (DESIGN.md §2, system-prompt §Roofline).
+
+Byte convention (documented, used consistently everywhere):
+  * all-reduce          : payload = output tensor bytes
+  * all-gather          : payload = output tensor bytes (gathered size)
+  * reduce-scatter      : payload = input  tensor bytes (pre-scatter size)
+  * all-to-all          : payload = output tensor bytes
+  * collective-permute  : payload = output tensor bytes
+
+On-wire cost per device is payload × ring_factor / n_participants where the
+ring factor is 2(n-1)/n for all-reduce and (n-1)/n for gather/scatter-type
+ops; that conversion happens in ``repro.utils.roofline`` so that this module
+stays a pure parser.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+# Collective op kinds of interest.  HLO spells them e.g. "all-reduce",
+# "all-reduce-start", "all-gather", "reduce-scatter", "all-to-all",
+# "collective-permute", and fused async forms.
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# one HLO instruction: "  %name = <shape or tuple> opcode(...)..."
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^=]*?\)|\S+)\s+([\w\-]+)\(",
+)
+
+
+def parse_shape_bytes(shape_str: str) -> int:
+    """Total bytes of an HLO shape string (handles tuples)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _canon_kind(opcode: str) -> str | None:
+    for kind in _COLLECTIVES:
+        if opcode == kind or opcode == kind + "-start":
+            return kind
+    return None
+
+
+def count_collectives(hlo_text: str) -> dict[str, dict[str, float]]:
+    """Per-collective-kind {count, bytes} from HLO text.
+
+    Uses the op *output* shape for every kind except reduce-scatter, where
+    the input shape (inside the parens) is the payload; `-done` ops are
+    skipped so async pairs are counted once.
+    """
+    out: dict[str, dict[str, float]] = defaultdict(lambda: {"count": 0, "bytes": 0})
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        shape_str, opcode = m.group(1), m.group(2)
+        kind = _canon_kind(opcode)
+        if kind is None:
+            continue
+        if kind == "reduce-scatter":
+            # payload = operand size: parse shapes inside the call parens
+            paren = line[m.end() :].split("),")[0]
+            nbytes = parse_shape_bytes(paren)
+            if nbytes == 0:
+                nbytes = parse_shape_bytes(shape_str)
+        else:
+            nbytes = parse_shape_bytes(shape_str)
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += nbytes
+    return dict(out)
+
+
+def collective_bytes(hlo_text: str) -> int:
+    """Total collective payload bytes (all kinds)."""
+    return int(sum(v["bytes"] for v in count_collectives(hlo_text).values()))
+
+
+@dataclasses.dataclass
+class CollectiveSummary:
+    per_kind: dict[str, dict[str, float]]
+
+    @property
+    def total_bytes(self) -> int:
+        return int(sum(v["bytes"] for v in self.per_kind.values()))
+
+    @property
+    def total_count(self) -> int:
+        return int(sum(v["count"] for v in self.per_kind.values()))
+
+    def __str__(self) -> str:
+        rows = [
+            f"  {k:<20s} count={int(v['count']):5d} bytes={v['bytes']:.3e}"
+            for k, v in sorted(self.per_kind.items())
+        ]
+        return "\n".join(rows) if rows else "  (no collectives)"
+
+
+def summarize_collectives(hlo_text: str) -> CollectiveSummary:
+    return CollectiveSummary(per_kind=count_collectives(hlo_text))

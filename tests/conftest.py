@@ -1,0 +1,6 @@
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see
+# ONE device (system prompt, MULTI-POD DRY-RUN §0).  Multi-device tests
+# spawn subprocesses that set --xla_force_host_platform_device_count.
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,65 @@
+"""Table-1 cost-model assertions + HLO collective-parser unit tests."""
+
+import numpy as np
+
+from benchmarks import table1
+from repro.utils.hlo import count_collectives, parse_shape_bytes
+from repro.utils.roofline import HW_V5E, roofline_terms
+
+
+def test_table1_counts():
+    rows = table1.run(verbose=False)
+    assert all(ok for _, _, _, ok in rows)
+
+
+def test_parse_shape_bytes():
+    assert parse_shape_bytes("f32[128,1024]{1,0}") == 128 * 1024 * 4
+    assert parse_shape_bytes("bf16[2,3]") == 12
+    assert parse_shape_bytes("(f32[10], s32[5])") == 60
+    assert parse_shape_bytes("pred[7]") == 7
+    assert parse_shape_bytes("f64[]") == 8
+
+
+def test_count_collectives():
+    hlo = """
+ENTRY main {
+  %ar = f32[1024]{0} all-reduce(f32[1024]{0} %x), replica_groups={}
+  %ag.1 = bf16[2048]{0} all-gather(bf16[1024]{0} %y), dimensions={0}
+  %rs = f32[512]{0} reduce-scatter(f32[4096]{0} %z), dimensions={0}
+  %cp = f32[64]{0} collective-permute-start(f32[64]{0} %w)
+  %done = f32[64]{0} collective-permute-done(f32[64]{0} %cp)
+}
+"""
+    c = count_collectives(hlo)
+    assert c["all-reduce"]["count"] == 1
+    assert c["all-reduce"]["bytes"] == 4096
+    assert c["all-gather"]["bytes"] == 4096       # output shape
+    assert c["reduce-scatter"]["bytes"] == 16384  # input shape
+    assert c["collective-permute"]["count"] == 1  # -done not double counted
+
+
+def test_roofline_terms_math():
+    cost = {"flops": 197e12, "bytes accessed": 819e9}
+    hlo = "%ar = f32[12500000]{0} all-reduce(f32[12500000]{0} %x)\n"
+    t = roofline_terms(cost, hlo, chips=256, hw=HW_V5E)
+    assert abs(t.t_compute - 1.0) < 1e-6      # per-device seconds
+    assert abs(t.t_memory - 1.0) < 1e-6
+    # 50 MB all-reduce, ring factor 2*(255/256), 50 GB/s
+    expect = 2 * (255 / 256) * 50e6 / 50e9
+    assert abs(t.t_collective - expect) < 1e-9
+    assert t.dominant in ("compute", "memory")
+    assert abs(t.useful_fraction(197e12 * 256) - 1.0) < 1e-6
+
+
+def test_schedule_sim_limits():
+    """Steady-state checks of the event simulator against Table 1:
+    p(l)-CG iteration time -> max(body, glred/l) for large glred."""
+    from benchmarks.schedule_sim import iteration_time
+    k = {"spmv": 10e-6, "axpy1": 0.0, "glred": 600e-6}
+    t1 = iteration_time("plcg", 1, k, n_iters=500)
+    t3 = iteration_time("plcg", 3, k, n_iters=500)
+    assert abs(t1 - 600e-6) / 600e-6 < 0.05       # glred-bound
+    assert abs(t3 - 200e-6) / 200e-6 < 0.05       # glred/3
+    # classic CG: spmv + 2 glred
+    tcg = iteration_time("cg", 0, k, n_iters=500)
+    assert abs(tcg - (10e-6 + 1200e-6)) / 1210e-6 < 0.05

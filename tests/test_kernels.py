@@ -1,0 +1,110 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs ref.py oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(7)
+
+
+def _arr(shape, dtype):
+    a = RNG.standard_normal(shape)
+    return jnp.asarray(a, dtype)
+
+
+@pytest.mark.parametrize("shape", [(16, 16), (24, 100), (100, 50),
+                                   (17, 130), (8, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_stencil2d5(shape, dtype):
+    g = _arr(shape, dtype)
+    tol = 1e-5 if dtype == jnp.float32 else 1e-12
+    np.testing.assert_allclose(
+        ops.stencil2d5_apply(g), ref.stencil2d5_ref(g), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("shape", [(16, 16, 16), (8, 12, 50), (100, 10, 10),
+                                   (4, 6, 130)])
+@pytest.mark.parametrize("eps", [1.0, 0.01])
+def test_stencil3d7(shape, eps):
+    g = _arr(shape, jnp.float32)
+    np.testing.assert_allclose(
+        ops.stencil3d7_apply(g, eps), ref.stencil3d7_ref(g, eps),
+        rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("k,n", [(1, 128), (3, 1000), (7, 16384),
+                                 (11, 100000), (2, 131072)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_fused_dots(k, n, dtype):
+    m = _arr((k, n), dtype)
+    v = _arr((n,), dtype)
+    # f32 dot of n ~N(0,1) terms: abs error scales with sqrt(n)*eps
+    atol = 1e-4 * np.sqrt(n) if dtype == jnp.float32 else 1e-10
+    np.testing.assert_allclose(
+        ops.fused_dots(m, v), ref.fused_dots_ref(m, v),
+        rtol=1e-4, atol=atol)
+
+
+@pytest.mark.parametrize("n", [128, 1000, 70000, 200000])
+@pytest.mark.parametrize("coeffs", [(0.5, -1.25, 2.0), (0.0, 0.0, 1.0),
+                                    (1e3, -1e-3, 0.1)])
+def test_fused_axpy3(n, coeffs):
+    a, b, c = (_arr((n,), jnp.float32) for _ in range(3))
+    c1, c2, s = coeffs
+    np.testing.assert_allclose(
+        ops.fused_axpy3(a, b, c, c1, c2, s),
+        ref.fused_axpy3_ref(a, b, c, c1, c2, s), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("b,h,hkv,d,s,kv_len,bs", [
+    (2, 8, 2, 64, 1000, 900, 256),
+    (1, 4, 4, 32, 512, 512, 128),     # MHA
+    (3, 6, 1, 16, 300, 123, 512),     # MQA, padding > kv_len
+])
+def test_decode_attention(b, h, hkv, d, s, kv_len, bs):
+    q = _arr((b, h, d), jnp.float32)
+    k = _arr((b, s, hkv, d), jnp.float32)
+    v = _arr((b, s, hkv, d), jnp.float32)
+    out = ops.decode_attention(q, k, v, kv_len=kv_len, block_s=bs)
+    oref = ref.decode_attention_ref(
+        q.reshape(b, hkv, h // hkv, d),
+        jnp.transpose(k, (0, 2, 1, 3)), jnp.transpose(v, (0, 2, 1, 3)),
+        kv_len).reshape(b, h, d)
+    np.testing.assert_allclose(out, oref, rtol=2e-4, atol=2e-4)
+
+
+def test_decode_attention_stats_combine():
+    """Split-KV merge identity: combining shard stats == full attention."""
+    b, h, hkv, d, s = 2, 4, 2, 32, 512
+    q = _arr((b, h, d), jnp.float32)
+    k = _arr((b, s, hkv, d), jnp.float32)
+    v = _arr((b, s, hkv, d), jnp.float32)
+    # two "shards" of the sequence
+    o1, m1, l1 = ops.decode_attention_stats(q, k[:, :256], v[:, :256], 256,
+                                            block_s=128)
+    o2, m2, l2 = ops.decode_attention_stats(q, k[:, 256:], v[:, 256:], 256,
+                                            block_s=128)
+    m = jnp.maximum(m1, m2)
+    num = o1 * jnp.exp(m1 - m) + o2 * jnp.exp(m2 - m)
+    den = l1 * jnp.exp(m1 - m) + l2 * jnp.exp(m2 - m)
+    merged = (num / den).reshape(b, h, d)
+    full = ops.decode_attention(q, k, v, kv_len=s, block_s=128)
+    np.testing.assert_allclose(merged, full, rtol=2e-4, atol=2e-4)
+
+
+def test_stencil_kernel_inside_operator():
+    """use_kernel=True routes the operator through Pallas; same results."""
+    from repro.linalg.operators import Stencil2D5, Stencil3D7
+    op_a = Stencil2D5(32, 24, use_kernel=False)
+    op_b = Stencil2D5(32, 24, use_kernel=True)
+    x = jnp.asarray(RNG.standard_normal(op_a.n), jnp.float32)
+    np.testing.assert_allclose(op_a.apply(x), op_b.apply(x),
+                               rtol=1e-5, atol=1e-5)
+    op_a3 = Stencil3D7(8, 12, 10, eps_z=0.3, use_kernel=False)
+    op_b3 = Stencil3D7(8, 12, 10, eps_z=0.3, use_kernel=True)
+    x = jnp.asarray(RNG.standard_normal(op_a3.n), jnp.float32)
+    np.testing.assert_allclose(op_a3.apply(x), op_b3.apply(x),
+                               rtol=1e-5, atol=1e-5)

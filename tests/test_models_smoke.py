@@ -1,0 +1,116 @@
+"""Per-architecture smoke tests (assignment deliverable f): a REDUCED
+same-family config runs one forward/train step on CPU — output shapes and
+no NaNs — plus prefill→decode consistency against the full forward."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, lm_arch_ids
+from repro.models import LM
+
+RNG = np.random.default_rng(3)
+B, T = 2, 32
+
+
+def make_batch(cfg, t=T):
+    b = {"tokens": jnp.asarray(RNG.integers(0, cfg.vocab, (B, t)), jnp.int32),
+         "labels": jnp.asarray(RNG.integers(0, cfg.vocab, (B, t)), jnp.int32)}
+    if cfg.family == "vlm":
+        b["patch_embeds"] = jnp.asarray(
+            RNG.standard_normal((B, cfg.n_patches, cfg.d_model)), jnp.float32)
+    if cfg.family == "encdec":
+        b["enc_embeds"] = jnp.asarray(
+            RNG.standard_normal((B, t // cfg.enc_frames_ratio, cfg.d_model)),
+            jnp.float32)
+    return b
+
+
+@pytest.mark.parametrize("arch", lm_arch_ids())
+def test_forward_and_grad(arch):
+    cfg = get_config(arch, smoke=True)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    logits, aux = model.forward(params, batch)
+    assert logits.shape == (B, T, cfg.vocab_padded)
+    assert np.isfinite(np.asarray(logits)).all()
+    loss, metrics = model.loss_fn(params, batch)
+    assert np.isfinite(float(loss))
+    g = jax.grad(lambda p: model.loss_fn(p, batch)[0])(params)
+    gn = float(sum(jnp.sum(jnp.square(x)) for x in jax.tree.leaves(g)) ** 0.5)
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", lm_arch_ids())
+def test_prefill_decode_consistency(arch):
+    """Decoding token t+1 after prefill(t) must match the full forward of
+    t+1 tokens — the KV cache / recurrent state is exact."""
+    cfg = get_config(arch, smoke=True)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    t = 16
+    batch = make_batch(cfg, t + 1)
+    full_logits, _ = model.forward(params, batch)
+
+    prompt = {k: (v[:, :t] if k in ("tokens", "labels") else v)
+              for k, v in batch.items()}
+    max_seq = t + 8 + (cfg.n_patches if cfg.family == "vlm" else 0)
+    logits_p, cache = model.prefill(params, prompt, max_seq)
+    # prefill last-position logits == forward at position t-1
+    np.testing.assert_allclose(
+        np.asarray(logits_p[:, 0]), np.asarray(full_logits[:, t - 1]),
+        rtol=2e-4, atol=2e-4)
+    # decode the (t+1)-th token
+    logits_d, cache = model.decode_step(
+        params, batch["tokens"][:, t:t + 1], cache)
+    np.testing.assert_allclose(
+        np.asarray(logits_d[:, 0]), np.asarray(full_logits[:, t]),
+        rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ["zamba2-2.7b", "rwkv6-7b"])
+def test_ssm_state_is_constant_size(arch):
+    """The long_500k rationale: decode state does not grow with seq len."""
+    cfg = get_config(arch, smoke=True)
+    model = LM(cfg)
+    c1 = jax.eval_shape(lambda: model.init_cache(1, 64))
+    c2 = jax.eval_shape(lambda: model.init_cache(1, 128))
+    if cfg.family == "ssm":
+        s1 = sum(np.prod(x.shape) for x in jax.tree.leaves(c1))
+        s2 = sum(np.prod(x.shape) for x in jax.tree.leaves(c2))
+        assert s1 == s2          # rwkv: O(1) in sequence length
+    else:
+        # hybrid: only the (few) shared-attn caches grow
+        s1 = sum(np.prod(x.shape) for x in jax.tree.leaves(c1["layers"]))
+        s2 = sum(np.prod(x.shape) for x in jax.tree.leaves(c2["layers"]))
+        assert s1 == s2
+
+
+def test_moe_capacity_drops_are_bounded():
+    """With capacity_factor >= 1 and balanced-ish routing, most tokens are
+    dispatched; the combine weights are bounded by the router probs."""
+    from repro.models import moe as moe_mod
+    cfg = get_config("deepseek-moe-16b", smoke=True)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    p_l = jax.tree.map(lambda a: a[0], params["layers"])
+    x = jnp.asarray(RNG.standard_normal((2, 32, cfg.d_model)), jnp.float32)
+    out, aux = moe_mod.moe_apply(p_l["moe"], cfg, x)
+    assert out.shape == x.shape
+    assert np.isfinite(np.asarray(out)).all()
+    # load-balance loss ~ 1 for a near-uniform softmax router; finite
+    # samples (64 tokens, 8 experts) wander around it
+    assert 0.3 <= float(aux) <= 3.0
+
+
+def test_param_counts_match_config():
+    """Analytic param_count tracks actual init within 20% (dense/moe)."""
+    for arch in ["smollm-135m", "qwen3-1.7b", "deepseek-moe-16b"]:
+        cfg = get_config(arch, smoke=True)
+        model = LM(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        actual = sum(x.size for x in jax.tree.leaves(params))
+        ana = cfg.param_count()
+        assert 0.6 < ana / actual < 1.4, (arch, ana, actual)

@@ -1,0 +1,124 @@
+"""Hypothesis property tests on the system's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import classic_cg, pipelined_cg
+from repro.core.chebyshev import chebyshev_shifts
+from repro.core.types import SolverOps
+from repro.kernels import ops as kops, ref as kref
+from repro.linalg import operators as ops_mod
+
+SET = dict(max_examples=20, deadline=None)
+
+
+@given(n=st.integers(4, 24), cond=st.floats(1.0, 1e4),
+       l=st.integers(1, 3), seed=st.integers(0, 2**16))
+@settings(**SET)
+def test_plcg_solves_any_spd(n, cond, l, seed):
+    """INVARIANT: p(l)-CG solves every SPD system to tolerance (possibly
+    via restarts)."""
+    op = ops_mod.random_spd(jax.random.PRNGKey(seed), n, cond=cond)
+    b = jnp.asarray(np.random.default_rng(seed).standard_normal(n))
+    lmin, lmax = op.eig_bounds()
+    sig = chebyshev_shifts(lmin, lmax, l)
+    res = pipelined_cg.solve(SolverOps.local(op), b, l=l, tol=1e-8,
+                             maxit=20 * n, sigmas=sig, max_restarts=30)
+    x_direct = np.linalg.solve(op.to_dense(), np.asarray(b))
+    denom = np.linalg.norm(x_direct) + 1e-30
+    assert np.linalg.norm(np.asarray(res.x) - x_direct) / denom < 1e-4
+
+
+@given(nx=st.integers(4, 20), ny=st.integers(4, 20),
+       seed=st.integers(0, 2**16))
+@settings(**SET)
+def test_stencil_spd_invariants(nx, ny, seed):
+    """INVARIANT: the 2D stencil operator is symmetric positive definite:
+    (x, Ay) == (Ax, y) and (x, Ax) > 0 for x != 0."""
+    op = ops_mod.Stencil2D5(nx, ny)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(op.n))
+    y = jnp.asarray(rng.standard_normal(op.n))
+    lhs = float(jnp.dot(x, op.apply(y)))
+    rhs = float(jnp.dot(op.apply(x), y))
+    assert abs(lhs - rhs) < 1e-8 * (abs(lhs) + 1)
+    assert float(jnp.dot(x, op.apply(x))) > 0
+
+
+@given(nx=st.integers(2, 8), ny=st.integers(2, 8), nz=st.integers(2, 8),
+       eps=st.floats(0.01, 1.0), seed=st.integers(0, 2**16))
+@settings(**SET)
+def test_stencil3d_kernel_matches_ref(nx, ny, nz, eps, seed):
+    g = jnp.asarray(
+        np.random.default_rng(seed).standard_normal((nx, ny, nz)),
+        jnp.float32)
+    np.testing.assert_allclose(
+        kops.stencil3d7_apply(g, eps), kref.stencil3d7_ref(g, eps),
+        rtol=1e-4, atol=1e-4)
+
+
+@given(k=st.integers(1, 9), n=st.integers(1, 4000), seed=st.integers(0, 2**16))
+@settings(**SET)
+def test_fused_dots_matches_ref(k, n, seed):
+    rng = np.random.default_rng(seed)
+    m = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((n,)), jnp.float32)
+    np.testing.assert_allclose(kops.fused_dots(m, v), kref.fused_dots_ref(m, v),
+                               rtol=1e-3, atol=1e-3)
+
+
+@given(l=st.integers(1, 4))
+@settings(max_examples=4, deadline=None)
+def test_chebyshev_minimax_bound(l):
+    """INVARIANT: Chebyshev-shifted P_l stays within the minimax bound
+    2^(1-l) * ((lmax-lmin)/4)^l... practical check: |P_l| on [lmin, lmax]
+    with Chebyshev shifts is <= |P_l| with zero shifts (for A^l)."""
+    lmin, lmax = 0.1, 2.0
+    ts = np.linspace(lmin, lmax, 201)
+    sig = np.asarray(chebyshev_shifts(lmin, lmax, l))
+    p_cheb = np.ones_like(ts)
+    p_zero = np.ones_like(ts)
+    for i in range(l):
+        p_cheb *= (ts - sig[i])
+        p_zero *= ts
+    assert np.abs(p_cheb).max() <= np.abs(p_zero).max() + 1e-12
+
+
+@given(b=st.integers(1, 3), t=st.integers(1, 33), seed=st.integers(0, 2**16))
+@settings(max_examples=10, deadline=None)
+def test_flash_attention_matches_naive(b, t, seed):
+    """INVARIANT: blocked causal flash == naive masked softmax attention."""
+    from repro.models.attention import flash_attention
+    rng = np.random.default_rng(seed)
+    h, hkv, d = 4, 2, 16
+    q = jnp.asarray(rng.standard_normal((b, t, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, t, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, t, hkv, d)), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, q_block=8, kv_block=8)
+
+    # naive reference
+    g = h // hkv
+    qg = q.reshape(b, t, hkv, g, d)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k) / np.sqrt(d)
+    mask = np.tril(np.ones((t, t), bool))
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", w, v).reshape(b, t, h, d)
+    np.testing.assert_allclose(out, o, rtol=2e-3, atol=2e-3)
+
+
+@given(seed=st.integers(0, 2**16), steps=st.integers(1, 5))
+@settings(max_examples=8, deadline=None)
+def test_data_pipeline_deterministic(seed, steps):
+    """INVARIANT: batch_at(step) is a pure function — recomputable by any
+    worker after restart."""
+    from repro.train.data import SyntheticData
+    d1 = SyntheticData(vocab=128, seq_len=16, batch=4, seed=seed)
+    d2 = SyntheticData(vocab=128, seq_len=16, batch=4, seed=seed)
+    b1 = d1.batch_at(steps)
+    b2 = d2.batch_at(steps)
+    assert (np.asarray(b1["tokens"]) == np.asarray(b2["tokens"])).all()
+    assert (np.asarray(b1["tokens"]) < 128).all()
+    assert (np.asarray(b1["tokens"]) >= 0).all()
