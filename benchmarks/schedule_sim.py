@@ -38,14 +38,21 @@ def simulate_pcg(n_iters, t_spmv, t_axpy1, t_glred, jitter=0.0, rng=None):
     return t
 
 
-def simulate_plcg(n_iters, l, t_spmv, t_axpy1, t_glred, jitter=0.0, rng=None):
+def simulate_plcg(n_iters, l, t_spmv, t_axpy1, t_glred, jitter=0.0, rng=None,
+                  body_l=None):
     """Event-driven Alg. 2 schedule: the K1 SPMV runs FIRST, then
     MPI_Wait(req(i-l)) before K2, then the AXPY/SCALAR tail; the new
     reduction is issued at the end of the body (K5) and progresses
-    asynchronously."""
+    asynchronously.
+
+    ``body_l`` sizes the AXPY tail when the *overlap* depth differs from
+    the algorithmic depth (the autotuner models XLA's effective depth
+    min(l, unroll-1) while the solver still pays the full 2l+3-pass
+    body); defaults to ``l``."""
     rng = rng or np.random.default_rng(0)
     dur = _glred_samples(n_iters, t_glred, jitter, rng)
-    t_rest = (2 * l + 2 + 1) * t_axpy1               # K2-K6 AXPYs + dots
+    body_l = l if body_l is None else body_l
+    t_rest = (2 * body_l + 2 + 1) * t_axpy1          # K2-K6 AXPYs + dots
     glred_done = [-np.inf] * n_iters
     body_end = 0.0
     for i in range(n_iters):
@@ -65,7 +72,8 @@ def _glred_samples(k, t_glred, jitter, rng):
     return t_glred * rng.lognormal(-sigma ** 2 / 2, sigma, size=k)
 
 
-def iteration_time(method, l, kernels, n_iters=200, jitter=0.0, seed=0):
+def iteration_time(method, l, kernels, n_iters=200, jitter=0.0, seed=0,
+                   body_l=None):
     rng = np.random.default_rng(seed)
     k = kernels
     if method == "cg":
@@ -74,5 +82,5 @@ def iteration_time(method, l, kernels, n_iters=200, jitter=0.0, seed=0):
         tot = simulate_pcg(n_iters, k["spmv"], k["axpy1"], k["glred"], jitter, rng)
     else:
         tot = simulate_plcg(n_iters, l, k["spmv"], k["axpy1"], k["glred"],
-                            jitter, rng)
+                            jitter, rng, body_l=body_l)
     return tot / n_iters

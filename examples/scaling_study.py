@@ -1,13 +1,35 @@
-"""Scaling study: sweep pipeline depth l and node count with the
-schedule-simulator + hardware profiles, for YOUR problem size — a planning
-tool for picking l (the paper: 'the pipeline length is a parameter that
-can be chosen depending on the problem and hardware setup').
+"""Scaling study: pick the pipeline depth l for YOUR problem, then verify
+the pipeline actually overlaps on a simulated 8-device mesh.
+
+Three stages (the paper: 'the pipeline length is a parameter that can be
+chosen depending on the problem and hardware setup'):
+
+  1. analytic sweep of depth l vs node count (schedule simulator +
+     hardware profile, Figs. 2-3 regime);
+  2. the pipeline-depth autotuner (repro.launch.autotune, DESIGN.md §6)
+     ranking (l, unroll) candidates for one (problem, mesh) cell;
+  3. a LIVE check through the reduction-backend API (DESIGN.md §3) on 8
+     simulated host devices: the `local` and `shard_map` backends must
+     produce bitwise-comparable (fp32-tolerance) residual histories, and
+     the overlap tracer must see >= l reduction chains in flight for
+     p(l)-CG with a window of unroll >= l+1.
 
     PYTHONPATH=src python examples/scaling_study.py --n 8000000 --hw cori
+    PYTHONPATH=src python examples/scaling_study.py --skip-live   # model only
 """
 
-import argparse
+# The live stage needs 8 simulated host devices — must be set before jax
+# initializes (same pattern as repro.launch.dryrun: PREPEND so an existing
+# XLA_FLAGS doesn't silently drop the device forcing).
 import os
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=8 "
+        + os.environ.get("XLA_FLAGS", "")
+    )
+
+import argparse
 import sys
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
@@ -16,15 +38,7 @@ from benchmarks.schedule_sim import iteration_time
 from benchmarks.timing_model import CORI, V5E, stencil_kernel_times
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--n", type=int, default=8_000_000)
-    ap.add_argument("--hw", choices=["cori", "v5e"], default="cori")
-    ap.add_argument("--stencil", type=int, default=7)
-    ap.add_argument("--jitter", type=float, default=0.15)
-    args = ap.parse_args()
-    hw = CORI if args.hw == "cori" else V5E
-
+def analytic_sweep(args, hw):
     nodes_list = [8, 32, 128, 512, 1024, 4096]
     print(f"problem: {args.n/1e6:.0f}M unknowns, {args.stencil}-pt stencil, "
           f"{hw.name}, glred jitter {args.jitter}")
@@ -42,6 +56,83 @@ def main():
         print(f"{nodes:>6d} | {t_cg*1e6:>7.1f}us | " +
               " | ".join(f"{ts[l]*1e6:>7.1f}us" for l in (1, 2, 3, 5)) +
               f" | l={best} ({t_cg/ts[best]:.1f}x CG)")
+
+
+def autotune_cell(args, hw):
+    from repro.launch.autotune import autotune_depth
+
+    p = 512 * 16 if hw is CORI else 512
+    res = autotune_depth(n=args.n, p=p, hw=hw, stencil_pts=args.stencil,
+                         jitter=args.jitter, prec_factor=3.0)
+    print()
+    print(res.table())
+    print(f"-> autotuned depth for this cell: l={res.best.l} "
+          f"unroll={res.best.unroll} ({res.best.method})")
+    return res.best
+
+
+def live_verify(args):
+    """Backend parity + overlap trace on the simulated 8-device mesh."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.chebyshev import shifts_for_operator
+    from repro.linalg import Stencil2D5
+    from repro.parallel import get_backend
+    from repro.utils.trace import plcg_overlap_report
+
+    n_dev = max(len(jax.devices()), 1)
+    l = args.live_l
+    op = Stencil2D5(32, 24)
+    b = jnp.asarray(
+        np.random.default_rng(0).standard_normal(op.n), jnp.float32)
+    sig = jnp.asarray(shifts_for_operator(op, l), jnp.float32)
+
+    print(f"\nlive check: {op.n} unknowns, p({l})-CG, fp32, "
+          f"{n_dev} simulated device(s)")
+
+    # --- residual-history parity: local vs shard_map -------------------
+    kw = dict(method="plcg", l=l, sigmas=sig, tol=1e-5, maxit=400)
+    res_local = get_backend("local").solve(op, b, **kw)
+    res_shard = get_backend("shard_map", n_shards=n_dev).solve(op, b, **kw)
+    h_l = np.asarray(res_local.res_history)
+    h_s = np.asarray(res_shard.res_history)
+    np.testing.assert_allclose(h_s, h_l, rtol=2e-4, atol=1e-5)
+    n_rec = int((h_l >= 0).sum())
+    print(f"  residual-history parity local vs shard_map: OK "
+          f"({n_rec} recorded norms, fp32 tolerance, "
+          f"iters {int(res_local.iters)}/{int(res_shard.iters)})")
+
+    # --- overlap trace: >= l chains in flight for window >= l+1 --------
+    be = get_backend("shard_map", n_shards=n_dev)
+    bspec = jax.ShapeDtypeStruct((op.n,), jnp.float32)
+    rep = plcg_overlap_report(be, op, bspec, l=l, window=l + 2, sigmas=sig)
+    print("  " + str(rep).replace("\n", "\n  "))
+    assert rep.max_in_flight >= l, (
+        f"pipeline collapsed: only {rep.max_in_flight} chain(s) in flight "
+        f"for l={l}")
+    print(f"  overlap: {rep.max_in_flight} >= l={l} chains in flight — "
+          f"the Fig. 4 staggering is present in the compiled schedule")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=8_000_000)
+    ap.add_argument("--hw", choices=["cori", "v5e"], default="cori")
+    ap.add_argument("--stencil", type=int, default=7)
+    ap.add_argument("--jitter", type=float, default=0.15)
+    ap.add_argument("--live-l", type=int, default=2,
+                    help="pipeline depth for the live backend check")
+    ap.add_argument("--skip-live", action="store_true",
+                    help="model-only run (no jax compilation)")
+    args = ap.parse_args()
+    hw = CORI if args.hw == "cori" else V5E
+
+    analytic_sweep(args, hw)
+    autotune_cell(args, hw)
+    if not args.skip_live:
+        live_verify(args)
 
 
 if __name__ == "__main__":

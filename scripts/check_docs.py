@@ -1,0 +1,95 @@
+#!/usr/bin/env python
+"""Docs-citation checker: every ``DESIGN.md §N`` reference in the code
+must point at a section that actually exists in DESIGN.md.
+
+The repo's docstrings cite design sections (e.g. ``DESIGN.md §2``,
+``DESIGN.md §2/§8``); this grew stale once — the document didn't exist —
+so the check is wired into the test suite (tests/test_docs.py).  Exit
+status 0 when every citation resolves, 1 otherwise (with a per-citation
+report).
+
+Usage:
+    python scripts/check_docs.py [--root PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+
+# "DESIGN.md §2" and multi-refs "DESIGN.md §2/§8" (slash-separated).
+CITE_RE = re.compile(r"DESIGN\.md[ \t]*(§\d+(?:[ \t]*/[ \t]*§\d+)*)")
+SEC_NUM_RE = re.compile(r"§(\d+)")
+# DESIGN.md section headers: "## §N — title"
+HEADER_RE = re.compile(r"^##\s*§(\d+)\b", re.MULTILINE)
+
+# Where citations live: python sources and markdown docs.
+SCAN_DIRS = ("src", "tests", "benchmarks", "examples", "scripts")
+SCAN_EXTS = (".py",)
+
+
+def design_sections(root: str) -> set[int] | None:
+    """Section numbers declared in DESIGN.md, or None if it's missing."""
+    path = os.path.join(root, "DESIGN.md")
+    if not os.path.isfile(path):
+        return None
+    with open(path, encoding="utf-8") as f:
+        return {int(m) for m in HEADER_RE.findall(f.read())}
+
+
+def find_citations(root: str) -> list[tuple[str, int, int]]:
+    """(relative path, line number, cited section) for every citation."""
+    out = []
+    for d in SCAN_DIRS:
+        base = os.path.join(root, d)
+        if not os.path.isdir(base):
+            continue
+        for dirpath, _dirnames, filenames in os.walk(base):
+            for fname in sorted(filenames):
+                if not fname.endswith(SCAN_EXTS):
+                    continue
+                path = os.path.join(dirpath, fname)
+                rel = os.path.relpath(path, root)
+                with open(path, encoding="utf-8", errors="replace") as f:
+                    for lineno, line in enumerate(f, 1):
+                        for m in CITE_RE.finditer(line):
+                            for num in SEC_NUM_RE.findall(m.group(1)):
+                                out.append((rel, lineno, int(num)))
+    return out
+
+
+def check(root: str = ".", verbose: bool = True) -> int:
+    """Return the number of problems (0 == docs are consistent)."""
+    sections = design_sections(root)
+    cites = find_citations(root)
+    problems = 0
+    if sections is None:
+        if verbose:
+            print(f"check_docs: {root}/DESIGN.md is MISSING "
+                  f"({len(cites)} citation(s) dangling)")
+        return max(len(cites), 1)
+    for rel, lineno, num in cites:
+        if num not in sections:
+            problems += 1
+            if verbose:
+                print(f"check_docs: {rel}:{lineno} cites DESIGN.md §{num} "
+                      f"— no such section (have: "
+                      f"{', '.join(f'§{s}' for s in sorted(sections))})")
+    if verbose and problems == 0:
+        print(f"check_docs: OK — {len(cites)} citation(s) across the tree, "
+              f"{len(sections)} section(s) in DESIGN.md")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--root", default=os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))))
+    args = ap.parse_args(argv)
+    return 1 if check(args.root) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

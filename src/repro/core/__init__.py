@@ -8,6 +8,15 @@ SOLVERS = {
     "pipelcg": pipelined_cg.solve,     # deep pipelined p(l)-CG (Alg. 1)
 }
 
+# Canonical kwargs-dict dispatch used by every substrate (distributed_solve
+# and all reduction backends share THIS dict, so a method added here works
+# identically everywhere — DESIGN.md §3).
+METHODS = {
+    "cg": lambda ops, b, kw: classic_cg.solve(ops, b, **kw),
+    "pcg": lambda ops, b, kw: ghysels_pcg.solve(ops, b, **kw),
+    "plcg": lambda ops, b, kw: pipelined_cg.solve(ops, b, **kw),
+}
+
 __all__ = [
     "SolveResult",
     "SolverOps",
@@ -19,4 +28,5 @@ __all__ = [
     "power_method",
     "shifts_for_operator",
     "SOLVERS",
+    "METHODS",
 ]

@@ -4,6 +4,11 @@ The baseline of the paper: TWO global reduction phases per iteration
 ((s,p) for alpha, then (r,u) for beta/convergence), each a synchronization
 point that cannot overlap with the SPMV — ``Time = 2 glred + 1 spmv``
 (Table 1, row 'CG').
+
+Both reductions go through the backend handle API (start + immediate
+wait): the overlap tracer therefore sees exactly one chain in flight at a
+time for classic CG — the baseline against which p(l)-CG's staggering is
+measured (DESIGN.md §6).
 """
 
 from __future__ import annotations
@@ -41,6 +46,7 @@ def solve(
         x, r, u, p, gamma, it, conv, hist = st
         s = ops.apply_a(p)
         alpha = gamma / dot1(ops, s, p)           # reduction 1 — sync point
+        # (start+wait back-to-back: classic CG cannot hide this latency)
         x = x + alpha * p
         r = r - alpha * s
         u = ops.prec(r)

@@ -38,13 +38,16 @@ def solve(
 
     def body(st):
         x, r, u, w, z, q, s, p, gamma_old, alpha_old, it, conv, hist = st
-        # --- ONE fused reduction: {(r,u), (w,u)}.  Under shard_map this is a
-        # single psum whose result XLA may overlap with prec+SPMV below.
-        gd = ops.dot_block(jnp.stack([r, w]), u)
-        gamma, delta = gd[0], gd[1]
+        # --- ONE fused reduction: {(r,u), (w,u)}, initiated through the
+        # backend handle (MPI_Iallreduce) and only waited on AFTER the
+        # iteration's own preconditioner + SPMV — the overlap window of
+        # Table 1, row 'p-CG' (DESIGN.md §3/§6).
+        pending = ops.start(jnp.stack([r, w]), u)
         # --- overlapped work: preconditioner + SPMV of this iteration
         m = ops.prec(w)
         nvec = ops.apply_a(m)
+        gd = ops.wait(pending)                    # MPI_Wait
+        gamma, delta = gd[0], gd[1]
         first = it == 0
         beta = jnp.where(first, 0.0, gamma / gamma_old)
         denom = jnp.where(

@@ -13,12 +13,17 @@ The communication structure per iteration i is exactly the paper's:
     MPI_Iallreduce of G(i-2l+1:i+1, i+1)                       (K5)
   * its result is FIRST READ at iteration i+l (lines 8-10)     (MPI_Wait)
 
-so the reduction initiated at iteration i has l iterations of SPMVs, AXPYs
-and l-1 other in-flight reductions between initiation and first use.  On
-TPU the overlap is realized by XLA's latency-hiding scheduler when the
-iteration window is unrolled (``unroll`` parameter; see DESIGN.md §2) —
-the lowered HLO then carries l independent all-reduce chains in flight,
-the staggering of Fig. 4 (bottom).
+The reduction is issued through the backend handle API
+(``ops.start``, DESIGN.md §3) and its raw 2l+1-entry payload parked in an
+explicit in-flight ring ``D`` of depth l — the JAX analogue of the paper's
+l outstanding ``MPI_Request`` objects.  Only at iteration i+l is the slot
+consumed (``ops.wait``) and scattered into the G window, so the reduction
+initiated at iteration i has l iterations of SPMVs, AXPYs and l-1 other
+in-flight reductions between initiation and first use.  On TPU the overlap
+is realized by XLA's latency-hiding scheduler when the iteration window is
+unrolled (``unroll`` parameter; see DESIGN.md §2) — the lowered HLO then
+carries l independent all-reduce chains in flight, the staggering of
+Fig. 4 (bottom), which ``repro.utils.trace`` measures (DESIGN.md §6).
 
 Breakdown handling: square-root breakdown (line 10/11) triggers an explicit
 restart from the current iterate (§2.2), implemented as a state re-init
@@ -30,12 +35,12 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import NamedTuple
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.types import SolveResult, SolverOps
+from repro.core.types import GLRED_WAIT_TAG, SolveResult, SolverOps, dot1
 
 
 class _Cycle(NamedTuple):
@@ -45,6 +50,7 @@ class _Cycle(NamedTuple):
     ZK: jax.Array       # (l+1, RB, N) ring buffers of the auxiliary bases
     U: jax.Array        # (3, N) ring of unpreconditioned vectors u_{i-1..i+1}
     G: jax.Array        # (W, W) sliding window of the basis-transform matrix
+    D: jax.Array        # (l, 2l+1) in-flight dot blocks (reduction handles)
     gam: jax.Array      # (W,) gamma ring  (Hessenberg diagonal)
     dlt: jax.Array      # (W,) delta ring  (Hessenberg off-diagonal)
     p_prev: jax.Array   # (N,) search direction p_{i-l-1}
@@ -65,18 +71,32 @@ class _State(NamedTuple):
     norm0: jax.Array      # original residual M-norm (stopping reference)
 
 
-def solve(
+class PlcgProgram(NamedTuple):
+    """The p(l)-CG iteration decomposed for external drivers.
+
+    ``solve`` runs ``body`` under ``lax.while_loop``; the overlap tracer
+    (``repro.utils.trace``) instead unrolls ``iteration`` into a flat
+    window so the staggered reduction chains are visible in one HLO
+    schedule (DESIGN.md §6).
+    """
+
+    init: Callable[[jax.Array], "_State"]        # x0 -> st0
+    iteration: Callable[..., "_State"]           # raw iteration (no restart)
+    body: Callable[["_State"], "_State"]         # breakdown-aware step
+    cond: Callable[["_State"], jax.Array]
+    finish: Callable[["_State"], SolveResult]
+
+
+def build(
     ops: SolverOps,
     b: jax.Array,
     l: int,
-    x0: jax.Array | None = None,
     tol: float = 1e-6,
     maxit: int = 1000,
     sigmas: jax.Array | None = None,
     max_restarts: int = 10,
-    unroll: int = 1,
-) -> SolveResult:
-    """Solve A x = b with p(l)-CG.  ``l`` is the pipeline depth (static)."""
+) -> PlcgProgram:
+    """Construct the p(l)-CG iteration pieces for ``b`` (depth ``l`` static)."""
     assert l >= 1
     n = b.shape[0]
     dtype = b.dtype
@@ -119,7 +139,7 @@ def solve(
     def init_cycle(x) -> _Cycle:
         u0_raw = b - ops.apply_a(x)
         r0_raw = ops.prec(u0_raw)
-        eta0 = jnp.sqrt(jnp.abs(ops.dot_block(u0_raw[None], r0_raw)[0]))
+        eta0 = jnp.sqrt(jnp.abs(dot1(ops, u0_raw, r0_raw)))
         safe = jnp.where(eta0 == 0, jnp.ones((), dtype), eta0)
         v0 = r0_raw / safe
         ZK = jnp.zeros((l + 1, RB, n), dtype)
@@ -128,6 +148,7 @@ def solve(
         G = jnp.zeros((W, W), dtype).at[0, 0].set(1.0)
         return _Cycle(
             x=x, ZK=ZK, U=U, G=G,
+            D=jnp.zeros((l, 2 * l + 1), dtype),
             gam=jnp.zeros((W,), dtype), dlt=jnp.zeros((W,), dtype),
             p_prev=zeros_n, eta_prev=jnp.ones((), dtype),
             zet_prev=jnp.zeros((), dtype),
@@ -135,7 +156,15 @@ def solve(
         )
 
     # -------------------------------------------------------- iteration ---
-    def iteration(st: _State) -> _State:
+    def iteration(st: _State, static_phase: str | None = None) -> _State:
+        """One p(l)-CG iteration.
+
+        ``static_phase`` ('early' | 'late' | None) lets flat drivers (the
+        overlap tracer) bypass the ``lax.cond`` on i >= l with a
+        trace-time choice, so the arrival path is inlined in the HLO
+        entry computation.  ``None`` (the while-loop path) keeps the
+        runtime conditional.
+        """
         c = st.cyc
         i = c.i
         im = i - l                     # index of the Hessenberg column built
@@ -159,6 +188,20 @@ def solve(
         def late_phase(args):
             ZK, G, gam, dlt, u_new, z_new = args
             col = i - l + 1            # G column whose dots arrived (MPI_Wait)
+
+            # ---- MPI_Wait(req(i-l)): consume the in-flight dot block -----
+            # The raw 2l+1 payload initiated l iterations ago is pulled out
+            # of the D ring and scattered into G column `col` only NOW —
+            # the consumption point the overlap tracer keys on (GLRED_WAIT
+            # scope; DESIGN.md §6).
+            with jax.named_scope(GLRED_WAIT_TAG):
+                arrived = ops.wait(jax.lax.dynamic_index_in_dim(
+                    c.D, jnp.mod(im, l), axis=0, keepdims=False))
+                for t in range(2 * l + 1):         # rows im-2l+1 .. im+1
+                    row = im - 2 * l + 1 + t
+                    rv = row >= 0
+                    G = g_set(G, row, col,
+                              jnp.where(rv, arrived[t], g_get(G, row, col)))
 
             # ---- (K2) lines 9-10: correct column `col` -------------------
             for t in range(l - 1):     # j = i-2l+2 .. i-l   (sequential in j)
@@ -224,31 +267,32 @@ def solve(
         def early_phase(args):
             return args, jnp.asarray(False)
 
-        (ZK, G, gam, dlt, u_new, z_new), breakdown = jax.lax.cond(
-            ge_l, late_phase, early_phase, (ZK, c.G, c.gam, c.dlt, u_new, z_new)
-        )
+        phase_args = (ZK, c.G, c.gam, c.dlt, u_new, z_new)
+        if static_phase is None:
+            (ZK, G, gam, dlt, u_new, z_new), breakdown = jax.lax.cond(
+                ge_l, late_phase, early_phase, phase_args
+            )
+        elif static_phase == "late":
+            (ZK, G, gam, dlt, u_new, z_new), breakdown = late_phase(phase_args)
+        else:
+            (ZK, G, gam, dlt, u_new, z_new), breakdown = early_phase(phase_args)
 
         ZK = zk_set(ZK, l, i + 1, z_new)
         U = u_set(c.U, i + 1, u_new)
 
         # ---- (K5) line 23: initiate the dot block — ONE fused reduction --
-        vs, valids, rows = [], [], []
+        # The raw payload (rows i-2l+1 .. i+1 of G column i+1) is parked in
+        # the D ring; it is only consumed — and scattered into G — at
+        # iteration i+l (MPI_Wait above).  Between the two sites up to l
+        # reductions are simultaneously in flight.
+        vs = []
         for t in range(l + 1):                     # V-range: j = i-2l+1 .. i-l+1
-            j = i - 2 * l + 1 + t
-            vs.append(zk_get(ZK, 0, j))
-            valids.append(j >= 0)
-            rows.append(j)
+            vs.append(zk_get(ZK, 0, i - 2 * l + 1 + t))
         for t in range(l):                         # Z-range: j = i-l+2 .. i+1
-            j = i - l + 2 + t
-            vs.append(zk_get(ZK, l, j))
-            valids.append(j >= 0)
-            rows.append(j)
+            vs.append(zk_get(ZK, l, i - l + 2 + t))
         mat = jnp.stack(vs)                        # (2l+1, N)
-        dots = ops.dot_block(mat, u_new)           # single global reduction
-        for t in range(2 * l + 1):
-            val = jnp.where(valids[t], dots[t], jnp.zeros((), dtype))
-            G = g_set(G, rows[t], i + 1,
-                      jnp.where(valids[t], val, g_get(G, rows[t], i + 1)))
+        dots = ops.start(mat, u_new)               # single global reduction
+        D = c.D.at[jnp.mod(i, l)].set(dots)
 
         # ---- (K6) lines 24-32: D-Lanczos solution update ------------------
         gam0 = ring_get(gam, jnp.int32(0))
@@ -289,7 +333,7 @@ def solve(
         converged = st.converged | (ok & (rnorm / st.norm0 < tol))
 
         cyc = _Cycle(
-            x=x, ZK=ZK, U=U, G=G, gam=gam, dlt=dlt, p_prev=p_prev,
+            x=x, ZK=ZK, U=U, G=G, D=D, gam=gam, dlt=dlt, p_prev=p_prev,
             eta_prev=eta_prev, zet_prev=zet_prev, i=i + 1,
             norm0_cycle=c.norm0_cycle,
         )
@@ -320,29 +364,56 @@ def solve(
             & (st.restarts <= max_restarts)
         )
 
-    cyc0 = init_cycle(jnp.zeros_like(b) if x0 is None else x0.astype(dtype))
-    norm0 = cyc0.norm0_cycle
-    hist0 = jnp.full((H,), -1.0, dtype).at[0].set(norm0)
-    st0 = _State(
-        cyc=cyc0, tot=jnp.int32(0), upd=jnp.int32(0), restarts=jnp.int32(0),
-        converged=norm0 == 0.0, breakdown=jnp.asarray(False),
-        hist=hist0, norm0=norm0,
-    )
+    def init(x0: jax.Array) -> _State:
+        cyc0 = init_cycle(x0)
+        norm0 = cyc0.norm0_cycle
+        hist0 = jnp.full((H,), -1.0, dtype).at[0].set(norm0)
+        return _State(
+            cyc=cyc0, tot=jnp.int32(0), upd=jnp.int32(0), restarts=jnp.int32(0),
+            converged=norm0 == 0.0, breakdown=jnp.asarray(False),
+            hist=hist0, norm0=norm0,
+        )
+
+    def finish(final: _State) -> SolveResult:
+        return SolveResult(
+            x=final.cyc.x, iters=final.upd, restarts=final.restarts,
+            converged=final.converged, res_history=final.hist, norm0=final.norm0,
+        )
+
+    return PlcgProgram(init=init, iteration=iteration, body=body, cond=cond,
+                       finish=finish)
+
+
+def solve(
+    ops: SolverOps,
+    b: jax.Array,
+    l: int,
+    x0: jax.Array | None = None,
+    tol: float = 1e-6,
+    maxit: int = 1000,
+    sigmas: jax.Array | None = None,
+    max_restarts: int = 10,
+    unroll: int = 1,
+) -> SolveResult:
+    """Solve A x = b with p(l)-CG.  ``l`` is the pipeline depth (static)."""
+    prog = build(ops, b, l, tol=tol, maxit=maxit, sigmas=sigmas,
+                 max_restarts=max_restarts)
+    dtype = b.dtype
+    st0 = prog.init(jnp.zeros_like(b) if x0 is None else x0.astype(dtype))
 
     if unroll > 1:
         # Unrolled driver: expose an (unroll)-iteration window to XLA so the
         # latency-hiding scheduler can stagger the in-flight reductions
         # (DESIGN.md §2).  Semantics identical to unroll=1.
         def body_u(st: _State) -> _State:
-            for _ in range(unroll):
-                st = jax.lax.cond(cond(st), body, lambda s: s, st)
+            for k in range(unroll):
+                with jax.named_scope(f"plu{k}"):
+                    st = jax.lax.cond(prog.cond(st), prog.body,
+                                      lambda s: s, st)
             return st
 
-        final = jax.lax.while_loop(cond, body_u, st0)
+        final = jax.lax.while_loop(prog.cond, body_u, st0)
     else:
-        final = jax.lax.while_loop(cond, body, st0)
+        final = jax.lax.while_loop(prog.cond, prog.body, st0)
 
-    return SolveResult(
-        x=final.cyc.x, iters=final.upd, restarts=final.restarts,
-        converged=final.converged, res_history=final.hist, norm0=final.norm0,
-    )
+    return prog.finish(final)

@@ -1,8 +1,8 @@
 """Common solver interfaces.
 
-``SolverOps`` abstracts the three things a Krylov solver needs from the
-execution substrate, so the *same* solver code runs single-device or under
-``shard_map`` on a production mesh:
+``SolverOps`` abstracts what a Krylov solver needs from the execution
+substrate, so the *same* solver code runs single-device or under
+``shard_map`` on a production mesh (DESIGN.md §3):
 
   apply_a    A @ x          (distributed: halo exchange + local stencil)
   prec       M^{-1} x       (distributed: communication-free block solve)
@@ -10,8 +10,26 @@ execution substrate, so the *same* solver code runs single-device or under
              into ONE global reduction — this is the paper's single
              ``MPI_Iallreduce`` of the G-column (distributed: one psum).
 
+On top of the fused block, the reduction is exposed as an *async-friendly
+handle pair* — the paper's MPI_Iallreduce / MPI_Wait split:
+
+  start(mat, vec) -> dots   initiate the fused reduction.  The returned
+                            array is a lazy handle: nothing forces its
+                            completion until a consumer reads it.
+  wait(dots)      -> dots   declare the consumption point.  Backends tag
+                            both sites with named scopes (GLRED_START_TAG /
+                            GLRED_WAIT_TAG) so the overlap tracer
+                            (``repro.utils.trace``, DESIGN.md §6) can
+                            recover the staggered in-flight chains from the
+                            compiled HLO schedule, and insert an
+                            ``optimization_barrier`` so XLA cannot collapse
+                            the issue→consume window.
+
 The solvers never call more than one ``dot_block`` per iteration (p-CG,
 p(l)-CG) or two (classic CG) — exactly the reduction counts of Table 1.
+``SolverOps`` instances are normally built by a reduction backend
+(``repro.parallel.backends.get_backend``); ``SolverOps.local`` remains the
+single-device shortcut used by tests and examples.
 """
 
 from __future__ import annotations
@@ -21,6 +39,13 @@ from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+# Named-scope tags attached by ``SolverOps.create`` at the reduction issue
+# and consumption sites.  They flow into HLO instruction metadata
+# (op_name), which is how the overlap tracer identifies the chains after
+# XLA optimization — see DESIGN.md §6.
+GLRED_START_TAG = "glred_start"
+GLRED_WAIT_TAG = "glred_wait"
 
 
 class SolveResult(NamedTuple):
@@ -37,12 +62,59 @@ class SolverOps:
     apply_a: Callable[[jax.Array], jax.Array]
     prec: Callable[[jax.Array], jax.Array]
     dot_block: Callable[[jax.Array, jax.Array], jax.Array]
+    # Async reduction-handle pair.  None means "derive from dot_block":
+    # start falls back to a plain (synchronous) dot_block and wait to the
+    # identity, which keeps hand-rolled SolverOps (benchmarks/table1.py)
+    # working unchanged.
+    dot_block_start: Callable[[jax.Array, jax.Array], jax.Array] | None = None
+    dot_block_wait: Callable[[jax.Array], jax.Array] | None = None
+
+    def start(self, mat: jax.Array, vec: jax.Array) -> jax.Array:
+        """Initiate the fused dot block (the MPI_Iallreduce)."""
+        if self.dot_block_start is None:
+            return self.dot_block(mat, vec)
+        return self.dot_block_start(mat, vec)
+
+    def wait(self, dots: jax.Array) -> jax.Array:
+        """Consumption point of a previously started block (MPI_Wait)."""
+        if self.dot_block_wait is None:
+            return dots
+        return self.dot_block_wait(dots)
+
+    @staticmethod
+    def create(
+        apply_a: Callable[[jax.Array], jax.Array],
+        prec: Callable[[jax.Array], jax.Array],
+        dot_block: Callable[[jax.Array, jax.Array], jax.Array],
+    ) -> "SolverOps":
+        """Build SolverOps with tracer-tagged start/wait around dot_block.
+
+        Every reduction backend funnels through here so the issue and
+        consumption sites of each reduction carry GLRED_START_TAG /
+        GLRED_WAIT_TAG scopes in the lowered HLO (DESIGN.md §6).
+        """
+
+        def start(mat, vec):
+            with jax.named_scope(GLRED_START_TAG):
+                return dot_block(mat, vec)
+
+        def wait(dots):
+            with jax.named_scope(GLRED_WAIT_TAG):
+                return jax.lax.optimization_barrier(dots)
+
+        return SolverOps(
+            apply_a=apply_a,
+            prec=prec,
+            dot_block=dot_block,
+            dot_block_start=start,
+            dot_block_wait=wait,
+        )
 
     @staticmethod
     def local(op, prec=None) -> "SolverOps":
         """Single-device ops (tests, small problems)."""
         pfun = (lambda v: v) if prec is None else (lambda v: prec.apply(v))
-        return SolverOps(
+        return SolverOps.create(
             apply_a=lambda v: op.apply(v),
             prec=pfun,
             dot_block=lambda mat, vec: mat @ vec,
@@ -50,5 +122,7 @@ class SolverOps:
 
 
 def dot1(ops: SolverOps, a: jax.Array, b: jax.Array) -> jax.Array:
-    """Single global dot through the fused-block path."""
-    return ops.dot_block(a[None, :], b)[0]
+    """Single global dot through the fused-block path, started and
+    immediately waited — a blocking reduction (classic CG's
+    synchronization point)."""
+    return ops.wait(ops.start(a[None, :], b))[0]

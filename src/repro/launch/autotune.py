@@ -1,0 +1,241 @@
+"""Pipeline-depth autotuner: pick (l, unroll) per problem size and mesh
+shape (DESIGN.md §6).
+
+The paper leaves the pipeline length as "a parameter that can be chosen
+depending on the problem and hardware setup"; Cornelis et al.
+(arXiv:1801.04728) and Cools & Vanroose (arXiv:1706.05988) show the
+choice interacts with stability, so depth must be a *measured* quantity,
+not a guess.  Two signal sources, combined:
+
+* **model** — the event-driven schedule simulator
+  (``benchmarks.schedule_sim``) driven by the analytic kernel times
+  (``benchmarks.timing_model``) for the target hardware profile.  On XLA
+  the while-loop body serializes collectives unless the iteration window
+  is unrolled, so a chain can only stay in flight across
+  ``min(l, unroll-1)`` iterations — the model is evaluated at that
+  *effective* depth (DESIGN.md §2).
+* **measured** — optional wall-clock per iteration of the real solver on
+  a real backend (``measured_runner``), which captures whatever the model
+  misses (compilation choices, fusion, cache effects).
+
+Usage (model only)::
+
+    from repro.launch.autotune import autotune_depth
+    from benchmarks.timing_model import CORI
+    res = autotune_depth(n=8_000_000, p=512 * 16, hw=CORI)
+    print(res.table());  res.best.l, res.best.unroll
+
+Usage (model + measurement through a reduction backend)::
+
+    from repro.parallel import get_backend
+    from repro.launch.autotune import autotune_depth, measured_runner
+    be = get_backend("shard_map", n_shards=8)
+    measure = measured_runner(be, op, b, sigmas_for=lambda l:
+                              shifts_for_operator(op, l))
+    res = autotune_depth(n=op.n, p=8, hw=V5E, measure=measure)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import sys
+import time
+from typing import Callable
+
+# benchmarks/ sits next to src/ in the source checkout and is NOT part of
+# the installed package; resolve it when present, and degrade to a clear
+# error at *use* time otherwise (the measured path and the backends keep
+# working without it — only the analytic model needs benchmarks/).
+_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__)))))
+if os.path.isdir(os.path.join(_ROOT, "benchmarks")) and _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+try:
+    from benchmarks.schedule_sim import iteration_time
+    from benchmarks.timing_model import CORI, HWProfile, stencil_kernel_times
+    _BENCH_IMPORT_ERROR = None
+except ImportError as _e:               # pragma: no cover - installed tree
+    iteration_time = stencil_kernel_times = None
+    CORI, HWProfile = None, object
+    _BENCH_IMPORT_ERROR = _e
+
+
+def _require_timing_model():
+    if _BENCH_IMPORT_ERROR is not None:
+        raise ImportError(
+            "the autotuner's analytic model needs the benchmarks/ package, "
+            "which ships with the source checkout (run from the repo root) "
+            f"— original error: {_BENCH_IMPORT_ERROR}"
+        )
+
+
+def xla_effective_depth(l: int, unroll: int) -> int:
+    """Reductions a while-loop body can keep in flight under XLA.
+
+    The body is one computation: a collective issued inside it must
+    complete before the backward edge, so chains only stagger across the
+    ``unroll``-iteration window — depth saturates at ``unroll - 1``
+    (verified by the overlap tracer, DESIGN.md §6).
+    """
+    return max(min(l, unroll - 1), 0)
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    method: str
+    l: int
+    unroll: int
+    model_s: float                 # modeled seconds / iteration
+    measured_s: float | None = None  # wall-clock seconds / iteration
+
+    @property
+    def score(self) -> float:
+        return self.model_s if self.measured_s is None else self.measured_s
+
+
+@dataclasses.dataclass
+class AutotuneResult:
+    best: Candidate
+    candidates: list[Candidate]
+    n: int
+    p: int
+    hw_name: str
+
+    def table(self) -> str:
+        hdr = (f"autotune: n={self.n:,} unknowns, p={self.p} workers, "
+               f"{self.hw_name}")
+        rows = [hdr, f"{'method':>10s} {'l':>3s} {'unroll':>6s} "
+                     f"{'model/us':>9s} {'meas/us':>9s}"]
+        for c in sorted(self.candidates, key=lambda c: c.score):
+            meas = f"{c.measured_s * 1e6:9.1f}" if c.measured_s is not None \
+                else f"{'-':>9s}"
+            star = " *" if c == self.best else ""
+            rows.append(f"{c.method:>10s} {c.l:>3d} {c.unroll:>6d} "
+                        f"{c.model_s * 1e6:9.1f} {meas}{star}")
+        return "\n".join(rows)
+
+
+def model_iteration_time(
+    hw: HWProfile,
+    n: int,
+    p: int,
+    method: str,
+    l: int = 0,
+    unroll: int = 1,
+    stencil_pts: int = 5,
+    jitter: float = 0.15,
+    prec_factor: float = 1.0,
+) -> float:
+    """Modeled seconds per iteration at the XLA-effective pipeline depth."""
+    _require_timing_model()
+    k = stencil_kernel_times(hw, n, p, stencil_pts=stencil_pts,
+                             prec_factor=prec_factor)
+    if method != "plcg":
+        return iteration_time(method, 0, k, jitter=jitter)
+    l_eff = xla_effective_depth(l, unroll)
+    if l_eff == 0:
+        # No in-flight window: the reduction serializes with the body —
+        # SPMV + (2l+2+1) AXPY passes + blocking glred.
+        return k["spmv"] + (2 * l + 3) * k["axpy1"] + k["glred"]
+    # Overlap at the XLA-effective depth, but the body still pays the
+    # full algorithmic-depth AXPY tail (2l+3 passes).
+    return iteration_time("plcg", l_eff, k, jitter=jitter, body_l=l)
+
+
+def autotune_depth(
+    n: int,
+    p: int,
+    hw: HWProfile | None = None,
+    ls: tuple[int, ...] = (1, 2, 3, 5),
+    unrolls: tuple[int, ...] | None = None,
+    stencil_pts: int = 5,
+    jitter: float = 0.15,
+    prec_factor: float = 1.0,
+    include_baselines: bool = True,
+    measure: Callable[[str, int, int], float] | None = None,
+) -> AutotuneResult:
+    """Sweep (l, unroll) and pick the fastest candidate.
+
+    ``measure(method, l, unroll) -> seconds/iter`` (see
+    :func:`measured_runner`) overrides the model for ranking wherever it
+    is provided; candidates are ranked by measured time when available,
+    modeled time otherwise.  ``hw`` defaults to the Cori-like
+    reproduction profile.
+    """
+    _require_timing_model()
+    if hw is None:
+        hw = CORI
+    cands: list[Candidate] = []
+
+    def add(method, l, unroll):
+        mdl = model_iteration_time(hw, n, p, method, l, unroll,
+                                   stencil_pts=stencil_pts, jitter=jitter,
+                                   prec_factor=prec_factor)
+        meas = measure(method, l, unroll) if measure is not None else None
+        cands.append(Candidate(method, l, unroll, mdl, meas))
+
+    if include_baselines:
+        add("cg", 0, 1)
+        add("pcg", 0, 1)
+    for l in ls:
+        for u in (unrolls if unrolls is not None else (1, l + 1)):
+            add("plcg", l, u)
+
+    best = min(cands, key=lambda c: c.score)
+    return AutotuneResult(best=best, candidates=cands, n=n, p=p,
+                          hw_name=hw.name)
+
+
+def measured_runner(
+    backend,
+    op,
+    b,
+    sigmas_for: Callable[[int], object] | None = None,
+    prec=None,
+    iters: tuple[int, int] = (20, 60),
+    repeats: int = 3,
+) -> Callable[[str, int, int], float]:
+    """Wall-clock seconds/iteration of the real solver on ``backend``.
+
+    Each configuration is compiled ONCE (``backend.make_solver`` returns
+    a callable with a persistent jit cache); timing then covers pure
+    re-execution.  The solver runs at two fixed iteration budgets (tol=0
+    disables early exit) and the difference removes the constant
+    init/launch overhead; the minimum over ``repeats`` suppresses noise.
+    Intended for small calibration problems — the autotuner extrapolates
+    shape via the analytic model, not by timing the production size.
+    """
+    import jax
+
+    lo, hi = iters
+    assert hi > lo
+
+    def time_solve(method, l, unroll, maxit) -> float:
+        kw = dict(tol=0.0, maxit=maxit)
+        if method == "plcg":
+            kw.update(l=l, unroll=unroll)
+            if sigmas_for is not None:
+                kw.update(sigmas=sigmas_for(l))
+        solver = backend.make_solver(op, method, prec, **kw)
+        jax.block_until_ready(solver(b).x)          # compile + warmup
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            jax.block_until_ready(solver(b).x)
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    def measure(method: str, l: int, unroll: int) -> float:
+        t_lo = time_solve(method, l, unroll, lo)
+        t_hi = time_solve(method, l, unroll, hi)
+        if t_hi <= t_lo:
+            # Noise swallowed the budget difference; a 0.0 score would
+            # win the ranking outright.  Fall back to the per-iteration
+            # upper bound of the larger run (includes launch overhead —
+            # pessimistic, never a free win).
+            return t_hi / hi
+        return (t_hi - t_lo) / (hi - lo)
+
+    return measure

@@ -10,6 +10,17 @@ Emits per cell: memory_analysis, cost_analysis FLOPs/bytes, collective
 byte/count breakdown parsed from the optimized HLO, and the §Roofline
 terms (TPU v5e constants).  Success of .lower().compile() for every cell
 on the 16x16 and 2x16x16 meshes is deliverable (e).
+
+The ``--cg`` cells run the solver path through ``distributed_solve`` (the
+shard_map reduction backend, DESIGN.md §3).  Pick the pipeline depth for
+a cell with the autotuner before dry-running it::
+
+    from repro.launch.autotune import autotune_depth
+    from benchmarks.timing_model import V5E
+    best = autotune_depth(n=4_000_000, p=256, hw=V5E).best
+    # -> run_cg_cell(mesh, l=best.l, unroll=best.unroll)
+
+(DESIGN.md §5/§6.)
 """
 
 # The 512 placeholder devices MUST be claimed before jax initializes —
@@ -31,7 +42,7 @@ import numpy as np
 from repro.launch.cells import SHAPES, all_cells, build_cell
 from repro.launch.mesh import make_production_mesh, n_chips
 from repro.utils.hlo import summarize_collectives
-from repro.utils.roofline import HW_V5E, roofline_terms
+from repro.utils.roofline import HW_V5E, cost_analysis_dict, roofline_terms
 
 
 def run_cell(arch: str, shape_name: str, mesh, kv_seq_shard=False,
@@ -42,6 +53,7 @@ def run_cell(arch: str, shape_name: str, mesh, kv_seq_shard=False,
     cell = build_cell(arch, shape_name, mesh, kv_seq_shard=kv_seq_shard,
                       pure_dp=pure_dp, pipeline_l=pipeline_l)
     attn_mod.SPLIT_KV_AXIS = "model" if split_kv else None
+    attn_mod.SPLIT_KV_MESH = mesh if split_kv else None
     attn_mod.DECODE_UPCAST = not decode_bf16
     with jax.set_mesh(mesh):
         jitted = jax.jit(
@@ -52,6 +64,7 @@ def run_cell(arch: str, shape_name: str, mesh, kv_seq_shard=False,
         lowered = jitted.lower(*cell.args)
         compiled = lowered.compile()
     attn_mod.SPLIT_KV_AXIS = None
+    attn_mod.SPLIT_KV_MESH = None
     attn_mod.DECODE_UPCAST = True
     t1 = time.time()
 
@@ -67,7 +80,7 @@ def run_cell(arch: str, shape_name: str, mesh, kv_seq_shard=False,
     except Exception as e:  # CPU backend may not implement it
         mem_info = {"error": str(e)}
 
-    cost = compiled.cost_analysis() or {}
+    cost = cost_analysis_dict(compiled)
     hlo = compiled.as_text()
     colls = summarize_collectives(hlo)
     chips = n_chips(mesh)
@@ -119,6 +132,7 @@ def _compile_costs(arch, shape_name, mesh, depth_units, kv_seq_shard,
     old = model_mod.SCAN_UNROLL
     model_mod.SCAN_UNROLL = True
     attn_mod.SPLIT_KV_AXIS = "model" if split_kv else None
+    attn_mod.SPLIT_KV_MESH = mesh if split_kv else None
     attn_mod.DECODE_UPCAST = not decode_bf16
     moe_mod.CONSTRAIN_EP = moe_constrain
     try:
@@ -131,9 +145,10 @@ def _compile_costs(arch, shape_name, mesh, depth_units, kv_seq_shard,
     finally:
         model_mod.SCAN_UNROLL = old
         attn_mod.SPLIT_KV_AXIS = None
+        attn_mod.SPLIT_KV_MESH = None
         attn_mod.DECODE_UPCAST = True
         moe_mod.CONSTRAIN_EP = False
-    cost = compiled.cost_analysis() or {}
+    cost = cost_analysis_dict(compiled)
     per_kind = summarize_collectives(compiled.as_text()).per_kind
     return (float(cost.get("flops", 0.0) or 0.0),
             float(cost.get("bytes accessed", 0.0) or 0.0),
@@ -258,7 +273,7 @@ def run_cg_cell(mesh, problem="laplace2d", l=2, verbose=True,
     lowered = jax.jit(fn, in_shardings=(bsh, ash)).lower(b, arrays)
     compiled = lowered.compile()
     t1 = time.time()
-    cost = compiled.cost_analysis() or {}
+    cost = cost_analysis_dict(compiled)
     hlo = compiled.as_text()
     colls = summarize_collectives(hlo)
     terms = roofline_terms(cost, hlo, n_dev, HW_V5E)

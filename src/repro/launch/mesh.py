@@ -1,4 +1,4 @@
-"""Production meshes.
+"""Production meshes (DESIGN.md §2/§5).
 
 Single pod : (16, 16)    = 256 chips, axes ("data", "model")
 Multi-pod  : (2, 16, 16) = 512 chips, axes ("pod", "data", "model")
@@ -6,6 +6,10 @@ Multi-pod  : (2, 16, 16) = 512 chips, axes ("pod", "data", "model")
 Defined as FUNCTIONS so importing this module never touches jax device
 state (the dry-run sets --xla_force_host_platform_device_count=512 before
 first jax init; tests/benches must keep seeing 1 device).
+
+The solver path flattens these meshes to a 1-D "shards" axis via
+``repro.parallel.make_solver_mesh`` — the shard_map reduction backend
+(``get_backend("shard_map", mesh=...)``, DESIGN.md §3) accepts either.
 """
 
 from __future__ import annotations

@@ -1,0 +1,68 @@
+"""Pluggable reduction backends for the CG solver family (DESIGN.md §3).
+
+Registry keyed by name::
+
+    from repro.parallel.backends import get_backend, available_backends
+    available_backends()              # ("local", "shard_map", "multiprocess")
+    be = get_backend("shard_map", n_shards=8)
+    res = be.solve(op, b, method="plcg", l=2, sigmas=sig)
+
+Third-party substrates register with :func:`register_backend`; the class
+only needs to implement :class:`~repro.parallel.backends.base.
+ReductionBackend`'s three methods (solve / run / lower_hlo).
+"""
+
+from __future__ import annotations
+
+from repro.parallel.backends.base import METHODS, ReductionBackend
+from repro.parallel.backends.local import LocalBackend
+from repro.parallel.backends.multiprocess import MultiprocessBackend
+from repro.parallel.backends.shard_map import ShardMapBackend
+
+_REGISTRY: dict[str, type[ReductionBackend]] = {
+    LocalBackend.name: LocalBackend,
+    ShardMapBackend.name: ShardMapBackend,
+    MultiprocessBackend.name: MultiprocessBackend,
+}
+
+
+def available_backends() -> tuple[str, ...]:
+    """Names accepted by :func:`get_backend`, in registration order."""
+    return tuple(_REGISTRY)
+
+
+def register_backend(name: str, cls: type[ReductionBackend],
+                     overwrite: bool = False) -> None:
+    """Add a custom substrate to the registry."""
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"backend {name!r} already registered")
+    _REGISTRY[name] = cls
+
+
+def get_backend(name: str, **kwargs) -> ReductionBackend:
+    """Instantiate a reduction backend by name.
+
+    ``kwargs`` go to the backend constructor (e.g. ``n_shards`` / ``mesh``
+    for shard_map, ``coordinator_address`` / ``num_processes`` /
+    ``process_id`` for multiprocess, ``jit`` for local).
+    """
+    try:
+        cls = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown reduction backend {name!r}; "
+            f"available: {', '.join(_REGISTRY)}"
+        ) from None
+    return cls(**kwargs)
+
+
+__all__ = [
+    "METHODS",
+    "ReductionBackend",
+    "LocalBackend",
+    "ShardMapBackend",
+    "MultiprocessBackend",
+    "available_backends",
+    "get_backend",
+    "register_backend",
+]

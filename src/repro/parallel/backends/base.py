@@ -1,0 +1,96 @@
+"""Reduction-backend interface (DESIGN.md §3).
+
+A *reduction backend* is the execution substrate behind ``SolverOps``: it
+decides where the vectors live, how the SPMV halo moves, and — the part
+the paper cares about — how the fused 2l+1-entry dot block becomes ONE
+global reduction whose completion can be deferred (the MPI_Iallreduce /
+MPI_Wait pair).  The solvers in ``repro.core`` are substrate-agnostic;
+swapping backends never changes their arithmetic, only where it runs:
+
+  ``local``         single device; the dot block is a plain matmul.
+  ``shard_map``     domain decomposition over a 1-D device mesh; the dot
+                    block is one ``lax.psum`` (the current production path).
+  ``multiprocess``  ``jax.distributed`` multi-controller: same psum, but
+                    the mesh spans every process's devices and the
+                    collective axis crosses host boundaries.
+
+Select one via the registry::
+
+    from repro.parallel import get_backend
+    be = get_backend("shard_map", n_shards=8)
+    res = be.solve(op, b, method="plcg", l=3, sigmas=sig)
+
+Backends also expose ``run``/``lower_hlo`` so tools that need to trace
+*inside* the SPMD context — the overlap tracer (DESIGN.md §6), the
+pipeline-depth autotuner (``repro.launch.autotune``) — can stage arbitrary
+solver fragments without duplicating mesh/partition plumbing.
+"""
+
+from __future__ import annotations
+
+import abc
+from typing import Any, Callable, ClassVar
+
+import jax
+
+# The three CG variants of the paper — THE shared dispatch table
+# (repro.core.METHODS); distributed_solve uses the same object, so the
+# solver sets can never fork between substrates.
+from repro.core import METHODS
+from repro.core.types import SolveResult, SolverOps
+
+
+class ReductionBackend(abc.ABC):
+    """Pluggable substrate for the CG solver family (DESIGN.md §3)."""
+
+    name: ClassVar[str]
+
+    # ------------------------------------------------------------ solve --
+    @abc.abstractmethod
+    def solve(self, op, b, method: str = "plcg", prec=None,
+              **solver_kwargs) -> SolveResult:
+        """Solve A x = b with the chosen CG variant on this substrate.
+
+        ``solver_kwargs`` are forwarded to the solver (l, tol, maxit,
+        sigmas, unroll, ...).
+        """
+
+    def make_solver(self, op, method: str = "plcg", prec=None,
+                    **solver_kwargs) -> Callable[[jax.Array], SolveResult]:
+        """A reusable compiled solver ``b -> SolveResult``.
+
+        Unlike :meth:`solve` — which stages a fresh computation per call —
+        the returned callable holds one jit cache, so repeated calls
+        retrace nothing.  This is what the autotuner times
+        (``repro.launch.autotune.measured_runner``).
+        """
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support make_solver")
+
+    # ----------------------------------------------------- SPMD staging --
+    @abc.abstractmethod
+    def run(self, fn: Callable[[SolverOps, jax.Array], Any], op, b,
+            prec=None) -> Any:
+        """Execute ``fn(ops, b_local)`` inside this backend's SPMD context.
+
+        ``fn`` receives backend-built :class:`SolverOps` plus the local
+        shard of ``b`` and must return a pytree that is *replicated*
+        across shards (scalars, residual histories, reduction results —
+        anything derived from the fused dot block qualifies).
+        """
+
+    @abc.abstractmethod
+    def lower_hlo(self, fn: Callable[[SolverOps, jax.Array], Any], op, b,
+                  prec=None) -> str:
+        """Compiled (optimized, scheduled) HLO text of ``run(fn, ...)``.
+
+        This is the input the overlap tracer analyses; ``b`` may be a
+        ``jax.ShapeDtypeStruct`` when only the schedule is needed.
+        """
+
+    # ------------------------------------------------------------ misc ---
+    def describe(self) -> str:
+        return f"{self.name} reduction backend"
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return f"<{type(self).__name__} {self.describe()}>"

@@ -1,0 +1,53 @@
+"""Single-device reduction backend (DESIGN.md §3).
+
+The fused dot block is a plain ``mat @ vec`` — there is no wire, but the
+issue/consume sites are tagged exactly like the distributed backends, so
+the overlap tracer sees the same chain structure and ``local`` serves as
+the bitwise-comparable oracle for ``shard_map``/``multiprocess`` runs
+(the residual-history parity asserted in tests/test_cg_convergence.py).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+
+from repro.core.types import SolverOps
+from repro.parallel.backends.base import METHODS, ReductionBackend
+
+
+class LocalBackend(ReductionBackend):
+    name = "local"
+
+    def __init__(self, jit: bool = True):
+        self.jit = jit
+
+    def make_ops(self, op, prec=None) -> SolverOps:
+        return SolverOps.local(op, prec)
+
+    def solve(self, op, b, method: str = "plcg", prec=None, **solver_kwargs):
+        if self.jit:
+            return self.make_solver(op, method, prec, **solver_kwargs)(b)
+        ops = self.make_ops(op, prec)
+        return METHODS[method](ops, b, solver_kwargs)
+
+    def make_solver(self, op, method: str = "plcg", prec=None,
+                    **solver_kwargs):
+        ops = self.make_ops(op, prec)
+        return jax.jit(lambda bb: METHODS[method](ops, bb, solver_kwargs))
+
+    def run(self, fn: Callable[[SolverOps, jax.Array], Any], op, b,
+            prec=None) -> Any:
+        ops = self.make_ops(op, prec)
+        return jax.jit(lambda bb: fn(ops, bb))(b)
+
+    def lower_hlo(self, fn: Callable[[SolverOps, jax.Array], Any], op, b,
+                  prec=None) -> str:
+        ops = self.make_ops(op, prec)
+        return (
+            jax.jit(lambda bb: fn(ops, bb)).lower(b).compile().as_text()
+        )
+
+    def describe(self) -> str:
+        return "local (single device, in-process dot block)"

@@ -1,0 +1,91 @@
+"""Multi-process reduction backend: ``jax.distributed`` + explicit
+collective axis (DESIGN.md §3).
+
+One JAX process per host (the paper's MPI rank), glued into a single
+logical mesh by ``jax.distributed.initialize``.  After initialization
+``jax.devices()`` spans every process, so the same shard_map machinery as
+the single-process backend applies — the fused dot block's ``lax.psum``
+now crosses host boundaries exactly like the paper's MPI_Iallreduce over
+the world communicator.
+
+Launch one process per host, all with the same coordinator::
+
+    # host k of K:
+    be = get_backend(
+        "multiprocess",
+        coordinator_address="10.0.0.1:1234",
+        num_processes=K, process_id=k,
+    )
+    res = be.solve(op, b, method="plcg", l=3, sigmas=sig)
+
+Single-process degradation: with no coordinator and one process, the
+backend spans the local devices only (identical to ``shard_map``) — this
+keeps the code path importable and testable in single-host CI containers
+where no second process exists.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.parallel.backends.shard_map import ShardMapBackend
+from repro.parallel.distributed import make_solver_mesh
+
+# jax.distributed.initialize may only run once per process; repeated
+# get_backend("multiprocess", coordinator_address=...) calls (the natural
+# registry usage) must not re-initialize.
+_DISTRIBUTED_INITIALIZED = False
+
+
+def _ensure_initialized(**kwargs) -> None:
+    global _DISTRIBUTED_INITIALIZED
+    if _DISTRIBUTED_INITIALIZED:
+        return
+    try:
+        jax.distributed.initialize(**kwargs)
+    except RuntimeError as e:
+        # Already initialized outside this module (user code, launcher):
+        # adopt that runtime rather than failing.
+        if "already" not in str(e).lower():
+            raise
+    _DISTRIBUTED_INITIALIZED = True
+
+
+class MultiprocessBackend(ShardMapBackend):
+    name = "multiprocess"
+
+    def __init__(
+        self,
+        coordinator_address: str | None = None,
+        num_processes: int | None = None,
+        process_id: int | None = None,
+        local_device_ids=None,
+        n_shards: int | None = None,
+        jit: bool = True,
+    ):
+        if coordinator_address is not None:
+            # Multi-controller mode: every process must execute the same
+            # program; initialize() blocks until the full job is up.
+            # Idempotent — a second backend instance adopts the existing
+            # distributed runtime instead of re-initializing.
+            _ensure_initialized(
+                coordinator_address=coordinator_address,
+                num_processes=num_processes,
+                process_id=process_id,
+                local_device_ids=local_device_ids,
+            )
+        elif (num_processes or 1) > 1:
+            raise ValueError(
+                "multiprocess backend with num_processes > 1 needs a "
+                "coordinator_address (jax.distributed.initialize)"
+            )
+        self.n_processes = num_processes or jax.process_count()
+        # Global mesh: jax.devices() spans all processes after initialize.
+        mesh = make_solver_mesh(n_shards, devices=jax.devices())
+        super().__init__(mesh=mesh, jit=jit)
+
+    def describe(self) -> str:
+        return (
+            f"multiprocess (jax.distributed, {self.n_processes} process(es), "
+            f"{self.n_shards} global device(s), axis '{self.axis}')"
+        )

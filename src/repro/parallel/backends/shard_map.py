@@ -1,0 +1,93 @@
+"""``shard_map`` reduction backend — the paper's MPI layout on one process
+(DESIGN.md §2/§3).
+
+Domain decomposition over a 1-D "shards" mesh: halo exchange via
+``lax.ppermute``, communication-free preconditioner, and ALL inner
+products of an iteration fused into ONE ``lax.psum`` — the single
+MPI_Iallreduce of the G-column.  This ports the original
+``repro.parallel.distributed`` path onto the backend interface; the heavy
+lifting (operator partitioning, halo kernels) stays in that module.
+
+Example (8 simulated hosts — set ``XLA_FLAGS=--xla_force_host_platform_
+device_count=8`` before importing jax)::
+
+    from repro.parallel import get_backend
+    be = get_backend("shard_map", n_shards=8)
+    res = be.solve(op, b, method="plcg", l=2, sigmas=sig, tol=1e-8)
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.types import SolverOps
+from repro.parallel.backends.base import ReductionBackend
+from repro.parallel.distributed import (
+    distributed_solve,
+    make_solver_mesh,
+    partitioned_solver_ops,
+    shard_map_compat,
+)
+
+
+class ShardMapBackend(ReductionBackend):
+    name = "shard_map"
+
+    def __init__(self, mesh: Mesh | None = None, n_shards: int | None = None,
+                 jit: bool = True):
+        self.mesh = mesh if mesh is not None else make_solver_mesh(n_shards)
+        self.axis = self.mesh.axis_names[0]
+        self.n_shards = self.mesh.devices.size
+        self.jit = jit
+
+    # ------------------------------------------------------------ solve --
+    def solve(self, op, b, method: str = "plcg", prec=None, **solver_kwargs):
+        return distributed_solve(self.mesh, op, b, method=method, prec=prec,
+                                 jit=self.jit, **solver_kwargs)
+
+    def make_solver(self, op, method: str = "plcg", prec=None,
+                    **solver_kwargs):
+        # jit=False hands back (shard_map fn, partitioned arrays); one
+        # jit wrapper around the pair is the reusable compiled solver.
+        # distributed_solve only reads b's shape on this path.
+        bspec = jax.ShapeDtypeStruct((op.n,), jnp.float32)
+        fn, arrays = distributed_solve(self.mesh, op, bspec, method=method,
+                                       prec=prec, jit=False, **solver_kwargs)
+        jfn = jax.jit(fn)
+        return lambda bb: jfn(bb, arrays)
+
+    # ----------------------------------------------------- SPMD staging --
+    def _staged(self, fn: Callable[[SolverOps, jax.Array], Any], op, prec):
+        """(wrapped_fn, arrays): shard_map-wrapped ``fn`` with replicated
+        outputs, plus the partitioned operator arrays to pass alongside."""
+        arrays, build = partitioned_solver_ops(op, prec, self.n_shards,
+                                               self.axis)
+
+        def run(b_local, loc):
+            return fn(build(loc), b_local)
+
+        arr_specs = jax.tree.map(lambda _: P(self.axis), arrays)
+        wrapped = shard_map_compat(
+            run, mesh=self.mesh, in_specs=(P(self.axis), arr_specs),
+            out_specs=P(),
+        )
+        return wrapped, arrays
+
+    def run(self, fn, op, b, prec=None) -> Any:
+        wrapped, arrays = self._staged(fn, op, prec)
+        return jax.jit(wrapped)(b, arrays)
+
+    def lower_hlo(self, fn, op, b, prec=None) -> str:
+        wrapped, arrays = self._staged(fn, op, prec)
+        bsh = NamedSharding(self.mesh, P(self.axis))
+        ash = jax.tree.map(lambda _: bsh, arrays)
+        lowered = jax.jit(wrapped, in_shardings=(bsh, ash)).lower(b, arrays)
+        return lowered.compile().as_text()
+
+    def describe(self) -> str:
+        return (f"shard_map over {self.n_shards} device(s), "
+                f"axis '{self.axis}' (fused psum dot block)")

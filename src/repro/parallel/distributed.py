@@ -1,5 +1,16 @@
 """Distributed execution of the CG solver family under ``shard_map``.
 
+This module is the *mechanism* behind the ``shard_map`` reduction backend
+(``repro.parallel.backends.shard_map``, DESIGN.md §3).  Prefer the backend
+API for new code::
+
+    from repro.parallel import get_backend
+    be = get_backend("shard_map", n_shards=8)
+    res = be.solve(op, b, method="plcg", l=2, sigmas=sig, tol=1e-8)
+
+``distributed_solve`` below remains the stable low-level entry point the
+backend delegates to.
+
 This is the paper's MPI rank layout mapped to a JAX mesh (DESIGN.md §2):
 
   * the solution vector is DOMAIN-DECOMPOSED: each device owns a contiguous
@@ -33,7 +44,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import classic_cg, ghysels_pcg, pipelined_cg
+from repro.core import METHODS
 from repro.core.types import SolveResult, SolverOps
 from repro.linalg.operators import (
     DiagonalOp,
@@ -43,6 +54,27 @@ from repro.linalg.operators import (
     Stencil3D27,
 )
 from repro.linalg.preconditioners import BlockJacobi, IdentityPrec, JacobiPrec
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs):
+    """``shard_map`` across jax versions.
+
+    Newer jax exposes ``jax.shard_map`` with ``check_vma``; 0.4.x has
+    ``jax.experimental.shard_map.shard_map`` with ``check_rep``.  Both
+    checks are disabled: the solver outputs mix sharded (x) and replicated
+    (scalars/history) results that the checker cannot infer through
+    ``lax.while_loop``.
+    """
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False)
+        except TypeError:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=False)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=False)
 
 
 def make_solver_mesh(n_shards: int | None = None, devices=None) -> Mesh:
@@ -68,7 +100,10 @@ def _halo_first_dim(g: jax.Array, axis: str) -> tuple[jax.Array, jax.Array]:
     zeros where no neighbour exists — which is exactly the homogeneous
     Dirichlet boundary condition of the operators.
     """
-    n = lax.axis_size(axis)
+    # lax.axis_size is not present in every jax version; psum of a Python
+    # scalar folds to the static axis size under both old and new jax.
+    n = int(lax.psum(1, axis)) if not hasattr(lax, "axis_size") \
+        else lax.axis_size(axis)
     if n == 1:
         z = jnp.zeros_like(g[:1])
         return z, z
@@ -213,16 +248,16 @@ def partitioned_solver_ops(op, prec, n_shards: int, axis: str = "shards"):
             # (K5): all local contributions + ONE global reduction.
             return lax.psum(mat @ vec, axis)
 
-        return SolverOps(apply_a=apply_a, prec=prec_fn, dot_block=dot_block)
+        # create() tags the issue/consume sites for the overlap tracer
+        # (DESIGN.md §6) — the psum above is the MPI_Iallreduce payload.
+        return SolverOps.create(apply_a=apply_a, prec=prec_fn,
+                                dot_block=dot_block)
 
     return arrays, build
 
 
-_METHODS = {
-    "cg": lambda ops, b, kw: classic_cg.solve(ops, b, **kw),
-    "pcg": lambda ops, b, kw: ghysels_pcg.solve(ops, b, **kw),
-    "plcg": lambda ops, b, kw: pipelined_cg.solve(ops, b, **kw),
-}
+# One dispatch table for every substrate (repro.core.METHODS).
+_METHODS = METHODS
 
 
 def distributed_solve(
@@ -253,9 +288,8 @@ def distributed_solve(
         res_history=P(), norm0=P(),
     )
     arr_specs = jax.tree.map(lambda _: P(axis), arrays)
-    fn = jax.shard_map(
+    fn = shard_map_compat(
         run, mesh=mesh, in_specs=(P(axis), arr_specs), out_specs=out_specs,
-        check_vma=False,
     )
     if not jit:
         return fn, arrays

@@ -1,5 +1,11 @@
 from repro.utils.hlo import collective_bytes, count_collectives, parse_shape_bytes
-from repro.utils.roofline import HW_V5E, RooflineTerms, roofline_terms
+from repro.utils.roofline import HW_V5E, RooflineTerms, cost_analysis_dict, roofline_terms
+from repro.utils.trace import (
+    OverlapReport,
+    analyze_overlap,
+    extract_events,
+    plcg_overlap_report,
+)
 
 __all__ = [
     "collective_bytes",
@@ -7,5 +13,10 @@ __all__ = [
     "parse_shape_bytes",
     "HW_V5E",
     "RooflineTerms",
+    "cost_analysis_dict",
     "roofline_terms",
+    "OverlapReport",
+    "analyze_overlap",
+    "extract_events",
+    "plcg_overlap_report",
 ]

@@ -30,6 +30,19 @@ import dataclasses
 from repro.utils.hlo import count_collectives
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` across jax versions.
+
+    Older jax returns a single dict, newer versions a one-element list of
+    dicts (one per computation); normalize to a plain dict so callers can
+    ``.get("flops")`` unconditionally.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost or {})
+
+
 @dataclasses.dataclass(frozen=True)
 class Hardware:
     name: str

@@ -2,7 +2,11 @@
 
 The convergence-parity claims mirror the paper's §4.2 setup: p(l)-CG
 converges like classic CG (same iteration counts modulo breakdown
-restarts) on the 2D Laplacian and the diagonal toy problem."""
+restarts) on the 2D Laplacian and the diagonal toy problem.
+
+The direct-solve tests are parametrized over the reduction backends
+(DESIGN.md §3): ``local`` and a 1-device ``shard_map`` must be arithmetic
+drop-ins, asserted via identical residual histories."""
 
 import jax
 import jax.numpy as jnp
@@ -14,8 +18,19 @@ from repro.core.chebyshev import chebyshev_shifts, shifts_for_operator
 from repro.core.types import SolverOps
 from repro.linalg import operators as ops_mod
 from repro.linalg.preconditioners import BlockJacobi, JacobiPrec
+from repro.parallel import get_backend
 
 RNG = np.random.default_rng(42)
+
+# Both in-process-testable reduction backends (multiprocess needs >1
+# controller); shard_map runs on a 1-device mesh here, the 8-device case
+# lives in tests/test_distributed.py (subprocess).
+BACKENDS = ["local", "shard_map"]
+
+
+def _backend(name):
+    return get_backend(name) if name == "local" \
+        else get_backend(name, n_shards=1)
 
 
 @pytest.fixture(scope="module")
@@ -26,18 +41,40 @@ def lap2d():
     return op, b, x_direct
 
 
-def test_classic_cg_matches_direct(lap2d):
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_classic_cg_matches_direct(lap2d, backend):
     op, b, x_direct = lap2d
-    res = classic_cg.solve(SolverOps.local(op), b, tol=1e-10, maxit=2000)
+    res = _backend(backend).solve(op, b, method="cg", tol=1e-10, maxit=2000)
     assert bool(res.converged)
     np.testing.assert_allclose(np.asarray(res.x), x_direct, atol=1e-7)
 
 
-def test_ghysels_pcg_matches_direct(lap2d):
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_ghysels_pcg_matches_direct(lap2d, backend):
     op, b, x_direct = lap2d
-    res = ghysels_pcg.solve(SolverOps.local(op), b, tol=1e-10, maxit=2000)
+    res = _backend(backend).solve(op, b, method="pcg", tol=1e-10, maxit=2000)
     assert bool(res.converged)
     np.testing.assert_allclose(np.asarray(res.x), x_direct, atol=1e-7)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("method", ["cg", "pcg", "plcg"])
+def test_backend_residual_history_parity(lap2d, backend, method):
+    """Every backend reproduces the plain-SolverOps residual history
+    exactly (same arithmetic, different substrate) — the ISSUE 1
+    bitwise-comparability criterion, in-process."""
+    op, b, _ = lap2d
+    kw = dict(tol=1e-8, maxit=2000)
+    if method == "plcg":
+        kw.update(l=2, sigmas=shifts_for_operator(op, 2))
+    ref_solver = {"cg": classic_cg.solve, "pcg": ghysels_pcg.solve,
+                  "plcg": pipelined_cg.solve}[method]
+    res_ref = ref_solver(SolverOps.local(op), b, **kw)
+    res_be = _backend(backend).solve(op, b, method=method, **kw)
+    h_ref = np.asarray(res_ref.res_history)
+    h_be = np.asarray(res_be.res_history)
+    assert int(res_ref.iters) == int(res_be.iters)
+    np.testing.assert_allclose(h_be, h_ref, rtol=1e-12, atol=0)
 
 
 @pytest.mark.parametrize("l", [1, 2, 3, 4])

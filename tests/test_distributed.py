@@ -1,6 +1,8 @@
 """Distributed paths (subprocess with 8 fake host devices): CG domain
 decomposition vs single-device, one-fused-reduction structure in HLO,
-split-KV decode merge under shard_map."""
+reduction-backend parity (local vs shard_map residual histories), the
+overlap tracer's in-flight chain count, and split-KV decode merge under
+shard_map."""
 
 import os
 import subprocess
@@ -102,6 +104,51 @@ print("HLO-SITES-OK", n_cg, n_pl)
     assert "HLO-SITES-OK" in out
 
 
+@pytest.mark.parametrize("method", ["cg", "plcg"])
+def test_backend_residual_history_parity(method):
+    """The reduction backends are drop-in replacements: `local` and
+    `shard_map` produce identical residual histories (fp32 tolerance) —
+    ISSUE 1 acceptance, via the registry API."""
+    kw = "l=2, sigmas=sig," if method == "plcg" else ""
+    out = _run(HEADER + f"""
+from repro.parallel import get_backend
+op = Stencil2D5(32, 24)
+b = jnp.asarray(np.random.default_rng(3).standard_normal(op.n), jnp.float32)
+sig = jnp.asarray(shifts_for_operator(op, 2), jnp.float32)
+kw = dict(method="{method}", {kw} tol=1e-5, maxit=400)
+res_l = get_backend("local").solve(op, b, **kw)
+res_s = get_backend("shard_map", n_shards=8).solve(op, b, **kw)
+h_l = np.asarray(res_l.res_history)
+h_s = np.asarray(res_s.res_history)
+assert (h_l >= 0).sum() > 5
+np.testing.assert_allclose(h_s, h_l, rtol=2e-4, atol=1e-5)
+assert int(res_l.iters) == int(res_s.iters)
+print("BACKEND-PARITY-OK")
+""")
+    assert "BACKEND-PARITY-OK" in out
+
+
+def test_overlap_tracer_reports_inflight_chains():
+    """The overlap tracer recovers >= l in-flight reduction chains from
+    the compiled schedule of a window of l+2 p(l)-CG iterations on the
+    8-device mesh (the paper's Fig. 4 staggering), while classic CG's
+    blocking structure yields exactly 1."""
+    out = _run(HEADER + """
+from repro.parallel import get_backend
+from repro.utils.trace import plcg_overlap_report
+op = Stencil2D5(32, 24)
+bspec = jax.ShapeDtypeStruct((op.n,), jnp.float64)
+be = get_backend("shard_map", n_shards=8)
+for l in (1, 2, 3):
+    rep = plcg_overlap_report(be, op, bspec, l=l, window=l + 2,
+                              sigmas=shifts_for_operator(op, l))
+    assert rep.max_in_flight >= l, (l, rep.max_in_flight, str(rep))
+    assert rep.n_collectives >= l + 2, str(rep)
+print("TRACER-OK")
+""")
+    assert "TRACER-OK" in out
+
+
 def test_splitkv_merge_under_shard_map():
     """Cross-shard split-KV decode: sequence sharded over 8 devices,
     merged with one pmax + one fused psum == unsharded attention."""
@@ -114,6 +161,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.models.attention import decode_attention_jnp, merge_decode_shards
 from repro.kernels import ops as kops
+from repro.parallel import shard_map_compat
 
 b, h, hkv, d, s = 2, 8, 4, 32, 512
 rng = np.random.default_rng(0)
@@ -126,10 +174,10 @@ def shard_fn(q, k, v):
     o, m, l = kops.decode_attention_stats(q, k, v, k.shape[1], block_s=64)
     return merge_decode_shards(o, m, l, "kv")
 
-fn = jax.shard_map(shard_fn, mesh=mesh,
-                   in_specs=(P(), P(None, "kv", None, None),
-                             P(None, "kv", None, None)),
-                   out_specs=P(), check_vma=False)
+fn = shard_map_compat(shard_fn, mesh=mesh,
+                      in_specs=(P(), P(None, "kv", None, None),
+                                P(None, "kv", None, None)),
+                      out_specs=P())
 merged = jax.jit(fn)(q, k, v).reshape(b, h, d)
 full = kops.decode_attention(q, k, v, kv_len=s, block_s=64)
 np.testing.assert_allclose(merged, np.asarray(full), rtol=3e-4, atol=3e-4)

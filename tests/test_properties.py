@@ -1,8 +1,17 @@
-"""Hypothesis property tests on the system's invariants."""
+"""Hypothesis property tests on the system's invariants.
+
+``hypothesis`` is an optional test dependency (declared in
+pyproject.toml's ``test`` extra); environments without it skip this
+module instead of failing collection.
+"""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed "
+                    "(pip install -e .[test])")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import classic_cg, pipelined_cg

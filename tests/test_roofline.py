@@ -16,6 +16,8 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.utils.hlo import count_collectives
+from repro.utils.roofline import cost_analysis_dict
+from repro.parallel import shard_map_compat
 
 mesh = jax.make_mesh((4,), ("x",))
 n = 512
@@ -26,12 +28,12 @@ rep = NamedSharding(mesh, P())
 # sharded matmul: per-device flops = 2 n^3 / 4
 comp = jax.jit(lambda a, b: a @ b,
                in_shardings=(bsh, rep)).lower(a, a).compile()
-flops = comp.cost_analysis()["flops"]
+flops = cost_analysis_dict(comp)["flops"]
 assert abs(flops - 2 * n**3 / 4) / (2 * n**3 / 4) < 0.01, flops
 
 # psum of a replicated (n,n): partitioned all-reduce payload = full tensor
 comp2 = jax.jit(
-    lambda x: jax.shard_map(
+    lambda x: shard_map_compat(
         lambda v: jax.lax.psum(v, "x"), mesh=mesh,
         in_specs=P("x", None), out_specs=P())(x),
     in_shardings=(bsh,), out_shardings=rep).lower(a).compile()

@@ -1,0 +1,70 @@
+"""Unit tests for the overlap tracer's schedule analysis on synthetic
+HLO text: the in-flight metric must be falsifiable — a serialized
+schedule reports 1, a staggered one reports l — independent of any real
+compilation (those live in tests/test_distributed.py)."""
+
+from repro.utils.trace import analyze_overlap
+
+
+def _instr(name, opcode, op_name):
+    return (f'  %{name} = f32[3]{{0}} {opcode}(%p0), '
+            f'metadata={{op_name="jit(h)/{op_name}/psum"}}')
+
+
+def _module(body_lines):
+    return "\n".join(
+        ["HloModule synthetic", "", "ENTRY %main (p0: f32[3]) -> f32[3] {",
+         "  %p0 = f32[3]{0} parameter(0)"] + body_lines + ["}"])
+
+
+def _start(k, i):
+    return _instr(f"ar.{i}", "all-reduce", f"plwin{k}/glred_start")
+
+
+def _wait(k, i):
+    return _instr(f"w.{i}", "fusion", f"plwin{k}/glred_wait")
+
+
+def test_serialized_schedule_reports_one():
+    """start/wait strictly alternating (no overlap): each consumption
+    point sees exactly one outstanding chain, whatever l claims."""
+    l = 3
+    lines, i = [], 0
+    # chain k issued at window k, consumed (window k+l) BEFORE chain k+1
+    # is issued — a fully collapsed pipeline.
+    for k in range(5):
+        lines.append(_start(k, i)); i += 1
+        lines.append(_wait(k + l, i)); i += 1
+    rep = analyze_overlap(_module(lines), l=l, window=5)
+    assert rep.max_in_flight == 1, str(rep)
+
+
+def test_staggered_schedule_reports_l():
+    """l starts before the first consumption -> peak l."""
+    l = 3
+    window = l + 2
+    lines, i = [], 0
+    for k in range(window):                       # all issues first
+        lines.append(_start(k, i)); i += 1
+    for k in range(l, window):                    # then the waits
+        lines.append(_wait(k, i)); i += 1
+    rep = analyze_overlap(_module(lines), l=l, window=window)
+    assert rep.max_in_flight == window, str(rep)  # all issued chains seen
+
+    # interleaved steady state: wait(k) then start(k) per window
+    lines, i = [], 0
+    for k in range(l):
+        lines.append(_start(k, i)); i += 1
+    for k in range(l, window):
+        lines.append(_wait(k, i)); i += 1         # consume chain k-l
+        lines.append(_start(k, i)); i += 1
+    rep = analyze_overlap(_module(lines), l=l, window=window)
+    assert rep.max_in_flight == l, str(rep)
+
+
+def test_no_waits_reports_zero():
+    """A window too short to contain any consumption (window <= l)
+    yields no measurement points, not a fabricated peak."""
+    lines = [_start(k, k) for k in range(2)]
+    rep = analyze_overlap(_module(lines), l=3, window=2)
+    assert rep.max_in_flight == 0, str(rep)
