@@ -1,0 +1,134 @@
+"""Serving-layer benchmark: slab throughput vs sequential solves, and
+request latency percentiles through the full service loop
+(DESIGN.md §11).  Emits ``BENCH_serve.json`` for the perf trajectory.
+
+Two measurements on a simulated 8-device mesh (host platform devices):
+
+* **throughput** — the same ``s`` right-hand sides solved (a) one by one
+  through a compiled single-RHS solver and (b) as one slab through the
+  batched solver.  The slab amortizes every per-iteration global
+  reduction over s columns (one (2l+1, s) allreduce instead of s
+  (2l+1,)-allreduces), so slab throughput must be >= 3x sequential on a
+  collective-latency-dominated mesh (the PR acceptance bar).
+* **latency** — a burst of requests streamed through ``SolverService``
+  (pack -> chunk -> retire), reporting p50/p99 retirement latency.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench [--s 8] [--out PATH]
+"""
+
+import argparse
+import json
+import os
+import time
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402  (after XLA_FLAGS)
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core.chebyshev import shifts_for_operator  # noqa: E402
+from repro.linalg import Stencil2D5  # noqa: E402
+from repro.parallel import get_backend  # noqa: E402
+from repro.serve import SolverService  # noqa: E402
+
+
+def time_best(fn, repeats=3):
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--s", type=int, default=8, help="slab width")
+    ap.add_argument("--l", type=int, default=2, help="pipeline depth")
+    # Default problem size keeps the per-iteration local work small
+    # relative to the 8-way collective — the communication-bound regime
+    # of the paper's Fig. 3, where amortization has something to amortize.
+    ap.add_argument("--nx", type=int, default=32)
+    ap.add_argument("--ny", type=int, default=24)
+    ap.add_argument("--maxit", type=int, default=120)
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--out", type=str, default="BENCH_serve.json")
+    args = ap.parse_args()
+
+    n_dev = len(jax.devices())
+    op = Stencil2D5(args.nx, args.ny)
+    sig = shifts_for_operator(op, args.l)
+    be = get_backend("shard_map", n_shards=n_dev)
+    rng = np.random.default_rng(0)
+    B = jnp.asarray(rng.standard_normal((op.n, args.s)))
+    # Fixed iteration budget (tol=0): throughput compares identical work.
+    kw = dict(method="plcg", l=args.l, sigmas=sig, tol=0.0, maxit=args.maxit)
+
+    print(f"mesh: {n_dev} device(s); problem: {args.nx}x{args.ny} "
+          f"Laplacian (n={op.n}); p({args.l})-CG, {args.maxit} iters/solve")
+
+    # --- sequential baseline: one compiled single-RHS solver, s calls ----
+    solver1 = be.make_solver(op, **kw)
+    jax.block_until_ready(solver1(B[:, 0]).x)        # compile + warmup
+    t_seq = time_best(lambda: [
+        jax.block_until_ready(solver1(B[:, j]).x) for j in range(args.s)])
+
+    # --- batched slab: one compiled s-wide solver, one call --------------
+    solver_s = be.make_batched_solver(op, **kw)
+    jax.block_until_ready(solver_s(B).x)             # compile + warmup
+    t_slab = time_best(lambda: jax.block_until_ready(solver_s(B).x))
+
+    seq_sps = args.s / t_seq
+    slab_sps = args.s / t_slab
+    speedup = t_seq / t_slab
+    print(f"sequential : {t_seq * 1e3:8.1f} ms for {args.s} solves "
+          f"({seq_sps:7.2f} solves/s)")
+    print(f"slab s={args.s:<3d}: {t_slab * 1e3:8.1f} ms for {args.s} solves "
+          f"({slab_sps:7.2f} solves/s)  -> {speedup:.2f}x")
+
+    # --- service loop latency percentiles --------------------------------
+    svc = SolverService(be, s=args.s, method="plcg", l=args.l,
+                        chunk_iters=24, maxit=600)
+    svc.register_operator("bench", op)
+    # Warm the slab program (compile outside the timed stream).
+    warm = svc.submit("bench", np.asarray(B[:, 0]), tol=1e-8)
+    svc.drain()
+    svc.pop_result(warm)
+    svc.reset_stats()
+    for i in range(args.requests):
+        svc.submit("bench", rng.standard_normal(op.n), tol=1e-8)
+    t0 = time.perf_counter()
+    results = svc.drain()
+    service_wall = time.perf_counter() - t0
+    st = svc.stats()
+    assert all(r.converged for r in results.values())
+    print(f"service    : {len(results)} requests in {service_wall:.2f} s "
+          f"({len(results) / service_wall:.2f} solves/s), latency "
+          f"p50 {st['latency_p50_s'] * 1e3:.1f} ms / "
+          f"p99 {st['latency_p99_s'] * 1e3:.1f} ms")
+
+    payload = {
+        "mesh_devices": n_dev,
+        "problem": {"nx": args.nx, "ny": args.ny, "n": op.n},
+        "method": "plcg", "l": args.l, "s": args.s, "maxit": args.maxit,
+        "sequential_s_per_solve": t_seq / args.s,
+        "slab_s_per_solve": t_slab / args.s,
+        "sequential_solves_per_sec": seq_sps,
+        "slab_solves_per_sec": slab_sps,
+        "slab_speedup_vs_sequential": speedup,
+        "service_requests": len(results),
+        "service_solves_per_sec": len(results) / service_wall,
+        "latency_p50_s": st["latency_p50_s"],
+        "latency_p99_s": st["latency_p99_s"],
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

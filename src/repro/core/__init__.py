@@ -1,5 +1,7 @@
 from repro.core.types import SolveResult, SolverOps
 from repro.core import classic_cg, ghysels_pcg, pipelined_cg, reference
+from repro.core import batched
+from repro.core.batched import solve_batched
 from repro.core.chebyshev import chebyshev_shifts, power_method, shifts_for_operator
 
 SOLVERS = {
@@ -20,6 +22,8 @@ METHODS = {
 __all__ = [
     "SolveResult",
     "SolverOps",
+    "batched",
+    "solve_batched",
     "classic_cg",
     "ghysels_pcg",
     "pipelined_cg",

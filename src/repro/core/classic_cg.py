@@ -9,16 +9,92 @@ Both reductions go through the backend handle API (start + immediate
 wait): the overlap tracer therefore sees exactly one chain in flight at a
 time for classic CG — the baseline against which p(l)-CG's staggering is
 measured (DESIGN.md §6).
+
+Like the other two solvers, the iteration is exposed as a ``build()``
+program (init/body/cond/finish) so external drivers — the batched
+multi-RHS layer (``repro.core.batched``, DESIGN.md §11) and the overlap
+tracer — can step it without the ``lax.while_loop`` wrapper.
 """
 
 from __future__ import annotations
 
-from functools import partial
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.types import SolveResult, SolverOps, dot1
+
+
+class CgState(NamedTuple):
+    x: jax.Array
+    r: jax.Array
+    u: jax.Array
+    p: jax.Array
+    gamma: jax.Array
+    it: jax.Array
+    conv: jax.Array
+    hist: jax.Array      # hist[0] is norm0 (the stopping reference)
+
+
+class CgProgram(NamedTuple):
+    init: Callable[[jax.Array], "CgState"]
+    body: Callable[["CgState"], "CgState"]
+    cond: Callable[["CgState"], jax.Array]
+    finish: Callable[["CgState"], SolveResult]
+    # Uniform program surface with pcg/plcg (batched drivers): classic CG
+    # has no restart/replacement interrupts — step IS body.
+    step: Callable[["CgState"], "CgState"] | None = None
+    needs_interrupt: Callable[["CgState"], jax.Array] | None = None
+    interrupt: Callable[["CgState"], "CgState"] | None = None
+
+
+def build(
+    ops: SolverOps,
+    b: jax.Array,
+    tol: float = 1e-6,
+    maxit: int = 1000,
+) -> CgProgram:
+    dtype = b.dtype
+
+    def init(x0: jax.Array) -> CgState:
+        x = x0.astype(dtype)
+        r = b - ops.apply_a(x)
+        u = ops.prec(r)
+        gamma = dot1(ops, r, u)                   # reduction (init)
+        norm0 = jnp.sqrt(jnp.abs(gamma))
+        hist0 = jnp.full((maxit + 2,), -1.0, dtype=dtype).at[0].set(norm0)
+        return CgState(x=x, r=r, u=u, p=u, gamma=gamma, it=jnp.int32(0),
+                       conv=norm0 == 0.0, hist=hist0)
+
+    def cond(st: CgState) -> jax.Array:
+        return (~st.conv) & (st.it < maxit)
+
+    def body(st: CgState) -> CgState:
+        norm0 = st.hist[0]
+        s = ops.apply_a(st.p)
+        alpha = st.gamma / dot1(ops, s, st.p)     # reduction 1 — sync point
+        # (start+wait back-to-back: classic CG cannot hide this latency)
+        x = st.x + alpha * st.p
+        r = st.r - alpha * s
+        u = ops.prec(r)
+        gamma_new = dot1(ops, r, u)               # reduction 2 — sync point
+        rnorm = jnp.sqrt(jnp.abs(gamma_new))
+        hist = st.hist.at[st.it + 1].set(rnorm)
+        conv = rnorm / norm0 < tol
+        beta = gamma_new / st.gamma
+        p = u + beta * st.p
+        return CgState(x=x, r=r, u=u, p=p, gamma=gamma_new, it=st.it + 1,
+                       conv=conv, hist=hist)
+
+    def finish(st: CgState) -> SolveResult:
+        return SolveResult(
+            x=st.x, iters=st.it, restarts=jnp.int32(0), converged=st.conv,
+            res_history=st.hist, norm0=st.hist[0],
+        )
+
+    return CgProgram(init=init, body=body, cond=cond, finish=finish,
+                     step=body)
 
 
 def solve(
@@ -28,39 +104,6 @@ def solve(
     tol: float = 1e-6,
     maxit: int = 1000,
 ) -> SolveResult:
-    n = b.shape[0]
-    dtype = b.dtype
-    x = jnp.zeros_like(b) if x0 is None else x0.astype(dtype)
-
-    r = b - ops.apply_a(x)
-    u = ops.prec(r)
-    gamma = dot1(ops, r, u)                       # reduction (init)
-    norm0 = jnp.sqrt(jnp.abs(gamma))
-    hist0 = jnp.full((maxit + 2,), -1.0, dtype=dtype).at[0].set(norm0)
-
-    def cond(st):
-        x, r, u, p, gamma, it, conv, hist = st
-        return (~conv) & (it < maxit)
-
-    def body(st):
-        x, r, u, p, gamma, it, conv, hist = st
-        s = ops.apply_a(p)
-        alpha = gamma / dot1(ops, s, p)           # reduction 1 — sync point
-        # (start+wait back-to-back: classic CG cannot hide this latency)
-        x = x + alpha * p
-        r = r - alpha * s
-        u = ops.prec(r)
-        gamma_new = dot1(ops, r, u)               # reduction 2 — sync point
-        rnorm = jnp.sqrt(jnp.abs(gamma_new))
-        hist = hist.at[it + 1].set(rnorm)
-        conv = rnorm / norm0 < tol
-        beta = gamma_new / gamma
-        p = u + beta * p
-        return (x, r, u, p, gamma_new, it + 1, conv, hist)
-
-    st = (x, r, u, u, gamma, jnp.int32(0), norm0 == 0.0, hist0)
-    x, r, u, p, gamma, it, conv, hist = jax.lax.while_loop(cond, body, st)
-    return SolveResult(
-        x=x, iters=it, restarts=jnp.int32(0), converged=conv,
-        res_history=hist, norm0=norm0,
-    )
+    prog = build(ops, b, tol=tol, maxit=maxit)
+    st0 = prog.init(jnp.zeros_like(b) if x0 is None else x0)
+    return prog.finish(jax.lax.while_loop(prog.cond, prog.body, st0))

@@ -5,14 +5,165 @@ single dot-block = a single MPI_Iallreduce), overlapped with the iteration's
 own SPMV + preconditioner application: ``Time = max(glred, spmv)``
 (Table 1, row 'p-CG').  Conceptually p(1)-CG, derived differently; kept as
 the reference pipelined method the paper benchmarks against.
+
+Rounding-error behaviour: the auxiliary recurrences (s = Ap, q = M^{-1}s,
+z = Aq, and the recurred r/u/w) drift from their true values, so the
+attainable accuracy of p-CG is strictly worse than classic CG on
+ill-conditioned systems.  ``replace_every > 0`` enables the *residual
+replacement* countermeasure of Cools/Cornelis/Vanroose (arXiv:1902.03100):
+every ``replace_every`` iterations the recurred vectors are replaced by
+their true values (r = b - Ax, u = M^{-1}r, w = Au, s = Ap, q = M^{-1}s,
+z = Aq) at the cost of four extra SPMVs and two extra preconditioner
+applies per replacement — restoring CG-level attainable accuracy while
+keeping the single-reduction structure of every other iteration
+(tests/test_residual_replacement.py).
+
+The iteration is exposed as a ``build()`` program (init/body/cond/finish)
+for external drivers — the batched multi-RHS layer (``repro.core.batched``,
+DESIGN.md §11).
 """
 
 from __future__ import annotations
+
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.types import SolveResult, SolverOps, dot1
+
+
+class PcgState(NamedTuple):
+    x: jax.Array
+    r: jax.Array
+    u: jax.Array
+    w: jax.Array
+    z: jax.Array
+    q: jax.Array
+    s: jax.Array
+    p: jax.Array
+    gamma: jax.Array
+    alpha: jax.Array
+    it: jax.Array
+    conv: jax.Array
+    hist: jax.Array      # hist[0] is norm0 (the stopping reference)
+    since_rr: jax.Array  # iterations since the last residual replacement
+
+
+class PcgProgram(NamedTuple):
+    """p-CG pieces.  ``body`` is the sequential driver (one iteration +
+    in-loop residual replacement behind a runtime-exclusive ``lax.cond``);
+    ``step`` is the bare iteration and ``needs_interrupt``/``interrupt``
+    the replacement pair, for drivers (the batched multi-RHS layer,
+    DESIGN.md §11) where a vmapped ``lax.cond`` would execute BOTH
+    branches every iteration — those stop a column at the interrupt
+    boundary and apply the replacement as a masked out-of-loop step."""
+
+    init: Callable[[jax.Array], "PcgState"]
+    body: Callable[["PcgState"], "PcgState"]
+    cond: Callable[["PcgState"], jax.Array]
+    finish: Callable[["PcgState"], SolveResult]
+    step: Callable[["PcgState"], "PcgState"]
+    needs_interrupt: Callable[["PcgState"], jax.Array] | None = None
+    interrupt: Callable[["PcgState"], "PcgState"] | None = None
+
+
+def build(
+    ops: SolverOps,
+    b: jax.Array,
+    tol: float = 1e-6,
+    maxit: int = 1000,
+    replace_every: int = 0,
+) -> PcgProgram:
+    dtype = b.dtype
+
+    def init(x0: jax.Array) -> PcgState:
+        x = x0.astype(dtype)
+        r = b - ops.apply_a(x)
+        u = ops.prec(r)
+        w = ops.apply_a(u)
+        norm0 = jnp.sqrt(jnp.abs(dot1(ops, r, u)))
+        hist0 = jnp.full((maxit + 2,), -1.0, dtype=dtype).at[0].set(norm0)
+        z = jnp.zeros_like(b)
+        one = jnp.asarray(1.0, dtype)
+        return PcgState(x=x, r=r, u=u, w=w, z=z, q=z, s=z, p=z, gamma=one,
+                        alpha=one, it=jnp.int32(0), conv=norm0 == 0.0,
+                        hist=hist0, since_rr=jnp.int32(0))
+
+    def cond(st: PcgState) -> jax.Array:
+        return (~st.conv) & (st.it < maxit)
+
+    def step(st: PcgState) -> PcgState:
+        norm0 = st.hist[0]
+        # --- ONE fused reduction: {(r,u), (w,u)}, initiated through the
+        # backend handle (MPI_Iallreduce) and only waited on AFTER the
+        # iteration's own preconditioner + SPMV — the overlap window of
+        # Table 1, row 'p-CG' (DESIGN.md §3/§6).
+        pending = ops.start(jnp.stack([st.r, st.w]), st.u)
+        # --- overlapped work: preconditioner + SPMV of this iteration
+        m = ops.prec(st.w)
+        nvec = ops.apply_a(m)
+        gd = ops.wait(pending)                    # MPI_Wait
+        gamma, delta = gd[0], gd[1]
+        first = st.it == 0
+        beta = jnp.where(first, 0.0, gamma / st.gamma)
+        denom = jnp.where(
+            first, delta,
+            delta - beta * gamma / jnp.where(first, 1.0, st.alpha)
+        )
+        alpha = gamma / denom
+        z = nvec + beta * st.z
+        q = m + beta * st.q
+        s = st.w + beta * st.s
+        p = st.u + beta * st.p
+        x = st.x + alpha * p
+        r = st.r - alpha * s
+        u = st.u - alpha * q
+        w = st.w - alpha * z
+        rnorm = jnp.sqrt(jnp.abs(gamma))  # ||r||_M of the *pre-update* residual
+        hist = st.hist.at[st.it + 1].set(rnorm)
+        conv = rnorm / norm0 < tol
+        return PcgState(x=x, r=r, u=u, w=w, z=z, q=q, s=s, p=p, gamma=gamma,
+                        alpha=alpha, it=st.it + 1, conv=conv, hist=hist,
+                        since_rr=st.since_rr + 1)
+
+    # Residual replacement (arXiv:1902.03100): swap every recurred vector
+    # for its true value.  The scalars (gamma/alpha) are kept —
+    # replacement resets the error of the vector recurrences, not the
+    # Krylov coefficients.
+    def replace(st: PcgState) -> PcgState:
+        r = b - ops.apply_a(st.x)
+        u = ops.prec(r)
+        w = ops.apply_a(u)
+        s = ops.apply_a(st.p)
+        q = ops.prec(s)
+        z = ops.apply_a(q)
+        return st._replace(r=r, u=u, w=w, s=s, q=q, z=z,
+                           since_rr=jnp.int32(0))
+
+    def needs_replace(st: PcgState) -> jax.Array:
+        return st.since_rr >= replace_every
+
+    def body(st: PcgState) -> PcgState:
+        st = step(st)
+        if replace_every > 0:
+            # Runtime-exclusive in the sequential while-loop (scalar
+            # predicate): the 4-SPMV replacement runs only on its due
+            # iteration.
+            st = jax.lax.cond(needs_replace(st), replace, lambda s: s, st)
+        return st
+
+    def finish(st: PcgState) -> SolveResult:
+        return SolveResult(
+            x=st.x, iters=st.it, restarts=jnp.int32(0), converged=st.conv,
+            res_history=st.hist, norm0=st.hist[0],
+        )
+
+    return PcgProgram(
+        init=init, body=body, cond=cond, finish=finish, step=step,
+        needs_interrupt=needs_replace if replace_every > 0 else None,
+        interrupt=replace if replace_every > 0 else None,
+    )
 
 
 def solve(
@@ -21,57 +172,8 @@ def solve(
     x0: jax.Array | None = None,
     tol: float = 1e-6,
     maxit: int = 1000,
+    replace_every: int = 0,
 ) -> SolveResult:
-    dtype = b.dtype
-    x = jnp.zeros_like(b) if x0 is None else x0.astype(dtype)
-
-    r = b - ops.apply_a(x)
-    u = ops.prec(r)
-    w = ops.apply_a(u)
-    norm0 = jnp.sqrt(jnp.abs(dot1(ops, r, u)))
-    hist0 = jnp.full((maxit + 2,), -1.0, dtype=dtype).at[0].set(norm0)
-    z = jnp.zeros_like(b)
-
-    def cond(st):
-        *_, it, conv, hist = st
-        return (~conv) & (it < maxit)
-
-    def body(st):
-        x, r, u, w, z, q, s, p, gamma_old, alpha_old, it, conv, hist = st
-        # --- ONE fused reduction: {(r,u), (w,u)}, initiated through the
-        # backend handle (MPI_Iallreduce) and only waited on AFTER the
-        # iteration's own preconditioner + SPMV — the overlap window of
-        # Table 1, row 'p-CG' (DESIGN.md §3/§6).
-        pending = ops.start(jnp.stack([r, w]), u)
-        # --- overlapped work: preconditioner + SPMV of this iteration
-        m = ops.prec(w)
-        nvec = ops.apply_a(m)
-        gd = ops.wait(pending)                    # MPI_Wait
-        gamma, delta = gd[0], gd[1]
-        first = it == 0
-        beta = jnp.where(first, 0.0, gamma / gamma_old)
-        denom = jnp.where(
-            first, delta, delta - beta * gamma / jnp.where(first, 1.0, alpha_old)
-        )
-        alpha = gamma / denom
-        z = nvec + beta * z
-        q = m + beta * q
-        s = w + beta * s
-        p = u + beta * p
-        x = x + alpha * p
-        r = r - alpha * s
-        u = u - alpha * q
-        w = w - alpha * z
-        rnorm = jnp.sqrt(jnp.abs(gamma))  # ||r||_M of the *pre-update* residual
-        hist = hist.at[it + 1].set(rnorm)
-        conv = rnorm / norm0 < tol
-        return (x, r, u, w, z, q, s, p, gamma, alpha, it + 1, conv, hist)
-
-    st = (x, r, u, w, z, z, z, z, jnp.asarray(1.0, dtype), jnp.asarray(1.0, dtype),
-          jnp.int32(0), norm0 == 0.0, hist0)
-    out = jax.lax.while_loop(cond, body, st)
-    x, r, u, w, z, q, s, p, gamma, alpha, it, conv, hist = out
-    return SolveResult(
-        x=x, iters=it, restarts=jnp.int32(0), converged=conv,
-        res_history=hist, norm0=norm0,
-    )
+    prog = build(ops, b, tol=tol, maxit=maxit, replace_every=replace_every)
+    st0 = prog.init(jnp.zeros_like(b) if x0 is None else x0)
+    return prog.finish(jax.lax.while_loop(prog.cond, prog.body, st0))

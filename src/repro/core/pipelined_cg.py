@@ -29,6 +29,19 @@ Breakdown handling: square-root breakdown (line 10/11) triggers an explicit
 restart from the current iterate (§2.2), implemented as a state re-init
 inside the while-loop.  Convergence uses the recursive residual M-norm
 |zeta_{i-l}| relative to the *original* residual norm.
+
+Residual replacement (``replace_every > 0``): long pipelines let the
+recursive residual drift from the true residual (rounding-error
+propagation, Cools/Cornelis/Vanroose arXiv:1902.03100), capping attainable
+accuracy.  Every ``replace_every`` solution updates the solver forces a
+cycle re-init from the current iterate — ``init_cycle`` recomputes the
+TRUE residual b - A x and restarts the basis from it, the p(l)-CG
+equivalent of the paper's periodic true-residual recompute (the
+counterpart for Ghysels p-CG replaces the recurred vectors in place; see
+``ghysels_pcg``).  Each replacement costs the l+1-iteration pipeline
+refill, so choose ``replace_every >> l``; replacement restarts share the
+breakdown-restart budget ``max_restarts``
+(tests/test_residual_replacement.py).
 """
 
 from __future__ import annotations
@@ -69,6 +82,8 @@ class _State(NamedTuple):
     breakdown: jax.Array
     hist: jax.Array
     norm0: jax.Array      # original residual M-norm (stopping reference)
+    since_rr: jax.Array   # solution updates since the last (re)start —
+                          # drives periodic residual replacement
 
 
 class PlcgProgram(NamedTuple):
@@ -78,6 +93,17 @@ class PlcgProgram(NamedTuple):
     (``repro.utils.trace``) instead unrolls ``iteration`` into a flat
     window so the staggered reduction chains are visible in one HLO
     schedule (DESIGN.md §6).
+
+    ``step`` / ``needs_interrupt`` / ``interrupt`` decompose ``body`` for
+    the batched multi-RHS drivers (DESIGN.md §11): under vmap a batched
+    ``lax.cond`` executes BOTH branches, so running ``body`` per slab
+    iteration would pay the restart's extra SPMV + reduction every
+    iteration.  Batched drivers instead run ``step`` (the bare iteration,
+    ONE reduction) until ``needs_interrupt`` (breakdown or a due residual
+    replacement) stops the column, then apply ``interrupt`` (the cycle
+    re-init) as a masked boundary step — same arithmetic per column as
+    the sequential path, with the restart's reduction amortized to chunk
+    boundaries.
     """
 
     init: Callable[[jax.Array], "_State"]        # x0 -> st0
@@ -85,6 +111,9 @@ class PlcgProgram(NamedTuple):
     body: Callable[["_State"], "_State"]         # breakdown-aware step
     cond: Callable[["_State"], jax.Array]
     finish: Callable[["_State"], SolveResult]
+    step: Callable[["_State"], "_State"] | None = None
+    needs_interrupt: Callable[["_State"], jax.Array] | None = None
+    interrupt: Callable[["_State"], "_State"] | None = None
 
 
 def build(
@@ -95,9 +124,12 @@ def build(
     maxit: int = 1000,
     sigmas: jax.Array | None = None,
     max_restarts: int = 10,
+    replace_every: int = 0,
 ) -> PlcgProgram:
     """Construct the p(l)-CG iteration pieces for ``b`` (depth ``l`` static)."""
     assert l >= 1
+    assert replace_every == 0 or replace_every > l, \
+        "residual replacement must be rarer than the pipeline refill"
     n = b.shape[0]
     dtype = b.dtype
     sig = jnp.zeros((l,), dtype) if sigmas is None else jnp.asarray(sigmas, dtype)
@@ -319,7 +351,8 @@ def build(
         zet_prev = jnp.where(is_first, zet_first,
                              jnp.where(do_upd, zet_new, c.zet_prev))
 
-        upd = st.upd + jnp.where(do_upd, 1, 0).astype(jnp.int32)
+        n_upd = jnp.where(do_upd, 1, 0).astype(jnp.int32)
+        upd = st.upd + n_upd
         rnorm = jnp.abs(zet_new)
         # On a breakdown iteration the freshly computed scalars are garbage
         # (the restart discards them) — never record/converge on them.
@@ -340,6 +373,7 @@ def build(
         return _State(
             cyc=cyc, tot=st.tot + 1, upd=upd, restarts=st.restarts,
             converged=converged, breakdown=breakdown, hist=hist, norm0=st.norm0,
+            since_rr=st.since_rr + n_upd,
         )
 
     def do_restart(st: _State) -> _State:
@@ -350,11 +384,20 @@ def build(
         return _State(
             cyc=cyc, tot=st.tot + 1, upd=st.upd, restarts=st.restarts + 1,
             converged=st.converged | lucky, breakdown=jnp.asarray(False),
-            hist=st.hist, norm0=st.norm0,
+            hist=st.hist, norm0=st.norm0, since_rr=jnp.int32(0),
         )
 
+    def needs_interrupt(st: _State) -> jax.Array:
+        due = st.breakdown
+        if replace_every > 0:
+            # Periodic residual replacement: re-init the cycle from the
+            # current iterate (true-residual recompute) once enough
+            # solution updates have accumulated since the last (re)start.
+            due = due | (st.since_rr >= replace_every)
+        return due
+
     def body(st: _State) -> _State:
-        return jax.lax.cond(st.breakdown, do_restart, iteration, st)
+        return jax.lax.cond(needs_interrupt(st), do_restart, iteration, st)
 
     def cond(st: _State) -> jax.Array:
         return (
@@ -371,7 +414,7 @@ def build(
         return _State(
             cyc=cyc0, tot=jnp.int32(0), upd=jnp.int32(0), restarts=jnp.int32(0),
             converged=norm0 == 0.0, breakdown=jnp.asarray(False),
-            hist=hist0, norm0=norm0,
+            hist=hist0, norm0=norm0, since_rr=jnp.int32(0),
         )
 
     def finish(final: _State) -> SolveResult:
@@ -381,7 +424,8 @@ def build(
         )
 
     return PlcgProgram(init=init, iteration=iteration, body=body, cond=cond,
-                       finish=finish)
+                       finish=finish, step=iteration,
+                       needs_interrupt=needs_interrupt, interrupt=do_restart)
 
 
 def solve(
@@ -394,10 +438,11 @@ def solve(
     sigmas: jax.Array | None = None,
     max_restarts: int = 10,
     unroll: int = 1,
+    replace_every: int = 0,
 ) -> SolveResult:
     """Solve A x = b with p(l)-CG.  ``l`` is the pipeline depth (static)."""
     prog = build(ops, b, l, tol=tol, maxit=maxit, sigmas=sigmas,
-                 max_restarts=max_restarts)
+                 max_restarts=max_restarts, replace_every=replace_every)
     dtype = b.dtype
     st0 = prog.init(jnp.zeros_like(b) if x0 is None else x0.astype(dtype))
 

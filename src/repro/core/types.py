@@ -48,6 +48,24 @@ GLRED_START_TAG = "glred_start"
 GLRED_WAIT_TAG = "glred_wait"
 
 
+# ``lax.optimization_barrier`` has no batching rule (jax <= 0.4.x), which
+# would break the batched multi-RHS solvers (repro.core.batched vmaps the
+# per-column programs over the s-axis).  The barrier is semantically
+# transparent to vmap — a batched barrier is just a barrier on the batched
+# array — so declare exactly that.
+@jax.custom_batching.custom_vmap
+def _opt_barrier(dots: jax.Array) -> jax.Array:
+    return jax.lax.optimization_barrier(dots)
+
+
+@_opt_barrier.def_vmap
+def _opt_barrier_vmap(axis_size, in_batched, dots):
+    # Recurse through _opt_barrier (not the raw primitive) so nested
+    # vmaps peel one batch axis at a time instead of re-hitting the
+    # missing batching rule.
+    return _opt_barrier(dots), in_batched[0]
+
+
 class SolveResult(NamedTuple):
     x: jax.Array           # approximate solution
     iters: jax.Array       # number of solution updates (CG-comparable count)
@@ -100,7 +118,7 @@ class SolverOps:
 
         def wait(dots):
             with jax.named_scope(GLRED_WAIT_TAG):
-                return jax.lax.optimization_barrier(dots)
+                return _opt_barrier(dots)
 
         return SolverOps(
             apply_a=apply_a,

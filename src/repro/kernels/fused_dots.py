@@ -10,6 +10,12 @@ bandwidth-optimal before the single psum.
 Layout: mat (K, N) row-major (the K basis vectors), vec (N,).  Grid over N
 in blocks; a (K, 1) f32 accumulator output block is revisited by every grid
 step (index_map -> (0, 0)), relying on TPU's sequential grid execution.
+
+Multi-RHS variant (``fused_dots_mrhs``, the serving layer's dot block,
+DESIGN.md §11): the same streaming structure against S right-hand-side
+columns at once — mat is streamed ONCE for all S columns and the (K, S)
+accumulator block becomes the local half of the slab's single amortized
+allreduce payload.  S = 1 recovers the single-RHS kernel exactly.
 """
 
 from __future__ import annotations
@@ -25,8 +31,37 @@ def _fused_dots_kernel(mat_ref, vec_ref, o_ref):
         o_ref[...] = jnp.zeros_like(o_ref)
 
     m = mat_ref[...].astype(jnp.float32)      # (K, BN)
-    v = vec_ref[...].astype(jnp.float32)      # (BN, 1)
+    v = vec_ref[...].astype(jnp.float32)      # (BN, S)
     o_ref[...] += m @ v
+
+
+def fused_dots_mrhs(
+    mat: jax.Array, vecs: jax.Array, *, block_n: int = 16384,
+    interpret: bool = False
+) -> jax.Array:
+    """All K*S inner products mat @ vecs in one HBM pass over ``mat``.
+
+    mat (K, N), vecs (N, S) -> (K, S).  N must be a multiple of block_n
+    (ops.py pads with zeros, which do not change the result); on real TPU
+    S should be lane-aligned (ops.py pads).
+    """
+    k, n = mat.shape
+    assert vecs.ndim == 2 and vecs.shape[0] == n, (mat.shape, vecs.shape)
+    s = vecs.shape[1]
+    assert n % block_n == 0, (n, block_n)
+    nb = n // block_n
+    out = pl.pallas_call(
+        _fused_dots_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((k, block_n), lambda i: (0, i)),
+            pl.BlockSpec((block_n, s), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((k, s), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, s), jnp.float32),
+        interpret=interpret,
+    )(mat, vecs)
+    return out.astype(mat.dtype)
 
 
 def fused_dots(
@@ -36,17 +71,6 @@ def fused_dots(
     of block_n (ops.py pads with zeros, which do not change the result)."""
     k, n = mat.shape
     assert vec.shape == (n,)
-    assert n % block_n == 0, (n, block_n)
-    nb = n // block_n
-    out = pl.pallas_call(
-        _fused_dots_kernel,
-        grid=(nb,),
-        in_specs=[
-            pl.BlockSpec((k, block_n), lambda i: (0, i)),
-            pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
-        ],
-        out_specs=pl.BlockSpec((k, 1), lambda i: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((k, 1), jnp.float32),
-        interpret=interpret,
-    )(mat, vec[:, None])
-    return out[:, 0].astype(mat.dtype)
+    out = fused_dots_mrhs(mat, vec[:, None], block_n=block_n,
+                          interpret=interpret)
+    return out[:, 0]

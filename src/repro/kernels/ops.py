@@ -66,6 +66,24 @@ def fused_dots(mat: jax.Array, vec: jax.Array, interpret: bool | None = None):
 
 
 @partial(jax.jit, static_argnames=("interpret",))
+def fused_dots_mrhs(mat: jax.Array, vecs: jax.Array,
+                    interpret: bool | None = None):
+    """(K, N) x (N, S) -> (K, S): the slab dot block, mat streamed once for
+    all S right-hand sides (DESIGN.md §11).  Zero-pads N to a block
+    multiple and S to the TPU lane width off-interpret."""
+    interpret = _interpret_default() if interpret is None else interpret
+    k, n = mat.shape
+    s = vecs.shape[1]
+    bn = min(16384, _round_up(n, 128))
+    npad = _round_up(n, bn)
+    spad = _round_up(s, 8 if interpret else 128)
+    matp = jnp.pad(mat, ((0, 0), (0, npad - n)))
+    vecsp = jnp.pad(vecs, ((0, npad - n), (0, spad - s)))
+    out = _fd.fused_dots_mrhs(matp, vecsp, block_n=bn, interpret=interpret)
+    return out[:, :s]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
 def fused_axpy3(zk1, zm1, zm2, c1, c2, scale, interpret: bool | None = None):
     interpret = _interpret_default() if interpret is None else interpret
     (n,) = zk1.shape

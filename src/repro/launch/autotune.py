@@ -71,6 +71,21 @@ def _require_timing_model():
         )
 
 
+def reduction_payload_bytes(method: str, l: int, s: int = 1,
+                            dsize: int = 8) -> int:
+    """Bytes carried by ONE global reduction of the given method.
+
+    Classic CG reduces a single scalar per reduction phase, Ghysels p-CG
+    a fused {gamma, delta} pair, p(l)-CG the fused 2l+1-entry dot block;
+    batching s right-hand sides multiplies every payload by s — the
+    (2l+1, s) slab matrix of DESIGN.md §11.  This is the term the cost
+    model was missing: with the default 64-byte payload the model was
+    latency-only and the autotuned depth could not react to batch width.
+    """
+    entries = {"cg": 1, "pcg": 2}.get(method, 2 * l + 1)
+    return entries * max(s, 1) * dsize
+
+
 def xla_effective_depth(l: int, unroll: int) -> int:
     """Reductions a while-loop body can keep in flight under XLA.
 
@@ -127,11 +142,31 @@ def model_iteration_time(
     stencil_pts: int = 5,
     jitter: float = 0.15,
     prec_factor: float = 1.0,
+    s: int = 1,
+    dsize: int = 8,
 ) -> float:
-    """Modeled seconds per iteration at the XLA-effective pipeline depth."""
+    """Modeled seconds per SLAB iteration at the XLA-effective depth.
+
+    ``s`` is the multi-RHS slab width (DESIGN.md §11); both sides of the
+    overlap balance scale with it, consistently: the local work (SPMV /
+    AXPY streams) is s columns per iteration, and the single reduction
+    carries the (2l+1)*s*dsize payload (``reduction_payload_bytes``).
+    The per-reduction LATENCY (alpha * tree depth) does not scale — that
+    is the amortization: per-column time t(s)/s falls toward the
+    bandwidth floor ``local + payload_1/link_bw`` as s grows, and the
+    latency-hiding value of depth l shrinks with it (wide slabs want
+    shallower pipelines; narrow ones deeper).  s=1 recovers the
+    single-RHS model exactly.
+    """
     _require_timing_model()
-    k = stencil_kernel_times(hw, n, p, stencil_pts=stencil_pts,
-                             prec_factor=prec_factor)
+    k = stencil_kernel_times(
+        hw, n, p, stencil_pts=stencil_pts, prec_factor=prec_factor,
+        glred_payload=reduction_payload_bytes(method, l, s, dsize))
+    if s > 1:
+        # Slab-consistent local terms: s columns stream per iteration
+        # (the halo/latency parts of the SPMV amortize like the glred
+        # alpha does, but modeling them per-column errs conservative).
+        k = {**k, "spmv": k["spmv"] * s, "axpy1": k["axpy1"] * s}
     if method != "plcg":
         return iteration_time(method, 0, k, jitter=jitter)
     l_eff = xla_effective_depth(l, unroll)
@@ -155,6 +190,7 @@ def autotune_depth(
     prec_factor: float = 1.0,
     include_baselines: bool = True,
     measure: Callable[[str, int, int], float] | None = None,
+    s: int = 1,
 ) -> AutotuneResult:
     """Sweep (l, unroll) and pick the fastest candidate.
 
@@ -162,7 +198,11 @@ def autotune_depth(
     :func:`measured_runner`) overrides the model for ranking wherever it
     is provided; candidates are ranked by measured time when available,
     modeled time otherwise.  ``hw`` defaults to the Cori-like
-    reproduction profile.
+    reproduction profile.  ``s`` is the serving slab width — it scales
+    both the reduction payload and the per-iteration local work
+    (``model_iteration_time``), so the autotuned depth stays correct when
+    the batcher widens the dot block: wide slabs amortize the reduction
+    latency and favor shallower pipelines (DESIGN.md §11).
     """
     _require_timing_model()
     if hw is None:
@@ -172,7 +212,7 @@ def autotune_depth(
     def add(method, l, unroll):
         mdl = model_iteration_time(hw, n, p, method, l, unroll,
                                    stencil_pts=stencil_pts, jitter=jitter,
-                                   prec_factor=prec_factor)
+                                   prec_factor=prec_factor, s=s)
         meas = measure(method, l, unroll) if measure is not None else None
         cands.append(Candidate(method, l, unroll, mdl, meas))
 

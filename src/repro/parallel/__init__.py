@@ -18,6 +18,7 @@ from repro.parallel.backends import (
 )
 from repro.parallel.distributed import (
     distributed_solve,
+    distributed_solve_batched,
     make_solver_mesh,
     partitioned_solver_ops,
     shard_map_compat,
@@ -29,6 +30,7 @@ __all__ = [
     "get_backend",
     "register_backend",
     "distributed_solve",
+    "distributed_solve_batched",
     "make_solver_mesh",
     "partitioned_solver_ops",
     "shard_map_compat",

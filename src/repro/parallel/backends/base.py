@@ -37,6 +37,7 @@ import jax
 # (repro.core.METHODS); distributed_solve uses the same object, so the
 # solver sets can never fork between substrates.
 from repro.core import METHODS
+from repro.core.batched import SlabProgram
 from repro.core.types import SolveResult, SolverOps
 
 
@@ -67,21 +68,59 @@ class ReductionBackend(abc.ABC):
         raise NotImplementedError(
             f"{type(self).__name__} does not support make_solver")
 
+    # -------------------------------------------------- batched multi-RHS --
+    def solve_batched(self, op, B, method: str = "plcg", prec=None,
+                      **solver_kwargs) -> SolveResult:
+        """Solve A X = B for every column of B (n, s) in lock-step.
+
+        The per-iteration fused dot block of ALL columns is reduced as a
+        single (K, s) payload — one reduction per iteration whatever s is
+        (DESIGN.md §11).  The returned ``SolveResult`` leaves carry a
+        leading s-axis; column i matches the sequential
+        ``solve(op, B[:, i], ...)`` result (parity asserted per backend in
+        tests/test_serve.py).
+        """
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support solve_batched")
+
+    def make_batched_solver(self, op, method: str = "plcg", prec=None,
+                            **solver_kwargs) -> Callable[[jax.Array], SolveResult]:
+        """Reusable compiled batched solver ``B (n, s) -> SolveResult``
+        (one jit cache per B shape) — the slab analogue of
+        :meth:`make_solver`, used by throughput benchmarks."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support make_batched_solver")
+
+    def make_slab_program(self, op, s: int, method: str = "plcg", prec=None,
+                          chunk_iters: int = 16, dtype=None,
+                          **solver_kwargs) -> SlabProgram:
+        """Compile the chunked slab lifecycle for the serving layer
+        (``repro.serve``, DESIGN.md §11): init / chunk / inject / status /
+        extract over a fixed-(n, s) slab.  Converged columns freeze,
+        retire, and their slots are re-initialized against new RHS columns
+        by ``inject`` — all through the same compiled computations, so the
+        request mix never forces a retrace."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support make_slab_program")
+
     # ----------------------------------------------------- SPMD staging --
     @abc.abstractmethod
     def run(self, fn: Callable[[SolverOps, jax.Array], Any], op, b,
-            prec=None) -> Any:
+            prec=None, b_spec=None) -> Any:
         """Execute ``fn(ops, b_local)`` inside this backend's SPMD context.
 
         ``fn`` receives backend-built :class:`SolverOps` plus the local
         shard of ``b`` and must return a pytree that is *replicated*
         across shards (scalars, residual histories, reduction results —
-        anything derived from the fused dot block qualifies).
+        anything derived from the fused dot block qualifies).  ``b_spec``
+        overrides the partitioning of ``b`` on distributed backends (the
+        default shards its first axis); pass e.g. ``P(axis, None)``-style
+        specs for (n, s) slab operands.
         """
 
     @abc.abstractmethod
     def lower_hlo(self, fn: Callable[[SolverOps, jax.Array], Any], op, b,
-                  prec=None) -> str:
+                  prec=None, b_spec=None) -> str:
         """Compiled (optimized, scheduled) HLO text of ``run(fn, ...)``.
 
         This is the input the overlap tracer analyses; ``b`` may be a

@@ -13,6 +13,8 @@ from typing import Any, Callable
 
 import jax
 
+from repro.core import batched as batched_mod
+from repro.core.batched import SlabProgram, SlabStatus
 from repro.core.types import SolverOps
 from repro.parallel.backends.base import METHODS, ReductionBackend
 
@@ -37,13 +39,48 @@ class LocalBackend(ReductionBackend):
         ops = self.make_ops(op, prec)
         return jax.jit(lambda bb: METHODS[method](ops, bb, solver_kwargs))
 
+    # -------------------------------------------------- batched multi-RHS --
+    def solve_batched(self, op, B, method: str = "plcg", prec=None,
+                      **solver_kwargs):
+        return self.make_batched_solver(op, method, prec, **solver_kwargs)(B)
+
+    def make_batched_solver(self, op, method: str = "plcg", prec=None,
+                            **solver_kwargs):
+        ops = self.make_ops(op, prec)
+        return jax.jit(
+            lambda BB: batched_mod.solve_batched(ops, BB, method,
+                                                 **solver_kwargs))
+
+    def make_slab_program(self, op, s: int, method: str = "plcg", prec=None,
+                          chunk_iters: int = 16, dtype=None,
+                          **solver_kwargs) -> SlabProgram:
+        ops = self.make_ops(op, prec)
+        kw = dict(solver_kwargs)
+        return SlabProgram(
+            method=method, s=s, n=op.n, chunk_iters=chunk_iters,
+            init=jax.jit(
+                lambda B: batched_mod.batched_init(ops, B, method, kw)),
+            chunk=jax.jit(
+                lambda B, st: batched_mod.batched_chunk(
+                    ops, B, st, method, kw, chunk_iters)),
+            inject=jax.jit(
+                lambda B, st, mask: batched_mod.batched_inject(
+                    ops, B, st, mask, method, kw)),
+            status=jax.jit(
+                lambda B, st: batched_mod.batched_status(ops, B, st, method,
+                                                         kw)),
+            extract=jax.jit(
+                lambda B, st: batched_mod.batched_extract(ops, B, st, method,
+                                                          kw)),
+        )
+
     def run(self, fn: Callable[[SolverOps, jax.Array], Any], op, b,
-            prec=None) -> Any:
+            prec=None, b_spec=None) -> Any:
         ops = self.make_ops(op, prec)
         return jax.jit(lambda bb: fn(ops, bb))(b)
 
     def lower_hlo(self, fn: Callable[[SolverOps, jax.Array], Any], op, b,
-                  prec=None) -> str:
+                  prec=None, b_spec=None) -> str:
         ops = self.make_ops(op, prec)
         return (
             jax.jit(lambda bb: fn(ops, bb)).lower(b).compile().as_text()

@@ -22,6 +22,13 @@ Single-process degradation: with no coordinator and one process, the
 backend spans the local devices only (identical to ``shard_map``) — this
 keeps the code path importable and testable in single-host CI containers
 where no second process exists.
+
+Batched multi-RHS serving (DESIGN.md §11) is inherited wholesale from
+``ShardMapBackend``: ``solve_batched`` / ``make_slab_program`` stage the
+same vmapped per-column programs, and the slab's (2l+1, s) dot-block
+matrix rides ONE cross-host psum per iteration — the amortized payload
+crosses the wire exactly once however many requests are in flight
+(parity over this backend asserted in tests/test_serve.py).
 """
 
 from __future__ import annotations

@@ -24,14 +24,19 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import batched as batched_mod
+from repro.core.batched import SlabProgram, SlabStatus
 from repro.core.types import SolverOps
-from repro.parallel.backends.base import ReductionBackend
 from repro.parallel.distributed import (
+    batched_result_specs,
+    batched_state_specs,
     distributed_solve,
+    distributed_solve_batched,
     make_solver_mesh,
     partitioned_solver_ops,
     shard_map_compat,
 )
+from repro.parallel.backends.base import ReductionBackend
 
 
 class ShardMapBackend(ReductionBackend):
@@ -60,8 +65,89 @@ class ShardMapBackend(ReductionBackend):
         jfn = jax.jit(fn)
         return lambda bb: jfn(bb, arrays)
 
+    # -------------------------------------------------- batched multi-RHS --
+    def solve_batched(self, op, B, method: str = "plcg", prec=None,
+                      **solver_kwargs):
+        return distributed_solve_batched(self.mesh, op, B, method=method,
+                                         prec=prec, jit=self.jit,
+                                         **solver_kwargs)
+
+    def make_batched_solver(self, op, method: str = "plcg", prec=None,
+                            **solver_kwargs):
+        bspec = jax.ShapeDtypeStruct((op.n, 1), jnp.float32)
+        fn, arrays = distributed_solve_batched(
+            self.mesh, op, bspec, method=method, prec=prec, jit=False,
+            **solver_kwargs)
+        jfn = jax.jit(fn)
+        return lambda BB: jfn(BB, arrays)
+
+    def make_slab_program(self, op, s: int, method: str = "plcg", prec=None,
+                          chunk_iters: int = 16, dtype=None,
+                          **solver_kwargs) -> SlabProgram:
+        """Slab lifecycle under shard_map (DESIGN.md §11).
+
+        Each piece is one shard_map-wrapped jit: the slab B (n, s) is
+        domain-decomposed on n, the state's vector leaves shard their
+        trailing axis (``batched_state_specs``), and per-column scalars /
+        histories are replicated.  The state crosses the host boundary
+        between chunks so the serve layer can retire and inject columns —
+        with fixed shapes throughout, nothing ever retraces.
+        """
+        kw = dict(solver_kwargs)
+        dtype = jnp.zeros((), jnp.float64).dtype if dtype is None else dtype
+        n, axis = op.n, self.axis
+        arrays, build = partitioned_solver_ops(op, prec, self.n_shards, axis)
+        arr_specs = jax.tree.map(lambda _: P(axis), arrays)
+        b_spec = P(axis, None)
+
+        # State structure/ndims are substrate-independent: eval_shape the
+        # batched init against plain local ops to derive partition specs.
+        ops_shape = SolverOps.local(op, prec)
+        st_struct = jax.eval_shape(
+            lambda BB: batched_mod.batched_init(ops_shape, BB, method, kw),
+            jax.ShapeDtypeStruct((n, s), dtype))
+        st_specs = batched_state_specs(method, st_struct, axis)
+        status_specs = SlabStatus(running=P(), converged=P(), iters=P())
+
+        def staged(fn, in_specs, out_specs):
+            wrapped = shard_map_compat(fn, mesh=self.mesh,
+                                       in_specs=in_specs,
+                                       out_specs=out_specs)
+            return jax.jit(wrapped)
+
+        init_j = staged(
+            lambda Bl, loc: batched_mod.batched_init(build(loc), Bl, method,
+                                                     kw),
+            (b_spec, arr_specs), st_specs)
+        chunk_j = staged(
+            lambda Bl, st, loc: batched_mod.batched_chunk(
+                build(loc), Bl, st, method, kw, chunk_iters),
+            (b_spec, st_specs, arr_specs), st_specs)
+        inject_j = staged(
+            lambda Bl, st, mask, loc: batched_mod.batched_inject(
+                build(loc), Bl, st, mask, method, kw),
+            (b_spec, st_specs, P(), arr_specs), st_specs)
+        status_j = staged(
+            lambda Bl, st, loc: batched_mod.batched_status(build(loc), Bl,
+                                                           st, method, kw),
+            (b_spec, st_specs, arr_specs), status_specs)
+        extract_j = staged(
+            lambda Bl, st, loc: batched_mod.batched_extract(build(loc), Bl,
+                                                            st, method, kw),
+            (b_spec, st_specs, arr_specs), batched_result_specs(axis))
+
+        return SlabProgram(
+            method=method, s=s, n=n, chunk_iters=chunk_iters,
+            init=lambda B: init_j(B, arrays),
+            chunk=lambda B, st: chunk_j(B, st, arrays),
+            inject=lambda B, st, mask: inject_j(B, st, mask, arrays),
+            status=lambda B, st: status_j(B, st, arrays),
+            extract=lambda B, st: extract_j(B, st, arrays),
+        )
+
     # ----------------------------------------------------- SPMD staging --
-    def _staged(self, fn: Callable[[SolverOps, jax.Array], Any], op, prec):
+    def _staged(self, fn: Callable[[SolverOps, jax.Array], Any], op, prec,
+                b_spec=None):
         """(wrapped_fn, arrays): shard_map-wrapped ``fn`` with replicated
         outputs, plus the partitioned operator arrays to pass alongside."""
         arrays, build = partitioned_solver_ops(op, prec, self.n_shards,
@@ -70,21 +156,24 @@ class ShardMapBackend(ReductionBackend):
         def run(b_local, loc):
             return fn(build(loc), b_local)
 
+        b_spec = P(self.axis) if b_spec is None else b_spec
         arr_specs = jax.tree.map(lambda _: P(self.axis), arrays)
         wrapped = shard_map_compat(
-            run, mesh=self.mesh, in_specs=(P(self.axis), arr_specs),
+            run, mesh=self.mesh, in_specs=(b_spec, arr_specs),
             out_specs=P(),
         )
         return wrapped, arrays
 
-    def run(self, fn, op, b, prec=None) -> Any:
-        wrapped, arrays = self._staged(fn, op, prec)
+    def run(self, fn, op, b, prec=None, b_spec=None) -> Any:
+        wrapped, arrays = self._staged(fn, op, prec, b_spec)
         return jax.jit(wrapped)(b, arrays)
 
-    def lower_hlo(self, fn, op, b, prec=None) -> str:
-        wrapped, arrays = self._staged(fn, op, prec)
-        bsh = NamedSharding(self.mesh, P(self.axis))
-        ash = jax.tree.map(lambda _: bsh, arrays)
+    def lower_hlo(self, fn, op, b, prec=None, b_spec=None) -> str:
+        wrapped, arrays = self._staged(fn, op, prec, b_spec)
+        bsh = NamedSharding(
+            self.mesh, P(self.axis) if b_spec is None else b_spec)
+        ash = jax.tree.map(lambda _: NamedSharding(self.mesh, P(self.axis)),
+                           arrays)
         lowered = jax.jit(wrapped, in_shardings=(bsh, ash)).lower(b, arrays)
         return lowered.compile().as_text()
 

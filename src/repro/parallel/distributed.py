@@ -45,6 +45,7 @@ from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import METHODS
+from repro.core import batched as batched_mod
 from repro.core.types import SolveResult, SolverOps
 from repro.linalg.operators import (
     DiagonalOp,
@@ -258,6 +259,65 @@ def partitioned_solver_ops(op, prec, n_shards: int, axis: str = "shards"):
 
 # One dispatch table for every substrate (repro.core.METHODS).
 _METHODS = METHODS
+
+
+def batched_state_specs(method: str, state_shapes, axis: str):
+    """Partition specs for a batched slab state under ``shard_map``.
+
+    ``state_shapes`` is the ``jax.eval_shape`` pytree of the batched
+    state (leading s-axis).  Vector-valued leaves (trailing axis = the
+    domain-decomposed n, per ``repro.core.batched.vector_mask``) shard
+    their LAST axis over ``axis``; windows, scalars and histories are
+    replicated (they are derived from psum'd dot blocks, hence identical
+    on every shard)."""
+    mask = batched_mod.vector_mask(method)
+
+    def spec(sh, is_vec):
+        if not is_vec:
+            return P()
+        return P(*([None] * (sh.ndim - 1) + [axis]))
+
+    return jax.tree.map(spec, state_shapes, mask)
+
+
+def batched_result_specs(axis: str) -> SolveResult:
+    """Out-specs of a stacked (leading s-axis) SolveResult: x is (s, n)
+    with n domain-decomposed; everything else replicated."""
+    return SolveResult(x=P(None, axis), iters=P(), restarts=P(),
+                       converged=P(), res_history=P(), norm0=P())
+
+
+def distributed_solve_batched(
+    mesh: Mesh,
+    op: LinearOperator,
+    B: jax.Array,
+    method: str = "plcg",
+    prec=None,
+    jit: bool = True,
+    **kwargs,
+):
+    """Solve A X = B for all s columns of B (n, s) in lock-step, domain-
+    decomposed over ``mesh`` — per iteration ONE fused psum of the whole
+    (K, s) dot-block matrix (DESIGN.md §11).  Mirrors
+    :func:`distributed_solve`; the result's leaves carry a leading s-axis.
+    """
+    axis = mesh.axis_names[0]
+    n_shards = mesh.devices.size
+    assert B.shape[0] % n_shards == 0
+    arrays, build = partitioned_solver_ops(op, prec, n_shards, axis)
+
+    def run(B_local, local_arrays):
+        ops = build(local_arrays)
+        return batched_mod.solve_batched(ops, B_local, method, **kwargs)
+
+    arr_specs = jax.tree.map(lambda _: P(axis), arrays)
+    fn = shard_map_compat(
+        run, mesh=mesh, in_specs=(P(axis, None), arr_specs),
+        out_specs=batched_result_specs(axis),
+    )
+    if not jit:
+        return fn, arrays
+    return jax.jit(fn)(B, arrays)
 
 
 def distributed_solve(

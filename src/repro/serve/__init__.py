@@ -1,0 +1,36 @@
+"""repro.serve — batched multi-RHS solver service (DESIGN.md §11).
+
+The serving layer over the batched CG family: a request queue + dynamic
+batcher packs (operator, b, tol) traffic into fixed-width slabs, the
+backend-compiled slab program steps them with ONE amortized (K, s) global
+reduction per iteration, masked retirement frees converged columns for
+queued work without recompiling, and a fingerprint-keyed setup cache
+makes repeat operators skip their block-Jacobi / shift setup.
+
+    from repro.parallel import get_backend
+    from repro.serve import SolverService
+
+    svc = SolverService(get_backend("shard_map", n_shards=8),
+                        s=8, method="plcg", l=2, prec="block_jacobi",
+                        block_size=32)
+    svc.register_operator("poisson", op)
+    rid = svc.submit("poisson", b, tol=1e-8)
+    results = svc.drain()
+    print(results[rid].iters, svc.stats())
+
+See ``examples/serve_solver.py`` (quickstart) and
+``benchmarks/serve_bench.py`` (throughput / latency percentiles).
+"""
+
+from repro.serve.batcher import RequestQueue, SolveRequest
+from repro.serve.cache import SetupCache, operator_fingerprint
+from repro.serve.service import RequestResult, SolverService
+
+__all__ = [
+    "RequestQueue",
+    "SolveRequest",
+    "SetupCache",
+    "operator_fingerprint",
+    "RequestResult",
+    "SolverService",
+]

@@ -1,0 +1,81 @@
+"""Request queue + dynamic batcher for the solver service (DESIGN.md §11).
+
+Incoming ``(operator key, b, tol)`` requests are bucketed by *slab key*
+``(op_key, tol)`` — every request in a slab shares the compiled solver
+(operator, tolerance, method, pipeline depth are trace-time constants;
+the RHS column is runtime data).  The batcher is dynamic in the serving
+sense: it never waits to fill a slab.  Free slots are handed whatever is
+queued right now, partial slabs run with zero-padded columns (a zero RHS
+has ``norm0 == 0`` and retires at iteration 0 — exact, not approximate),
+and slots freed by retirement are re-packed from the queue between
+chunks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict, deque
+from typing import Hashable
+
+import numpy as np
+
+SlabKey = tuple[Hashable, float]       # (op_key, tol)
+
+
+@dataclasses.dataclass
+class SolveRequest:
+    """One queued solve: right-hand side ``b`` against operator ``op_key``."""
+
+    req_id: int
+    op_key: Hashable
+    b: np.ndarray
+    tol: float
+    submitted_at: float = dataclasses.field(default_factory=time.perf_counter)
+
+    @property
+    def slab_key(self) -> SlabKey:
+        return (self.op_key, self.tol)
+
+
+class RequestQueue:
+    """FIFO request buckets per slab key.
+
+    ``submit`` assigns monotone request ids; ``take`` pops up to ``k``
+    requests for one slab key (the batcher's packing step).  Iteration
+    order over keys is insertion order — old traffic is not starved by
+    new operators.
+    """
+
+    def __init__(self):
+        self._buckets: "OrderedDict[SlabKey, deque[SolveRequest]]" = \
+            OrderedDict()
+        self._next_id = 0
+
+    def submit(self, op_key: Hashable, b: np.ndarray,
+               tol: float) -> SolveRequest:
+        req = SolveRequest(req_id=self._next_id, op_key=op_key,
+                           b=np.asarray(b), tol=float(tol))
+        self._next_id += 1
+        self._buckets.setdefault(req.slab_key, deque()).append(req)
+        return req
+
+    def take(self, key: SlabKey, k: int) -> list[SolveRequest]:
+        bucket = self._buckets.get(key)
+        if not bucket:
+            return []
+        out = [bucket.popleft() for _ in range(min(k, len(bucket)))]
+        if not bucket:
+            del self._buckets[key]
+        return out
+
+    def keys(self) -> list[SlabKey]:
+        return list(self._buckets.keys())
+
+    def pending(self, key: SlabKey | None = None) -> int:
+        if key is not None:
+            return len(self._buckets.get(key, ()))
+        return sum(len(b) for b in self._buckets.values())
+
+    def __len__(self) -> int:
+        return self.pending()

@@ -1,0 +1,92 @@
+"""Operator / preconditioner setup cache (DESIGN.md §11).
+
+Production solve traffic is repetitive: many right-hand sides against few
+operators.  The expensive per-operator setup — probing + factorizing the
+block-Jacobi preconditioner (``BlockJacobi.from_operator`` costs
+``n_colors * block_size`` operator applications plus ``nb`` dense
+inversions), estimating spectral bounds for the Chebyshev shift schedule —
+must be paid once per *operator*, not once per request.  The cache keys on
+a content fingerprint of the operator (type + dataclass fields, arrays
+hashed by bytes), so two structurally identical operators share one setup
+even when they are distinct Python objects.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.core.chebyshev import shifts_for_operator
+from repro.linalg.preconditioners import BlockJacobi, JacobiPrec
+
+
+def operator_fingerprint(op: Any) -> str:
+    """Content hash of an operator (or any dataclass-like object).
+
+    Dataclass fields are hashed in declaration order; array-valued fields
+    by shape/dtype/bytes.  Falls back to ``repr`` for non-dataclasses —
+    adequate for the stencil/diagonal operators here, which are frozen
+    dataclasses of scalars and arrays.
+    """
+    h = hashlib.sha1(type(op).__name__.encode())
+    if dataclasses.is_dataclass(op):
+        for f in dataclasses.fields(op):
+            v = getattr(op, f.name)
+            h.update(f.name.encode())
+            if hasattr(v, "shape") and hasattr(v, "dtype"):
+                a = np.asarray(v)
+                h.update(str(a.shape).encode())
+                h.update(str(a.dtype).encode())
+                h.update(a.tobytes())
+            else:
+                h.update(repr(v).encode())
+    else:
+        h.update(repr(op).encode())
+    return h.hexdigest()
+
+
+class SetupCache:
+    """Memoizes per-operator solver setup keyed by operator fingerprint."""
+
+    def __init__(self):
+        self._store: dict[tuple, Any] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, kind: str, key: tuple, builder: Callable[[], Any]) -> Any:
+        k = (kind, *key)
+        if k in self._store:
+            self.hits += 1
+            return self._store[k]
+        self.misses += 1
+        val = builder()
+        self._store[k] = val
+        return val
+
+    # ------------------------------------------------- cached setups ----
+    def block_jacobi(self, op, block_size: int) -> BlockJacobi:
+        fp = operator_fingerprint(op)
+        return self.get("block_jacobi", (fp, block_size),
+                        lambda: BlockJacobi.from_operator(op, block_size))
+
+    def jacobi(self, op) -> JacobiPrec:
+        fp = operator_fingerprint(op)
+        return self.get("jacobi", (fp,),
+                        lambda: JacobiPrec.from_operator(op))
+
+    def sigmas(self, op, l: int, prec=None):
+        """Chebyshev shift schedule — for the PRECONDITIONED operator when
+        ``prec`` is given (the basis polynomial acts on M^{-1}A; shifts
+        from the bare spectrum would be mis-scaled and break the basis
+        down)."""
+        fp = operator_fingerprint(op)
+        pfp = None if prec is None else operator_fingerprint(prec)
+        return self.get("sigmas", (fp, pfp, l),
+                        lambda: shifts_for_operator(op, l, prec=prec))
+
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "entries": len(self._store)}

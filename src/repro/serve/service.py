@@ -1,0 +1,281 @@
+"""Solver-as-a-service: slab scheduler over the batched CG family
+(DESIGN.md §11).
+
+``SolverService`` is the single-threaded, deterministic serving loop the
+ROADMAP's "heavy traffic" north star asks for, built on three pieces:
+
+* the **request queue / dynamic batcher** (``repro.serve.batcher``) packs
+  incoming (op_key, b, tol) requests into fixed-width (n, s) slabs;
+* the backend-compiled **slab program** (``make_slab_program``) steps a
+  slab ``chunk_iters`` iterations at a time, amortizing the per-iteration
+  global reduction over all s columns — one (K, s) allreduce per
+  iteration however many requests are in flight;
+* the **setup cache** (``repro.serve.cache``) makes repeat traffic
+  against a known operator skip the block-Jacobi factorization and
+  Chebyshev shift estimation.
+
+Lifecycle per scheduler tick (``step``): pack free slots from the queue
+(``inject`` re-initializes exactly those columns), run one chunk, then
+retire every occupied column whose loop has stopped — converged or
+iteration-capped — recording its result and latency and freeing the slot.
+Converged-but-not-yet-retired columns are bitwise frozen by the while-loop
+batching rule (``repro.core.batched``), so a retired iterate is unaffected
+by however long its slab-mates keep running.  All device computations have
+fixed (n, s) shapes: the request mix never forces a recompile.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Hashable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.batched import SlabProgram
+from repro.serve.batcher import RequestQueue, SlabKey, SolveRequest
+from repro.serve.cache import SetupCache
+
+
+@dataclasses.dataclass
+class RequestResult:
+    """Retired solve: solution + per-request telemetry."""
+
+    req_id: int
+    op_key: Hashable
+    x: np.ndarray
+    iters: int
+    converged: bool
+    res_history: np.ndarray        # recorded residual norms (trimmed)
+    latency_s: float               # submit -> retirement wall clock
+
+
+@dataclasses.dataclass
+class _Slab:
+    """Runtime state of one compiled slab (one slab key)."""
+
+    program: SlabProgram
+    B: np.ndarray                          # (n, s) host-side RHS columns
+    slots: list[SolveRequest | None]       # len s; None = free
+    state: Any = None                      # device slab state (after init)
+    B_dev: Any = None
+
+    def free_slots(self) -> list[int]:
+        return [j for j, r in enumerate(self.slots) if r is None]
+
+    def occupied(self) -> list[int]:
+        return [j for j, r in enumerate(self.slots) if r is not None]
+
+
+@dataclasses.dataclass
+class OperatorEntry:
+    op: Any
+    prec: Any
+    solver_kwargs: dict
+
+
+class SolverService:
+    """Batched multi-RHS solver service over one reduction backend.
+
+    Parameters
+    ----------
+    backend:      any ``ReductionBackend`` (local / shard_map /
+                  multiprocess) — the slab programs are compiled through
+                  its ``make_slab_program``.
+    s:            slab width (requests solved in lock-step per slab).
+    method:       "cg" | "pcg" | "plcg" (the shared METHODS keys).
+    l:            pipeline depth for plcg.
+    chunk_iters:  iterations per scheduler tick between retirement scans.
+    maxit:        iteration cap per request (trace-time constant).
+    prec:         None | "jacobi" | "block_jacobi" — per-operator setup,
+                  built through the fingerprint cache.
+    block_size:   block-Jacobi block size (default: one grid line /
+                  shard-interior heuristic left to the caller).
+    """
+
+    def __init__(self, backend, s: int = 8, method: str = "plcg",
+                 l: int = 2, chunk_iters: int = 16, maxit: int = 500,
+                 prec: str | None = None, block_size: int | None = None,
+                 replace_every: int = 0, cache: SetupCache | None = None):
+        self.backend = backend
+        self.s = int(s)
+        self.method = method
+        self.l = int(l)
+        self.chunk_iters = int(chunk_iters)
+        self.maxit = int(maxit)
+        self.prec_kind = prec
+        self.block_size = block_size
+        self.replace_every = int(replace_every)
+        self.cache = SetupCache() if cache is None else cache
+
+        self.queue = RequestQueue()
+        # Retired results are held until the caller collects them
+        # (``pop_result`` / ``drain``); latency percentiles come from a
+        # bounded reservoir so long-lived services don't grow stats state.
+        self.results: dict[int, RequestResult] = {}
+        self._latencies: deque[float] = deque(maxlen=4096)
+        self._operators: dict[Hashable, OperatorEntry] = {}
+        self._slabs: dict[SlabKey, _Slab] = {}
+        self.chunks_run = 0
+        self.retired = 0
+
+    # -------------------------------------------------------- registry ---
+    def register_operator(self, key: Hashable, op,
+                          block_size: int | None = None) -> None:
+        """One-time (cached) setup for an operator clients will solve
+        against: preconditioner factorization + Chebyshev shifts."""
+        prec = None
+        if self.prec_kind == "jacobi":
+            prec = self.cache.jacobi(op)
+        elif self.prec_kind == "block_jacobi":
+            bs = block_size or self.block_size
+            assert bs, "block_jacobi needs a block_size"
+            prec = self.cache.block_jacobi(op, bs)
+        elif self.prec_kind is not None:
+            raise ValueError(f"unknown prec kind {self.prec_kind!r}")
+        kw: dict = {"maxit": self.maxit}
+        if self.method == "plcg":
+            kw.update(l=self.l,
+                      sigmas=self.cache.sigmas(op, self.l, prec=prec))
+            if self.replace_every:
+                kw.update(replace_every=self.replace_every,
+                          max_restarts=10 + self.maxit // self.replace_every)
+        elif self.method == "pcg" and self.replace_every:
+            kw.update(replace_every=self.replace_every)
+        self._operators[key] = OperatorEntry(op=op, prec=prec,
+                                             solver_kwargs=kw)
+
+    # --------------------------------------------------------- clients ---
+    def submit(self, op_key: Hashable, b, tol: float = 1e-8) -> int:
+        """Enqueue a solve; returns the request id (see ``results``)."""
+        entry = self._operators.get(op_key)
+        assert entry is not None, f"operator {op_key!r} not registered"
+        b = np.asarray(b)
+        assert b.shape == (entry.op.n,), (b.shape, entry.op.n)
+        return self.queue.submit(op_key, b, tol).req_id
+
+    # ------------------------------------------------------- scheduler ---
+    def _slab_for(self, key: SlabKey) -> _Slab:
+        slab = self._slabs.get(key)
+        if slab is None:
+            op_key, tol = key
+            entry = self._operators[op_key]
+            program = self.backend.make_slab_program(
+                entry.op, s=self.s, method=self.method, prec=entry.prec,
+                chunk_iters=self.chunk_iters, tol=tol,
+                **entry.solver_kwargs)
+            B = np.zeros((entry.op.n, self.s))
+            slab = _Slab(program=program, B=B, slots=[None] * self.s)
+            self._slabs[key] = slab
+        return slab
+
+    def _pack(self, key: SlabKey, slab: _Slab) -> None:
+        free = slab.free_slots()
+        incoming = self.queue.take(key, len(free))
+        if not incoming and slab.state is not None:
+            return
+        refresh = np.zeros((self.s,), dtype=bool)
+        for j, req in zip(free, incoming):
+            slab.B[:, j] = req.b
+            slab.slots[j] = req
+            refresh[j] = True
+        slab.B_dev = jnp.asarray(slab.B)
+        if slab.state is None:
+            # First pack: init the whole slab (zero columns retire at 0).
+            slab.state = slab.program.init(slab.B_dev)
+        elif refresh.any():
+            slab.state = slab.program.inject(slab.B_dev, slab.state,
+                                             jnp.asarray(refresh))
+
+    def _retire(self, key: SlabKey, slab: _Slab) -> list[RequestResult]:
+        stat = slab.program.status(slab.B_dev, slab.state)
+        running = np.asarray(stat.running)
+        done = [j for j in slab.occupied() if not running[j]]
+        if not done:
+            return []
+        res = slab.program.extract(slab.B_dev, slab.state)
+        x = np.asarray(res.x)
+        iters = np.asarray(res.iters)
+        conv = np.asarray(res.converged)
+        hist = np.asarray(res.res_history)
+        now = time.perf_counter()
+        out = []
+        for j in done:
+            req = slab.slots[j]
+            h = hist[j]
+            rr = RequestResult(
+                req_id=req.req_id, op_key=req.op_key, x=x[j],
+                iters=int(iters[j]), converged=bool(conv[j]),
+                res_history=h[h >= 0], latency_s=now - req.submitted_at,
+            )
+            self.results[req.req_id] = rr
+            self._latencies.append(rr.latency_s)
+            slab.slots[j] = None
+            self.retired += 1
+            out.append(rr)
+        return out
+
+    def pop_result(self, req_id: int) -> RequestResult:
+        """Collect (and release) a retired result — the steady-state
+        client path: results held in the service are freed on collection
+        so sustained traffic doesn't accumulate solution vectors."""
+        return self.results.pop(req_id)
+
+    def step(self) -> list[RequestResult]:
+        """One scheduler tick over every slab with work: pack free slots,
+        run one chunk, retire finished columns.  Returns the requests
+        retired this tick."""
+        retired: list[RequestResult] = []
+        # Deterministic scheduling order: existing slabs in creation
+        # order, then new slab keys in queue-insertion order.
+        keys = list(self._slabs)
+        keys += [k for k in self.queue.keys() if k not in self._slabs]
+        for key in keys:
+            slab = self._slab_for(key)
+            self._pack(key, slab)
+            if not slab.occupied():
+                continue
+            slab.state = slab.program.chunk(slab.B_dev, slab.state)
+            self.chunks_run += 1
+            retired.extend(self._retire(key, slab))
+        return retired
+
+    def drain(self, max_ticks: int = 10_000) -> dict[int, RequestResult]:
+        """Run the scheduler until queue and slabs are empty."""
+        for _ in range(max_ticks):
+            if len(self.queue) == 0 and not any(
+                    s.occupied() for s in self._slabs.values()):
+                break
+            self.step()
+        else:
+            raise RuntimeError("drain: max_ticks exceeded "
+                               "(requests not converging?)")
+        return self.results
+
+    # ------------------------------------------------------- telemetry ---
+    def reset_stats(self) -> None:
+        """Zero the latency reservoir and counters (e.g. after a compile
+        warmup, so percentiles reflect steady-state traffic only)."""
+        self._latencies.clear()
+        self.chunks_run = 0
+        self.retired = 0
+
+    def stats(self) -> dict:
+        lats = sorted(self._latencies)
+
+        def pct(p):
+            if not lats:
+                return 0.0
+            return lats[min(int(p / 100 * len(lats)), len(lats) - 1)]
+
+        return {
+            "retired": self.retired,
+            "pending": len(self.queue),
+            "chunks_run": self.chunks_run,
+            "slabs": len(self._slabs),
+            "latency_p50_s": pct(50),
+            "latency_p99_s": pct(99),
+            "setup_cache": self.cache.stats(),
+        }

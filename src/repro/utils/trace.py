@@ -76,6 +76,12 @@ class OverlapReport:
     max_in_flight: int              # peak #chains issued but not consumed
     n_collectives: int              # all-reduce count in the module
     collective_bytes: float
+    # Tagged collective-start instructions per traced window — the
+    # "reduction handles issued per iteration" count.  For a healthy
+    # (batched or not) p(l)-CG schedule every window shows exactly 1:
+    # batching widens the payload, never the handle count (DESIGN.md §11).
+    starts_per_window: dict[int, int] = dataclasses.field(
+        default_factory=dict)
 
     def __str__(self) -> str:
         lines = [
@@ -141,6 +147,29 @@ def extract_events(hlo_text: str) -> list[ChainEvent]:
     return evs
 
 
+def reduction_starts_per_window(hlo_text: str) -> dict[int, int]:
+    """Count tagged COLLECTIVE start instructions per ``plwin{k}`` window.
+
+    This is the per-iteration reduction-handle count: each all-reduce (or
+    all-reduce-start) carrying both a window scope and GLRED_START_TAG in
+    its op_name is one issued handle.  The batched multi-RHS solvers must
+    keep this at exactly 1 per iteration whatever the slab width s — the
+    amortization claim of DESIGN.md §11, checked against compiled HLO in
+    tests/test_distributed.py."""
+    counts: dict[int, int] = {}
+    for _name, opcode, op_name in _entry_instructions(hlo_text):
+        if opcode not in _COLLECTIVE_START_OPS:
+            continue
+        if GLRED_START_TAG not in op_name:
+            continue
+        wm = _WINDOW_RE.search(op_name)
+        if wm is None:
+            continue
+        k = int(wm.group(1))
+        counts[k] = counts.get(k, 0) + 1
+    return counts
+
+
 def analyze_overlap(hlo_text: str, l: int, window: int | None = None
                     ) -> OverlapReport:
     """Count outstanding chains at every consumption point.
@@ -182,7 +211,9 @@ def analyze_overlap(hlo_text: str, l: int, window: int | None = None
                        if kind.startswith("all-reduce")))
     return OverlapReport(l=l, window=window, events=events, chains=chains,
                          max_in_flight=peak, n_collectives=n_coll,
-                         collective_bytes=cbytes)
+                         collective_bytes=cbytes,
+                         starts_per_window=reduction_starts_per_window(
+                             hlo_text))
 
 
 def plcg_overlap_report(
@@ -218,4 +249,51 @@ def plcg_overlap_report(
         return st.hist, st.cyc.D
 
     hlo = backend.lower_hlo(harness, op, b, prec=prec)
+    return analyze_overlap(hlo, l=l, window=window)
+
+
+def batched_plcg_overlap_report(
+    backend,
+    op,
+    B,
+    l: int,
+    window: int | None = None,
+    sigmas=None,
+    prec=None,
+) -> OverlapReport:
+    """Overlap report for the BATCHED multi-RHS p(l)-CG slab
+    (DESIGN.md §11): a flat ``window``-iteration schedule of the vmapped
+    per-column iteration, staged through ``backend`` with the slab
+    B (n, s) domain-decomposed on n.
+
+    The claims this measures: (a) the staggering survives batching —
+    ``max_in_flight >= l`` exactly as in the single-RHS trace; (b)
+    amortization — ``starts_per_window[k] == 1`` for every window: one
+    reduction handle per iteration carrying the whole (2l+1, s) payload,
+    not s handles.  ``B`` may be a ``jax.ShapeDtypeStruct``.
+    """
+    window = l + 2 if window is None else window
+    if window < 1:
+        raise ValueError("window must be >= 1")
+
+    def harness(ops, B_local):
+        def col(bcol):
+            prog = pipelined_cg.build(ops, bcol, l, tol=0.0,
+                                      maxit=window + l + 2, sigmas=sigmas)
+            st = prog.init(jnp.zeros_like(bcol))
+            for k in range(window):
+                with jax.named_scope(f"{WINDOW_SCOPE}{k}"):
+                    st = prog.iteration(
+                        st, static_phase="late" if k >= l else "early")
+            return st.hist, st.cyc.D
+
+        return jax.vmap(col, in_axes=1)(B_local)
+
+    try:
+        from jax.sharding import PartitionSpec as P
+        b_spec = P(getattr(backend, "axis", None), None) \
+            if hasattr(backend, "axis") else None
+    except ImportError:          # pragma: no cover
+        b_spec = None
+    hlo = backend.lower_hlo(harness, op, B, prec=prec, b_spec=b_spec)
     return analyze_overlap(hlo, l=l, window=window)

@@ -51,6 +51,53 @@ def test_roofline_terms_math():
     assert abs(t.useful_fraction(197e12 * 256) - 1.0) < 1e-6
 
 
+def test_autotune_reduction_payload_term():
+    """The cost model carries the reduction PAYLOAD, not just latency
+    (ISSUE 2 satellite): glred bytes scale with (2l+1)*s, the slab's
+    local work scales with s, and only the per-reduction alpha latency
+    amortizes — so per-column cost falls toward the bandwidth floor and
+    the depth choice stays correct as the batcher widens the slab."""
+    from benchmarks.timing_model import CORI, stencil_kernel_times
+    from repro.launch.autotune import (autotune_depth, model_iteration_time,
+                                       reduction_payload_bytes)
+
+    assert reduction_payload_bytes("cg", 0, s=1) == 8
+    assert reduction_payload_bytes("pcg", 0, s=4) == 2 * 4 * 8
+    assert reduction_payload_bytes("plcg", 3, s=8) == 7 * 8 * 8
+
+    # Payload reaches the glred kernel time exactly as bytes/link_bw —
+    # the term the latency-only model dropped.
+    k0 = stencil_kernel_times(CORI, 1_000_000, 512, glred_payload=0)
+    kp = stencil_kernel_times(
+        CORI, 1_000_000, 512,
+        glred_payload=reduction_payload_bytes("plcg", 3, s=2048))
+    dp = kp["glred"] - k0["glred"]
+    assert abs(dp - 7 * 2048 * 8 / CORI.link_bw) < 1e-12
+    assert dp > k0["glred"]            # payload dominates latency here
+
+    args = (CORI, 1_000_000, 512, "plcg")
+    # Slab-consistent scaling: per-slab time grows with s, while the
+    # per-COLUMN time on the serialized path strictly falls — the alpha
+    # latency amortizes over the slab (the serving win of DESIGN.md §11).
+    per_col = [model_iteration_time(*args, l=2, unroll=1, s=s,
+                                    jitter=0.0) / s
+               for s in (1, 8, 64, 1024)]
+    assert all(a > b for a, b in zip(per_col, per_col[1:]))
+    t_slab = [model_iteration_time(*args, l=2, unroll=3, s=s, jitter=0.0)
+              for s in (1, 8, 64)]
+    assert t_slab[0] < t_slab[1] < t_slab[2]
+
+    # Depth direction: narrow slabs lean on deep pipelines to hide the
+    # reduction latency; wide slabs amortize it and want shallower ones.
+    ls = (1, 2, 3, 5, 8)
+    best_narrow = autotune_depth(n=1_000_000, p=512, s=1, ls=ls,
+                                 jitter=0.0).best
+    best_wide = autotune_depth(n=1_000_000, p=512, s=4096, ls=ls,
+                               jitter=0.0).best
+    assert best_narrow.method == "plcg" and best_narrow.l >= 2
+    assert best_wide.l < best_narrow.l, (best_narrow, best_wide)
+
+
 def test_schedule_sim_limits():
     """Steady-state checks of the event simulator against Table 1:
     p(l)-CG iteration time -> max(body, glred/l) for large glred."""

@@ -48,6 +48,28 @@ def test_fused_dots(k, n, dtype):
         rtol=1e-4, atol=atol)
 
 
+@pytest.mark.parametrize("k,n,s", [(1, 128, 1), (5, 1000, 8), (7, 16384, 3),
+                                   (3, 5000, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_fused_dots_mrhs(k, n, s, dtype):
+    """Multi-RHS dot block (the slab payload, DESIGN.md §11): (K, N) x
+    (N, S) streamed in one pass == plain matmul; column 0 == the
+    single-RHS kernel."""
+    m = _arr((k, n), dtype)
+    V = _arr((n, s), dtype)
+    # the accumulator block is f32 whatever the input dtype (kernel
+    # design); abs error of an n-term f32 dot scales with sqrt(n)*eps
+    atol = 1e-4 * np.sqrt(n)
+    out = ops.fused_dots_mrhs(m, V)
+    assert out.shape == (k, s)
+    np.testing.assert_allclose(out, np.asarray(m) @ np.asarray(V),
+                               rtol=1e-4, atol=atol)
+    # single-RHS kernel agreement (both accumulate in f32; contraction
+    # order differs between the (BN, S) and (BN, 1) shapes)
+    np.testing.assert_allclose(out[:, 0], ops.fused_dots(m, V[:, 0]),
+                               rtol=1e-4, atol=atol)
+
+
 @pytest.mark.parametrize("n", [128, 1000, 70000, 200000])
 @pytest.mark.parametrize("coeffs", [(0.5, -1.25, 2.0), (0.0, 0.0, 1.0),
                                     (1e3, -1e-3, 0.1)])
