@@ -1,0 +1,110 @@
+"""Unstructured SpMV benchmark: ELL kernel throughput + partition-plan
+structure on a random FEM mesh (DESIGN.md §12).  Emits
+``BENCH_spmv.json`` for the perf trajectory; CI gates the STRUCTURAL
+metrics (``scripts/check_bench.py``), which a partitioner/ordering
+regression moves and container timing noise cannot:
+
+* ``ell_occupancy``        — useful fraction of padded ELL slots.
+* ``plan_halo_fraction``   — halo rows shipped per shard / rows owned
+                             (RCM quality: a worse ordering inflates the
+                             send sets).
+* ``plan_hops``            — neighbour-hop count (1 == the structured-
+                             stencil regime; more means the ordering
+                             failed to localize the band).
+
+Wall-clock numbers (pure-JAX apply, Pallas-interpret kernel, distributed
+halo SpMV) ride along as informational context.
+
+    PYTHONPATH=src python -m benchmarks.spmv_bench [--n 4096] [--out PATH]
+"""
+
+import argparse
+import json
+import os
+import time
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402  (after XLA_FLAGS)
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+jax.config.update("jax_enable_x64", True)
+
+from jax.sharding import PartitionSpec as P  # noqa: E402
+from repro.kernels import ops as kops  # noqa: E402
+from repro.linalg import plan_for, random_fem_mesh  # noqa: E402
+from repro.parallel.distributed import (  # noqa: E402
+    make_solver_mesh,
+    partitioned_solver_ops,
+    shard_map_compat,
+)
+
+
+def time_best(fn, repeats=5):
+    fn()                                     # warmup / compile
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=4096, help="mesh nodes")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", type=str, default="BENCH_spmv.json")
+    args = ap.parse_args()
+
+    n_dev = len(jax.devices())
+    op = random_fem_mesh(args.seed, args.n)
+    # plan_for populates the memo partitioned_solver_ops reads below —
+    # RCM + send-set construction runs once, not twice.
+    plan = plan_for(op, n_dev)
+    x = jnp.asarray(np.random.default_rng(1).standard_normal(op.n))
+
+    # --- single-device applies -------------------------------------------
+    apply_jnp = jax.jit(op.apply)
+    t_jnp = time_best(lambda: apply_jnp(x))
+    t_kern = time_best(jax.jit(
+        lambda: kops.ell_spmv_apply(x, op.cols, op.vals)))
+
+    # --- distributed halo SpMV on the simulated mesh ---------------------
+    mesh = make_solver_mesh(n_dev)
+    arrays, build, _perm = partitioned_solver_ops(op, None, n_dev, "shards")
+    arr_specs = jax.tree.map(lambda _: P("shards"), arrays)
+    fn = shard_map_compat(
+        lambda xl, loc: build(loc).apply_a(xl), mesh=mesh,
+        in_specs=(P("shards"), arr_specs), out_specs=P("shards"))
+    xp = x[jnp.asarray(plan.perm)]
+    dist = jax.jit(fn)
+    t_dist = time_best(lambda: dist(xp, arrays))
+
+    nnz = op.nnz
+    payload = {
+        "mesh_devices": n_dev,
+        "problem": {"n": op.n, "nnz": nnz, "ell_width": op.w},
+        # structural metrics (gated — deterministic given the seed):
+        "ell_occupancy": float(nnz / (op.n * op.w)),
+        "plan_halo_fraction": plan.halo_rows_fraction(),
+        "plan_hops": plan.hops,
+        "plan_bandwidth": plan.band,
+        "plan_neighbor_bytes": plan.neighbor_bytes(),
+        # informational wall-clock (not gated — container noise):
+        "jnp_spmv_s": t_jnp,
+        "kernel_interpret_spmv_s": t_kern,
+        "distributed_spmv_s": t_dist,
+        "jnp_spmv_gnnz_per_s": nnz / t_jnp / 1e9,
+    }
+    for k, v in payload.items():
+        print(f"{k}: {v}")
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -19,7 +19,7 @@ import numpy as np
 
 jax.config.update("jax_enable_x64", True)
 
-from repro.linalg import Stencil2D5, Stencil3D7
+from repro.linalg import Stencil2D5, random_fem_icesheet, rcm_reorder
 from repro.parallel import get_backend
 from repro.serve import SolverService
 
@@ -41,7 +41,10 @@ def main():
 
     ops = {
         "poisson2d": Stencil2D5(24, 24),
-        "icesheet3d": Stencil3D7(24, 6, 4, eps_z=0.1),
+        # Unstructured FEM ice-sheet (DESIGN.md §12) — RCM pre-ordered so
+        # the block-Jacobi blocks are factored in the partitioned basis.
+        "icesheet3d": rcm_reorder(random_fem_icesheet(48, 12, 4, 4,
+                                                      eps_z=0.1))[0],
     }
     for key, op in ops.items():
         svc.register_operator(key, op)

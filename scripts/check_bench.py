@@ -1,0 +1,118 @@
+#!/usr/bin/env python
+"""Benchmark regression gate: compare a freshly produced BENCH_*.json
+against the committed baseline and FAIL (exit 1) when a gated metric
+regresses by more than the allowed fraction.
+
+The serve-bench artifact stopped being informational in ISSUE 3: CI now
+runs the benchmark, then gates on the committed baseline —
+``slab_speedup_vs_sequential`` may not drop more than 20%.  The same
+gate covers the unstructured-SpMV bench (``benchmarks/spmv_bench.py``
+-> BENCH_spmv.json), whose gated metrics are *structural* (ELL
+occupancy, halo fraction) and therefore immune to CI timing noise.
+
+Usage:
+    python scripts/check_bench.py --baseline BENCH_serve.json \
+        --fresh BENCH_serve_fresh.json \
+        --gate slab_speedup_vs_sequential:0.20 [--gate key:frac ...]
+
+    python scripts/check_bench.py --selftest
+        # proves the gate trips: injects a >20% regression and asserts
+        # a nonzero problem count (CI runs this so a silently broken
+        # gate fails the build, not a future regression).
+
+Gate semantics: for higher-is-better metrics (the default), fail when
+fresh < (1 - frac) * baseline.  Prefix the key with ``-`` for
+lower-is-better metrics (latencies): fail when fresh > (1 + frac) *
+baseline.  Missing keys fail loudly — a gate that cannot see its metric
+is itself a regression.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def parse_gate(spec: str) -> tuple[str, float, bool]:
+    """'key:frac' -> (key, frac, higher_is_better)."""
+    key, _, frac = spec.partition(":")
+    if not frac:
+        raise SystemExit(f"bad --gate {spec!r} (want key:frac)")
+    higher = not key.startswith("-")
+    return key.lstrip("-"), float(frac), higher
+
+
+def check(baseline: dict, fresh: dict,
+          gates: list[tuple[str, float, bool]], verbose: bool = True) -> int:
+    """Number of violated gates (0 == within budget)."""
+    problems = 0
+    for key, frac, higher in gates:
+        if key not in baseline or key not in fresh:
+            problems += 1
+            if verbose:
+                missing = [w for w, d in (("baseline", baseline),
+                                          ("fresh", fresh)) if key not in d]
+                print(f"check_bench: GATE {key}: missing from "
+                      f"{'/'.join(missing)} — cannot gate")
+            continue
+        base, cur = float(baseline[key]), float(fresh[key])
+        if higher:
+            floor = (1.0 - frac) * base
+            ok = cur >= floor
+            verdict = f"{cur:.4g} vs floor {floor:.4g} (baseline {base:.4g})"
+        else:
+            ceil = (1.0 + frac) * base
+            ok = cur <= ceil
+            verdict = f"{cur:.4g} vs ceiling {ceil:.4g} (baseline {base:.4g})"
+        if not ok:
+            problems += 1
+        if verbose:
+            print(f"check_bench: {'ok  ' if ok else 'FAIL'} {key}: {verdict}")
+    return problems
+
+
+def selftest() -> int:
+    """The gate must trip on an injected >20% regression, pass inside
+    the budget, and fail on a missing key."""
+    base = {"slab_speedup_vs_sequential": 6.0, "latency_p99_s": 0.10}
+    gates = [("slab_speedup_vs_sequential", 0.20, True)]
+    assert check(base, {"slab_speedup_vs_sequential": 6.3}, gates,
+                 verbose=False) == 0, "improvement must pass"
+    assert check(base, {"slab_speedup_vs_sequential": 4.9}, gates,
+                 verbose=False) == 0, "18% drop is inside the 20% budget"
+    assert check(base, {"slab_speedup_vs_sequential": 4.7}, gates,
+                 verbose=False) == 1, "22% drop must fail"
+    assert check(base, {}, gates, verbose=False) == 1, \
+        "missing metric must fail"
+    lat = [("latency_p99_s", 0.5, False)]
+    assert check(base, {"latency_p99_s": 0.14}, lat, verbose=False) == 0
+    assert check(base, {"latency_p99_s": 0.16}, lat, verbose=False) == 1, \
+        "lower-is-better ceiling must fail"
+    print("check_bench: selftest OK — injected >20% regression trips "
+          "the gate")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", type=str)
+    ap.add_argument("--fresh", type=str)
+    ap.add_argument("--gate", action="append", default=[],
+                    help="key:frac (prefix key with - for lower-is-better)")
+    ap.add_argument("--selftest", action="store_true")
+    args = ap.parse_args(argv)
+    if args.selftest:
+        return selftest()
+    if not (args.baseline and args.fresh and args.gate):
+        ap.error("--baseline, --fresh and at least one --gate required")
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    gates = [parse_gate(g) for g in args.gate]
+    return 1 if check(baseline, fresh, gates) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

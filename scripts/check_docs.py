@@ -1,12 +1,15 @@
 #!/usr/bin/env python
 """Docs-citation checker: every ``DESIGN.md §N`` reference in the code
-must point at a section that actually exists in DESIGN.md.
+must point at a section that actually exists in DESIGN.md, and every
+``arXiv:NNNN.NNNNN`` paper citation must resolve to a reference listed
+in DESIGN.md (its References section) or PAPERS.md.
 
 The repo's docstrings cite design sections (e.g. ``DESIGN.md §2``,
 ``DESIGN.md §2/§8``); this grew stale once — the document didn't exist —
-so the check is wired into the test suite (tests/test_docs.py).  Exit
-status 0 when every citation resolves, 1 otherwise (with a per-citation
-report).
+so the check is wired into the test suite (tests/test_docs.py).  Paper
+ids joined the check with DESIGN.md §12: a citation nobody can look up
+is as dangling as a missing section.  Exit status 0 when every citation
+resolves, 1 otherwise (with a per-citation report).
 
 Usage:
     python scripts/check_docs.py [--root PATH]
@@ -24,6 +27,11 @@ CITE_RE = re.compile(r"DESIGN\.md[ \t]*(§\d+(?:[ \t]*/[ \t]*§\d+)*)")
 SEC_NUM_RE = re.compile(r"§(\d+)")
 # DESIGN.md section headers: "## §N — title"
 HEADER_RE = re.compile(r"^##\s*§(\d+)\b", re.MULTILINE)
+# Paper citations: "arXiv:1905.06850" in code/docstrings; reference
+# lists may also carry the id inside an arxiv.org URL.
+ARXIV_RE = re.compile(r"arXiv:(\d{4}\.\d{4,5})")
+ARXIV_ANY_RE = re.compile(r"(?:arXiv:|arxiv\.org/(?:abs|pdf)/)"
+                          r"(\d{4}\.\d{4,5})", re.IGNORECASE)
 
 # Where citations live: python sources and markdown docs.
 SCAN_DIRS = ("src", "tests", "benchmarks", "examples", "scripts")
@@ -60,6 +68,38 @@ def find_citations(root: str) -> list[tuple[str, int, int]]:
     return out
 
 
+def known_arxiv_ids(root: str) -> set[str]:
+    """arXiv ids listed in DESIGN.md or PAPERS.md (by id or URL)."""
+    ids: set[str] = set()
+    for doc in ("DESIGN.md", "PAPERS.md"):
+        path = os.path.join(root, doc)
+        if not os.path.isfile(path):
+            continue
+        with open(path, encoding="utf-8") as f:
+            ids.update(ARXIV_ANY_RE.findall(f.read()))
+    return ids
+
+
+def find_arxiv_citations(root: str) -> list[tuple[str, int, str]]:
+    """(relative path, line number, arxiv id) for every code citation."""
+    out = []
+    for d in SCAN_DIRS:
+        base = os.path.join(root, d)
+        if not os.path.isdir(base):
+            continue
+        for dirpath, _dirnames, filenames in os.walk(base):
+            for fname in sorted(filenames):
+                if not fname.endswith(SCAN_EXTS):
+                    continue
+                path = os.path.join(dirpath, fname)
+                rel = os.path.relpath(path, root)
+                with open(path, encoding="utf-8", errors="replace") as f:
+                    for lineno, line in enumerate(f, 1):
+                        for aid in ARXIV_RE.findall(line):
+                            out.append((rel, lineno, aid))
+    return out
+
+
 def check(root: str = ".", verbose: bool = True) -> int:
     """Return the number of problems (0 == docs are consistent)."""
     sections = design_sections(root)
@@ -77,9 +117,19 @@ def check(root: str = ".", verbose: bool = True) -> int:
                 print(f"check_docs: {rel}:{lineno} cites DESIGN.md §{num} "
                       f"— no such section (have: "
                       f"{', '.join(f'§{s}' for s in sorted(sections))})")
+    known = known_arxiv_ids(root)
+    acites = find_arxiv_citations(root)
+    for rel, lineno, aid in acites:
+        if aid not in known:
+            problems += 1
+            if verbose:
+                print(f"check_docs: {rel}:{lineno} cites arXiv:{aid} — not "
+                      f"listed in DESIGN.md References or PAPERS.md")
     if verbose and problems == 0:
-        print(f"check_docs: OK — {len(cites)} citation(s) across the tree, "
-              f"{len(sections)} section(s) in DESIGN.md")
+        print(f"check_docs: OK — {len(cites)} section citation(s) + "
+              f"{len(acites)} paper citation(s) across the tree, "
+              f"{len(sections)} section(s) in DESIGN.md, "
+              f"{len(known)} known reference(s)")
     return problems
 
 

@@ -1,0 +1,159 @@
+#!/usr/bin/env python
+"""Multi-controller parity check: the so-far-CI-untested ``multiprocess``
+reduction backend, actually exercised across process boundaries.
+
+Run with no arguments to LAUNCH: the script picks a free coordinator
+port and spawns ``--num-processes`` copies of itself (default 2), each a
+real ``jax.distributed`` controller with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` — a 2-process x
+4-device job whose solver mesh spans all 8 devices, so the fused
+dot-block psum and the halo ppermutes genuinely cross the process
+boundary (the paper's MPI world, DESIGN.md §3).
+
+Each process runs the same program (multi-controller SPMD): classic CG
+and p(l)-CG on a structured stencil AND an unstructured FEM SparseOp
+(DESIGN.md §12), asserting residual-history parity against the
+single-device ``local`` backend.  Replicated outputs (histories, iter
+counts) are addressable on every process; the domain-decomposed ``x``
+stays distributed and is validated through the recursive residual.
+
+CI wires this through tests/test_multiprocess.py (RUN_MULTIPROCESS=1).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import socket
+import subprocess
+import sys
+
+
+def free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def child(coordinator: str, num_processes: int, process_id: int) -> int:
+    import jax
+
+    # Cross-process CPU collectives need the gloo TCP backend (the
+    # launcher also sets JAX_CPU_COLLECTIVES_IMPLEMENTATION for jax
+    # versions that read the env var instead).
+    try:
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    except AttributeError:  # pragma: no cover - very old/new jax
+        pass
+    jax.config.update("jax_enable_x64", True)
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.chebyshev import shifts_for_operator
+    from repro.linalg import Stencil2D5, random_fem_mesh, rcm_reorder
+    from repro.parallel import get_backend
+
+    be = get_backend(
+        "multiprocess",
+        coordinator_address=coordinator,
+        num_processes=num_processes,
+        process_id=process_id,
+    )
+    n_dev = be.n_shards
+    assert jax.process_count() == num_processes, jax.process_count()
+    assert n_dev == num_processes * jax.local_device_count(), n_dev
+    print(f"[p{process_id}] {be.describe()}", flush=True)
+    local = get_backend("local")
+
+    problems = [
+        ("stencil2d", Stencil2D5(32, 24)),
+        ("fem-sparse", rcm_reorder(random_fem_mesh(0, 400))[0]),
+    ]
+    for name, op in problems:
+        b = jnp.asarray(np.random.default_rng(7).standard_normal(op.n))
+        sig = shifts_for_operator(op, 2)
+        for method, kw in (("cg", {}), ("plcg", dict(l=2, sigmas=sig))):
+            kw = dict(kw, tol=1e-8, maxit=800)
+            res_m = be.solve(op, b, method=method, **kw)
+            res_l = local.solve(op, b, method=method, **kw)
+            hm = np.asarray(res_m.res_history)
+            hl = np.asarray(res_l.res_history)
+            n0 = float(res_l.norm0)
+            m = (hm >= 0) & (hl >= 0)
+            assert m.sum() > 5, (name, method, int(m.sum()))
+            # Histories are norm0-normalized for comparison: Krylov
+            # recurrences amplify reduction-order ULPs chaotically as the
+            # residual shrinks (tests/test_distributed.py measures a 0.5
+            # relative drift from a single ULP on b), so the contract is
+            # a TIGHT head (pre-amplification — a wrong operator or halo
+            # breaks here immediately) and a bounded tail.
+            diff = np.abs(hm[m] - hl[m]) / n0
+            assert diff[:10].max() < 1e-8, (name, method, diff[:10].max())
+            assert diff.max() < 5e-2, (name, method, diff.max())
+            d_it = abs(int(res_m.iters) - int(res_l.iters))
+            assert d_it <= 5, (name, method, int(res_m.iters),
+                               int(res_l.iters))
+            assert bool(res_m.converged)
+            print(f"[p{process_id}] {name}/{method}: iters "
+                  f"{int(res_m.iters)} vs local {int(res_l.iters)}, "
+                  f"max|dh|/norm0 {diff.max():.2e}", flush=True)
+
+    print(f"[p{process_id}] MULTIPROC-PARITY-OK", flush=True)
+    return 0
+
+
+def launch(num_processes: int, devices_per_process: int) -> int:
+    coordinator = f"127.0.0.1:{free_port()}"
+    env = dict(
+        os.environ,
+        XLA_FLAGS=f"--xla_force_host_platform_device_count="
+                  f"{devices_per_process}",
+        JAX_PLATFORMS="cpu",
+        JAX_CPU_COLLECTIVES_IMPLEMENTATION="gloo",
+    )
+    env.setdefault("PYTHONPATH", "src")
+    procs = [
+        subprocess.Popen(
+            [sys.executable, os.path.abspath(__file__),
+             "--coordinator", coordinator,
+             "--num-processes", str(num_processes),
+             "--process-id", str(k)],
+            env=env, stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+            text=True,
+        )
+        for k in range(num_processes)
+    ]
+    outs = []
+    code = 0
+    for k, p in enumerate(procs):
+        try:
+            out, _ = p.communicate(timeout=900)
+        except subprocess.TimeoutExpired:
+            p.kill()
+            out, _ = p.communicate()
+            out += "\n[launcher] TIMEOUT"
+        outs.append(out)
+        code |= p.returncode if p.returncode is not None else 1
+        sys.stdout.write(out)
+    if code == 0 and all("MULTIPROC-PARITY-OK" in o for o in outs):
+        print(f"[launcher] {num_processes} processes x "
+              f"{devices_per_process} devices: PARITY OK")
+        return 0
+    print("[launcher] FAILED")
+    return 1
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--coordinator", type=str, default=None)
+    ap.add_argument("--num-processes", type=int, default=2)
+    ap.add_argument("--process-id", type=int, default=None)
+    ap.add_argument("--devices-per-process", type=int, default=4)
+    args = ap.parse_args(argv)
+    if args.process_id is None:
+        return launch(args.num_processes, args.devices_per_process)
+    return child(args.coordinator, args.num_processes, args.process_id)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -22,6 +22,7 @@ ARCH_IDS = [
     # the paper's own "architectures" — CG benchmark problems
     "laplace2d",
     "icesheet3d",
+    "icesheet3d-stencil",
 ]
 
 _MOD = {i: i.replace("-", "_").replace(".", "p") for i in ARCH_IDS}
@@ -32,5 +33,8 @@ def get_config(arch_id: str, smoke: bool = False):
     return mod.smoke_config() if smoke else mod.config()
 
 
+CG_ARCH_IDS = ("laplace2d", "icesheet3d", "icesheet3d-stencil")
+
+
 def lm_arch_ids():
-    return [i for i in ARCH_IDS if i not in ("laplace2d", "icesheet3d")]
+    return [i for i in ARCH_IDS if i not in CG_ARCH_IDS]

@@ -1,0 +1,17 @@
+"""Structured STAND-IN for the ice-sheet system: anisotropic 3D 7-point
+stencil, thin-sheet eps_z (DESIGN.md §10).  ``icesheet3d`` proper now
+routes through the unstructured operator path (DESIGN.md §12); this
+fallback keeps the matrix-free stencil kernel available at the paper's
+larger grid sizes (100x100x50 / 150x150x100 / 200x200x150 elements).
+"""
+from repro.configs.laplace2d import CGProblem
+
+
+def config():
+    return CGProblem(name="icesheet3d-stencil", kind="stencil3d",
+                     nx=256, ny=200, nz=152, eps_z=0.01, prec="blockjacobi")
+
+
+def smoke_config():
+    return CGProblem(name="icesheet3d-stencil-smoke", kind="stencil3d",
+                     nx=16, ny=12, nz=8, eps_z=0.01)

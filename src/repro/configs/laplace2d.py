@@ -6,7 +6,7 @@ import dataclasses
 @dataclasses.dataclass(frozen=True)
 class CGProblem:
     name: str
-    kind: str          # stencil2d | stencil3d | diagonal
+    kind: str          # stencil2d | stencil3d | diagonal | unstructured
     nx: int
     ny: int
     nz: int = 1
@@ -15,6 +15,7 @@ class CGProblem:
     tol: float = 1e-6
     maxit: int = 2000
     prec: str = "none"  # none | jacobi | blockjacobi
+    seed: int = 0       # mesh-generator seed (unstructured kinds only)
 
 
 def config():

@@ -1,0 +1,43 @@
+"""CGProblem -> LinearOperator builder (the one place ``kind`` strings
+are interpreted; DESIGN.md §10/§12).
+
+``unstructured`` problems route through the sparse-operator subsystem:
+the random-FEM-mesh generators build an SPD graph Laplacian which is
+RCM-pre-ordered here (``rcm_reorder``), so block-structured
+preconditioners can be factored directly on the operator that the
+distributed partitioner will shard (the partition then runs with an
+identity permutation — see ``repro.parallel.distributed``).
+"""
+
+from __future__ import annotations
+
+from repro.configs.laplace2d import CGProblem
+from repro.linalg.operators import (
+    DiagonalOp,
+    LinearOperator,
+    Stencil2D5,
+    Stencil3D7,
+    laplacian_2d_spectrum,
+)
+from repro.linalg.sparse import (
+    random_fem_icesheet,
+    random_fem_mesh,
+    rcm_reorder,
+)
+
+
+def build_operator(prob: CGProblem) -> LinearOperator:
+    if prob.kind == "stencil2d":
+        return Stencil2D5(prob.nx, prob.ny)
+    if prob.kind == "stencil3d":
+        return Stencil3D7(prob.nx, prob.ny, prob.nz, eps_z=prob.eps_z)
+    if prob.kind == "diagonal":
+        return DiagonalOp(laplacian_2d_spectrum(prob.nx, prob.ny))
+    if prob.kind == "unstructured":
+        if prob.nz > 1:
+            op = random_fem_icesheet(prob.seed, prob.nx, prob.ny, prob.nz,
+                                     eps_z=prob.eps_z)
+        else:
+            op = random_fem_mesh(prob.seed, prob.nx * prob.ny)
+        return rcm_reorder(op)[0]
+    raise ValueError(f"unknown problem kind {prob.kind!r}")

@@ -47,6 +47,14 @@ import jax.numpy as jnp
 GLRED_START_TAG = "glred_start"
 GLRED_WAIT_TAG = "glred_wait"
 
+# Scope tag on the point-to-point halo exchange (``lax.ppermute``) of the
+# distributed SpMV — both the structured stencil halo and the unstructured
+# send/recv-set exchange (``repro.linalg.partition``).  The overlap tracer
+# uses it to verify the paper's second staggering claim: neighbour
+# communication rides INSIDE the in-flight reduction windows
+# (DESIGN.md §6/§12).
+HALO_TAG = "halo_xchg"
+
 
 # ``lax.optimization_barrier`` has no batching rule (jax <= 0.4.x), which
 # would break the batched multi-RHS solvers (repro.core.batched vmaps the

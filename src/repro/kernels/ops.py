@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import decode_attention as _da
+from repro.kernels import ell_spmv as _el
 from repro.kernels import fused_axpy as _fa
 from repro.kernels import fused_dots as _fd
 from repro.kernels import stencil_spmv as _ss
@@ -52,6 +53,26 @@ def stencil3d7_apply(
     gp = jnp.pad(g, ((0, 0), (0, 0), (0, nzp - nz)))
     out = _ss.stencil3d7(gp, eps_z=eps_z, block_x=bx, interpret=interpret)
     return out[:, :, :nz]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def ell_spmv_apply(x: jax.Array, cols: jax.Array, vals: jax.Array,
+                   interpret: bool | None = None) -> jax.Array:
+    """Unstructured padded-row ELL SpMV (DESIGN.md §12).
+
+    ``x`` may be longer than the row count (the distributed path passes
+    the halo-extended local vector).  Rows are padded to a block multiple
+    with zero-value slots — exact, since padded rows are sliced off."""
+    interpret = _interpret_default() if interpret is None else interpret
+    r, w = cols.shape
+    br = 8
+    while br * 2 <= min(r, 256) and r % (br * 2) == 0:
+        br *= 2
+    rp = _round_up(r, br)
+    colsp = jnp.pad(cols, ((0, rp - r), (0, 0)))
+    valsp = jnp.pad(vals, ((0, rp - r), (0, 0)))
+    out = _el.ell_spmv(x, colsp, valsp, block_r=br, interpret=interpret)
+    return out[:r]
 
 
 @partial(jax.jit, static_argnames=("interpret",))

@@ -24,6 +24,12 @@ def stencil3d7_ref(g: jax.Array, eps_z: float = 1.0) -> jax.Array:
     )
 
 
+def ell_spmv_ref(x: jax.Array, cols: jax.Array, vals: jax.Array) -> jax.Array:
+    """Padded-row ELL SpMV: y[r] = sum_s vals[r,s] * x[cols[r,s]].
+    Padded slots carry vals 0 (their gathered x value is irrelevant)."""
+    return (vals * x[cols].astype(vals.dtype)).sum(axis=1)
+
+
 def fused_dots_ref(mat: jax.Array, vec: jax.Array) -> jax.Array:
     return (mat.astype(jnp.float32) @ vec.astype(jnp.float32)).astype(mat.dtype)
 

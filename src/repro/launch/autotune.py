@@ -86,6 +86,34 @@ def reduction_payload_bytes(method: str, l: int, s: int = 1,
     return entries * max(s, 1) * dsize
 
 
+def operator_neighbor_bytes(op, n_shards: int, dsize: int = 8) -> int:
+    """Per-iteration point-to-point halo traffic of one shard.
+
+    Structured stencils ship one boundary plane per direction; an
+    unstructured :class:`~repro.linalg.sparse.SparseOp` ships its
+    partition plan's precomputed send/recv sets
+    (``PartitionPlan.neighbor_bytes``, DESIGN.md §12).  This is the
+    ``neighbor_bytes`` input of :func:`model_iteration_time` /
+    :func:`autotune_depth` — the cost-model term that makes the tuned
+    depth react to how gather-heavy the operator's halo actually is.
+    """
+    from repro.linalg.operators import (DiagonalOp, Stencil2D5, Stencil3D7,
+                                        Stencil3D27)
+    from repro.linalg.partition import plan_for
+    from repro.linalg.sparse import SparseOp
+
+    if isinstance(op, SparseOp):
+        return plan_for(op, n_shards).neighbor_bytes(dsize)
+    if isinstance(op, DiagonalOp):
+        return 0
+    if isinstance(op, Stencil2D5):
+        return 2 * op.ny * dsize
+    if isinstance(op, (Stencil3D7, Stencil3D27)):
+        return 2 * op.ny * op.nz * dsize
+    n_loc = op.n / max(n_shards, 1)
+    return int(2 * n_loc ** (2 / 3)) * dsize    # generic surface/volume
+
+
 def xla_effective_depth(l: int, unroll: int) -> int:
     """Reductions a while-loop body can keep in flight under XLA.
 
@@ -144,6 +172,7 @@ def model_iteration_time(
     prec_factor: float = 1.0,
     s: int = 1,
     dsize: int = 8,
+    neighbor_bytes: int | None = None,
 ) -> float:
     """Modeled seconds per SLAB iteration at the XLA-effective depth.
 
@@ -157,10 +186,21 @@ def model_iteration_time(
     latency-hiding value of depth l shrinks with it (wide slabs want
     shallower pipelines; narrow ones deeper).  s=1 recovers the
     single-RHS model exactly.
+
+    ``neighbor_bytes`` is the per-iteration point-to-point halo traffic
+    of one shard (``operator_neighbor_bytes``; DESIGN.md §12).  It rides
+    the SPMV term — neighbour exchange serializes with the local stencil
+    /gather work, NOT with the hidden global reduction, so heavy halos
+    raise the iteration floor for every depth while leaving the
+    latency-hiding argument intact (the paper's Iallreduce/halo
+    staggering).  None keeps the structured surface-area default.
     """
     _require_timing_model()
+    halo_elems = None if neighbor_bytes is None \
+        else max(neighbor_bytes // (2 * dsize), 0)
     k = stencil_kernel_times(
         hw, n, p, stencil_pts=stencil_pts, prec_factor=prec_factor,
+        halo_elems=halo_elems,
         glred_payload=reduction_payload_bytes(method, l, s, dsize))
     if s > 1:
         # Slab-consistent local terms: s columns stream per iteration
@@ -191,6 +231,7 @@ def autotune_depth(
     include_baselines: bool = True,
     measure: Callable[[str, int, int], float] | None = None,
     s: int = 1,
+    neighbor_bytes: int | None = None,
 ) -> AutotuneResult:
     """Sweep (l, unroll) and pick the fastest candidate.
 
@@ -203,6 +244,9 @@ def autotune_depth(
     (``model_iteration_time``), so the autotuned depth stays correct when
     the batcher widens the dot block: wide slabs amortize the reduction
     latency and favor shallower pipelines (DESIGN.md §11).
+    ``neighbor_bytes`` (``operator_neighbor_bytes``) injects the
+    partition plan's measured halo traffic for unstructured operators
+    (DESIGN.md §12).
     """
     _require_timing_model()
     if hw is None:
@@ -212,7 +256,8 @@ def autotune_depth(
     def add(method, l, unroll):
         mdl = model_iteration_time(hw, n, p, method, l, unroll,
                                    stencil_pts=stencil_pts, jitter=jitter,
-                                   prec_factor=prec_factor, s=s)
+                                   prec_factor=prec_factor, s=s,
+                                   neighbor_bytes=neighbor_bytes)
         meas = measure(method, l, unroll) if measure is not None else None
         cands.append(Candidate(method, l, unroll, mdl, meas))
 

@@ -6,10 +6,19 @@ from repro.linalg.operators import (
     Stencil3D27,
     laplacian_2d_spectrum,
 )
+from repro.linalg.partition import PartitionPlan, partition_spd, plan_for
 from repro.linalg.preconditioners import (
     BlockJacobi,
     IdentityPrec,
     JacobiPrec,
+)
+from repro.linalg.sparse import (
+    SparseOp,
+    random_fem_icesheet,
+    random_fem_mesh,
+    rcm_reorder,
+    sparse_from_coo,
+    sparse_from_dense,
 )
 
 __all__ = [
@@ -22,4 +31,13 @@ __all__ = [
     "BlockJacobi",
     "IdentityPrec",
     "JacobiPrec",
+    "SparseOp",
+    "PartitionPlan",
+    "partition_spd",
+    "plan_for",
+    "random_fem_icesheet",
+    "random_fem_mesh",
+    "rcm_reorder",
+    "sparse_from_coo",
+    "sparse_from_dense",
 ]

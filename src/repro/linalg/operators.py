@@ -14,7 +14,11 @@ TPU adaptation note: the paper's PETSc backend stores general CSR (AIJ)
 matrices; CSR SpMV is gather-bound and TPU-hostile.  Every benchmark matrix
 in the paper is structurally a stencil, so we implement stencils natively
 (shift-add on the grid; contiguous VMEM tiles in the kernel) — the
-TPU-idiomatic equivalent of the same operator.
+TPU-idiomatic equivalent of the same operator.  GENERAL sparse SPD
+matrices (FEM meshes, SuiteSparse-class systems) live in
+``repro.linalg.sparse.SparseOp`` — padded-row ELL storage with an RCM
+partitioning layer (``repro.linalg.partition``) for the distributed
+halo-gather SpMV (DESIGN.md §12).
 """
 
 from __future__ import annotations

@@ -76,14 +76,25 @@ class BlockJacobi(Preconditioner):
         silent.  Cost: ``n_colors * block_size`` operator applications
         (independent of n).
 
-        coupling_reach: max |i-j| with A[i,j] != 0 (defaults to
-        ``block_size``, i.e. nearest-neighbour blocks — correct for the
-        grid-ordered stencils here when the block spans >= one grid line).
+        coupling_reach: max |i-j| with A[i,j] != 0.  Defaults to
+        ``block_size`` (nearest-neighbour blocks — correct for the
+        grid-ordered stencils here when the block spans >= one grid
+        line), except for unstructured :class:`~repro.linalg.sparse.
+        SparseOp` operators, whose true (post-RCM) bandwidth is measured
+        instead — probing an irregular matrix with the stencil default
+        would silently alias cross-block couplings into the extracted
+        blocks (DESIGN.md §12).
         """
         n = op.n
         assert n % block_size == 0, (n, block_size)
         nb = n // block_size
-        reach = block_size if coupling_reach is None else coupling_reach
+        if coupling_reach is None:
+            from repro.linalg.sparse import SparseOp, bandwidth
+
+            reach = bandwidth(op) if isinstance(op, SparseOp) \
+                else block_size
+        else:
+            reach = coupling_reach
         n_colors = min((reach + block_size - 1) // block_size + 2, nb)
         cols = []
         for j in range(block_size):

@@ -1,0 +1,394 @@
+"""General unstructured SPD sparse operators in block-ELL storage
+(DESIGN.md §12).
+
+The structured stencils in ``operators.py`` cover the paper's own
+benchmark matrices, but the pipelining literature the reproduction tracks
+— Cornelis/Cools/Vanroose (arXiv:1801.04728), Cools/Vanroose
+(arXiv:1706.05988) — targets *general* SPD systems (FEM ice sheets,
+SuiteSparse-style matrices) whose SpMV is an irregular gather plus
+neighbour exchange.  ``SparseOp`` closes that gap:
+
+* **Storage** is ELL (padded-row): every row holds exactly ``w`` =
+  max-nnz-per-row (column, value) slots, padded slots carrying value 0
+  and column 0.  Dense rectangular ``(n, w)`` arrays instead of CSR's
+  ragged gather — the TPU-idiomatic layout (contiguous, (8,128)-tileable;
+  the Pallas kernel in ``repro.kernels.ell_spmv`` consumes it directly).
+* **Apply** is ``(vals * x[cols]).sum(-1)`` — one gather, one
+  elementwise multiply, one small-axis reduction.  ``use_kernel=True``
+  routes through the Pallas kernel (interpret mode off-TPU, as for the
+  stencil kernels).
+* **Distribution**: ``repro.linalg.partition`` orders rows with a
+  bandwidth-reducing RCM pass, splits them into contiguous per-shard
+  blocks, and precomputes the send/recv index sets that make the
+  shard-level SpMV a local ELL product over [own rows | halo buffer]
+  (DESIGN.md §12; wired in ``repro.parallel.distributed``).
+
+Mesh generators at the bottom build random FEM-style SPD graph
+Laplacians — the workload class ``configs/icesheet3d.py`` now routes
+through instead of the anisotropic-stencil stand-in.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.linalg.operators import LinearOperator
+
+
+def ell_rowsum(vals: jax.Array, gathered: jax.Array) -> jax.Array:
+    """sum_s vals[..., s] * gathered[..., s] with an EXPLICIT left-to-right
+    add chain over the (static, small) slot axis.
+
+    ``.sum(axis=-1)`` lets XLA pick a reassociation that depends on the
+    leading shape — the single-device apply and the shard-level apply
+    would then round differently, and CG amplifies per-apply ULPs into
+    visibly diverging residual histories.  A fixed chain keeps the local
+    and distributed SpMV bitwise-identical on identical row data (the
+    backend-parity contract of tests/test_distributed.py).
+    """
+    w = vals.shape[-1]
+    acc = vals[..., 0] * gathered[..., 0]
+    for s in range(1, w):
+        acc = acc + vals[..., s] * gathered[..., s]
+    return acc
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseOp(LinearOperator):
+    """SPD sparse operator in padded-row ELL storage.
+
+    cols : (n, w) int32 — column index per slot (padded slots: 0).
+    vals : (n, w)        — value per slot (padded slots: 0.0).
+    ordered : True when the rows are already bandwidth-ordered (set by
+        :func:`rcm_reorder`); the partitioner then skips its RCM pass.
+    use_kernel : route ``apply`` through the Pallas ELL kernel
+        (interpret mode off-TPU), as for the stencil operators.
+    """
+
+    cols: jax.Array
+    vals: jax.Array
+    ordered: bool = False
+    use_kernel: bool = False
+
+    @property
+    def n(self) -> int:  # type: ignore[override]
+        return int(self.cols.shape[0])
+
+    @property
+    def w(self) -> int:
+        return int(self.cols.shape[1])
+
+    @property
+    def nnz(self) -> int:
+        return int(np.count_nonzero(np.asarray(self.vals)))
+
+    def apply(self, x: jax.Array) -> jax.Array:
+        if self.use_kernel:
+            return self.apply_kernel(x)
+        return ell_rowsum(self.vals.astype(x.dtype), x[self.cols])
+
+    def apply_kernel(self, x: jax.Array) -> jax.Array:
+        """Route the hot loop through the Pallas ELL kernel
+        (``repro.kernels.ops.ell_spmv_apply``; interpret mode off-TPU)."""
+        from repro.kernels import ops as kops
+
+        return kops.ell_spmv_apply(x, self.cols, self.vals)
+
+    def diag(self) -> jax.Array:
+        row = jnp.arange(self.n, dtype=self.cols.dtype)[:, None]
+        return jnp.where(self.cols == row, self.vals, 0.0).sum(axis=-1)
+
+    def to_dense(self) -> np.ndarray:
+        cols = np.asarray(self.cols)
+        vals = np.asarray(self.vals, dtype=np.float64)
+        a = np.zeros((self.n, self.n))
+        rows = np.repeat(np.arange(self.n), self.w)
+        # += via add.at: padded slots accumulate 0.0 into column 0 — exact.
+        np.add.at(a, (rows, cols.reshape(-1)), vals.reshape(-1))
+        return a
+
+    def eig_bounds(self) -> tuple[float, float]:
+        """Lanczos estimates of the extremal eigenvalues (setup-time
+        numpy; ~40 operator applies).
+
+        Gershgorin is useless here — a graph Laplacian's lower disc edge
+        sits at ~0 while the true lambda_min is O(shift), and the
+        Chebyshev shift schedule (``core.chebyshev``) mis-scaled that way
+        destabilizes the p(l)-CG basis (the sensitivity studied in
+        arXiv:1706.05988).  A short Lanczos recurrence nails both
+        extremes of an SPD matrix; the Ritz values are then widened
+        (15% down, 5% up) because un-reorthogonalized Lanczos approaches
+        lambda_min from above — Chebyshev shifts prefer slightly loose
+        bounds over crossing the spectrum edge.
+        """
+        cols = np.asarray(self.cols)
+        vals = np.asarray(self.vals, dtype=np.float64)
+
+        def av(x):
+            return (vals * x[cols]).sum(axis=-1)
+
+        n = self.n
+        m = min(max(2, n - 1), 60)
+        rng = np.random.default_rng(0)
+        v = rng.standard_normal(n)
+        v /= np.linalg.norm(v)
+        alphas, betas = [], []
+        v_prev = np.zeros(n)
+        beta = 0.0
+        for _ in range(m):
+            w = av(v) - beta * v_prev
+            alpha = float(v @ w)
+            w -= alpha * v
+            alphas.append(alpha)
+            beta = float(np.linalg.norm(w))
+            if beta < 1e-12:
+                break
+            betas.append(beta)
+            v_prev, v = v, w / beta
+        t = np.diag(alphas)
+        if betas:
+            k = len(alphas)
+            b = np.asarray(betas[: k - 1])
+            t = t + np.diag(b, 1) + np.diag(b, -1)
+        ritz = np.linalg.eigvalsh(t)
+        lmin, lmax = float(ritz[0]), float(ritz[-1])
+        return max(lmin * 0.85, 1e-10 * lmax), lmax * 1.05
+
+
+def sparse_from_coo(n: int, rows, cols, vals, dtype=jnp.float64,
+                    ordered: bool = False) -> SparseOp:
+    """Build a :class:`SparseOp` from COO triplets (duplicates summed)."""
+    rows = np.asarray(rows, dtype=np.int64)
+    cols = np.asarray(cols, dtype=np.int64)
+    vals = np.asarray(vals, dtype=np.float64)
+    assert rows.shape == cols.shape == vals.shape
+    assert rows.size == 0 or (rows.min() >= 0 and rows.max() < n)
+    assert cols.size == 0 or (cols.min() >= 0 and cols.max() < n)
+    # Coalesce duplicates, then pack rows into padded-ELL slots.
+    key = rows * n + cols
+    order = np.argsort(key, kind="stable")
+    key, rows, cols, vals = key[order], rows[order], cols[order], vals[order]
+    uniq, inv = np.unique(key, return_inverse=True)
+    v = np.zeros(uniq.shape[0])
+    np.add.at(v, inv, vals)
+    r, c = uniq // n, uniq % n
+    keep = v != 0.0
+    r, c, v = r[keep], c[keep], v[keep]
+    counts = np.bincount(r, minlength=n)
+    w = max(int(counts.max(initial=0)), 1)
+    slot = np.arange(r.size) - np.concatenate(
+        ([0], np.cumsum(counts)))[r]
+    ecols = np.zeros((n, w), dtype=np.int32)
+    evals = np.zeros((n, w))
+    ecols[r, slot] = c
+    evals[r, slot] = v
+    return SparseOp(cols=jnp.asarray(ecols),
+                    vals=jnp.asarray(evals, dtype=dtype), ordered=ordered)
+
+
+def sparse_from_dense(a: np.ndarray, dtype=jnp.float64,
+                      tol: float = 0.0) -> SparseOp:
+    """ELL-pack a dense matrix (tests / oracles)."""
+    a = np.asarray(a, dtype=np.float64)
+    r, c = np.nonzero(np.abs(a) > tol)
+    return sparse_from_coo(a.shape[0], r, c, a[r, c], dtype=dtype)
+
+
+# --------------------------------------------------------------------------
+# Bandwidth-reducing ordering (reverse Cuthill–McKee, pure numpy).
+# --------------------------------------------------------------------------
+
+def _neighbor_csr(op: SparseOp) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Symmetrized adjacency in CSR-ish form, built with vectorized
+    numpy (no per-edge Python loop): returns (deg, nbrs, starts) where
+    node u's neighbours are ``nbrs[starts[u]:starts[u+1]]``, presorted
+    by (degree, index) — the visit order Cuthill–McKee wants."""
+    cols = np.asarray(op.cols)
+    vals = np.asarray(op.vals)
+    n = op.n
+    rr, ss = np.nonzero(vals)
+    cc = cols[rr, ss].astype(np.int64)
+    keep = rr != cc
+    i = np.concatenate([rr[keep], cc[keep]])
+    j = np.concatenate([cc[keep], rr[keep]])     # symmetrize (A is SPD)
+    key = np.unique(i * n + j)                   # dedupe directed pairs
+    i, j = key // n, key % n
+    deg = np.bincount(i, minlength=n)
+    order = np.lexsort((j, deg[j], i))           # per-node (deg, idx) order
+    nbrs = j[order]
+    starts = np.concatenate(([0], np.cumsum(deg)))
+    return deg, nbrs, starts
+
+
+def rcm_permutation(op: SparseOp) -> np.ndarray:
+    """Reverse Cuthill–McKee ordering: ``perm[new] = old``.
+
+    BFS from a minimum-degree seed per connected component, neighbours
+    visited in increasing-degree order, final order reversed — the
+    classic bandwidth-reducing heuristic that makes contiguous row blocks
+    a good partition (remote columns concentrate in the adjacent blocks).
+    Adjacency construction is vectorized and the queue is a deque, so
+    config-scale meshes (the 500k-node ``icesheet3d``) order in seconds.
+    """
+    from collections import deque
+
+    n = op.n
+    deg, nbrs, starts = _neighbor_csr(op)
+    visited = np.zeros(n, dtype=bool)
+    order = np.empty(n, dtype=np.int64)
+    pos = 0
+    for seed in np.argsort(deg, kind="stable"):
+        if visited[seed]:
+            continue
+        visited[seed] = True
+        queue = deque([int(seed)])
+        while queue:
+            u = queue.popleft()
+            order[pos] = u
+            pos += 1
+            for v in nbrs[starts[u]:starts[u + 1]]:
+                if not visited[v]:
+                    visited[v] = True
+                    queue.append(int(v))
+    assert pos == n
+    return order[::-1].copy()
+
+
+def bandwidth(op: SparseOp) -> int:
+    """max |i - j| over structural nonzeros."""
+    cols = np.asarray(op.cols)
+    vals = np.asarray(op.vals)
+    rows = np.arange(op.n)[:, None]
+    d = np.abs(rows - cols)
+    return int(np.where(vals != 0.0, d, 0).max(initial=0))
+
+
+def permute_spd(op: SparseOp, perm: np.ndarray,
+                ordered: bool = False) -> SparseOp:
+    """Symmetric permutation P A P^T with ``perm[new] = old``."""
+    perm = np.asarray(perm, dtype=np.int64)
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(perm.size)
+    cols = np.asarray(op.cols)
+    vals = np.asarray(op.vals)
+    rows = np.repeat(np.arange(op.n), op.w)
+    keep = vals.reshape(-1) != 0.0
+    r = inv[rows[keep]]
+    c = inv[cols.reshape(-1)[keep]]
+    return sparse_from_coo(op.n, r, c, vals.reshape(-1)[keep],
+                           dtype=op.vals.dtype, ordered=ordered)
+
+
+def rcm_reorder(op: SparseOp) -> tuple[SparseOp, np.ndarray]:
+    """(RCM-ordered operator, perm) with ``perm[new] = old``.  The
+    returned operator has ``ordered=True`` so the partitioner skips its
+    own RCM pass.  Solve the permuted system with ``b[perm]`` and map the
+    solution back with ``x_orig = x_perm[inv_perm]`` (``np.argsort(perm)``)
+    — ``repro.parallel.distributed`` does this automatically."""
+    perm = rcm_permutation(op)
+    return permute_spd(op, perm, ordered=True), perm
+
+
+# --------------------------------------------------------------------------
+# Random FEM-style meshes (SPD graph Laplacians).
+# --------------------------------------------------------------------------
+
+def random_fem_mesh(seed: int, n_nodes: int, avg_degree: float = 6.0,
+                    shift: float = 0.05, dtype=jnp.float64) -> SparseOp:
+    """Random FEM-style SPD system: weighted graph Laplacian + mass shift.
+
+    Nodes are random points in the unit square; each connects to its
+    nearest neighbours (symmetrized) with weights 1/distance — the
+    stiffness pattern of an unstructured 2D triangulation.  ``shift``
+    adds ``shift * mean(diag) * I`` (the mass/boundary term) so the
+    operator is strictly SPD.
+    """
+    rng = np.random.default_rng(seed)
+    pts = rng.uniform(size=(n_nodes, 2))
+    k = max(int(round(avg_degree)), 2)
+    # k-nearest-neighbour graph via brute-force distances (setup-time
+    # numpy; fine for the config/test sizes this serves).
+    d2 = ((pts[:, None, :] - pts[None, :, :]) ** 2).sum(-1)
+    np.fill_diagonal(d2, np.inf)
+    nbr = np.argsort(d2, axis=1)[:, :k]
+    rows = np.repeat(np.arange(n_nodes), k)
+    cols = nbr.reshape(-1)
+    wgt = 1.0 / np.sqrt(d2[rows, cols] + 1e-12)
+    # Symmetrize: keep max weight per undirected edge.
+    i = np.minimum(rows, cols)
+    j = np.maximum(rows, cols)
+    key = i * n_nodes + j
+    order = np.argsort(key, kind="stable")
+    key, i, j, wgt = key[order], i[order], j[order], wgt[order]
+    uniq, first = np.unique(key, return_index=True)
+    i, j, wgt = i[first], j[first], wgt[first]
+    return _graph_laplacian(n_nodes, i, j, wgt, shift, dtype)
+
+
+def random_fem_icesheet(seed: int, nx: int, ny: int, nz: int,
+                        eps_z: float = 0.01, shift: float = 0.05,
+                        dtype=jnp.float64) -> SparseOp:
+    """Unstructured thin-sheet stand-in for SNES ex48 (DESIGN.md §12):
+    a jittered nx×ny footprint mesh extruded through nz layers, with
+    horizontal conductances O(1) and vertical conductances ``eps_z`` —
+    the vertical/horizontal aspect-ratio anisotropy of the Blatter/Pattyn
+    ice-sheet system, on an *irregular* graph instead of a stencil."""
+    rng = np.random.default_rng(seed)
+    # Jittered structured footprint: irregular geometry, mesh-like topology.
+    gx, gy = np.meshgrid(np.arange(nx, dtype=float),
+                         np.arange(ny, dtype=float), indexing="ij")
+    pts = np.stack([gx, gy], axis=-1).reshape(-1, 2)
+    pts += rng.uniform(-0.35, 0.35, size=pts.shape)
+    nf = nx * ny
+
+    def fid(ix, iy):
+        return ix * ny + iy
+
+    fi, fj = [], []
+    for ix in range(nx):
+        for iy in range(ny):
+            if ix + 1 < nx:
+                fi.append(fid(ix, iy)); fj.append(fid(ix + 1, iy))
+            if iy + 1 < ny:
+                fi.append(fid(ix, iy)); fj.append(fid(ix, iy + 1))
+            # Random diagonal per cell — breaks the structured stencil
+            # pattern the same way an unstructured triangulation would.
+            if ix + 1 < nx and iy + 1 < ny:
+                if rng.uniform() < 0.5:
+                    fi.append(fid(ix, iy)); fj.append(fid(ix + 1, iy + 1))
+                else:
+                    fi.append(fid(ix + 1, iy)); fj.append(fid(ix, iy + 1))
+    fi = np.asarray(fi); fj = np.asarray(fj)
+    dist = np.sqrt(((pts[fi] - pts[fj]) ** 2).sum(-1))
+    fw = 1.0 / (dist + 1e-6)
+
+    # Extrude: node (f, iz) = f * nz + iz; horizontal edges per layer,
+    # weak vertical edges between layers.
+    i = (fi[:, None] * nz + np.arange(nz)[None, :]).reshape(-1)
+    j = (fj[:, None] * nz + np.arange(nz)[None, :]).reshape(-1)
+    w = np.repeat(fw, nz)
+    vf = np.arange(nf)
+    vi = (vf[:, None] * nz + np.arange(nz - 1)[None, :]).reshape(-1)
+    i = np.concatenate([i, vi])
+    j = np.concatenate([j, vi + 1])
+    w = np.concatenate([w, np.full(vi.shape, eps_z)])
+    return _graph_laplacian(nf * nz, i, j, w, shift, dtype)
+
+
+def _graph_laplacian(n: int, i, j, w, shift: float, dtype) -> SparseOp:
+    """SPD operator  L + shift*mean(deg)*I  from undirected edges."""
+    rows = np.concatenate([i, j, i, j])
+    cols = np.concatenate([j, i, i, j])
+    vals = np.concatenate([-w, -w, w, w])
+    deg = np.zeros(n)
+    np.add.at(deg, i, w)
+    np.add.at(deg, j, w)
+    c = shift * float(deg.mean())
+    rows = np.concatenate([rows, np.arange(n)])
+    cols = np.concatenate([cols, np.arange(n)])
+    vals = np.concatenate([vals, np.full(n, c)])
+    return sparse_from_coo(n, rows, cols, vals, dtype=dtype)

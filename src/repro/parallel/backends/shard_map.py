@@ -28,6 +28,7 @@ from repro.core import batched as batched_mod
 from repro.core.batched import SlabProgram, SlabStatus
 from repro.core.types import SolverOps
 from repro.parallel.distributed import (
+    _permutation_wrappers,
     batched_result_specs,
     batched_state_specs,
     distributed_solve,
@@ -96,7 +97,9 @@ class ShardMapBackend(ReductionBackend):
         kw = dict(solver_kwargs)
         dtype = jnp.zeros((), jnp.float64).dtype if dtype is None else dtype
         n, axis = op.n, self.axis
-        arrays, build = partitioned_solver_ops(op, prec, self.n_shards, axis)
+        arrays, build, perm = partitioned_solver_ops(op, prec,
+                                                     self.n_shards, axis)
+        pre, post = _permutation_wrappers(perm)
         arr_specs = jax.tree.map(lambda _: P(axis), arrays)
         b_spec = P(axis, None)
 
@@ -136,22 +139,31 @@ class ShardMapBackend(ReductionBackend):
                                                             st, method, kw),
             (b_spec, st_specs, arr_specs), batched_result_specs(axis))
 
+        # The slab B crosses into the solver's (possibly RCM-permuted)
+        # basis on every entry point and the extracted solutions map back
+        # on the way out; the state itself lives permuted throughout.
         return SlabProgram(
             method=method, s=s, n=n, chunk_iters=chunk_iters,
-            init=lambda B: init_j(B, arrays),
-            chunk=lambda B, st: chunk_j(B, st, arrays),
-            inject=lambda B, st, mask: inject_j(B, st, mask, arrays),
-            status=lambda B, st: status_j(B, st, arrays),
-            extract=lambda B, st: extract_j(B, st, arrays),
+            init=lambda B: init_j(pre(B), arrays),
+            chunk=lambda B, st: chunk_j(pre(B), st, arrays),
+            inject=lambda B, st, mask: inject_j(pre(B), st, mask, arrays),
+            status=lambda B, st: status_j(pre(B), st, arrays),
+            extract=lambda B, st: post(extract_j(pre(B), st, arrays)),
         )
 
     # ----------------------------------------------------- SPMD staging --
     def _staged(self, fn: Callable[[SolverOps, jax.Array], Any], op, prec,
                 b_spec=None):
         """(wrapped_fn, arrays): shard_map-wrapped ``fn`` with replicated
-        outputs, plus the partitioned operator arrays to pass alongside."""
-        arrays, build = partitioned_solver_ops(op, prec, self.n_shards,
-                                               self.axis)
+        outputs, plus the partitioned operator arrays to pass alongside.
+
+        ``fn`` sees the solver's basis: for an RCM-partitioned SparseOp
+        the local shard of ``b`` is in permuted order — irrelevant for
+        schedule tracing (the staging use case), which often passes a
+        ShapeDtypeStruct anyway."""
+        arrays, build, _perm = partitioned_solver_ops(op, prec,
+                                                      self.n_shards,
+                                                      self.axis)
 
         def run(b_local, loc):
             return fn(build(loc), b_local)

@@ -46,7 +46,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import METHODS
 from repro.core import batched as batched_mod
-from repro.core.types import SolveResult, SolverOps
+from repro.core.types import HALO_TAG, SolveResult, SolverOps
+from repro.linalg import partition as partition_mod
 from repro.linalg.operators import (
     DiagonalOp,
     LinearOperator,
@@ -55,6 +56,7 @@ from repro.linalg.operators import (
     Stencil3D27,
 )
 from repro.linalg.preconditioners import BlockJacobi, IdentityPrec, JacobiPrec
+from repro.linalg.sparse import SparseOp
 
 
 def shard_map_compat(f, mesh, in_specs, out_specs):
@@ -108,8 +110,12 @@ def _halo_first_dim(g: jax.Array, axis: str) -> tuple[jax.Array, jax.Array]:
     if n == 1:
         z = jnp.zeros_like(g[:1])
         return z, z
-    above = lax.ppermute(g[-1:], axis, [(i, i + 1) for i in range(n - 1)])
-    below = lax.ppermute(g[:1], axis, [(i, i - 1) for i in range(1, n)])
+    # HALO_TAG scope: the overlap tracer locates these point-to-point
+    # exchanges in the compiled schedule to verify they ride inside the
+    # in-flight reduction windows (DESIGN.md §6/§12).
+    with jax.named_scope(HALO_TAG):
+        above = lax.ppermute(g[-1:], axis, [(i, i + 1) for i in range(n - 1)])
+        below = lax.ppermute(g[:1], axis, [(i, i - 1) for i in range(1, n)])
     return above, below
 
 
@@ -168,30 +174,57 @@ def _apply_3d27_local(
 # --------------------------------------------------------------------------
 
 def _partition_op(op: LinearOperator, n_shards: int):
-    """Return (arrays, build) where ``arrays`` is a pytree of global arrays
-    sharded over the solver axis, and ``build(local_arrays, axis)`` yields
-    the local apply function (for use INSIDE shard_map)."""
+    """Return (arrays, build, perm) where ``arrays`` is a pytree of global
+    arrays sharded over the solver axis, ``build(local_arrays, axis)``
+    yields the local apply function (for use INSIDE shard_map), and
+    ``perm`` is the global row ordering the partition imposed
+    (``perm[new] = old``; None when the operator keeps its own order).
+
+    Structured operators partition for free (their halo is a boundary
+    plane); a general :class:`SparseOp` goes through the partitioning
+    layer (``repro.linalg.partition``, DESIGN.md §12): RCM ordering →
+    contiguous row blocks → precomputed send/recv index sets, making the
+    shard-level SpMV local-rows + ``ppermute`` halo gather.
+    """
+    if isinstance(op, SparseOp):
+        plan = partition_mod.plan_for(op, n_shards)
+        arrays = {
+            "cols": plan.cols, "vals": plan.vals,
+            "send_up": plan.send_up, "send_dn": plan.send_dn,
+        }
+        use_kernel = op.use_kernel
+
+        def build(loc, axis):
+            return lambda x: partition_mod.apply_local(
+                x, loc["cols"][0], loc["vals"][0],
+                loc["send_up"][0], loc["send_dn"][0], axis,
+                use_kernel=use_kernel,
+            )
+
+        perm = None if plan.identity_perm else plan.perm
+        return arrays, build, perm
+
     if isinstance(op, DiagonalOp):
         arrays = {"d": op.d}
 
         def build(loc, axis):
             return lambda x: loc["d"].astype(x.dtype) * x
 
-        return arrays, build
+        return arrays, build, None
 
     if isinstance(op, Stencil2D5):
         assert op.nx % n_shards == 0, (op.nx, n_shards)
         nxl = op.nx // n_shards
         return {}, lambda loc, axis: partial(
             _apply_2d5_local, nxl=nxl, ny=op.ny, axis=axis
-        )
+        ), None
 
     if isinstance(op, Stencil3D7):
         assert op.nx % n_shards == 0, (op.nx, n_shards)
         nxl = op.nx // n_shards
         return {}, lambda loc, axis: partial(
             _apply_3d7_local, nxl=nxl, ny=op.ny, nz=op.nz, eps_z=op.eps_z, axis=axis
-        )
+        ), None
 
     if isinstance(op, Stencil3D27):
         assert op.nx % n_shards == 0, (op.nx, n_shards)
@@ -199,19 +232,32 @@ def _partition_op(op: LinearOperator, n_shards: int):
         return {}, lambda loc, axis: partial(
             _apply_3d27_local, nxl=nxl, ny=op.ny, nz=op.nz, centre=op.centre,
             axis=axis,
-        )
+        ), None
 
     raise TypeError(f"no distributed implementation for {type(op).__name__}")
 
 
-def _partition_prec(prec, op: LinearOperator, n_shards: int):
+def _partition_prec(prec, op: LinearOperator, n_shards: int, perm=None):
+    """As ``_partition_op`` for the preconditioner.  ``perm`` is the row
+    ordering the operator partition imposed: pointwise preconditioners
+    are permuted to match; block-structured ones cannot be re-blocked
+    after the fact — pre-order the operator (``sparse.rcm_reorder``) and
+    factor the preconditioner in that basis instead."""
     if prec is None or isinstance(prec, IdentityPrec):
         return {}, lambda loc, axis: (lambda x: x)
     if isinstance(prec, JacobiPrec):
-        arrays = {"inv_diag": prec.inv_diag}
+        inv_diag = prec.inv_diag if perm is None \
+            else prec.inv_diag[jnp.asarray(perm)]
+        arrays = {"inv_diag": inv_diag}
         return arrays, lambda loc, axis: (
             lambda x: loc["inv_diag"].astype(x.dtype) * x
         )
+    if perm is not None:
+        raise TypeError(
+            f"{type(prec).__name__} is block-structured and cannot follow "
+            "the partitioner's RCM reordering; reorder the operator first "
+            "(repro.linalg.sparse.rcm_reorder) and build the "
+            "preconditioner from the ordered operator")
     if isinstance(prec, BlockJacobi):
         nb, bs, _ = prec.inv_blocks.shape
         assert (op.n // n_shards) % bs == 0, (
@@ -235,10 +281,14 @@ def _partition_prec(prec, op: LinearOperator, n_shards: int):
 
 
 def partitioned_solver_ops(op, prec, n_shards: int, axis: str = "shards"):
-    """(arrays, build) for a full SolverOps: build(local_arrays, axis) must be
-    called inside shard_map; dot_block is ONE fused psum over ``axis``."""
-    op_arrays, op_build = _partition_op(op, n_shards)
-    pr_arrays, pr_build = _partition_prec(prec, op, n_shards)
+    """(arrays, build, perm) for a full SolverOps: build(local_arrays,
+    axis) must be called inside shard_map; dot_block is ONE fused psum
+    over ``axis``.  ``perm`` (``perm[new] = old``, or None) is the row
+    ordering the partition imposed — callers permute b on the way in and
+    un-permute x on the way out (the solver runs entirely in the
+    permuted basis; every scalar it derives is permutation-invariant)."""
+    op_arrays, op_build, perm = _partition_op(op, n_shards)
+    pr_arrays, pr_build = _partition_prec(prec, op, n_shards, perm)
     arrays = {"op": op_arrays, "prec": pr_arrays}
 
     def build(loc) -> SolverOps:
@@ -254,7 +304,29 @@ def partitioned_solver_ops(op, prec, n_shards: int, axis: str = "shards"):
         return SolverOps.create(apply_a=apply_a, prec=prec_fn,
                                 dot_block=dot_block)
 
-    return arrays, build
+    return arrays, build, perm
+
+
+def _permutation_wrappers(perm):
+    """(pre, post) callables for a partition-imposed row ordering: ``pre``
+    maps an (n,) or (n, s) operand into the permuted basis, ``post`` maps
+    a SolveResult's solution back.  Identity pass-throughs for None."""
+    if perm is None:
+        return (lambda b: b), (lambda res: res)
+    pj = jnp.asarray(perm)
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(perm.size)
+    ij = jnp.asarray(inv)
+
+    def pre(b):
+        return b[pj]
+
+    def post(res: SolveResult) -> SolveResult:
+        x = res.x
+        # single-RHS x is (n,); batched results carry a leading s-axis.
+        return res._replace(x=x[ij] if x.ndim == 1 else x[..., ij])
+
+    return pre, post
 
 
 # One dispatch table for every substrate (repro.core.METHODS).
@@ -304,17 +376,22 @@ def distributed_solve_batched(
     axis = mesh.axis_names[0]
     n_shards = mesh.devices.size
     assert B.shape[0] % n_shards == 0
-    arrays, build = partitioned_solver_ops(op, prec, n_shards, axis)
+    arrays, build, perm = partitioned_solver_ops(op, prec, n_shards, axis)
+    pre, post = _permutation_wrappers(perm)
 
     def run(B_local, local_arrays):
         ops = build(local_arrays)
         return batched_mod.solve_batched(ops, B_local, method, **kwargs)
 
     arr_specs = jax.tree.map(lambda _: P(axis), arrays)
-    fn = shard_map_compat(
+    inner = shard_map_compat(
         run, mesh=mesh, in_specs=(P(axis, None), arr_specs),
         out_specs=batched_result_specs(axis),
     )
+
+    def fn(B, arrays):
+        return post(inner(pre(B), arrays))
+
     if not jit:
         return fn, arrays
     return jax.jit(fn)(B, arrays)
@@ -337,7 +414,8 @@ def distributed_solve(
     axis = mesh.axis_names[0]
     n_shards = mesh.devices.size
     assert b.shape[0] % n_shards == 0
-    arrays, build = partitioned_solver_ops(op, prec, n_shards, axis)
+    arrays, build, perm = partitioned_solver_ops(op, prec, n_shards, axis)
+    pre, post = _permutation_wrappers(perm)
 
     def run(b_local, local_arrays):
         ops = build(local_arrays)
@@ -348,9 +426,13 @@ def distributed_solve(
         res_history=P(), norm0=P(),
     )
     arr_specs = jax.tree.map(lambda _: P(axis), arrays)
-    fn = shard_map_compat(
+    inner = shard_map_compat(
         run, mesh=mesh, in_specs=(P(axis), arr_specs), out_specs=out_specs,
     )
+
+    def fn(b, arrays):
+        return post(inner(pre(b), arrays))
+
     if not jit:
         return fn, arrays
     jfn = jax.jit(fn)

@@ -68,6 +68,8 @@ class SetupCache:
 
     # ------------------------------------------------- cached setups ----
     def block_jacobi(self, op, block_size: int) -> BlockJacobi:
+        # from_operator picks the right coupling reach per operator type
+        # (stencils: block_size; SparseOp: measured bandwidth).
         fp = operator_fingerprint(op)
         return self.get("block_jacobi", (fp, block_size),
                         lambda: BlockJacobi.from_operator(op, block_size))
@@ -76,6 +78,21 @@ class SetupCache:
         fp = operator_fingerprint(op)
         return self.get("jacobi", (fp,),
                         lambda: JacobiPrec.from_operator(op))
+
+    def partition(self, op, n_shards: int):
+        """Partition plan of an unstructured operator (DESIGN.md §12):
+        RCM ordering + send/recv index-set construction is setup-time
+        numpy work on the same once-per-operator footing as the
+        block-Jacobi factorization.  Keyed by operator fingerprint +
+        shard count, and shared with the module-level memo the
+        distributed path uses directly
+        (``repro.linalg.partition.plan_for``), so a solve that already
+        partitioned the operator is a hit here and vice versa."""
+        from repro.linalg.partition import plan_for
+
+        fp = operator_fingerprint(op)
+        return self.get("partition", (fp, n_shards),
+                        lambda: plan_for(op, n_shards))
 
     def sigmas(self, op, l: int, prec=None):
         """Chebyshev shift schedule — for the PRECONDITIONED operator when

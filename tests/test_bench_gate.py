@@ -1,0 +1,82 @@
+"""The CI benchmark regression gate (scripts/check_bench.py): the gate
+must pass within budget, trip on a >threshold drop, fail loudly on
+missing metrics, and its CLI must exit nonzero on an injected
+regression — the 'demonstrably fails' half of the ISSUE 3 acceptance."""
+
+import json
+import os
+import subprocess
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "scripts"))
+
+import check_bench  # noqa: E402
+
+
+BASE = {"slab_speedup_vs_sequential": 6.0, "ell_occupancy": 0.6,
+        "plan_halo_fraction": 0.5, "plan_hops": 1}
+GATE = [("slab_speedup_vs_sequential", 0.20, True)]
+
+
+def test_within_budget_passes():
+    assert check_bench.check(
+        BASE, {"slab_speedup_vs_sequential": 5.0}, GATE, verbose=False) == 0
+    assert check_bench.check(
+        BASE, {"slab_speedup_vs_sequential": 9.0}, GATE, verbose=False) == 0
+
+
+def test_injected_regression_fails():
+    assert check_bench.check(
+        BASE, {"slab_speedup_vs_sequential": 4.0}, GATE, verbose=False) == 1
+
+
+def test_boundary_is_20_percent():
+    ok = {"slab_speedup_vs_sequential": 6.0 * 0.801}
+    bad = {"slab_speedup_vs_sequential": 6.0 * 0.799}
+    assert check_bench.check(BASE, ok, GATE, verbose=False) == 0
+    assert check_bench.check(BASE, bad, GATE, verbose=False) == 1
+
+
+def test_missing_metric_fails():
+    assert check_bench.check(BASE, {}, GATE, verbose=False) == 1
+    assert check_bench.check({}, {"slab_speedup_vs_sequential": 6.0},
+                             GATE, verbose=False) == 1
+
+
+def test_lower_is_better_gates():
+    gates = [check_bench.parse_gate("-plan_halo_fraction:0.20"),
+             check_bench.parse_gate("-plan_hops:0.0")]
+    assert check_bench.check(
+        BASE, {"plan_halo_fraction": 0.55, "plan_hops": 1}, gates,
+        verbose=False) == 0
+    assert check_bench.check(
+        BASE, {"plan_halo_fraction": 0.65, "plan_hops": 1}, gates,
+        verbose=False) == 1
+    assert check_bench.check(
+        BASE, {"plan_halo_fraction": 0.5, "plan_hops": 2}, gates,
+        verbose=False) == 1
+
+
+def test_selftest_and_cli_exit_codes(tmp_path):
+    script = os.path.join(os.path.dirname(__file__), "..", "scripts",
+                          "check_bench.py")
+    out = subprocess.run([sys.executable, script, "--selftest"],
+                         capture_output=True, text=True)
+    assert out.returncode == 0, out.stdout + out.stderr
+
+    basef = tmp_path / "base.json"
+    freshf = tmp_path / "fresh.json"
+    basef.write_text(json.dumps(BASE))
+    # CLI exit 1 on a 30% drop, 0 when within budget
+    freshf.write_text(json.dumps({"slab_speedup_vs_sequential": 4.2}))
+    out = subprocess.run(
+        [sys.executable, script, "--baseline", str(basef), "--fresh",
+         str(freshf), "--gate=slab_speedup_vs_sequential:0.20"],
+        capture_output=True, text=True)
+    assert out.returncode == 1, out.stdout
+    freshf.write_text(json.dumps({"slab_speedup_vs_sequential": 5.9}))
+    out = subprocess.run(
+        [sys.executable, script, "--baseline", str(basef), "--fresh",
+         str(freshf), "--gate=slab_speedup_vs_sequential:0.20"],
+        capture_output=True, text=True)
+    assert out.returncode == 0, out.stdout

@@ -98,6 +98,33 @@ def test_autotune_reduction_payload_term():
     assert best_wide.l < best_narrow.l, (best_narrow, best_wide)
 
 
+def test_autotune_neighbor_bytes_term():
+    """ISSUE 3 satellite: the cost model carries the point-to-point halo
+    traffic of the unstructured SpMV.  Neighbour bytes ride the SPMV
+    term (they serialize with local work), so they raise the floor at
+    EVERY depth and leave the latency-hiding ranking intact — unlike the
+    glred payload they cannot be hidden by a deeper pipeline."""
+    from repro.launch.autotune import model_iteration_time
+
+    def t(l, nb):
+        from benchmarks.timing_model import CORI
+        return model_iteration_time(CORI, 4_000_000, 512, "plcg", l=l,
+                                    unroll=l + 1, jitter=0.0,
+                                    neighbor_bytes=nb)
+
+    for l in (1, 2, 3):
+        assert t(l, 8_000_000) > t(l, 8_000)
+    # the halo penalty is depth-independent: deltas match across l
+    d2 = t(2, 8_000_000) - t(2, 8_000)
+    d3 = t(3, 8_000_000) - t(3, 8_000)
+    assert abs(d2 - d3) / d2 < 1e-9
+    # neighbor_bytes=None keeps the structured surface-term default
+    from benchmarks.timing_model import CORI
+    base = model_iteration_time(CORI, 4_000_000, 512, "plcg", l=2,
+                                unroll=3, jitter=0.0)
+    assert base > 0
+
+
 def test_schedule_sim_limits():
     """Steady-state checks of the event simulator against Table 1:
     p(l)-CG iteration time -> max(body, glred/l) for large glred."""

@@ -1,0 +1,191 @@
+"""Unstructured sparse subsystem (DESIGN.md §12): SparseOp storage /
+apply parity vs to_dense, the RCM ordering, the partition plan's
+send/recv index sets (validated by a pure-numpy halo emulation), plan
+caching, and solver integration — plus hypothesis-generated SPD graph
+Laplacians when hypothesis is installed."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.chebyshev import shifts_for_operator
+from repro.linalg import (
+    SparseOp,
+    partition_spd,
+    plan_for,
+    random_fem_icesheet,
+    random_fem_mesh,
+    rcm_reorder,
+    sparse_from_coo,
+    sparse_from_dense,
+)
+from repro.linalg.partition import emulate_partitioned_apply
+from repro.linalg.sparse import bandwidth, permute_spd
+from repro.parallel import get_backend
+
+RNG = np.random.default_rng(11)
+
+
+# ----------------------------------------------------------- storage ----
+
+def test_coo_roundtrip_and_duplicate_coalescing():
+    n = 6
+    rows = [0, 0, 1, 2, 5, 0]
+    cols = [0, 3, 1, 2, 5, 3]          # (0,3) appears twice -> summed
+    vals = [2.0, 1.0, 3.0, 4.0, 5.0, 0.5]
+    op = sparse_from_coo(n, rows, cols, vals)
+    a = np.zeros((n, n))
+    for r, c, v in zip(rows, cols, vals):
+        a[r, c] += v
+    np.testing.assert_allclose(op.to_dense(), a)
+    assert op.w == 2                    # row 0 has two distinct columns
+
+
+def test_dense_roundtrip_apply_diag():
+    a = RNG.standard_normal((20, 20))
+    a = a @ a.T + 20 * np.eye(20)
+    op = sparse_from_dense(a)
+    np.testing.assert_allclose(op.to_dense(), a, atol=1e-12)
+    x = jnp.asarray(RNG.standard_normal(20))
+    np.testing.assert_allclose(op.apply(x), a @ np.asarray(x), atol=1e-10)
+    np.testing.assert_allclose(op.diag(), np.diagonal(a), atol=1e-12)
+
+
+@pytest.mark.parametrize("gen", [
+    lambda: random_fem_mesh(0, 96, avg_degree=5),
+    lambda: random_fem_mesh(1, 250),
+    lambda: random_fem_icesheet(2, 8, 6, 4, eps_z=0.05),
+])
+def test_generators_spd_and_apply_parity(gen):
+    op = gen()
+    a = op.to_dense()
+    np.testing.assert_allclose(a, a.T, atol=1e-12)
+    w = np.linalg.eigvalsh(a)
+    assert w[0] > 0, "generated operator must be SPD"
+    x = jnp.asarray(RNG.standard_normal(op.n))
+    np.testing.assert_allclose(op.apply(x), a @ np.asarray(x), atol=1e-9)
+    # Lanczos eig ESTIMATES land in the right neighbourhood: the upper
+    # bound brackets lambda_max (fast Ritz convergence + 5% margin); the
+    # lower one is within a small factor of lambda_min — what the
+    # Chebyshev shift schedule needs (order of magnitude, not exactness;
+    # the Gershgorin bound it replaced was off by ~100x here).
+    lmin, lmax = op.eig_bounds()
+    assert lmax >= w[-1] * 0.999 and lmax < 1.5 * w[-1]
+    assert 0.3 * w[0] < lmin <= 1.2 * w[0]
+
+
+# ---------------------------------------------------------- ordering ----
+
+def test_rcm_reduces_bandwidth_and_preserves_spectrum():
+    op = random_fem_mesh(0, 300)
+    oop, perm = rcm_reorder(op)
+    assert bandwidth(oop) < bandwidth(op)
+    a = op.to_dense()
+    np.testing.assert_allclose(oop.to_dense(), a[np.ix_(perm, perm)],
+                               atol=1e-12)
+    w0 = np.linalg.eigvalsh(a)
+    w1 = np.linalg.eigvalsh(oop.to_dense())
+    np.testing.assert_allclose(w0, w1, rtol=1e-9)
+
+
+def test_permute_spd_identity():
+    op = random_fem_mesh(4, 64)
+    perm = np.arange(64)
+    np.testing.assert_allclose(permute_spd(op, perm).to_dense(),
+                               op.to_dense(), atol=1e-14)
+
+
+# --------------------------------------------------------- partition ----
+
+@pytest.mark.parametrize("gen,n_shards", [
+    (lambda: random_fem_mesh(0, 96, avg_degree=5), 8),   # multi-hop halo
+    (lambda: random_fem_mesh(1, 400), 8),                # one-hop halo
+    (lambda: random_fem_icesheet(2, 10, 6, 4, eps_z=0.05), 8),
+    (lambda: random_fem_mesh(5, 120), 4),
+    (lambda: random_fem_mesh(6, 75), 1),                 # degenerate S=1
+])
+def test_partition_plan_send_recv_sets(gen, n_shards):
+    op = gen()
+    plan = partition_spd(op, n_shards)
+    a = op.to_dense()
+    x = RNG.standard_normal(op.n)
+    xp = x[plan.perm]
+    y = emulate_partitioned_apply(plan, xp)
+    yref = a[np.ix_(plan.perm, plan.perm)] @ xp
+    np.testing.assert_allclose(y, yref, atol=1e-11)
+    assert plan.halo_rows_fraction() > 0 or n_shards == 1
+    assert 0 < plan.occupancy() <= 1.0
+    # send-bytes convention shared with the structured operators (one
+    # per-direction buffer x 2 directions; see PartitionPlan.neighbor_bytes)
+    assert plan.neighbor_bytes() == 2 * plan.hops * plan.max_send * 8
+
+
+def test_partition_requires_divisible_n():
+    op = random_fem_mesh(0, 90)
+    with pytest.raises(AssertionError, match="n % n_shards"):
+        partition_spd(op, 8)
+
+
+def test_plan_cache_memoizes():
+    from repro.linalg.partition import _PLAN_CACHE
+
+    op = random_fem_mesh(7, 80)
+    before = len(_PLAN_CACHE)
+    p1 = plan_for(op, 4)
+    p2 = plan_for(SparseOp(cols=op.cols, vals=op.vals), 4)  # equal content
+    assert p1 is p2
+    assert len(_PLAN_CACHE) == before + 1
+
+
+def test_setup_cache_partition_fingerprinting():
+    from repro.serve.cache import SetupCache
+
+    cache = SetupCache()
+    op = random_fem_mesh(8, 80)
+    p1 = cache.partition(op, 4)
+    p2 = cache.partition(SparseOp(cols=op.cols, vals=op.vals), 4)
+    assert p1 is p2
+    st = cache.stats()
+    assert st["hits"] == 1 and st["misses"] == 1
+
+
+# ------------------------------------------------------------ solvers ----
+
+@pytest.mark.parametrize("method", ["cg", "pcg", "plcg"])
+def test_local_solver_on_sparse_operator(method):
+    op = random_fem_mesh(9, 150)
+    b = jnp.asarray(RNG.standard_normal(op.n))
+    kw = dict(method=method, tol=1e-10, maxit=1000)
+    if method == "plcg":
+        kw.update(l=2, sigmas=shifts_for_operator(op, 2))
+    res = get_backend("local").solve(op, b, **kw)
+    assert bool(res.converged)
+    xd = np.linalg.solve(op.to_dense(), np.asarray(b))
+    assert np.abs(np.asarray(res.x) - xd).max() < 1e-7
+
+
+def test_autotuner_neighbor_bytes_term():
+    """The cost model reacts to the partition plan's halo traffic: more
+    neighbour bytes -> slower modeled iteration, and the SparseOp hook
+    reports exactly the plan's send/recv volume (DESIGN.md §12)."""
+    from repro.launch.autotune import (model_iteration_time,
+                                       operator_neighbor_bytes)
+    from benchmarks.timing_model import CORI
+
+    op = random_fem_mesh(10, 400)
+    nb = operator_neighbor_bytes(op, 8)
+    assert nb == plan_for(op, 8).neighbor_bytes()
+    t_small = model_iteration_time(CORI, 4_000_000, 512, "plcg", l=2,
+                                   unroll=3, neighbor_bytes=1_000)
+    t_big = model_iteration_time(CORI, 4_000_000, 512, "plcg", l=2,
+                                 unroll=3, neighbor_bytes=10_000_000)
+    assert t_big > t_small
+
+
+# Hypothesis-generated SPD graph Laplacians live in
+# tests/test_sparse_properties.py (whole-module skip when hypothesis is
+# absent, same pattern as tests/test_properties.py).

@@ -1,0 +1,82 @@
+"""Hypothesis property tests for the unstructured sparse subsystem
+(DESIGN.md §12): SparseOp parity vs ``to_dense()`` and partition-plan
+correctness on arbitrary generated SPD graph Laplacians.
+
+``hypothesis`` is an optional test dependency (pyproject's ``test``
+extra); environments without it skip this module instead of failing
+collection — same pattern as tests/test_properties.py.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed "
+                    "(pip install -e .[test])")
+import hypothesis as hyp  # noqa: E402
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.chebyshev import shifts_for_operator  # noqa: E402
+from repro.core.types import SolverOps  # noqa: E402
+from repro.core import pipelined_cg  # noqa: E402
+from repro.linalg import partition_spd  # noqa: E402
+from repro.linalg.partition import emulate_partitioned_apply  # noqa: E402
+from repro.linalg.sparse import _graph_laplacian  # noqa: E402
+
+
+@st.composite
+def graph_laplacians(draw):
+    """Random SPD graph Laplacians: an arbitrary undirected edge set
+    with positive weights + a positive diagonal (mass) shift — the FEM
+    stiffness-matrix class of arXiv:1801.04728's test set."""
+    n = draw(st.integers(min_value=4, max_value=24))
+    n_edges = draw(st.integers(min_value=n - 1, max_value=3 * n))
+    edges = draw(st.lists(
+        st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
+        min_size=n_edges, max_size=n_edges))
+    weights = draw(st.lists(
+        st.floats(min_value=0.1, max_value=10.0, allow_nan=False),
+        min_size=n_edges, max_size=n_edges))
+    shift = draw(st.floats(min_value=0.05, max_value=2.0))
+    i = np.array([min(e) for e in edges])
+    j = np.array([max(e) for e in edges])
+    keep = i != j
+    i, j, w = i[keep], j[keep], np.asarray(weights)[keep]
+    hyp.assume(keep.sum() >= 1)
+    return _graph_laplacian(n, i, j, w, shift, jnp.float64)
+
+
+@given(graph_laplacians())
+@settings(max_examples=30, deadline=None)
+def test_sparse_apply_matches_dense(op):
+    """INVARIANT: SparseOp.apply == to_dense() @ x, the operator is SPD,
+    and the 4-shard partition plan reproduces the dense product through
+    its send/recv sets (when n divides)."""
+    a = op.to_dense()
+    np.testing.assert_allclose(a, a.T, atol=1e-12)
+    assert np.linalg.eigvalsh(a)[0] > 0
+    x = np.random.default_rng(0).standard_normal(op.n)
+    np.testing.assert_allclose(op.apply(jnp.asarray(x)), a @ x, atol=1e-9)
+    if op.n % 4 == 0:
+        plan = partition_spd(op, 4)
+        xp = x[plan.perm]
+        y = emulate_partitioned_apply(plan, xp)
+        np.testing.assert_allclose(y, a[np.ix_(plan.perm, plan.perm)] @ xp,
+                                   atol=1e-9)
+
+
+@given(graph_laplacians(), st.integers(1, 3))
+@settings(max_examples=10, deadline=None)
+def test_plcg_solves_generated_laplacians(op, l):
+    """INVARIANT: p(l)-CG solves every generated SPD graph Laplacian to
+    tolerance (breakdown restarts included)."""
+    b = jnp.asarray(np.random.default_rng(1).standard_normal(op.n))
+    res = pipelined_cg.solve(SolverOps.local(op), b, l=l,
+                             sigmas=shifts_for_operator(op, l),
+                             tol=1e-9, maxit=50 * op.n)
+    xd = np.linalg.solve(op.to_dense(), np.asarray(b))
+    assert np.abs(np.asarray(res.x) - xd).max() < 1e-5
