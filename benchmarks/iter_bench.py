@@ -1,0 +1,120 @@
+"""Fused-iteration benchmark: HBM bytes and wall time per p(l)-CG
+iteration, fused superkernel vs the unfused reference path
+(DESIGN.md §13).  Emits ``BENCH_iter.json``; CI gates two STRUCTURAL
+ratios (``scripts/check_bench.py --ratio-gate``), deterministic where
+container timing noise is not: modeled fused bytes <= 0.6x measured
+unfused (trips on slab-layout growth or unfused drift), and measured
+interpret-mode fused bytes <= 1.15x unfused (fully measured — trips
+when an extra slab pass sneaks INTO the kernel body).
+
+Byte accounting (the DESIGN.md §13 roofline, asserted in
+tests/test_fused_iter.py):
+
+* ``unfused_bytes_per_iter`` — XLA ``cost_analysis`` 'bytes accessed'
+  of the compiled unfused iteration
+  (``launch.autotune.measured_iteration_bytes``): the ~dozen separate
+  passes over the (NV, N) slab, measured, not estimated.
+* ``fused_bytes_per_iter`` — the TPU accounting of the compiled
+  superkernel (``launch.autotune.fused_iteration_bytes``): an opaque
+  custom call reads its operands and writes its results ONCE — slab in,
+  slab out (aliased), resident SPMV operand, O(l) scalars.
+* ``fused_bytes_interpret_measured`` — honesty column: cost_analysis of
+  the interpret-mode fused iteration as it runs on THIS container,
+  where the interpreter re-materializes kernel-interior temporaries
+  (expected ~= unfused; the kernel's one-pass property is a property of
+  the Mosaic compilation, not of the interpreter).
+
+Wall clocks (informational, not gated): seconds/iteration of the
+compiled local solver, fused vs unfused, measured by differencing two
+iteration budgets as in ``launch.autotune.measured_runner``.
+
+    PYTHONPATH=src python -m benchmarks.iter_bench [--nx 256] [--out PATH]
+"""
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import pipelined_cg  # noqa: E402
+from repro.core.chebyshev import shifts_for_operator  # noqa: E402
+from repro.core.types import SolverOps  # noqa: E402
+from repro.launch.autotune import (  # noqa: E402
+    fused_iteration_bytes,
+    measured_iteration_bytes,
+)
+from repro.linalg.operators import Stencil2D5  # noqa: E402
+
+
+def time_per_iter(op, b, sig, l, fused, iters=(20, 60), repeats=3):
+    ops = SolverOps.local(op)
+
+    def run(maxit):
+        fn = jax.jit(lambda bb: pipelined_cg.solve(
+            ops, bb, l, sigmas=sig, tol=0.0, maxit=maxit,
+            fused_iteration=fused))
+        jax.block_until_ready(fn(b).x)       # compile + warmup
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(b).x)
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    lo, hi = iters
+    t_lo, t_hi = run(lo), run(hi)
+    if t_hi <= t_lo:
+        return t_hi / hi
+    return (t_hi - t_lo) / (hi - lo)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nx", type=int, default=256)
+    ap.add_argument("--ny", type=int, default=256)
+    ap.add_argument("--l", type=int, default=2)
+    ap.add_argument("--out", type=str, default="BENCH_iter.json")
+    ap.add_argument("--skip-timing", action="store_true",
+                    help="structural bytes only (fast CI path)")
+    args = ap.parse_args()
+
+    op = Stencil2D5(args.nx, args.ny)
+    l = args.l
+    sig = shifts_for_operator(op, l)
+    b = jnp.asarray(np.random.default_rng(0).standard_normal(op.n))
+
+    unfused_bytes = measured_iteration_bytes(op, l, sigmas=sig, fused=False)
+    fused_meas = measured_iteration_bytes(op, l, sigmas=sig, fused=True)
+    fused_bytes = float(fused_iteration_bytes(op.n, l))
+
+    payload = {
+        "problem": {"n": op.n, "nx": args.nx, "ny": args.ny, "l": l},
+        # structural (gated): the fused one-pass traffic vs the measured
+        # unfused multi-pass traffic — deterministic given shapes.
+        "unfused_bytes_per_iter": unfused_bytes,
+        "fused_bytes_per_iter": fused_bytes,
+        "fused_over_unfused_bytes": fused_bytes / unfused_bytes,
+        "fused_bytes_interpret_measured": fused_meas,
+        "slab_passes_unfused": unfused_bytes / (op.n * 8),
+        "slab_passes_fused": fused_bytes / (op.n * 8),
+    }
+    if not args.skip_timing:
+        payload["unfused_time_per_iter_s"] = time_per_iter(
+            op, b, sig, l, fused=False)
+        payload["fused_time_per_iter_s"] = time_per_iter(
+            op, b, sig, l, fused=True)
+    for k, v in payload.items():
+        print(f"{k}: {v}")
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,10 +1,15 @@
 """Unstructured SpMV benchmark: ELL kernel throughput + partition-plan
-structure on a random FEM mesh (DESIGN.md §12).  Emits
+structure on a random FEM mesh (DESIGN.md §12/§13).  Emits
 ``BENCH_spmv.json`` for the perf trajectory; CI gates the STRUCTURAL
 metrics (``scripts/check_bench.py``), which a partitioner/ordering
 regression moves and container timing noise cannot:
 
-* ``ell_occupancy``        — useful fraction of padded ELL slots.
+* ``ell_occupancy``        — useful fraction of stored ELL slots in the
+                             production SLICED-ELL layout (degree-sorted
+                             row buckets, per-slice padding;
+                             ``sparse.sliced_ell_reorder``).  The
+                             uniform padded-row number rides along as
+                             ``ell_occupancy_padded``.
 * ``plan_halo_fraction``   — halo rows shipped per shard / rows owned
                              (RCM quality: a worse ordering inflates the
                              send sets).
@@ -12,8 +17,11 @@ regression moves and container timing noise cannot:
                              stencil regime; more means the ordering
                              failed to localize the band).
 
-Wall-clock numbers (pure-JAX apply, Pallas-interpret kernel, distributed
-halo SpMV) ride along as informational context.
+The Pallas kernel is timed COMPILED when a real accelerator backend is
+present (``kernel_mode: "compiled"``); on CPU CI it falls back to
+interpret mode (``"interpret"`` — a correctness vehicle, not a speed
+number).  Modeled HBM bytes per SpMV ride alongside the wall clocks so
+the trajectory has a machine-independent roofline column.
 
     PYTHONPATH=src python -m benchmarks.spmv_bench [--n 4096] [--out PATH]
 """
@@ -34,6 +42,7 @@ jax.config.update("jax_enable_x64", True)
 from jax.sharding import PartitionSpec as P  # noqa: E402
 from repro.kernels import ops as kops  # noqa: E402
 from repro.linalg import plan_for, random_fem_mesh  # noqa: E402
+from repro.linalg.sparse import sliced_ell_reorder  # noqa: E402
 from repro.parallel.distributed import (  # noqa: E402
     make_solver_mesh,
     partitioned_solver_ops,
@@ -51,10 +60,21 @@ def time_best(fn, repeats=5):
     return best
 
 
+def spmv_hbm_bytes(nnz: int, n: int, occupancy: float = 1.0,
+                   dsize: int = 8) -> int:
+    """Modeled HBM traffic of one ELL SpMV: every STORED slot streams a
+    value (dsize) + column index (4B); x is gathered (~n reads) and y
+    written once.  ``occupancy`` < 1 inflates the stored slots over nnz
+    — the padding-waste term sliced ELL removes (DESIGN.md §13)."""
+    slots = int(round(nnz / max(occupancy, 1e-9)))
+    return slots * (dsize + 4) + 2 * n * dsize
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=4096, help="mesh nodes")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--slice-rows", type=int, default=64)
     ap.add_argument("--out", type=str, default="BENCH_spmv.json")
     args = ap.parse_args()
 
@@ -66,10 +86,21 @@ def main():
     x = jnp.asarray(np.random.default_rng(1).standard_normal(op.n))
 
     # --- single-device applies -------------------------------------------
+    # x always passes as a real argument — a zero-arg jitted closure
+    # would constant-fold the whole SpMV and time a cached fetch.
     apply_jnp = jax.jit(op.apply)
     t_jnp = time_best(lambda: apply_jnp(x))
-    t_kern = time_best(jax.jit(
-        lambda: kops.ell_spmv_apply(x, op.cols, op.vals)))
+    # Time the COMPILED kernel on a real backend; interpret on CPU CI.
+    interpret = jax.default_backend() not in ("tpu", "gpu")
+    kern = jax.jit(lambda xx: kops.ell_spmv_apply(
+        xx, op.cols, op.vals, interpret=interpret))
+    t_kern = time_best(lambda: kern(x))
+
+    # --- sliced ELL (degree-sorted buckets, per-slice padding) -----------
+    sliced, sperm = sliced_ell_reorder(op, args.slice_rows)
+    xs = x[jnp.asarray(sperm)]
+    sliced_apply = jax.jit(sliced.apply)
+    t_sliced = time_best(lambda: sliced_apply(xs))
 
     # --- distributed halo SpMV on the simulated mesh ---------------------
     mesh = make_solver_mesh(n_dev)
@@ -83,18 +114,29 @@ def main():
     t_dist = time_best(lambda: dist(xp, arrays))
 
     nnz = op.nnz
+    occ_padded = float(nnz / (op.n * op.w))
+    occ_sliced = sliced.occupancy()
     payload = {
         "mesh_devices": n_dev,
         "problem": {"n": op.n, "nnz": nnz, "ell_width": op.w},
         # structural metrics (gated — deterministic given the seed):
-        "ell_occupancy": float(nnz / (op.n * op.w)),
+        "ell_occupancy": occ_sliced,
+        "ell_occupancy_padded": occ_padded,
+        "sliced_padding_waste": sliced.padding_waste(),
+        "sliced_rows_per_slice": args.slice_rows,
+        "sliced_n_slices": len(sliced.slice_cols),
         "plan_halo_fraction": plan.halo_rows_fraction(),
         "plan_hops": plan.hops,
         "plan_bandwidth": plan.band,
         "plan_neighbor_bytes": plan.neighbor_bytes(),
+        # modeled HBM traffic (machine-independent roofline column):
+        "spmv_hbm_bytes_padded": spmv_hbm_bytes(nnz, op.n, occ_padded),
+        "spmv_hbm_bytes_sliced": spmv_hbm_bytes(nnz, op.n, occ_sliced),
         # informational wall-clock (not gated — container noise):
+        "kernel_mode": "interpret" if interpret else "compiled",
         "jnp_spmv_s": t_jnp,
-        "kernel_interpret_spmv_s": t_kern,
+        "kernel_spmv_s": t_kern,
+        "sliced_spmv_s": t_sliced,
         "distributed_spmv_s": t_dist,
         "jnp_spmv_gnnz_per_s": nnz / t_jnp / 1e9,
     }

@@ -101,8 +101,10 @@ def measured_row(method: str, l: int = 1):
     else:
         jax.make_jaxpr(
             lambda bb: pipelined_cg.solve(ops, bb, l=l, maxit=4))(b)
-        # init traces 1 spmv + 1 dot; restart branch traces the same again
-        body_spmv, body_glred = c.spmv - 2, c.glred - 2
+        # init traces 1 spmv + 1 dot; the restart branch traces 2 spmv +
+        # 1 fused dot (its stagnation-guarded steepest-descent re-init,
+        # pipelined_cg.restart_cycle) — neither is per-iteration cost.
+        body_spmv, body_glred = c.spmv - 3, c.glred - 2
     # memory: N-vectors held in the solver state (rings), excluding x, b
     if method == "cg":
         mem = 3                       # r, u, p  (s transient)

@@ -82,12 +82,19 @@ def stencil_kernel_times(hw: HWProfile, n: int, p: int,
     if halo_elems is None:
         halo_elems = int(n_loc ** (1 / 2)) if stencil_pts == 5 \
             else int(n_loc ** (2 / 3))
-    t_spmv = prec_factor * max(flops / hw.flop_rate, bytes_spmv / hw.mem_bw) \
-        + 2 * halo_elems * dsize / hw.link_bw + 2 * hw.alpha
+    t_spmv_stream = prec_factor * max(flops / hw.flop_rate,
+                                      bytes_spmv / hw.mem_bw)
+    t_spmv_comm = 2 * halo_elems * dsize / hw.link_bw + 2 * hw.alpha
+    t_spmv = t_spmv_stream + t_spmv_comm
     # one AXPY/DOT pass = 3 streams (2 read + 1 write) over n_loc
     t_axpy1 = 3.0 * dsize * n_loc / hw.mem_bw
     t_glred = hw.alpha * tree_depth(hw, p) + glred_payload / hw.link_bw
-    return {"spmv": t_spmv, "axpy1": t_axpy1, "glred": t_glred}
+    # spmv_stream / spmv_comm expose the split so the autotuner can
+    # recalibrate the HBM-stream part against a MEASURED bytes/iteration
+    # (cost_analysis; launch.autotune.model_iteration_time) while the
+    # halo/latency part stays analytic.
+    return {"spmv": t_spmv, "axpy1": t_axpy1, "glred": t_glred,
+            "spmv_stream": t_spmv_stream, "spmv_comm": t_spmv_comm}
 
 
 def diagonal_kernel_times(hw: HWProfile, n: int, p: int, dsize: int = 8,

@@ -25,6 +25,24 @@ fresh < (1 - frac) * baseline.  Prefix the key with ``-`` for
 lower-is-better metrics (latencies): fail when fresh > (1 + frac) *
 baseline.  Missing keys fail loudly — a gate that cannot see its metric
 is itself a regression.
+
+Structural RATIO gates (ISSUE 4) constrain two metrics of the SAME
+fresh file against each other instead of against a baseline::
+
+    python scripts/check_bench.py --fresh BENCH_iter.json \
+        --ratio-gate fused_bytes_per_iter:unfused_bytes_per_iter:0.6
+
+fails when fresh[num] > max_ratio * fresh[den].  Both fused-iteration
+gates are deterministic shape properties machine noise cannot move
+(DESIGN.md §13), and they catch DIFFERENT regressions: the 0.6x gate
+pairs the fused path's custom-call accounting (a function of the slab
+layout) against the measured unfused traffic — it trips when the state
+slab grows or the unfused path sheds passes without the kernel
+following; the companion 1.15x gate on
+``fused_bytes_interpret_measured`` is fully MEASURED (cost_analysis of
+the interpret-lowered kernel) — it trips when someone adds an
+accidental extra slab pass INSIDE the kernel body.  ``--baseline`` is
+not needed for ratio-only runs.
 """
 
 from __future__ import annotations
@@ -72,6 +90,39 @@ def check(baseline: dict, fresh: dict,
     return problems
 
 
+def parse_ratio_gate(spec: str) -> tuple[str, str, float]:
+    """'num_key:den_key:max_ratio' -> (num, den, max_ratio)."""
+    parts = spec.split(":")
+    if len(parts) != 3:
+        raise SystemExit(
+            f"bad --ratio-gate {spec!r} (want num_key:den_key:max_ratio)")
+    return parts[0], parts[1], float(parts[2])
+
+
+def check_ratios(fresh: dict, gates: list[tuple[str, str, float]],
+                 verbose: bool = True) -> int:
+    """Number of violated ratio gates (0 == within budget)."""
+    problems = 0
+    for num, den, max_ratio in gates:
+        missing = [k for k in (num, den) if k not in fresh]
+        if missing:
+            problems += 1
+            if verbose:
+                print(f"check_bench: RATIO GATE {num}/{den}: missing "
+                      f"{'/'.join(missing)} — cannot gate")
+            continue
+        nv, dv = float(fresh[num]), float(fresh[den])
+        ratio = nv / dv if dv else float("inf")
+        ok = ratio <= max_ratio
+        if not ok:
+            problems += 1
+        if verbose:
+            print(f"check_bench: {'ok  ' if ok else 'FAIL'} {num}/{den}: "
+                  f"{ratio:.4g} vs max {max_ratio:.4g} "
+                  f"({nv:.4g} / {dv:.4g})")
+    return problems
+
+
 def selftest() -> int:
     """The gate must trip on an injected >20% regression, pass inside
     the budget, and fail on a missing key."""
@@ -89,8 +140,18 @@ def selftest() -> int:
     assert check(base, {"latency_p99_s": 0.14}, lat, verbose=False) == 0
     assert check(base, {"latency_p99_s": 0.16}, lat, verbose=False) == 1, \
         "lower-is-better ceiling must fail"
-    print("check_bench: selftest OK — injected >20% regression trips "
-          "the gate")
+    # Ratio gate (ISSUE 4): fused bytes must stay <= 0.6x unfused.
+    rg = [("fused_bytes_per_iter", "unfused_bytes_per_iter", 0.6)]
+    ok_iter = {"fused_bytes_per_iter": 15.0, "unfused_bytes_per_iter": 60.0}
+    bad_iter = {"fused_bytes_per_iter": 40.0, "unfused_bytes_per_iter": 60.0}
+    assert check_ratios(ok_iter, rg, verbose=False) == 0, \
+        "0.25x ratio is inside the 0.6x budget"
+    assert check_ratios(bad_iter, rg, verbose=False) == 1, \
+        "0.67x ratio must fail the 0.6x gate"
+    assert check_ratios({}, rg, verbose=False) == 1, \
+        "missing ratio metric must fail"
+    print("check_bench: selftest OK — injected >20% regression and a "
+          ">0.6x fused/unfused bytes ratio both trip their gates")
     return 0
 
 
@@ -100,18 +161,28 @@ def main(argv=None) -> int:
     ap.add_argument("--fresh", type=str)
     ap.add_argument("--gate", action="append", default=[],
                     help="key:frac (prefix key with - for lower-is-better)")
+    ap.add_argument("--ratio-gate", action="append", default=[],
+                    help="num_key:den_key:max_ratio (within --fresh)")
     ap.add_argument("--selftest", action="store_true")
     args = ap.parse_args(argv)
     if args.selftest:
         return selftest()
-    if not (args.baseline and args.fresh and args.gate):
-        ap.error("--baseline, --fresh and at least one --gate required")
-    with open(args.baseline) as f:
-        baseline = json.load(f)
+    if not args.fresh or not (args.gate or args.ratio_gate):
+        ap.error("--fresh and at least one --gate/--ratio-gate required")
+    if args.gate and not args.baseline:
+        ap.error("--gate needs --baseline (use --ratio-gate for "
+                 "baseline-free structural gates)")
     with open(args.fresh) as f:
         fresh = json.load(f)
-    gates = [parse_gate(g) for g in args.gate]
-    return 1 if check(baseline, fresh, gates) else 0
+    problems = 0
+    if args.gate:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+        problems += check(baseline, fresh, [parse_gate(g) for g in args.gate])
+    if args.ratio_gate:
+        problems += check_ratios(
+            fresh, [parse_ratio_gate(g) for g in args.ratio_gate])
+    return 1 if problems else 0
 
 
 if __name__ == "__main__":

@@ -88,14 +88,12 @@ def vector_mask(method: str, kw: dict | None = None):
             gamma=False, it=False, conv=False, hist=False)
     if method == "pcg":
         return ghysels_pcg.PcgState(
-            x=True, r=True, u=True, w=True, z=True, q=True, s=True, p=True,
-            gamma=False, alpha=False, it=False, conv=False, hist=False,
-            since_rr=False)
+            S=True, gamma=False, alpha=False, it=False, conv=False,
+            hist=False, since_rr=False)
     if method == "plcg":
         cyc = pipelined_cg._Cycle(
-            x=True, ZK=True, U=True, G=False, D=False, gam=False, dlt=False,
-            p_prev=True, eta_prev=False, zet_prev=False, i=False,
-            norm0_cycle=False)
+            S=True, G=False, D=False, gam=False, dlt=False,
+            eta_prev=False, zet_prev=False, i=False, norm0_cycle=False)
         return pipelined_cg._State(
             cyc=cyc, tot=False, upd=False, restarts=False, converged=False,
             breakdown=False, hist=False, norm0=False, since_rr=False)

@@ -33,15 +33,17 @@ import jax.numpy as jnp
 from repro.core.types import SolveResult, SolverOps, dot1
 
 
+# Rows of the contiguous p-CG vector slab S (NV_PCG, N) — the same
+# structure-of-arrays layout as p(l)-CG's basis slab (DESIGN.md §13):
+# one array, one trailing N axis, so slab-program drivers can
+# ``donate_argnums`` the whole vector state and the while-loop updates
+# it row-wise in place instead of copying eight separate buffers.
+X_ROW, R_ROW, U_ROW, W_ROW, Z_ROW, Q_ROW, S_ROW, P_ROW = range(8)
+NV_PCG = 8
+
+
 class PcgState(NamedTuple):
-    x: jax.Array
-    r: jax.Array
-    u: jax.Array
-    w: jax.Array
-    z: jax.Array
-    q: jax.Array
-    s: jax.Array
-    p: jax.Array
+    S: jax.Array         # (NV_PCG, N) slab: [x, r, u, w, z, q, s, p]
     gamma: jax.Array
     alpha: jax.Array
     it: jax.Array
@@ -84,24 +86,26 @@ def build(
         w = ops.apply_a(u)
         norm0 = jnp.sqrt(jnp.abs(dot1(ops, r, u)))
         hist0 = jnp.full((maxit + 2,), -1.0, dtype=dtype).at[0].set(norm0)
-        z = jnp.zeros_like(b)
+        S = jnp.zeros((NV_PCG, b.shape[0]), dtype)
+        S = S.at[X_ROW].set(x).at[R_ROW].set(r).at[U_ROW].set(u)
+        S = S.at[W_ROW].set(w)
         one = jnp.asarray(1.0, dtype)
-        return PcgState(x=x, r=r, u=u, w=w, z=z, q=z, s=z, p=z, gamma=one,
-                        alpha=one, it=jnp.int32(0), conv=norm0 == 0.0,
-                        hist=hist0, since_rr=jnp.int32(0))
+        return PcgState(S=S, gamma=one, alpha=one, it=jnp.int32(0),
+                        conv=norm0 == 0.0, hist=hist0, since_rr=jnp.int32(0))
 
     def cond(st: PcgState) -> jax.Array:
         return (~st.conv) & (st.it < maxit)
 
     def step(st: PcgState) -> PcgState:
         norm0 = st.hist[0]
+        S = st.S
         # --- ONE fused reduction: {(r,u), (w,u)}, initiated through the
         # backend handle (MPI_Iallreduce) and only waited on AFTER the
         # iteration's own preconditioner + SPMV — the overlap window of
         # Table 1, row 'p-CG' (DESIGN.md §3/§6).
-        pending = ops.start(jnp.stack([st.r, st.w]), st.u)
+        pending = ops.start(S[(R_ROW, W_ROW), :], S[U_ROW])
         # --- overlapped work: preconditioner + SPMV of this iteration
-        m = ops.prec(st.w)
+        m = ops.prec(S[W_ROW])
         nvec = ops.apply_a(m)
         gd = ops.wait(pending)                    # MPI_Wait
         gamma, delta = gd[0], gd[1]
@@ -112,34 +116,38 @@ def build(
             delta - beta * gamma / jnp.where(first, 1.0, st.alpha)
         )
         alpha = gamma / denom
-        z = nvec + beta * st.z
-        q = m + beta * st.q
-        s = st.w + beta * st.s
-        p = st.u + beta * st.p
-        x = st.x + alpha * p
-        r = st.r - alpha * s
-        u = st.u - alpha * q
-        w = st.w - alpha * z
+        z = nvec + beta * S[Z_ROW]
+        q = m + beta * S[Q_ROW]
+        s = S[W_ROW] + beta * S[S_ROW]
+        p = S[U_ROW] + beta * S[P_ROW]
+        x = S[X_ROW] + alpha * p
+        r = S[R_ROW] - alpha * s
+        u = S[U_ROW] - alpha * q
+        w = S[W_ROW] - alpha * z
+        S = S.at[Z_ROW].set(z).at[Q_ROW].set(q).at[S_ROW].set(s)
+        S = S.at[P_ROW].set(p).at[X_ROW].set(x).at[R_ROW].set(r)
+        S = S.at[U_ROW].set(u).at[W_ROW].set(w)
         rnorm = jnp.sqrt(jnp.abs(gamma))  # ||r||_M of the *pre-update* residual
         hist = st.hist.at[st.it + 1].set(rnorm)
         conv = rnorm / norm0 < tol
-        return PcgState(x=x, r=r, u=u, w=w, z=z, q=q, s=s, p=p, gamma=gamma,
-                        alpha=alpha, it=st.it + 1, conv=conv, hist=hist,
-                        since_rr=st.since_rr + 1)
+        return PcgState(S=S, gamma=gamma, alpha=alpha, it=st.it + 1,
+                        conv=conv, hist=hist, since_rr=st.since_rr + 1)
 
     # Residual replacement (arXiv:1902.03100): swap every recurred vector
     # for its true value.  The scalars (gamma/alpha) are kept —
     # replacement resets the error of the vector recurrences, not the
     # Krylov coefficients.
     def replace(st: PcgState) -> PcgState:
-        r = b - ops.apply_a(st.x)
+        S = st.S
+        r = b - ops.apply_a(S[X_ROW])
         u = ops.prec(r)
         w = ops.apply_a(u)
-        s = ops.apply_a(st.p)
+        s = ops.apply_a(S[P_ROW])
         q = ops.prec(s)
         z = ops.apply_a(q)
-        return st._replace(r=r, u=u, w=w, s=s, q=q, z=z,
-                           since_rr=jnp.int32(0))
+        S = S.at[R_ROW].set(r).at[U_ROW].set(u).at[W_ROW].set(w)
+        S = S.at[S_ROW].set(s).at[Q_ROW].set(q).at[Z_ROW].set(z)
+        return st._replace(S=S, since_rr=jnp.int32(0))
 
     def needs_replace(st: PcgState) -> jax.Array:
         return st.since_rr >= replace_every
@@ -155,8 +163,8 @@ def build(
 
     def finish(st: PcgState) -> SolveResult:
         return SolveResult(
-            x=st.x, iters=st.it, restarts=jnp.int32(0), converged=st.conv,
-            res_history=st.hist, norm0=st.hist[0],
+            x=st.S[X_ROW], iters=st.it, restarts=jnp.int32(0),
+            converged=st.conv, res_history=st.hist, norm0=st.hist[0],
         )
 
     return PcgProgram(

@@ -1,10 +1,15 @@
 """Deep pipelined Conjugate Gradients — p(l)-CG (Alg. 1 of the paper).
 
-Faithful JAX implementation with production storage: the l+1 auxiliary
-bases Z^(0..l) live in ring buffers (window max(l+1,3) per basis), the G
-matrix and Hessenberg entries in sliding windows of size O(l) — total
-vector storage O(l) irrespective of iteration count (cf. the paper's
-4l+1-vector budget, Table 1).
+Faithful JAX implementation with production storage: ALL vector state —
+the l+1 auxiliary bases Z^(0..l) in ring buffers (window max(l+1,3) per
+basis), the 3-deep u ring, the search direction p and the iterate x —
+lives in ONE contiguous structure-of-arrays slab ``S`` of shape (NV, N)
+(:class:`repro.kernels.fused_iter.SlabLayout`), total vector storage O(l)
+irrespective of iteration count (cf. the paper's 4l+1-vector budget,
+Table 1).  One array with one trailing N axis is what the fused-iteration
+superkernel tiles (DESIGN.md §13), what ``donate_argnums`` aliases across
+slab-program chunks, and what the G matrix / Hessenberg windows ride
+alongside as O(l^2) scalars.
 
 The communication structure per iteration i is exactly the paper's:
 
@@ -24,6 +29,23 @@ is realized by XLA's latency-hiding scheduler when the iteration window is
 unrolled (``unroll`` parameter; see DESIGN.md §2) — the lowered HLO then
 carries l independent all-reduce chains in flight, the staggering of
 Fig. 4 (bottom), which ``repro.utils.trace`` measures (DESIGN.md §6).
+
+Each iteration is split into a *scalar phase* (MPI_Wait arrival scatter
+into G, the K2 column correction and K3 Hessenberg column — O(l^2)
+scalars) and a *vector phase* (K1 SPMV + preconditioner, pipeline-fill
+copies, K4 recurrence AXPYs, the K5 dot block and the K6 x/p updates).
+The vector phase has two interchangeable implementations sharing one
+index/coefficient calling convention:
+
+  * **unfused** (default) — ``repro.kernels.ref.fused_iter_unfused``:
+    one jnp op per pass, dots via ``ops.start`` (the reference path);
+  * **fused** (``fused_iteration=True``) — the Pallas superkernel
+    (``repro.kernels.fused_iter``): slab read once / written once per
+    row tile, dot partials accumulated in VMEM, the single global
+    reduction issued on the partials via ``ops.start_partials``.  Both
+    paths evaluate identical expressions on identical operands, so
+    stencil-operator residual histories agree BITWISE
+    (tests/test_fused_iter.py; DESIGN.md §13).
 
 Breakdown handling: square-root breakdown (line 10/11) triggers an explicit
 restart from the current iterate (§2.2), implemented as a state re-init
@@ -46,27 +68,24 @@ breakdown-restart budget ``max_restarts``
 
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.types import GLRED_WAIT_TAG, SolveResult, SolverOps, dot1
+from repro.kernels.fused_iter import SlabLayout, idx_layout, scal_layout
+from repro.kernels.ref import fused_iter_unfused
 
 
 class _Cycle(NamedTuple):
     """Per-restart-cycle state (re-initialized on breakdown)."""
 
-    x: jax.Array        # (N,) current iterate (x_{i-l-1} of the cycle)
-    ZK: jax.Array       # (l+1, RB, N) ring buffers of the auxiliary bases
-    U: jax.Array        # (3, N) ring of unpreconditioned vectors u_{i-1..i+1}
+    S: jax.Array        # (NV, N) vector slab: ZK rings | U ring | p | x
     G: jax.Array        # (W, W) sliding window of the basis-transform matrix
     D: jax.Array        # (l, 2l+1) in-flight dot blocks (reduction handles)
     gam: jax.Array      # (W,) gamma ring  (Hessenberg diagonal)
     dlt: jax.Array      # (W,) delta ring  (Hessenberg off-diagonal)
-    p_prev: jax.Array   # (N,) search direction p_{i-l-1}
     eta_prev: jax.Array # scalar eta_{i-l-1}
     zet_prev: jax.Array # scalar zeta_{i-l-1}
     i: jax.Array        # cycle-local iteration counter
@@ -103,7 +122,10 @@ class PlcgProgram(NamedTuple):
     replacement) stops the column, then apply ``interrupt`` (the cycle
     re-init) as a masked boundary step — same arithmetic per column as
     the sequential path, with the restart's reduction amortized to chunk
-    boundaries.
+    boundaries.  ``step`` mutates only the slab's touched rows (in place
+    under the fused path's ``input_output_aliases``), so the slab-program
+    drivers that jit it with ``donate_argnums`` carry NO per-iteration
+    state copy (tests/test_fused_iter.py::test_slab_program_donation).
     """
 
     init: Callable[[jax.Array], "_State"]        # x0 -> st0
@@ -125,8 +147,15 @@ def build(
     sigmas: jax.Array | None = None,
     max_restarts: int = 10,
     replace_every: int = 0,
+    fused_iteration: bool = False,
 ) -> PlcgProgram:
-    """Construct the p(l)-CG iteration pieces for ``b`` (depth ``l`` static)."""
+    """Construct the p(l)-CG iteration pieces for ``b`` (depth ``l`` static).
+
+    ``fused_iteration=True`` routes the vector phase through the Pallas
+    superkernel built by the substrate's ``ops.fused_iter_factory``
+    (DESIGN.md §13); raises if the (operator, preconditioner, backend)
+    combination has no fused path.
+    """
     assert l >= 1
     assert replace_every == 0 or replace_every > l, \
         "residual replacement must be rarer than the pipeline refill"
@@ -140,7 +169,19 @@ def build(
     tot_max = maxit + (max_restarts + 1) * (l + 1)
     H = tot_max + 2
 
-    zeros_n = jnp.zeros((n,), dtype)
+    layout = SlabLayout(l=l, RB=RB)
+    NV = layout.nv
+    IX = idx_layout(l)
+    IS = scal_layout(l)
+
+    fiter = None
+    if fused_iteration:
+        if ops.fused_iter_factory is None:
+            raise ValueError(
+                "fused_iteration=True but this SolverOps has no "
+                "fused_iter_factory — unsupported operator/preconditioner "
+                "for the superkernel (DESIGN.md §13)")
+        fiter = ops.fused_iter_factory(layout)
 
     # ----------------------------------------------------------- helpers --
     def g_get(G, r, c, valid=True):
@@ -153,39 +194,71 @@ def build(
     def ring_get(arr, idx, valid=True):  # 1-D scalar rings (gam / dlt)
         return jnp.where(valid, arr[jnp.mod(idx, W)], jnp.zeros((), dtype))
 
-    def zk_get(ZK, k, j):    # k static, j traced
-        return jax.lax.dynamic_index_in_dim(ZK[k], jnp.mod(j, RB), axis=0,
-                                            keepdims=False)
-
-    def zk_set(ZK, k, j, vec):
-        return ZK.at[k, jnp.mod(j, RB)].set(vec)
-
-    def u_get(U, j):
-        return jax.lax.dynamic_index_in_dim(U, jnp.mod(j, 3), axis=0,
-                                            keepdims=False)
-
-    def u_set(U, j, vec):
-        return U.at[jnp.mod(j, 3)].set(vec)
+    zk_row, u_row = layout.zk_row, layout.u_row
 
     # ------------------------------------------------------------- init ---
+    def _make_cycle(x, u0_raw, r0_raw, eta0) -> _Cycle:
+        safe = jnp.where(eta0 == 0, jnp.ones((), dtype), eta0)
+        v0 = r0_raw / safe
+        S = jnp.zeros((NV, n), dtype)
+        for k in range(l + 1):
+            S = S.at[k * RB].set(v0)          # z_0^(k) = v_0 for all k
+        S = S.at[layout.u_off].set(u0_raw / safe)
+        S = S.at[layout.x_row].set(x)
+        return _Cycle(
+            S=S, G=jnp.zeros((W, W), dtype).at[0, 0].set(1.0),
+            D=jnp.zeros((l, 2 * l + 1), dtype),
+            gam=jnp.zeros((W,), dtype), dlt=jnp.zeros((W,), dtype),
+            eta_prev=jnp.ones((), dtype), zet_prev=jnp.zeros((), dtype),
+            i=jnp.int32(0), norm0_cycle=eta0,
+        )
+
     def init_cycle(x) -> _Cycle:
         u0_raw = b - ops.apply_a(x)
         r0_raw = ops.prec(u0_raw)
         eta0 = jnp.sqrt(jnp.abs(dot1(ops, u0_raw, r0_raw)))
-        safe = jnp.where(eta0 == 0, jnp.ones((), dtype), eta0)
-        v0 = r0_raw / safe
-        ZK = jnp.zeros((l + 1, RB, n), dtype)
-        ZK = ZK.at[:, 0, :].set(v0[None, :])          # z_0^(k) = v_0 for all k
-        U = jnp.zeros((3, n), dtype).at[0].set(u0_raw / safe)
-        G = jnp.zeros((W, W), dtype).at[0, 0].set(1.0)
-        return _Cycle(
-            x=x, ZK=ZK, U=U, G=G,
-            D=jnp.zeros((l, 2 * l + 1), dtype),
-            gam=jnp.zeros((W,), dtype), dlt=jnp.zeros((W,), dtype),
-            p_prev=zeros_n, eta_prev=jnp.ones((), dtype),
-            zet_prev=jnp.zeros((), dtype),
-            i=jnp.int32(0), norm0_cycle=eta0,
-        )
+        return _make_cycle(x, u0_raw, r0_raw, eta0)
+
+    def restart_cycle(x, stagnant) -> _Cycle:
+        """Cycle re-init for breakdown restarts, with a stagnation guard.
+
+        A square-root breakdown at the FIRST late iteration (i == l,
+        before any solution update) restarts into the identical cycle —
+        on operator/preconditioner pairs whose preconditioned Krylov
+        space is (nearly) one-dimensional (e.g. Jacobi on a diagonal
+        operator: M^{-1}A = I) that loop never makes progress and burns
+        the whole restart budget.  When the dying cycle produced NO
+        updates (``stagnant``), fold ONE steepest-descent step into the
+        re-init: x' = x + alpha z with alpha = (r, z)/(z, A z) — a
+        guaranteed A-norm error reduction, and in the 1-D-Krylov case
+        the exact solution, which the lucky-breakdown check then
+        detects.  Everything is arranged as a SINGLE fused reduction
+        (the restart's communication structure is unchanged — asserted
+        on compiled HLO in tests/test_distributed.py), and a
+        non-stagnant restart (alpha = 0) reproduces ``init_cycle``'s
+        arithmetic bitwise: the post-step residual/eta0 recurrences
+        collapse to the plain expressions when alpha == 0.
+        """
+        r = b - ops.apply_a(x)
+        z = ops.prec(r)
+        az = ops.apply_a(z)
+        pz = ops.prec(az)
+        # One fused reduction of the three inner products {(r,z), (az,z),
+        # (az,pz)} as row-sums against ones — same payload discipline as
+        # the iteration's dot block.
+        dots = ops.wait(ops.start(
+            jnp.stack([r * z, az * z, az * pz]), jnp.ones_like(z)))
+        a, c, e = dots[0], dots[1], dots[2]
+        ok = stagnant & (c > 0) & jnp.isfinite(c)
+        alpha = jnp.where(ok, a / jnp.where(c == 0, jnp.ones((), dtype), c),
+                          jnp.zeros((), dtype))
+        x1 = x + alpha * z
+        u0_raw = r - alpha * az
+        r0_raw = z - alpha * pz               # prec is linear
+        # eta0^2 = (u0, r0) via the step recurrence ((r,pz) = (z,az) by
+        # M^{-1}-symmetry); alpha = 0 collapses it to (r, z) exactly.
+        eta0 = jnp.sqrt(jnp.abs(a - 2 * alpha * c + alpha * alpha * e))
+        return _make_cycle(x1, u0_raw, r0_raw, eta0)
 
     # -------------------------------------------------------- iteration ---
     def iteration(st: _State, static_phase: str | None = None) -> _State:
@@ -202,24 +275,12 @@ def build(
         im = i - l                     # index of the Hessenberg column built
         ge_l = i >= l
 
-        # ---- (K1) SPMV + preconditioner (lines 3-4) ----------------------
-        z_top = zk_get(c.ZK, l, i)                     # z_i^(l)
-        az = ops.apply_a(z_top)
-        sig_i = jnp.where(i < l, sig[jnp.clip(i, 0, l - 1)], jnp.zeros((), dtype))
-        u_new = az - sig_i * u_get(c.U, i)             # u_{i+1} (pre-normalized)
-        z_new = ops.prec(u_new)                        # z_{i+1}^(l) candidate
-
-        # ---- pipeline-fill copies (lines 5-7): bases k = i+1 .. l-1 ------
-        ZK = c.ZK
-        for k in range(l):              # static loop; masked dynamic writes
-            do_copy = (i < l - 1) & (k >= i + 1)
-            cur = zk_get(ZK, k, i + 1)
-            ZK = zk_set(ZK, k, i + 1, jnp.where(do_copy, z_new, cur))
-
-        # ================= i >= l: finalize the reduction from iter i-l ===
-        def late_phase(args):
-            ZK, G, gam, dlt, u_new, z_new = args
-            col = i - l + 1            # G column whose dots arrived (MPI_Wait)
+        # ===== scalar phase: MPI_Wait arrival + K2 + K3 ===================
+        # O(l^2) scalar work on the G / Hessenberg windows — no vector
+        # traffic; produces the coefficients the vector phase consumes.
+        def late_scal(args):
+            G, gam, dlt = args
+            col = i - l + 1            # G column whose dots arrived
 
             # ---- MPI_Wait(req(i-l)): consume the in-flight dot block -----
             # The raw 2l+1 payload initiated l iterations ago is pulled out
@@ -279,76 +340,100 @@ def build(
             gam = gam.at[jnp.mod(im, W)].set(gam_new)
             dlt = dlt.at[jnp.mod(im, W)].set(dlt_new)
             dlt_safe = jnp.where(dlt_new == 0, jnp.ones((), dtype), dlt_new)
+            return (G, gam, dlt, gam_new, dlt_safe), breakdown
 
-            # ---- (K4) lines 19-21: stable basis recurrences --------------
-            d2 = ring_get(dlt, im - 1, im >= 1)       # delta_{i-l-1}
-            for k in range(l):                        # z^(k)_{i-l+k+1}
-                j = i - l + k + 1
-                zk1 = zk_get(ZK, k + 1, j)
-                zm1 = zk_get(ZK, k, j - 1)
-                zm2 = zk_get(ZK, k, j - 2)            # coeff d2 = 0 masks j-2 < 0
-                vec = (zk1 + (sig[k] - gam_new) * zm1 - d2 * zm2) / dlt_safe
-                ZK = zk_set(ZK, k, j, vec)
-            zm1 = zk_get(ZK, l, i)
-            zm2 = zk_get(ZK, l, i - 1)
-            z_new = (z_new - gam_new * zm1 - d2 * zm2) / dlt_safe     # line 20
-            u_new = (u_new - gam_new * u_get(c.U, i) - d2 * u_get(c.U, i - 1)) \
-                / dlt_safe                                            # line 21
-            return (ZK, G, gam, dlt, u_new, z_new), breakdown
+        def early_scal(args):
+            G, gam, dlt = args
+            return (G, gam, dlt, jnp.zeros((), dtype), jnp.ones((), dtype)), \
+                jnp.asarray(False)
 
-        def early_phase(args):
-            return args, jnp.asarray(False)
-
-        phase_args = (ZK, c.G, c.gam, c.dlt, u_new, z_new)
+        scal_args = (c.G, c.gam, c.dlt)
         if static_phase is None:
-            (ZK, G, gam, dlt, u_new, z_new), breakdown = jax.lax.cond(
-                ge_l, late_phase, early_phase, phase_args
+            (G, gam, dlt, gam_new, dlt_safe), breakdown = jax.lax.cond(
+                ge_l, late_scal, early_scal, scal_args
             )
         elif static_phase == "late":
-            (ZK, G, gam, dlt, u_new, z_new), breakdown = late_phase(phase_args)
+            (G, gam, dlt, gam_new, dlt_safe), breakdown = late_scal(scal_args)
         else:
-            (ZK, G, gam, dlt, u_new, z_new), breakdown = early_phase(phase_args)
+            (G, gam, dlt, gam_new, dlt_safe), breakdown = early_scal(scal_args)
 
-        ZK = zk_set(ZK, l, i + 1, z_new)
-        U = u_set(c.U, i + 1, u_new)
+        d2 = ring_get(dlt, im - 1, im >= 1)       # delta_{i-l-1}
 
-        # ---- (K5) line 23: initiate the dot block — ONE fused reduction --
-        # The raw payload (rows i-2l+1 .. i+1 of G column i+1) is parked in
-        # the D ring; it is only consumed — and scattered into G — at
-        # iteration i+l (MPI_Wait above).  Between the two sites up to l
-        # reductions are simultaneously in flight.
-        vs = []
-        for t in range(l + 1):                     # V-range: j = i-2l+1 .. i-l+1
-            vs.append(zk_get(ZK, 0, i - 2 * l + 1 + t))
-        for t in range(l):                         # Z-range: j = i-l+2 .. i+1
-            vs.append(zk_get(ZK, l, i - l + 2 + t))
-        mat = jnp.stack(vs)                        # (2l+1, N)
-        dots = ops.start(mat, u_new)               # single global reduction
-        D = c.D.at[jnp.mod(i, l)].set(dots)
-
-        # ---- (K6) lines 24-32: D-Lanczos solution update ------------------
+        # ---- (K6) scalar updates (lines 24-32, D-Lanczos factors) --------
         gam0 = ring_get(gam, jnp.int32(0))
         gam_im = ring_get(gam, im, ge_l)
         d_prev = ring_get(dlt, im - 1, im >= 1)
-
         is_first = i == l
         eta0_safe = jnp.where(gam0 == 0, jnp.ones((), dtype), gam0)
-        p_first = zk_get(ZK, 0, jnp.int32(0)) / eta0_safe
-        zet_first = c.norm0_cycle
-
         do_upd = i >= l + 1
-        eta_prev_safe = jnp.where(c.eta_prev == 0, jnp.ones((), dtype), c.eta_prev)
+        eta_prev_safe = jnp.where(c.eta_prev == 0, jnp.ones((), dtype),
+                                  c.eta_prev)
         lam = d_prev / eta_prev_safe
         eta_new = gam_im - lam * d_prev
         eta_new_safe = jnp.where(eta_new == 0, jnp.ones((), dtype), eta_new)
         zet_new = -lam * c.zet_prev
-        p_new = (zk_get(ZK, 0, im) - d_prev * c.p_prev) / eta_new_safe
-        x_new = c.x + c.zet_prev * c.p_prev        # x_{i-l} from previous pair
 
-        x = jnp.where(do_upd, x_new, c.x)
-        p_prev = jnp.where(is_first, p_first, jnp.where(do_upd, p_new, c.p_prev))
-        eta_prev = jnp.where(is_first, gam0, jnp.where(do_upd, eta_new, c.eta_prev))
-        zet_prev = jnp.where(is_first, zet_first,
+        # ===== vector phase ===============================================
+        # Ring-row indices + coefficients for the one-pass calling
+        # convention shared by the unfused reference and the superkernel
+        # (repro.kernels.fused_iter; DESIGN.md §13).
+        sig_i = jnp.where(i < l, sig[jnp.clip(i, 0, l - 1)],
+                          jnp.zeros((), dtype))
+        idx = jnp.zeros((IX["size"],), jnp.int32)
+        for k in range(l):
+            idx = idx.at[IX["fill"] + k].set(zk_row(k, i + 1))
+            idx = idx.at[IX["rec_w"] + k].set(zk_row(k, i - l + k + 1))
+            idx = idx.at[IX["rec_a"] + k].set(zk_row(k + 1, i - l + k + 1))
+            idx = idx.at[IX["rec_b"] + k].set(zk_row(k, i - l + k))
+            idx = idx.at[IX["rec_c"] + k].set(zk_row(k, i - l + k - 1))
+            idx = idx.at[IX["f_fill"] + k].set(
+                ((i < l - 1) & (k >= i + 1)).astype(jnp.int32))
+            idx = idx.at[IX["mat_v"] + k].set(zk_row(0, i - 2 * l + 1 + k))
+        for t in range(l - 1):
+            idx = idx.at[IX["mat_z"] + t].set(zk_row(l, i - l + 2 + t))
+        idx = idx.at[IX["z_top"]].set(zk_row(l, i))
+        idx = idx.at[IX["zl_im1"]].set(zk_row(l, i - 1))
+        idx = idx.at[IX["z_w"]].set(zk_row(l, i + 1))
+        idx = idx.at[IX["u_i"]].set(u_row(i))
+        idx = idx.at[IX["u_im1"]].set(u_row(i - 1))
+        idx = idx.at[IX["u_w"]].set(u_row(i + 1))
+        idx = idx.at[IX["p_im"]].set(zk_row(0, im))
+        idx = idx.at[IX["f_late"]].set(ge_l.astype(jnp.int32))
+        idx = idx.at[IX["f_first"]].set(is_first.astype(jnp.int32))
+        idx = idx.at[IX["f_upd"]].set(do_upd.astype(jnp.int32))
+
+        scal = jnp.zeros((IS["size"],), dtype)
+        scal = scal.at[IS["sig_i"]].set(sig_i)
+        scal = scal.at[IS["gam_new"]].set(gam_new)
+        scal = scal.at[IS["d2"]].set(d2)
+        scal = scal.at[IS["dlt_safe"]].set(dlt_safe)
+        scal = scal.at[IS["zet_prev"]].set(c.zet_prev)
+        scal = scal.at[IS["d_prev"]].set(d_prev)
+        scal = scal.at[IS["eta_new_safe"]].set(eta_new_safe)
+        scal = scal.at[IS["eta0_safe"]].set(eta0_safe)
+        for k in range(l):
+            scal = scal.at[IS["c1"] + k].set(sig[k] - gam_new)
+
+        if fiter is not None:
+            # One HBM pass: SPMV + prec + fills + K4 + K6 + local dot
+            # partials in the superkernel, then ONE global reduction on
+            # the partials (K5's MPI_Iallreduce, same payload as ever).
+            S, partials = fiter(c.S, idx, scal)
+            dots = ops.start_partials(partials)
+        else:
+            S, mat, u_new = fused_iter_unfused(c.S, idx, scal, ops.apply_a,
+                                               ops.prec, layout)
+            # ---- (K5) line 23: initiate the dot block — ONE reduction ----
+            # The raw payload (rows i-2l+1 .. i+1 of G column i+1) is
+            # parked in the D ring; it is only consumed — and scattered
+            # into G — at iteration i+l (MPI_Wait above).  Between the two
+            # sites up to l reductions are simultaneously in flight.
+            dots = ops.start(mat, u_new)
+        D = c.D.at[jnp.mod(i, l)].set(dots)
+
+        eta_prev = jnp.where(is_first, gam0,
+                             jnp.where(do_upd, eta_new, c.eta_prev))
+        zet_prev = jnp.where(is_first, c.norm0_cycle,
                              jnp.where(do_upd, zet_new, c.zet_prev))
 
         n_upd = jnp.where(do_upd, 1, 0).astype(jnp.int32)
@@ -366,7 +451,7 @@ def build(
         converged = st.converged | (ok & (rnorm / st.norm0 < tol))
 
         cyc = _Cycle(
-            x=x, ZK=ZK, U=U, G=G, D=D, gam=gam, dlt=dlt, p_prev=p_prev,
+            S=S, G=G, D=D, gam=gam, dlt=dlt,
             eta_prev=eta_prev, zet_prev=zet_prev, i=i + 1,
             norm0_cycle=c.norm0_cycle,
         )
@@ -377,7 +462,11 @@ def build(
         )
 
     def do_restart(st: _State) -> _State:
-        cyc = init_cycle(st.cyc.x)
+        # Stagnation guard: a breakdown before the cycle's first solution
+        # update (since_rr == 0) re-inits with a steepest-descent step so
+        # the restart is guaranteed to make progress (see restart_cycle).
+        cyc = restart_cycle(st.cyc.S[layout.x_row],
+                            st.breakdown & (st.since_rr == 0))
         # A breakdown at a converged iterate is a "lucky breakdown": the
         # freshly computed residual M-norm at restart tells us directly.
         lucky = cyc.norm0_cycle / st.norm0 < tol
@@ -419,8 +508,9 @@ def build(
 
     def finish(final: _State) -> SolveResult:
         return SolveResult(
-            x=final.cyc.x, iters=final.upd, restarts=final.restarts,
-            converged=final.converged, res_history=final.hist, norm0=final.norm0,
+            x=final.cyc.S[layout.x_row], iters=final.upd,
+            restarts=final.restarts, converged=final.converged,
+            res_history=final.hist, norm0=final.norm0,
         )
 
     return PlcgProgram(init=init, iteration=iteration, body=body, cond=cond,
@@ -439,10 +529,14 @@ def solve(
     max_restarts: int = 10,
     unroll: int = 1,
     replace_every: int = 0,
+    fused_iteration: bool = False,
 ) -> SolveResult:
-    """Solve A x = b with p(l)-CG.  ``l`` is the pipeline depth (static)."""
+    """Solve A x = b with p(l)-CG.  ``l`` is the pipeline depth (static);
+    ``fused_iteration=True`` runs the vector phase through the one-pass
+    superkernel (DESIGN.md §13)."""
     prog = build(ops, b, l, tol=tol, maxit=maxit, sigmas=sigmas,
-                 max_restarts=max_restarts, replace_every=replace_every)
+                 max_restarts=max_restarts, replace_every=replace_every,
+                 fused_iteration=fused_iteration)
     dtype = b.dtype
     st0 = prog.init(jnp.zeros_like(b) if x0 is None else x0.astype(dtype))
 

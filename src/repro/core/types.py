@@ -74,6 +74,24 @@ def _opt_barrier_vmap(axis_size, in_batched, dots):
     return _opt_barrier(dots), in_batched[0]
 
 
+def dot_block_rows(mat: jax.Array, vec: jax.Array) -> jax.Array:
+    """The fused dot block (K, N) x (N,) -> (K,) as an elementwise
+    product + trailing-axis reduction instead of ``mat @ vec``.
+
+    Semantically identical; chosen because it is bitwise-REPRODUCIBLE
+    across every execution shape this repo runs the block in: a vmapped
+    ``dot_general`` (the batched multi-RHS slab) and the Pallas
+    interpreter's per-grid-step dot (the fused superkernel off-TPU) hit
+    different gemm kernels whose reduction order differs at the ULP
+    level, while a trailing-axis reduce lowers to the same per-row chain
+    everywhere.  Every substrate's ``dot_block`` and the superkernel's
+    in-VMEM partials use THIS expression, which is what makes
+    fused/unfused and batched/sequential residual histories bitwise
+    comparable (DESIGN.md §13; tests/test_fused_iter.py).
+    """
+    return (mat * vec[None, :]).sum(axis=1)
+
+
 class SolveResult(NamedTuple):
     x: jax.Array           # approximate solution
     iters: jax.Array       # number of solution updates (CG-comparable count)
@@ -94,12 +112,41 @@ class SolverOps:
     # working unchanged.
     dot_block_start: Callable[[jax.Array, jax.Array], jax.Array] | None = None
     dot_block_wait: Callable[[jax.Array], jax.Array] | None = None
+    # Global combine of LOCALLY accumulated dot-block partials — the
+    # reduction half of the fused-iteration superkernel path
+    # (DESIGN.md §13).  The megakernel computes each shard's (2l+1)
+    # partial dots in VMEM during its single pass over the basis slab;
+    # ``start_partials`` then issues the same single global reduction as
+    # ``start`` would (one psum on distributed substrates, a tagged
+    # barrier locally) without re-reading any basis vector from HBM.
+    combine_partials: Callable[[jax.Array], jax.Array] | None = None
+    # Factory for the fused-iteration superkernel: called by
+    # ``pipelined_cg.build(..., fused_iteration=True)`` with the solver's
+    # :class:`repro.kernels.fused_iter.SlabLayout`; returns the
+    # per-iteration vector-phase callable (slab, idx, scal) ->
+    # (new slab, local dot partials).  None means the substrate/operator
+    # combination has no fused path (the solver raises).
+    fused_iter_factory: Callable[..., Callable] | None = None
 
     def start(self, mat: jax.Array, vec: jax.Array) -> jax.Array:
         """Initiate the fused dot block (the MPI_Iallreduce)."""
         if self.dot_block_start is None:
             return self.dot_block(mat, vec)
         return self.dot_block_start(mat, vec)
+
+    def start_partials(self, partials: jax.Array) -> jax.Array:
+        """Initiate the global combine of locally-accumulated dot-block
+        partials (the fused-iteration analogue of :meth:`start`): ONE
+        reduction carrying the same 2l+1-entry payload, issued at the
+        same tagged site so the overlap tracer sees an identical chain
+        structure (DESIGN.md §6/§13)."""
+        with jax.named_scope(GLRED_START_TAG):
+            if self.combine_partials is None:
+                # Single-device: nothing to combine, but the barrier (a)
+                # marks the issue site for the tracer and (b) keeps XLA
+                # from folding the handle into its consumer.
+                return _opt_barrier(partials)
+            return self.combine_partials(partials)
 
     def wait(self, dots: jax.Array) -> jax.Array:
         """Consumption point of a previously started block (MPI_Wait)."""
@@ -112,12 +159,17 @@ class SolverOps:
         apply_a: Callable[[jax.Array], jax.Array],
         prec: Callable[[jax.Array], jax.Array],
         dot_block: Callable[[jax.Array, jax.Array], jax.Array],
+        combine_partials: Callable[[jax.Array], jax.Array] | None = None,
+        fused_iter_factory: Callable[..., Callable] | None = None,
     ) -> "SolverOps":
         """Build SolverOps with tracer-tagged start/wait around dot_block.
 
         Every reduction backend funnels through here so the issue and
         consumption sites of each reduction carry GLRED_START_TAG /
         GLRED_WAIT_TAG scopes in the lowered HLO (DESIGN.md §6).
+        ``combine_partials``/``fused_iter_factory`` wire the
+        fused-iteration superkernel path (DESIGN.md §13) where the
+        substrate supports it.
         """
 
         def start(mat, vec):
@@ -134,16 +186,21 @@ class SolverOps:
             dot_block=dot_block,
             dot_block_start=start,
             dot_block_wait=wait,
+            combine_partials=combine_partials,
+            fused_iter_factory=fused_iter_factory,
         )
 
     @staticmethod
     def local(op, prec=None) -> "SolverOps":
         """Single-device ops (tests, small problems)."""
+        from repro.kernels.ops import fused_iteration_factory
+
         pfun = (lambda v: v) if prec is None else (lambda v: prec.apply(v))
         return SolverOps.create(
             apply_a=lambda v: op.apply(v),
             prec=pfun,
-            dot_block=lambda mat, vec: mat @ vec,
+            dot_block=dot_block_rows,
+            fused_iter_factory=fused_iteration_factory(op, prec),
         )
 
 

@@ -1,6 +1,7 @@
 """Pallas TPU kernels for the compute hot spots (ops.py = public wrappers,
-ref.py = pure-jnp oracles, one module per kernel)."""
+ref.py = pure-jnp oracles, one module per kernel).  ``fused_iter`` is
+the whole-iteration superkernel for p(l)-CG (DESIGN.md §13)."""
 
-from repro.kernels import ops, ref
+from repro.kernels import fused_iter, ops, ref
 
-__all__ = ["ops", "ref"]
+__all__ = ["fused_iter", "ops", "ref"]

@@ -1,0 +1,394 @@
+"""Fused-iteration superkernel: the whole p(l)-CG vector phase in ONE
+pass over the basis slab (DESIGN.md §13).
+
+The per-iteration hot path of ``repro.core.pipelined_cg`` is, unfused,
+~a dozen separate memory-bound passes over the (NV, N) state slab: the
+SPMV (K1), the pointwise preconditioner, the pipeline-fill copies, the
+2l+2 recurrence AXPYs of K4, the 2l+1 dot products of K5 and the x/p
+updates of K6 — each re-reading basis vectors the previous op just
+wrote.  This kernel is the deep-pipeline analogue of the kernel fusion
+Cornelis/Cools/Vanroose assume for the local phase of p(l)-CG
+(arXiv:1801.04728): per row tile, every basis vector is read from HBM
+once, every updated row is written once, and the 2l+1 dot-block
+*partials* are accumulated in VMEM — the single global reduction that
+follows (``SolverOps.start_partials``) carries the same payload as the
+unfused ``ops.start`` without touching the slab again.
+
+Division of labour (see ``pipelined_cg.iteration``):
+
+* the *scalar* phase (arrival scatter into G, K2 column correction, K3
+  Hessenberg column) runs outside — O(l^2) scalars, no vector traffic;
+* this kernel runs the *vector* phase from precomputed ring-row indices
+  (``idx``, int32) and scalar coefficients (``scal``), so fused and
+  unfused paths evaluate literally the same expressions on the same
+  operands — the bitwise-parity contract of tests/test_fused_iter.py.
+
+Tiling: the slab is blocked over its trailing N axis; the SPMV operand
+(z ring-top, halo-extended on distributed substrates) rides as a
+VMEM-resident side input prepared by the wrapper (one extra vector read
+— the distributed halo exchange stays OUTSIDE the kernel, riding the
+open reduction windows exactly as before, DESIGN.md §12).  Each grid
+step emits its (2l+1,) dot partials into a per-tile output column; the
+wrapper chain-sums the tiles (vmap-safe — no cross-grid-step carried
+state).  The default is a single column tile: multi-tile runs change
+only the dot partial summation ORDER (documented tight-tail behaviour,
+same policy as DESIGN.md §12); all row updates stay bitwise regardless
+of tiling.
+
+The state slab is input/output-aliased (``input_output_aliases``), so on
+TPU the iteration updates the slab in place — no per-iteration state
+copy; ``donate_argnums`` at the jit boundaries of the slab programs
+extends the same guarantee across chunks (DESIGN.md §13).  Off-TPU the
+kernel runs in interpret mode, the repo-wide validation vehicle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# ---------------------------------------------------------------- layout --
+
+@dataclasses.dataclass(frozen=True)
+class SlabLayout:
+    """Row map of the contiguous p(l)-CG state slab (NV, N).
+
+    Rows 0 .. (l+1)*RB-1 hold the l+1 auxiliary-basis ring buffers
+    (basis k, ring slot j -> row k*RB + j), followed by the 3-deep u
+    ring, the search direction p and the iterate x.  One array, one
+    trailing N axis — exactly what a column-tiled kernel (and a
+    ``donate_argnums``'d jit boundary) wants.
+    """
+
+    l: int
+    RB: int
+
+    @property
+    def u_off(self) -> int:
+        return (self.l + 1) * self.RB
+
+    @property
+    def p_row(self) -> int:
+        return self.u_off + 3
+
+    @property
+    def x_row(self) -> int:
+        return self.u_off + 4
+
+    @property
+    def nv(self) -> int:
+        return self.u_off + 5
+
+    def zk_row(self, k: int, j):
+        """Slab row of basis k's ring slot for iterate index j (traced)."""
+        return k * self.RB + jnp.mod(j, self.RB)
+
+    def u_row(self, j):
+        return self.u_off + jnp.mod(j, 3)
+
+
+# Index-vector layout (all entries are PRE-MODDED slab rows except the
+# trailing flags).  Built by ``pipelined_cg.iteration``; consumed
+# positionally by the kernel, so both sides share these offsets.
+def idx_layout(l: int) -> dict[str, int]:
+    return {
+        "fill": 0,            # l entries : write rows zk(k, i+1)
+        "rec_w": l,           # l entries : write rows zk(k, i-l+k+1)
+        "rec_a": 2 * l,       # l entries : read  rows zk(k+1, i-l+k+1)
+        "rec_b": 3 * l,       # l entries : read  rows zk(k, i-l+k)
+        "rec_c": 4 * l,       # l entries : read  rows zk(k, i-l+k-1)
+        "z_top": 5 * l,       # zk(l, i)
+        "zl_im1": 5 * l + 1,  # zk(l, i-1)
+        "z_w": 5 * l + 2,     # zk(l, i+1)   (write)
+        "u_i": 5 * l + 3,     # u(i)
+        "u_im1": 5 * l + 4,   # u(i-1)
+        "u_w": 5 * l + 5,     # u(i+1)       (write)
+        "p_im": 5 * l + 6,    # zk(0, i-l)
+        "mat_v": 5 * l + 7,   # l entries : dot rows zk(0, i-2l+1+t), t<l
+        "mat_z": 6 * l + 7,   # l-1 entries: dot rows zk(l, i-l+2+t), t<l-1
+        "f_fill": 7 * l + 6,  # l flags    : pipeline-fill copy masks
+        "f_late": 8 * l + 6,  # i >= l
+        "f_first": 8 * l + 7,  # i == l
+        "f_upd": 8 * l + 8,   # i >= l+1
+        "size": 8 * l + 9,
+    }
+
+
+# Scalar-vector layout (solver dtype).
+def scal_layout(l: int) -> dict[str, int]:
+    return {
+        "sig_i": 0,
+        "gam_new": 1,
+        "d2": 2,
+        "dlt_safe": 3,
+        "zet_prev": 4,
+        "d_prev": 5,
+        "eta_new_safe": 6,
+        "eta0_safe": 7,
+        "c1": 8,              # l entries : sig[k] - gam_new
+        "size": 8 + l,
+    }
+
+
+# ------------------------------------------------------------ SPMV tiles --
+
+@dataclasses.dataclass(frozen=True)
+class FusedSpmv:
+    """Operator plug-in for the superkernel.
+
+    ``prepare(z_top)`` runs OUTSIDE the kernel (halo exchange, reshape)
+    and returns the extra operand arrays; ``specs(block_n, n)`` their
+    BlockSpecs; ``tile(extras, z_tile, pid, block_n)`` computes the
+    az row tile inside the kernel — written to evaluate exactly the same
+    jnp expression as the unfused ``ops.apply_a`` so row updates stay
+    bitwise (tests/test_fused_iter.py).
+    """
+
+    prepare: Callable[[jax.Array], tuple]
+    specs: Callable[[int, int], list]
+    tile: Callable[[Sequence, jax.Array, jax.Array, int], jax.Array]
+
+
+def resident_spmv(expr: Callable[[jax.Array], jax.Array],
+                  prepare: Callable[[jax.Array], jax.Array],
+                  ext_len: int) -> FusedSpmv:
+    """Stencil-style SPMV: the (halo-extended) operand vector is VMEM-
+    resident for the whole grid; each tile slices its rows out of the
+    full stencil evaluation (a single-tile grid makes the slice the
+    identity — the bitwise-default configuration)."""
+
+    def specs(block_n: int, n: int):
+        return [pl.BlockSpec((ext_len,), lambda i: (0,))]
+
+    def tile(extras, z_tile, pid, block_n):
+        az_full = expr(extras[0][...])
+        return jax.lax.dynamic_slice(az_full, (pid * block_n,), (block_n,))
+
+    return FusedSpmv(prepare=lambda z: (prepare(z),), specs=specs, tile=tile)
+
+
+def diagonal_spmv(d: jax.Array) -> FusedSpmv:
+    """A = diag(d): az is elementwise — the tile needs no halo at all."""
+
+    def specs(block_n: int, n: int):
+        return [pl.BlockSpec((block_n,), lambda i: (i,))]
+
+    def tile(extras, z_tile, pid, block_n):
+        return extras[0][...].astype(z_tile.dtype) * z_tile
+
+    return FusedSpmv(prepare=lambda z: (d,), specs=specs, tile=tile)
+
+
+def ell_spmv(cols: jax.Array, vals: jax.Array,
+             prepare: Callable[[jax.Array], jax.Array],
+             ext_len: int) -> FusedSpmv:
+    """Unstructured padded-row ELL rows: cols/vals tile with the rows,
+    the (halo-extended) x stays resident for the one gather per tile
+    (same structure as ``kernels.ell_spmv``); the row sum uses the
+    explicit add chain of ``linalg.sparse.ell_rowsum`` so local and
+    distributed applies keep rounding identically (DESIGN.md §12)."""
+    w = cols.shape[1]
+
+    def specs(block_n: int, n: int):
+        return [
+            pl.BlockSpec((ext_len,), lambda i: (0,)),
+            pl.BlockSpec((block_n, w), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, w), lambda i: (i, 0)),
+        ]
+
+    def tile(extras, z_tile, pid, block_n):
+        x = extras[0][...]
+        cols_t = extras[1][...]
+        vals_t = extras[2][...].astype(z_tile.dtype)
+        gathered = x[cols_t].astype(vals_t.dtype)
+        acc = vals_t[..., 0] * gathered[..., 0]
+        for s in range(1, w):
+            acc = acc + vals_t[..., s] * gathered[..., s]
+        return acc
+
+    return FusedSpmv(prepare=lambda z: (prepare(z), cols, vals),
+                     specs=specs, tile=tile)
+
+
+# ---------------------------------------------------------------- kernel --
+
+def build_fused_iteration(
+    layout: SlabLayout,
+    spmv: FusedSpmv,
+    inv_diag: jax.Array | None = None,
+    *,
+    block_n: int | None = None,
+    interpret: bool = False,
+) -> Callable:
+    """Compile-time assembly of the superkernel for one (operator,
+    preconditioner, depth) configuration.
+
+    Returns ``fiter(S, idx, scal) -> (S', partials)``: the full vector
+    phase of one p(l)-CG iteration — SPMV + pointwise preconditioner +
+    fill copies + K4 recurrences + ring writes + K6 x/p updates + local
+    dot-block partials — with the slab read once and written once per
+    tile (``input_output_aliases`` pins S' to S's buffer).
+
+    ``inv_diag`` enables the pointwise (Jacobi) preconditioner tile;
+    None means identity.  Block-structured preconditioners have no fused
+    path (their block solve is not pointwise) — ``fused_iteration_factory``
+    returns None for them and the solver falls back loudly.
+    """
+    l, nv = layout.l, layout.nv
+    IX = idx_layout(l)
+    IS = scal_layout(l)
+    nd = 2 * l + 1
+    has_prec = inv_diag is not None
+
+    def kernel(s_ref, idx_ref, scal_ref, *rest):
+        *extra_refs, o_ref, acc_ref = rest
+        if has_prec:
+            *extra_refs, prec_ref = extra_refs
+        s = s_ref[...]                       # (NV, BN) — the one slab read
+        idx = idx_ref[...]
+        scal = scal_ref[...]
+        pid = pl.program_id(0)
+        bn = s.shape[1]
+
+        def get(row):
+            return jax.lax.dynamic_index_in_dim(s, row, 0, keepdims=False)
+
+        def put(out, row, vec):
+            return jax.lax.dynamic_update_index_in_dim(out, vec, row, axis=0)
+
+        late = idx[IX["f_late"]] != 0
+        z_top = get(idx[IX["z_top"]])
+        u_i = get(idx[IX["u_i"]])
+        u_im1 = get(idx[IX["u_im1"]])
+
+        # ---- (K1) SPMV + pointwise preconditioner ------------------------
+        az = spmv.tile(extra_refs, z_top, pid, bn)
+        u_new0 = az - scal[IS["sig_i"]] * u_i
+        z_new0 = prec_ref[...] * u_new0 if has_prec else u_new0
+
+        out = s
+        # ---- pipeline-fill copies (lines 5-7) ----------------------------
+        for k in range(l):
+            row = idx[IX["fill"] + k]
+            fill_k = idx[IX["f_fill"] + k] != 0
+            out = put(out, row, jnp.where(fill_k, z_new0, get(row)))
+
+        # ---- (K4) stable basis recurrences (masked late) -----------------
+        recs = []
+        for k in range(l):
+            zk1 = get(idx[IX["rec_a"] + k])
+            zm1 = get(idx[IX["rec_b"] + k])
+            zm2 = get(idx[IX["rec_c"] + k])
+            rec = (zk1 + scal[IS["c1"] + k] * zm1
+                   - scal[IS["d2"]] * zm2) / scal[IS["dlt_safe"]]
+            val = jnp.where(late, rec, get(idx[IX["rec_w"] + k]))
+            recs.append(val)
+            out = put(out, idx[IX["rec_w"] + k], val)
+
+        zl_im1 = get(idx[IX["zl_im1"]])
+        z_new = jnp.where(
+            late,
+            (z_new0 - scal[IS["gam_new"]] * z_top
+             - scal[IS["d2"]] * zl_im1) / scal[IS["dlt_safe"]],
+            z_new0)
+        u_new = jnp.where(
+            late,
+            (u_new0 - scal[IS["gam_new"]] * u_i
+             - scal[IS["d2"]] * u_im1) / scal[IS["dlt_safe"]],
+            u_new0)
+        out = put(out, idx[IX["z_w"]], z_new)
+        out = put(out, idx[IX["u_w"]], u_new)
+
+        # ---- (K5) local dot-block partials, accumulated in VMEM ----------
+        # Rows i-2l+1..i+1 of G column i+1: the ZK^(0) V-range (last entry
+        # freshly recurred), the ZK^(l) Z-range, and z_{i+1} itself.
+        rows = [get(idx[IX["mat_v"] + t]) for t in range(l)] + [recs[0]]
+        rows += [get(idx[IX["mat_z"] + t]) for t in range(l - 1)] + [z_new]
+        mat = jnp.stack(rows)                # (2l+1, BN)
+
+        # ---- (K6) solution/search-direction updates ----------------------
+        x_old = s[layout.x_row]
+        p_old = s[layout.p_row]
+        p_first = s[0] / scal[IS["eta0_safe"]]
+        p_new = (get(idx[IX["p_im"]])
+                 - scal[IS["d_prev"]] * p_old) / scal[IS["eta_new_safe"]]
+        x_new = x_old + scal[IS["zet_prev"]] * p_old
+        do_upd = idx[IX["f_upd"]] != 0
+        is_first = idx[IX["f_first"]] != 0
+        out = out.at[layout.x_row].set(jnp.where(do_upd, x_new, x_old))
+        out = out.at[layout.p_row].set(
+            jnp.where(is_first, p_first,
+                      jnp.where(do_upd, p_new, p_old)))
+
+        o_ref[...] = out                     # the one slab write
+
+        # Per-tile partials; the wrapper chain-sums tiles (a single tile
+        # — the bitwise default — makes the sum the identity).  The
+        # expression mirrors types.dot_block_rows exactly: a trailing-
+        # axis reduce is bitwise-stable across the interpreter and vmap
+        # where a dot_general is not.
+        acc_ref[...] = (mat * u_new[None, :]).sum(axis=1)[:, None]
+
+    def fiter(S: jax.Array, idx: jax.Array, scal: jax.Array):
+        n = S.shape[1]
+        bn = n if block_n is None else block_n
+        assert n % bn == 0, (n, bn)
+        nb = n // bn
+        dtype = S.dtype
+        z_top = jax.lax.dynamic_index_in_dim(S, idx[IX["z_top"]], 0,
+                                             keepdims=False)
+        extras = spmv.prepare(z_top)
+        in_specs = [
+            pl.BlockSpec((nv, bn), lambda i: (0, i)),       # S tiles
+            pl.BlockSpec((IX["size"],), lambda i: (0,)),
+            pl.BlockSpec((IS["size"],), lambda i: (0,)),
+            *spmv.specs(bn, n),
+        ]
+        inputs = [S, idx, scal, *extras]
+        if has_prec:
+            in_specs.append(pl.BlockSpec((bn,), lambda i: (i,)))
+            inputs.append(inv_diag.astype(dtype))
+        out, acc = pl.pallas_call(
+            kernel,
+            grid=(nb,),
+            in_specs=in_specs,
+            out_specs=[
+                pl.BlockSpec((nv, bn), lambda i: (0, i)),
+                pl.BlockSpec((nd, 1), lambda i: (0, i)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((nv, n), dtype),
+                jax.ShapeDtypeStruct((nd, nb), dtype),
+            ],
+            input_output_aliases={0: 0},     # slab updates in place
+            interpret=interpret,
+        )(*inputs)
+        partials = acc[:, 0]
+        for t in range(1, nb):               # static chain over tiles
+            partials = partials + acc[:, t]
+        return out, partials
+
+    return fiter
+
+
+def custom_call_hbm_bytes(layout: SlabLayout, n: int, dsize: int = 8,
+                          extra_bytes: int = 0, n_tiles: int = 1) -> int:
+    """HBM traffic XLA's cost analysis attributes to the compiled
+    superkernel on TPU, where a ``pallas_call`` is an opaque custom call:
+    operand bytes + result bytes — the slab once in, once out, the
+    resident SPMV operand per tile, and the O(l) scalar/partial bundles.
+    This is the ``fused_bytes_per_iter`` roofline of DESIGN.md §13; the
+    interpret-mode numbers measured off-TPU upper-bound it (the
+    interpreter re-materializes kernel-interior temporaries that the
+    Mosaic compilation keeps in VMEM)."""
+    slab = layout.nv * n * dsize
+    idx_scal = (idx_layout(layout.l)["size"] * 4
+                + scal_layout(layout.l)["size"] * dsize)
+    partials = (2 * layout.l + 1) * dsize
+    resident = n_tiles * (n * dsize + extra_bytes)
+    return 2 * slab + resident + idx_scal + partials

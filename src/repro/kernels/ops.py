@@ -18,11 +18,114 @@ from repro.kernels import decode_attention as _da
 from repro.kernels import ell_spmv as _el
 from repro.kernels import fused_axpy as _fa
 from repro.kernels import fused_dots as _fd
+from repro.kernels import fused_iter as _fi
 from repro.kernels import stencil_spmv as _ss
 
 
 def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
+
+
+# ------------------------------------------------- fused-iteration factory --
+
+def _local_fused_spmv(op):
+    """Single-device :class:`~repro.kernels.fused_iter.FusedSpmv` for the
+    operator, mirroring its pure-jnp ``apply`` expression term by term
+    (the bitwise contract of the superkernel); None when unsupported."""
+    from repro.linalg.operators import (DiagonalOp, Stencil2D5, Stencil3D7,
+                                        Stencil3D27)
+    from repro.linalg.sparse import SparseOp
+
+    if isinstance(op, DiagonalOp):
+        return _fi.diagonal_spmv(op.d)
+    if getattr(op, "use_kernel", False):
+        # use_kernel operators route the unfused path through the
+        # standalone Pallas kernels (whose reductions round differently
+        # from the jnp expressions this kernel mirrors); the superkernel
+        # subsumes those, but mirroring a kernel inside a kernel is not
+        # a thing — no fused path, the solver fails loudly.
+        return None
+    if isinstance(op, SparseOp):
+        return _fi.ell_spmv(op.cols, op.vals, lambda z: z, op.n)
+    if isinstance(op, Stencil2D5):
+        nx, ny = op.nx, op.ny
+
+        def expr2d(z):
+            g = z.reshape(nx, ny)
+            p = jnp.pad(g, 1)
+            out = (4.0 * g - p[:-2, 1:-1] - p[2:, 1:-1]
+                   - p[1:-1, :-2] - p[1:-1, 2:])
+            return out.reshape(-1)
+
+        return _fi.resident_spmv(expr2d, lambda z: z, op.n)
+    if isinstance(op, Stencil3D7):
+        nx, ny, nz, eps_z = op.nx, op.ny, op.nz, op.eps_z
+
+        def expr3d(z):
+            g = z.reshape(nx, ny, nz)
+            p = jnp.pad(g, 1)
+            ez = jnp.asarray(eps_z, dtype=z.dtype)
+            out = (
+                (4.0 + 2.0 * ez) * g
+                - p[:-2, 1:-1, 1:-1] - p[2:, 1:-1, 1:-1]
+                - p[1:-1, :-2, 1:-1] - p[1:-1, 2:, 1:-1]
+                - ez * p[1:-1, 1:-1, :-2] - ez * p[1:-1, 1:-1, 2:]
+            )
+            return out.reshape(-1)
+
+        return _fi.resident_spmv(expr3d, lambda z: z, op.n)
+    if isinstance(op, Stencil3D27):
+        nx, ny, nz, centre = op.nx, op.ny, op.nz, op.centre
+
+        def expr27(z):
+            g = z.reshape(nx, ny, nz)
+            p = jnp.pad(g, 1)
+            out = centre * g
+            for di in (-1, 0, 1):
+                for dj in (-1, 0, 1):
+                    for dk in (-1, 0, 1):
+                        order = abs(di) + abs(dj) + abs(dk)
+                        if order == 0:
+                            continue
+                        w = {1: 1.0, 2: 0.5, 3: 0.25}[order]
+                        out = out - w * p[1 + di:1 + di + nx,
+                                          1 + dj:1 + dj + ny,
+                                          1 + dk:1 + dk + nz]
+            return out.reshape(-1)
+
+        return _fi.resident_spmv(expr27, lambda z: z, op.n)
+    return None
+
+
+def fused_iteration_factory(op, prec=None):
+    """Factory for the fused-iteration superkernel on the LOCAL substrate
+    (DESIGN.md §13), or None when the (operator, preconditioner) pair has
+    no fused path — unsupported operator kinds, kernel-routed stencils,
+    or non-pointwise (block-structured) preconditioners.
+
+    The returned ``factory(layout, interpret=None, block_n=None)`` builds
+    the per-iteration vector-phase callable consumed by
+    ``pipelined_cg.build(..., fused_iteration=True)``.
+    """
+    from repro.linalg.preconditioners import IdentityPrec, JacobiPrec
+
+    if prec is None or isinstance(prec, IdentityPrec):
+        inv_diag = None
+    elif isinstance(prec, JacobiPrec):
+        inv_diag = prec.inv_diag
+    else:
+        return None
+    spmv = _local_fused_spmv(op)
+    if spmv is None:
+        return None
+
+    def factory(layout, interpret: bool | None = None,
+                block_n: int | None = None):
+        interp = _interpret_default() if interpret is None else interpret
+        return _fi.build_fused_iteration(layout, spmv, inv_diag,
+                                         block_n=block_n, interpret=interp)
+
+    return factory
 
 
 def _round_up(x: int, m: int) -> int:

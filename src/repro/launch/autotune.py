@@ -114,6 +114,57 @@ def operator_neighbor_bytes(op, n_shards: int, dsize: int = 8) -> int:
     return int(2 * n_loc ** (2 / 3)) * dsize    # generic surface/volume
 
 
+def measured_iteration_bytes(op, l: int, prec=None, sigmas=None,
+                             fused: bool = False, dtype=None) -> float:
+    """XLA ``cost_analysis`` 'bytes accessed' of ONE compiled p(l)-CG
+    iteration (late phase, local substrate) — the measured input of the
+    ``iteration_bytes`` cost-model term and of the fused-vs-unfused HBM
+    gate (DESIGN.md §13; benchmarks/iter_bench.py).
+
+    Off-TPU caveat, stated where it matters: the fused path's Pallas
+    superkernel runs in interpret mode here, whose lowering re-
+    materializes kernel-interior temporaries — XLA then reports
+    essentially the unfused traffic for it.  The TPU accounting of the
+    compiled kernel (an opaque custom call: operands + results once) is
+    :func:`fused_iteration_bytes`; use THIS function for the unfused
+    side and that one for the fused side when modeling the TPU target.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import pipelined_cg
+    from repro.core.types import SolverOps
+
+    dtype = jnp.zeros(()).dtype if dtype is None else dtype
+    ops = SolverOps.local(op, prec)
+    b = jnp.zeros((op.n,), dtype)
+    prog = pipelined_cg.build(ops, b, l, sigmas=sigmas,
+                              fused_iteration=fused)
+    st0 = jax.eval_shape(prog.init, b)
+    compiled = jax.jit(
+        lambda st: prog.iteration(st, static_phase="late")
+    ).lower(st0).compile()
+    ca = compiled.cost_analysis()
+    ca = ca[0] if isinstance(ca, list) else ca
+    return float(ca["bytes accessed"])
+
+
+def fused_iteration_bytes(n: int, l: int, dsize: int = 8,
+                          extra_bytes: int = 0) -> int:
+    """Modeled HBM bytes of one FUSED p(l)-CG iteration on the TPU
+    target: the superkernel is an opaque custom call to XLA's cost
+    analysis — operand bytes + result bytes, i.e. the (NV, N) slab once
+    in / once out (aliased), the resident SPMV operand, and the O(l)
+    scalar bundles (``kernels.fused_iter.custom_call_hbm_bytes``).
+    ``extra_bytes`` adds operator-side operands (ELL cols/vals, halo
+    slabs)."""
+    from repro.kernels.fused_iter import SlabLayout, custom_call_hbm_bytes
+
+    layout = SlabLayout(l=l, RB=max(l + 1, 3))
+    return custom_call_hbm_bytes(layout, n, dsize=dsize,
+                                 extra_bytes=extra_bytes)
+
+
 def xla_effective_depth(l: int, unroll: int) -> int:
     """Reductions a while-loop body can keep in flight under XLA.
 
@@ -173,8 +224,20 @@ def model_iteration_time(
     s: int = 1,
     dsize: int = 8,
     neighbor_bytes: int | None = None,
+    iteration_bytes: float | None = None,
 ) -> float:
     """Modeled seconds per SLAB iteration at the XLA-effective depth.
+
+    ``iteration_bytes`` (p(l)-CG only) recalibrates the model's local
+    HBM-stream budget against a MEASURED per-worker bytes/iteration —
+    XLA ``cost_analysis`` of the compiled iteration
+    (:func:`measured_iteration_bytes`) or the fused superkernel's
+    custom-call accounting (:func:`fused_iteration_bytes`), DESIGN.md
+    §13.  The analytic stream terms (SPMV stream + 2l+3 AXPY passes) are
+    scaled so their total equals ``iteration_bytes / mem_bw``; the
+    halo/latency parts of the SPMV and the reduction term stay analytic
+    — measured traffic changes how fast the body runs, not the overlap
+    structure.
 
     ``s`` is the multi-RHS slab width (DESIGN.md §11); both sides of the
     overlap balance scale with it, consistently: the local work (SPMV /
@@ -202,6 +265,15 @@ def model_iteration_time(
         hw, n, p, stencil_pts=stencil_pts, prec_factor=prec_factor,
         halo_elems=halo_elems,
         glred_payload=reduction_payload_bytes(method, l, s, dsize))
+    if iteration_bytes is not None and method == "plcg":
+        # Calibrate the stream budget: scale SPMV-stream + AXPY passes so
+        # their modeled total matches the measured bytes/iteration.
+        model_stream = k["spmv_stream"] + (2 * l + 3) * k["axpy1"]
+        scale = (iteration_bytes / hw.mem_bw) / max(model_stream, 1e-30)
+        k = {**k,
+             "axpy1": k["axpy1"] * scale,
+             "spmv": k["spmv_comm"] + k["spmv_stream"] * scale,
+             "spmv_stream": k["spmv_stream"] * scale}
     if s > 1:
         # Slab-consistent local terms: s columns stream per iteration
         # (the halo/latency parts of the SPMV amortize like the glred
@@ -232,6 +304,7 @@ def autotune_depth(
     measure: Callable[[str, int, int], float] | None = None,
     s: int = 1,
     neighbor_bytes: int | None = None,
+    iteration_bytes: Callable[[int], float] | float | None = None,
 ) -> AutotuneResult:
     """Sweep (l, unroll) and pick the fastest candidate.
 
@@ -246,7 +319,11 @@ def autotune_depth(
     latency and favor shallower pipelines (DESIGN.md §11).
     ``neighbor_bytes`` (``operator_neighbor_bytes``) injects the
     partition plan's measured halo traffic for unstructured operators
-    (DESIGN.md §12).
+    (DESIGN.md §12).  ``iteration_bytes`` calibrates the p(l)-CG local
+    stream budget against measured per-worker HBM traffic — a float, or
+    a callable ``l -> bytes`` since the slab (and hence the traffic)
+    grows with depth (:func:`measured_iteration_bytes` /
+    :func:`fused_iteration_bytes`, DESIGN.md §13).
     """
     _require_timing_model()
     if hw is None:
@@ -254,10 +331,15 @@ def autotune_depth(
     cands: list[Candidate] = []
 
     def add(method, l, unroll):
+        ib = None
+        if method == "plcg" and iteration_bytes is not None:
+            ib = iteration_bytes(l) if callable(iteration_bytes) \
+                else iteration_bytes
         mdl = model_iteration_time(hw, n, p, method, l, unroll,
                                    stencil_pts=stencil_pts, jitter=jitter,
                                    prec_factor=prec_factor, s=s,
-                                   neighbor_bytes=neighbor_bytes)
+                                   neighbor_bytes=neighbor_bytes,
+                                   iteration_bytes=ib)
         meas = measure(method, l, unroll) if measure is not None else None
         cands.append(Candidate(method, l, unroll, mdl, meas))
 

@@ -294,6 +294,115 @@ def rcm_reorder(op: SparseOp) -> tuple[SparseOp, np.ndarray]:
 
 
 # --------------------------------------------------------------------------
+# Sliced ELL: degree-sorted row buckets, per-slice padding (DESIGN.md §13).
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SlicedEllOp(LinearOperator):
+    """Sliced-ELL storage: rows sorted by nonzero count and cut into
+    slices of ``slice_rows`` rows, each slice padded only to ITS OWN max
+    row length instead of the global max.
+
+    Uniform padded-row ELL pays ``w_max`` slots for every row; on
+    irregular FEM meshes (degree spread ~4..14) that left ~42% of the
+    streamed bytes as padding (``BENCH_spmv.json`` showed occupancy
+    0.58).  Degree sorting concentrates equal-length rows into the same
+    slice, so per-slice widths hug the true row lengths — occupancy
+    rises to >= 0.85 on the same mesh and the SpMV streams proportionally
+    fewer value/column bytes.  The permutation COMPOSES with the RCM
+    ordering (:func:`sliced_ell_reorder`), and the slice table is static,
+    so ``apply`` is one small fixed set of gather+rowsum ops.
+    """
+
+    slice_rows: int
+    slice_cols: tuple        # per-slice (rows_s, w_s) int32 arrays
+    slice_vals: tuple        # per-slice (rows_s, w_s) value arrays
+
+    @property
+    def n(self) -> int:  # type: ignore[override]
+        return sum(int(c.shape[0]) for c in self.slice_cols)
+
+    @property
+    def nnz(self) -> int:
+        return int(sum(np.count_nonzero(np.asarray(v))
+                       for v in self.slice_vals))
+
+    @property
+    def padded_slots(self) -> int:
+        return int(sum(c.shape[0] * c.shape[1] for c in self.slice_cols))
+
+    def occupancy(self) -> float:
+        """Useful fraction of stored slots (the gated bench metric)."""
+        return self.nnz / max(self.padded_slots, 1)
+
+    def padding_waste(self) -> float:
+        """Fraction of streamed slots that are padding (1 - occupancy)."""
+        return 1.0 - self.occupancy()
+
+    def apply(self, x: jax.Array) -> jax.Array:
+        parts = [ell_rowsum(v.astype(x.dtype), x[c])
+                 for c, v in zip(self.slice_cols, self.slice_vals)]
+        return jnp.concatenate(parts)
+
+    def diag(self) -> jax.Array:
+        offs = np.cumsum([0] + [int(c.shape[0]) for c in self.slice_cols])
+        parts = []
+        for s, (c, v) in enumerate(zip(self.slice_cols, self.slice_vals)):
+            row = jnp.arange(offs[s], offs[s + 1], dtype=c.dtype)[:, None]
+            parts.append(jnp.where(c == row, v, 0.0).sum(axis=-1))
+        return jnp.concatenate(parts)
+
+    def to_dense(self) -> np.ndarray:
+        n = self.n
+        a = np.zeros((n, n))
+        off = 0
+        for c, v in zip(self.slice_cols, self.slice_vals):
+            cc = np.asarray(c)
+            vv = np.asarray(v, dtype=np.float64)
+            rows = np.repeat(np.arange(off, off + cc.shape[0]), cc.shape[1])
+            np.add.at(a, (rows, cc.reshape(-1)), vv.reshape(-1))
+            off += cc.shape[0]
+        return a
+
+
+def degree_sort_permutation(op: SparseOp) -> np.ndarray:
+    """Stable row permutation by DESCENDING nonzero count
+    (``perm[new] = old``): whatever bucket size the caller slices with,
+    rows of similar length end up adjacent, which is what makes
+    per-slice padding tight.  Stability preserves the relative (RCM)
+    order within each degree class, keeping gather locality."""
+    lengths = np.count_nonzero(np.asarray(op.vals), axis=1)
+    return np.argsort(-lengths, kind="stable").astype(np.int64)
+
+
+def sliced_ell_reorder(op: SparseOp, slice_rows: int = 64
+                       ) -> tuple[SlicedEllOp, np.ndarray]:
+    """(sliced operator, perm) with ``perm[new] = old`` in the ORIGINAL
+    row numbering: the degree-sort permutation composed with the
+    operator's RCM ordering (applied first when ``op`` is not already
+    ``ordered``).  Solve with ``b[perm]`` / un-permute with
+    ``np.argsort(perm)`` exactly as for :func:`rcm_reorder`."""
+    if op.ordered:
+        base, base_perm = op, np.arange(op.n, dtype=np.int64)
+    else:
+        base, base_perm = rcm_reorder(op)
+    dperm = degree_sort_permutation(base)
+    perm = base_perm[dperm]
+    sorted_op = permute_spd(base, dperm, ordered=False)
+    cols = np.asarray(sorted_op.cols)
+    vals = np.asarray(sorted_op.vals)
+    lengths = np.count_nonzero(vals, axis=1)
+    sc, sv = [], []
+    for r0 in range(0, op.n, slice_rows):
+        r1 = min(r0 + slice_rows, op.n)
+        w_s = max(int(lengths[r0:r1].max(initial=1)), 1)
+        sc.append(jnp.asarray(cols[r0:r1, :w_s]))
+        sv.append(jnp.asarray(vals[r0:r1, :w_s], dtype=op.vals.dtype))
+    return SlicedEllOp(slice_rows=slice_rows, slice_cols=tuple(sc),
+                       slice_vals=tuple(sv)), perm
+
+
+# --------------------------------------------------------------------------
 # Random FEM-style meshes (SPD graph Laplacians).
 # --------------------------------------------------------------------------
 

@@ -1,10 +1,16 @@
 """Single-device reduction backend (DESIGN.md §3).
 
-The fused dot block is a plain ``mat @ vec`` — there is no wire, but the
-issue/consume sites are tagged exactly like the distributed backends, so
-the overlap tracer sees the same chain structure and ``local`` serves as
-the bitwise-comparable oracle for ``shard_map``/``multiprocess`` runs
+The fused dot block is a plain in-process row reduction
+(``types.dot_block_rows``) — there is no wire, but the issue/consume
+sites are tagged exactly like the distributed backends, so the overlap
+tracer sees the same chain structure and ``local`` serves as the
+bitwise-comparable oracle for ``shard_map``/``multiprocess`` runs
 (the residual-history parity asserted in tests/test_cg_convergence.py).
+
+Slab programs jit their chunk/inject steps with ``donate_argnums`` on
+the state: the (s, NV, N) vector slab crosses the serving loop's jit
+boundary aliased instead of copied (DESIGN.md §13), matching the
+superkernel's ``input_output_aliases`` inside the iteration.
 """
 
 from __future__ import annotations
@@ -60,12 +66,18 @@ class LocalBackend(ReductionBackend):
             method=method, s=s, n=op.n, chunk_iters=chunk_iters,
             init=jax.jit(
                 lambda B: batched_mod.batched_init(ops, B, method, kw)),
+            # donate the incoming slab state: chunk/inject consume it and
+            # return its successor, so XLA aliases the state buffers
+            # in place of a per-chunk copy (DESIGN.md §13; asserted on
+            # compiled HLO in tests/test_fused_iter.py).
             chunk=jax.jit(
                 lambda B, st: batched_mod.batched_chunk(
-                    ops, B, st, method, kw, chunk_iters)),
+                    ops, B, st, method, kw, chunk_iters),
+                donate_argnums=(1,)),
             inject=jax.jit(
                 lambda B, st, mask: batched_mod.batched_inject(
-                    ops, B, st, mask, method, kw)),
+                    ops, B, st, mask, method, kw),
+                donate_argnums=(1,)),
             status=jax.jit(
                 lambda B, st: batched_mod.batched_status(ops, B, st, method,
                                                          kw)),

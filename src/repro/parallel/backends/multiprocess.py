@@ -28,7 +28,12 @@ Batched multi-RHS serving (DESIGN.md §11) is inherited wholesale from
 same vmapped per-column programs, and the slab's (2l+1, s) dot-block
 matrix rides ONE cross-host psum per iteration — the amortized payload
 crosses the wire exactly once however many requests are in flight
-(parity over this backend asserted in tests/test_serve.py).
+(parity over this backend asserted in tests/test_serve.py).  The
+fused-iteration superkernel and the donated slab state (DESIGN.md §13)
+are likewise inherited: ``fused_iteration=True`` fuses each rank's
+local vector phase into one HBM pass, the cross-host psum then carries
+the VMEM-accumulated partials, and chunk/inject donate the sharded
+state buffers exactly as on ``shard_map``.
 """
 
 from __future__ import annotations

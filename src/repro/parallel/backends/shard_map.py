@@ -112,11 +112,14 @@ class ShardMapBackend(ReductionBackend):
         st_specs = batched_state_specs(method, st_struct, axis)
         status_specs = SlabStatus(running=P(), converged=P(), iters=P())
 
-        def staged(fn, in_specs, out_specs):
+        def staged(fn, in_specs, out_specs, donate=()):
             wrapped = shard_map_compat(fn, mesh=self.mesh,
                                        in_specs=in_specs,
                                        out_specs=out_specs)
-            return jax.jit(wrapped)
+            # donate=(1,) on chunk/inject: the slab state is consumed and
+            # replaced every call, so its sharded buffers alias through
+            # the jit boundary instead of copying (DESIGN.md §13).
+            return jax.jit(wrapped, donate_argnums=donate)
 
         init_j = staged(
             lambda Bl, loc: batched_mod.batched_init(build(loc), Bl, method,
@@ -125,11 +128,11 @@ class ShardMapBackend(ReductionBackend):
         chunk_j = staged(
             lambda Bl, st, loc: batched_mod.batched_chunk(
                 build(loc), Bl, st, method, kw, chunk_iters),
-            (b_spec, st_specs, arr_specs), st_specs)
+            (b_spec, st_specs, arr_specs), st_specs, donate=(1,))
         inject_j = staged(
             lambda Bl, st, mask, loc: batched_mod.batched_inject(
                 build(loc), Bl, st, mask, method, kw),
-            (b_spec, st_specs, P(), arr_specs), st_specs)
+            (b_spec, st_specs, P(), arr_specs), st_specs, donate=(1,))
         status_j = staged(
             lambda Bl, st, loc: batched_mod.batched_status(build(loc), Bl,
                                                            st, method, kw),

@@ -46,7 +46,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import METHODS
 from repro.core import batched as batched_mod
-from repro.core.types import HALO_TAG, SolveResult, SolverOps
+from repro.core.types import (HALO_TAG, SolveResult, SolverOps,
+                              dot_block_rows)
 from repro.linalg import partition as partition_mod
 from repro.linalg.operators import (
     DiagonalOp,
@@ -280,6 +281,100 @@ def _partition_prec(prec, op: LinearOperator, n_shards: int, perm=None):
     raise TypeError(f"no distributed implementation for {type(prec).__name__}")
 
 
+def _fused_spmv_local(op, loc, n_shards: int, axis: str):
+    """Shard-level :class:`~repro.kernels.fused_iter.FusedSpmv` for the
+    fused-iteration superkernel (DESIGN.md §13): the halo exchange stays
+    OUTSIDE the kernel in ``prepare`` (one HALO_TAG'd ppermute per
+    direction/hop, riding the open reduction windows exactly as the
+    unfused path, DESIGN.md §12); the kernel then evaluates the same
+    local stencil / ELL expression as the unfused shard apply, so row
+    updates stay bitwise.  None when the operator has no fused path.
+    """
+    from repro.kernels import fused_iter as fi
+
+    if isinstance(op, DiagonalOp):
+        return fi.diagonal_spmv(loc["d"])
+    if isinstance(op, SparseOp):
+        if op.use_kernel:
+            return None              # kernel-in-kernel: no fused mirror
+        cols, vals = loc["cols"][0], loc["vals"][0]
+        send_up, send_dn = loc["send_up"][0], loc["send_dn"][0]
+        nxl = cols.shape[0]
+        hops, max_send = send_up.shape
+
+        def prep_sparse(z):
+            return partition_mod.halo_exchange(z, send_up, send_dn, axis)
+
+        return fi.ell_spmv(cols, vals, prep_sparse,
+                           nxl + 2 * hops * max_send)
+    if getattr(op, "use_kernel", False):
+        return None
+    if isinstance(op, Stencil2D5):
+        nxl, ny = op.nx // n_shards, op.ny
+
+        def prep2d(z):
+            g = z.reshape(nxl, ny)
+            up, dn = _halo_first_dim(g, axis)
+            return jnp.concatenate([up, g, dn], axis=0).reshape(-1)
+
+        def expr2d(zf):
+            gp = zf.reshape(nxl + 2, ny)
+            g = gp[1:-1]
+            gy = jnp.pad(g, ((0, 0), (1, 1)))
+            out = 4.0 * g - gp[:-2] - gp[2:] - gy[:, :-2] - gy[:, 2:]
+            return out.reshape(-1)
+
+        return fi.resident_spmv(expr2d, prep2d, (nxl + 2) * ny)
+    if isinstance(op, Stencil3D7):
+        nxl, ny, nz, eps_z = op.nx // n_shards, op.ny, op.nz, op.eps_z
+
+        def prep3d(z):
+            g = z.reshape(nxl, ny, nz)
+            up, dn = _halo_first_dim(g, axis)
+            return jnp.concatenate([up, g, dn], axis=0).reshape(-1)
+
+        def expr3d(zf):
+            gp = zf.reshape(nxl + 2, ny, nz)
+            g = gp[1:-1]
+            gy = jnp.pad(g, ((0, 0), (1, 1), (0, 0)))
+            gz = jnp.pad(g, ((0, 0), (0, 0), (1, 1)))
+            ez = jnp.asarray(eps_z, dtype=zf.dtype)
+            out = (
+                (4.0 + 2.0 * ez) * g
+                - gp[:-2] - gp[2:]
+                - gy[:, :-2, :] - gy[:, 2:, :]
+                - ez * gz[:, :, :-2] - ez * gz[:, :, 2:]
+            )
+            return out.reshape(-1)
+
+        return fi.resident_spmv(expr3d, prep3d, (nxl + 2) * ny * nz)
+    return None
+
+
+def _fused_factory_dist(op, prec, loc, n_shards: int, axis: str):
+    """``SolverOps.fused_iter_factory`` for the shard_map substrate, or
+    None for unsupported (operator, preconditioner) pairs."""
+    from repro.kernels import fused_iter as fi
+    from repro.kernels.ops import _interpret_default
+
+    if prec is None or isinstance(prec, IdentityPrec):
+        inv_diag = None
+    elif isinstance(prec, JacobiPrec):
+        inv_diag = loc["inv_diag"]
+    else:
+        return None                  # block solves are not pointwise
+    spmv = _fused_spmv_local(op, loc, n_shards, axis)
+    if spmv is None:
+        return None
+
+    def factory(layout, interpret=None, block_n=None):
+        interp = _interpret_default() if interpret is None else interpret
+        return fi.build_fused_iteration(layout, spmv, inv_diag,
+                                        block_n=block_n, interpret=interp)
+
+    return factory
+
+
 def partitioned_solver_ops(op, prec, n_shards: int, axis: str = "shards"):
     """(arrays, build, perm) for a full SolverOps: build(local_arrays,
     axis) must be called inside shard_map; dot_block is ONE fused psum
@@ -297,12 +392,22 @@ def partitioned_solver_ops(op, prec, n_shards: int, axis: str = "shards"):
 
         def dot_block(mat, vec):
             # (K5): all local contributions + ONE global reduction.
-            return lax.psum(mat @ vec, axis)
+            # dot_block_rows (not mat @ vec) so local partials round
+            # identically to the superkernel's VMEM accumulation and to
+            # the vmapped slab path (types.dot_block_rows).
+            return lax.psum(dot_block_rows(mat, vec), axis)
 
         # create() tags the issue/consume sites for the overlap tracer
         # (DESIGN.md §6) — the psum above is the MPI_Iallreduce payload.
-        return SolverOps.create(apply_a=apply_a, prec=prec_fn,
-                                dot_block=dot_block)
+        # combine_partials is the superkernel's half of the same
+        # reduction: ONE psum of the VMEM-accumulated local dot partials
+        # (DESIGN.md §13), same payload, same tagged site.
+        return SolverOps.create(
+            apply_a=apply_a, prec=prec_fn, dot_block=dot_block,
+            combine_partials=lambda p: lax.psum(p, axis),
+            fused_iter_factory=_fused_factory_dist(
+                op, prec, {**loc["op"], **loc["prec"]}, n_shards, axis),
+        )
 
     return arrays, build, perm
 

@@ -260,6 +260,7 @@ def plcg_overlap_report(
     window: int | None = None,
     sigmas=None,
     prec=None,
+    fused_iteration: bool = False,
 ) -> OverlapReport:
     """Trace a flat ``window``-iteration p(l)-CG schedule through
     ``backend`` and report the in-flight reduction chains.
@@ -267,6 +268,12 @@ def plcg_overlap_report(
     ``window`` defaults to l+2 — the smallest window exposing the full
     staggering (the paper recommends ``unroll >= l+1`` in production; see
     DESIGN.md §2/§6).  ``b`` may be a ``jax.ShapeDtypeStruct``.
+
+    ``fused_iteration=True`` traces the superkernel path (DESIGN.md §13):
+    the vector phase collapses into one Pallas call per window, but the
+    reduction structure must be UNCHANGED — still one tagged start per
+    iteration (``ops.start_partials``) consumed l windows later, still
+    ``max_in_flight >= l`` (asserted in tests/test_fused_iter.py).
     """
     window = l + 2 if window is None else window
     if window < 1:
@@ -274,7 +281,8 @@ def plcg_overlap_report(
 
     def harness(ops, b_local):
         prog = pipelined_cg.build(ops, b_local, l, tol=0.0,
-                                  maxit=window + l + 2, sigmas=sigmas)
+                                  maxit=window + l + 2, sigmas=sigmas,
+                                  fused_iteration=fused_iteration)
         st = prog.init(jnp.zeros_like(b_local))
         for k in range(window):
             with jax.named_scope(f"{WINDOW_SCOPE}{k}"):
@@ -296,6 +304,7 @@ def batched_plcg_overlap_report(
     window: int | None = None,
     sigmas=None,
     prec=None,
+    fused_iteration: bool = False,
 ) -> OverlapReport:
     """Overlap report for the BATCHED multi-RHS p(l)-CG slab
     (DESIGN.md §11): a flat ``window``-iteration schedule of the vmapped
@@ -315,7 +324,8 @@ def batched_plcg_overlap_report(
     def harness(ops, B_local):
         def col(bcol):
             prog = pipelined_cg.build(ops, bcol, l, tol=0.0,
-                                      maxit=window + l + 2, sigmas=sigmas)
+                                      maxit=window + l + 2, sigmas=sigmas,
+                                      fused_iteration=fused_iteration)
             st = prog.init(jnp.zeros_like(bcol))
             for k in range(window):
                 with jax.named_scope(f"{WINDOW_SCOPE}{k}"):

@@ -302,6 +302,50 @@ print("UNSTRUCTURED-TRACE-OK")
     assert "UNSTRUCTURED-TRACE-OK" in out
 
 
+def test_fused_iteration_on_mesh():
+    """ISSUE 4: the fused superkernel path on the 8-device mesh —
+    bitwise-identical residual history to the unfused distributed path
+    (stencil operator), and the overlap tracer still reports EXACTLY ONE
+    reduction handle per iteration with >= l chains in flight: fusing
+    the local phase must not change the communication structure."""
+    out = _run(HEADER + """
+from repro.parallel import get_backend
+from repro.utils.trace import plcg_overlap_report, batched_plcg_overlap_report
+op = Stencil2D5(32, 24)
+b = jnp.asarray(np.random.default_rng(4).standard_normal(op.n))
+be = get_backend("shard_map", n_shards=8)
+for l in (1, 2, 3):
+    kw = dict(method="plcg", l=l, sigmas=shifts_for_operator(op, l),
+              tol=1e-9, maxit=600)
+    ru = be.solve(op, b, **kw)
+    rf = be.solve(op, b, fused_iteration=True, **kw)
+    np.testing.assert_array_equal(np.asarray(ru.res_history),
+                                  np.asarray(rf.res_history))
+    np.testing.assert_array_equal(np.asarray(ru.x), np.asarray(rf.x))
+
+bspec = jax.ShapeDtypeStruct((op.n,), jnp.float64)
+for l in (2, 3):
+    rep = plcg_overlap_report(be, op, bspec, l=l, window=l + 2,
+                              sigmas=shifts_for_operator(op, l),
+                              fused_iteration=True)
+    assert rep.max_in_flight >= l, (l, rep.max_in_flight, str(rep))
+    assert len(rep.starts_per_window) == rep.window, str(rep)
+    assert all(v == 1 for v in rep.starts_per_window.values()), \\
+        (l, rep.starts_per_window)
+
+# batched slab, fused: still one handle per iteration, >= l in flight
+Bspec = jax.ShapeDtypeStruct((op.n, 8), jnp.float64)
+rep = batched_plcg_overlap_report(be, op, Bspec, l=2,
+                                  sigmas=shifts_for_operator(op, 2),
+                                  fused_iteration=True)
+assert rep.max_in_flight >= 2, str(rep)
+assert all(v == 1 for v in rep.starts_per_window.values()), \\
+    rep.starts_per_window
+print("FUSED-MESH-OK")
+""")
+    assert "FUSED-MESH-OK" in out
+
+
 def test_splitkv_merge_under_shard_map():
     """Cross-shard split-KV decode: sequence sharded over 8 devices,
     merged with one pmax + one fused psum == unsharded attention."""

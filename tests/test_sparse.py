@@ -186,6 +186,58 @@ def test_autotuner_neighbor_bytes_term():
     assert t_big > t_small
 
 
+# --------------------------------------------------------- sliced ELL ----
+
+def test_sliced_ell_matches_dense():
+    """Degree-sorted sliced-ELL storage (DESIGN.md §13): the permuted
+    operator reproduces P A P^T exactly, and the composed permutation is
+    a valid reordering of the original rows."""
+    from repro.linalg.sparse import sliced_ell_reorder
+
+    op = random_fem_mesh(4, 300)
+    sliced, perm = sliced_ell_reorder(op, slice_rows=32)
+    assert sorted(perm.tolist()) == list(range(op.n))
+    a = op.to_dense()
+    np.testing.assert_allclose(sliced.to_dense(), a[np.ix_(perm, perm)],
+                               atol=1e-12)
+    x = jnp.asarray(RNG.standard_normal(op.n))
+    y_ref = np.asarray(op.apply(x))
+    inv = np.argsort(perm)
+    y = np.asarray(sliced.apply(x[jnp.asarray(perm)]))[inv]
+    np.testing.assert_allclose(y, y_ref, atol=1e-11)
+
+
+def test_sliced_ell_occupancy_improves():
+    """The gated bench claim: on the BENCH_spmv FEM problem class the
+    sliced layout lifts slot occupancy from ~0.58 to >= 0.85, and the
+    accounting is self-consistent (nnz conserved, waste = 1 - occ)."""
+    from repro.linalg.sparse import sliced_ell_reorder
+
+    op = random_fem_mesh(0, 1024)
+    uniform_occ = op.nnz / (op.n * op.w)
+    sliced, _perm = sliced_ell_reorder(op, slice_rows=64)
+    assert sliced.nnz == op.nnz
+    assert sliced.occupancy() >= max(0.85, uniform_occ)
+    assert abs(sliced.padding_waste() - (1 - sliced.occupancy())) < 1e-12
+    # degree sort is what tightens the slices: per-slice widths are
+    # monotonically non-increasing
+    widths = [c.shape[1] for c in sliced.slice_cols]
+    assert widths == sorted(widths, reverse=True)
+
+
+def test_sliced_ell_respects_preordering():
+    """An already-RCM-ordered operator keeps its ordering as the base of
+    the composition (no second RCM pass)."""
+    from repro.linalg.sparse import (degree_sort_permutation, rcm_reorder,
+                                     sliced_ell_reorder)
+
+    op, rperm = rcm_reorder(random_fem_mesh(2, 200))
+    sliced, perm = sliced_ell_reorder(op, slice_rows=25)
+    dperm = degree_sort_permutation(op)
+    np.testing.assert_array_equal(perm, dperm)
+    assert sliced.n == op.n
+
+
 # Hypothesis-generated SPD graph Laplacians live in
 # tests/test_sparse_properties.py (whole-module skip when hypothesis is
 # absent, same pattern as tests/test_properties.py).
