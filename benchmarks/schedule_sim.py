@@ -72,6 +72,14 @@ def _glred_samples(k, t_glred, jitter, rng):
     return t_glred * rng.lognormal(-sigma ** 2 / 2, sigma, size=k)
 
 
+def reduction_samples(k, t_red, jitter, rng):
+    """Mean-preserving log-normal jitter on a reduction duration — the
+    SAME noise model every reduction flavour is scored under, so the
+    autotuner's monolithic-vs-staged ranking (launch.autotune,
+    DESIGN.md §14) compares like with like."""
+    return _glred_samples(k, t_red, jitter, rng)
+
+
 def iteration_time(method, l, kernels, n_iters=200, jitter=0.0, seed=0,
                    body_l=None):
     rng = np.random.default_rng(seed)

@@ -30,8 +30,19 @@ class HWProfile:
     flop_rate: float        # per worker, FLOP/s (f64 for cori)
     mem_bw: float           # per worker, bytes/s
     link_bw: float          # network per worker, bytes/s
-    alpha: float            # per-hop / per-message latency (s)
+    alpha: float            # per-TREE-STAGE latency of the software
+                            # all-reduce (s) — the monolithic glred term
     hops: str = "log2"      # tree depth model: log2 | mesh2d
+    # Per-RING-HOP latency of one point-to-point neighbour message (s):
+    # the staged ladder's unit cost (DESIGN.md §14).  A ring hop is a
+    # bare nearest-neighbour send — no software tree stage, no
+    # async-progress thread hand-off — so it is substantially cheaper
+    # than ``alpha``; None falls back to ``alpha`` (pessimistic).
+    alpha_hop: float | None = None
+
+    @property
+    def hop_latency(self) -> float:
+        return self.alpha if self.alpha_hop is None else self.alpha_hop
 
 
 CORI = HWProfile(
@@ -42,6 +53,8 @@ CORI = HWProfile(
     alpha=10e-6,            # MPI software latency per tree stage incl. the
                             # async-progress/thread-safety overhead the
                             # paper itself flags as significant (§5)
+    alpha_hop=2.0e-6,       # Aries nearest-neighbour put latency: no MPI
+                            # software tree stage on the critical path
 )
 
 V5E = HWProfile(
@@ -51,7 +64,14 @@ V5E = HWProfile(
     link_bw=50e9,
     alpha=1.0e-6,
     hops="mesh2d",
+    alpha_hop=1.0e-6,         # ICI is already per-hop
 )
+
+
+def ring_hop_time(hw: HWProfile, payload: int) -> float:
+    """Seconds for ONE staged-ladder hop: a point-to-point neighbour
+    message carrying the full dot-block payload (DESIGN.md §14)."""
+    return hw.hop_latency + payload / hw.link_bw
 
 
 def tree_depth(hw: HWProfile, p: int) -> float:

@@ -150,8 +150,41 @@ def selftest() -> int:
         "0.67x ratio must fail the 0.6x gate"
     assert check_ratios({}, rg, verbose=False) == 1, \
         "missing ratio metric must fail"
-    print("check_bench: selftest OK — injected >20% regression and a "
-          ">0.6x fused/unfused bytes ratio both trip their gates")
+    # Staged-reduction gates (ISSUE 5, BENCH_reduce.json).  The fp32
+    # hop-payload ratio gate: the mixed-precision ladder must keep its
+    # per-hop wire bytes <= 0.55x the fp64 monolithic payload.
+    rr = [("staged_hop_payload_bytes_fp32",
+           "monolithic_payload_bytes_fp64", 0.55)]
+    ok_red = {"staged_hop_payload_bytes_fp32": 20.0,
+              "monolithic_payload_bytes_fp64": 40.0}
+    bad_red = {"staged_hop_payload_bytes_fp32": 24.0,
+               "monolithic_payload_bytes_fp64": 40.0}
+    assert check_ratios(ok_red, rr, verbose=False) == 0, \
+        "0.5x fp32 hop payload is inside the 0.55x budget"
+    assert check_ratios(bad_red, rr, verbose=False) == 1, \
+        "0.6x fp32 hop payload must fail the 0.55x gate"
+    # The zero-allreduce gate: lower-is-better against a committed
+    # baseline of 0 — ANY all-reduce sneaking back into the staged dot
+    # block trips it (ceiling = (1+frac)*0 = 0), and the hops-per-window
+    # floor gate: the ladder may never thin below the committed minimum.
+    red_base = {"staged_dotblock_allreduces": 0, "hops_per_window_min": 4}
+    red_gates = [("staged_dotblock_allreduces", 0.0, False),
+                 ("hops_per_window_min", 0.0, True)]
+    assert check(red_base, {"staged_dotblock_allreduces": 0,
+                            "hops_per_window_min": 4},
+                 red_gates, verbose=False) == 0
+    assert check(red_base, {"staged_dotblock_allreduces": 1,
+                            "hops_per_window_min": 4},
+                 red_gates, verbose=False) == 1, \
+        "one all-reduce in the staged dot block must fail"
+    assert check(red_base, {"staged_dotblock_allreduces": 0,
+                            "hops_per_window_min": 3},
+                 red_gates, verbose=False) == 1, \
+        "a thinned hop window must fail the floor gate"
+    print("check_bench: selftest OK — injected >20% regression, a >0.6x "
+          "fused/unfused bytes ratio, a >0.55x fp32 hop payload, a "
+          "staged all-reduce, and a thinned hop window all trip their "
+          "gates")
     return 0
 
 

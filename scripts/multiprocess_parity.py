@@ -17,6 +17,14 @@ single-device ``local`` backend.  Replicated outputs (histories, iter
 counts) are addressable on every process; the domain-decomposed ``x``
 stays distributed and is validated through the recursive residual.
 
+The run then exercises the STAGED-REDUCTION capability fallback
+(DESIGN.md §14) across the real process boundary: requesting
+``reduction="staged"`` from the multiprocess backend must set the
+``reduction_fallback`` flag, run the monolithic cross-host psum instead
+of the ppermute ladder, and reproduce the monolithic backend's residual
+history BITWISE (same mesh, same arithmetic — the fallback is a wire
+substitution, not a solver change).
+
 CI wires this through tests/test_multiprocess.py (RUN_MULTIPROCESS=1).
 """
 
@@ -97,6 +105,36 @@ def child(coordinator: str, num_processes: int, process_id: int) -> int:
             print(f"[p{process_id}] {name}/{method}: iters "
                   f"{int(res_m.iters)} vs local {int(res_l.iters)}, "
                   f"max|dh|/norm0 {diff.max():.2e}", flush=True)
+
+    # ---- staged-reduction capability fallback (DESIGN.md §14) -----------
+    # Request the staged ring ladder across the real process boundary:
+    # the backend must flag the downgrade and run the monolithic psum —
+    # bitwise-identical histories to the plain multiprocess backend
+    # (same mesh, same arithmetic; only the requested wire path differs).
+    op = Stencil2D5(32, 24)
+    b = jnp.asarray(np.random.default_rng(7).standard_normal(op.n))
+    sig = shifts_for_operator(op, 2)
+    be_staged = get_backend(
+        "multiprocess",
+        coordinator_address=coordinator,
+        num_processes=num_processes,
+        process_id=process_id,
+        reduction="staged",
+        reduction_dtype=jnp.float32,
+    )
+    assert not type(be_staged).supports_staged_reduction
+    assert be_staged.reduction_mode == "monolithic", be_staged.reduction_mode
+    assert be_staged.reduction_fallback, "fallback reason must be recorded"
+    assert be_staged.reduction_cfg is None
+    kw = dict(method="plcg", l=2, sigmas=sig, tol=1e-8, maxit=800)
+    res_s = be_staged.solve(op, b, **kw)
+    res_m = be.solve(op, b, **kw)
+    hs, hm2 = np.asarray(res_s.res_history), np.asarray(res_m.res_history)
+    assert np.array_equal(hs, hm2), np.abs(hs - hm2).max()
+    assert bool(res_s.converged)
+    print(f"[p{process_id}] staged request -> monolithic fallback "
+          f"(flagged: {be_staged.reduction_fallback!r}), history bitwise "
+          f"vs monolithic", flush=True)
 
     print(f"[p{process_id}] MULTIPROC-PARITY-OK", flush=True)
     return 0

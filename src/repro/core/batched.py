@@ -24,6 +24,15 @@ batching —
   construction rather than by bespoke masking code
   (tests/test_serve.py::test_retired_column_bitwise_frozen).
 
+The staged ring reduction (DESIGN.md §14) batches the same way: the
+per-column program's ``ops.advance`` ladder hops vmap into ONE
+``ppermute`` per hop carrying the whole (P, 2l+1, s) gather buffer, and
+the D-ring slots widen to the staged handle shape transparently — so
+the amortization claim (one logical reduction per iteration, payload
+wide, handle count 1) holds verbatim in staged mode, asserted on
+compiled HLO by ``trace.batched_plcg_overlap_report``'s
+``staged_starts_per_window``.
+
 One vmap caveat shapes the loop structure: a batched ``lax.cond`` lowers
 to select-with-both-branches, so the sequential drivers' in-loop
 restart/replacement cond would execute its extra SPMV + reduction EVERY

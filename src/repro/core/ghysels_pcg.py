@@ -104,10 +104,18 @@ def build(
         # iteration's own preconditioner + SPMV — the overlap window of
         # Table 1, row 'p-CG' (DESIGN.md §3/§6).
         pending = ops.start(S[(R_ROW, W_ROW), :], S[U_ROW])
-        # --- overlapped work: preconditioner + SPMV of this iteration
+        # --- overlapped work: preconditioner + SPMV of this iteration.
+        # On a staged substrate the ladder's first step advances between
+        # the two local kernels — the reduction hops interleave with the
+        # SPMV's halo traffic inside the overlap window (DESIGN.md §14);
+        # monolithic substrates make advance the identity.
         m = ops.prec(S[W_ROW])
+        pending = ops.advance(pending, 0)
         nvec = ops.apply_a(m)
-        gd = ops.wait(pending)                    # MPI_Wait
+        # MPI_Wait; .astype: a staged wait may return the payload in a
+        # wider accumulation dtype (fp64-compensated fp32 wire) — keep
+        # the scalar recurrences in the solver dtype.
+        gd = ops.wait(pending, advanced=1).astype(dtype)
         gamma, delta = gd[0], gd[1]
         first = st.it == 0
         beta = jnp.where(first, 0.0, gamma / st.gamma)

@@ -83,7 +83,10 @@ class _Cycle(NamedTuple):
 
     S: jax.Array        # (NV, N) vector slab: ZK rings | U ring | p | x
     G: jax.Array        # (W, W) sliding window of the basis-transform matrix
-    D: jax.Array        # (l, 2l+1) in-flight dot blocks (reduction handles)
+    D: jax.Array        # (l, *handle) in-flight dot blocks (reduction
+                        # handles: the raw (2l+1,) payload on monolithic
+                        # substrates, a (P, 2l+1) wire-dtype gather buffer
+                        # on staged ones — ops.handle_zeros decides)
     gam: jax.Array      # (W,) gamma ring  (Hessenberg diagonal)
     dlt: jax.Array      # (W,) delta ring  (Hessenberg off-diagonal)
     eta_prev: jax.Array # scalar eta_{i-l-1}
@@ -205,9 +208,10 @@ def build(
             S = S.at[k * RB].set(v0)          # z_0^(k) = v_0 for all k
         S = S.at[layout.u_off].set(u0_raw / safe)
         S = S.at[layout.x_row].set(x)
+        h0 = ops.handle_zeros((2 * l + 1,), dtype)
         return _Cycle(
             S=S, G=jnp.zeros((W, W), dtype).at[0, 0].set(1.0),
-            D=jnp.zeros((l, 2 * l + 1), dtype),
+            D=jnp.zeros((l,) + h0.shape, h0.dtype),
             gam=jnp.zeros((W,), dtype), dlt=jnp.zeros((W,), dtype),
             eta_prev=jnp.ones((), dtype), zet_prev=jnp.zeros((), dtype),
             i=jnp.int32(0), norm0_cycle=eta0,
@@ -247,7 +251,8 @@ def build(
         # (az,pz)} as row-sums against ones — same payload discipline as
         # the iteration's dot block.
         dots = ops.wait(ops.start(
-            jnp.stack([r * z, az * z, az * pz]), jnp.ones_like(z)))
+            jnp.stack([r * z, az * z, az * pz]),
+            jnp.ones_like(z))).astype(dtype)
         a, c, e = dots[0], dots[1], dots[2]
         ok = stagnant & (c > 0) & jnp.isfinite(c)
         alpha = jnp.where(ok, a / jnp.where(c == 0, jnp.ones((), dtype), c),
@@ -288,8 +293,18 @@ def build(
             # the consumption point the overlap tracer keys on (GLRED_WAIT
             # scope; DESIGN.md §6).
             with jax.named_scope(GLRED_WAIT_TAG):
+                # advanced=l-1: the solver ran one ladder step per
+                # iteration on this handle (ages 1..l-1, below); a staged
+                # substrate finishes any remaining steps here, monolithic
+                # ones ignore the count (DESIGN.md §14).
+                # .astype(dtype): staged substrates may accumulate the
+                # payload wider than the solver dtype (fp32 wire + fp64
+                # compensated wait, DESIGN.md §14) — normalize so the
+                # scalar recurrences keep the solver's dtype (no-op on
+                # monolithic substrates).
                 arrived = ops.wait(jax.lax.dynamic_index_in_dim(
-                    c.D, jnp.mod(im, l), axis=0, keepdims=False))
+                    c.D, jnp.mod(im, l), axis=0, keepdims=False),
+                    advanced=l - 1).astype(dtype)
                 for t in range(2 * l + 1):         # rows im-2l+1 .. im+1
                     row = im - 2 * l + 1 + t
                     rv = row >= 0
@@ -430,6 +445,22 @@ def build(
             # sites up to l reductions are simultaneously in flight.
             dots = ops.start(mat, u_new)
         D = c.D.at[jnp.mod(i, l)].set(dots)
+
+        # ---- staged-reduction progress: one ladder hop per iteration ----
+        # Every in-flight handle (pipeline age t = 1..l-1) advances by
+        # exactly one ladder step — the hop-per-iteration pipeline of
+        # DESIGN.md §14.  The step index is the handle's age minus one,
+        # STATIC under the while loop (only the ring slot is dynamic), so
+        # each ppermute's permutation is fixed at trace time.  Monolithic
+        # substrates make advance the identity and XLA folds the loop
+        # away; zero handles (early fill, post-restart) advance harmlessly
+        # (permuting zeros writes zeros).
+        for t in range(1, l):
+            slot = jnp.mod(i - t, l)
+            h = jax.lax.dynamic_index_in_dim(D, slot, axis=0,
+                                             keepdims=False)
+            D = jax.lax.dynamic_update_index_in_dim(
+                D, ops.advance(h, t - 1), slot, axis=0)
 
         eta_prev = jnp.where(is_first, gam0,
                              jnp.where(do_upd, eta_new, c.eta_prev))

@@ -55,6 +55,14 @@ GLRED_WAIT_TAG = "glred_wait"
 # (DESIGN.md §6/§12).
 HALO_TAG = "halo_xchg"
 
+# Scope tag prefix on the staged ring-reduction ladder hops
+# (``repro.parallel.reduction``, DESIGN.md §14): hop k of a staged dot
+# block is one ``lax.ppermute`` inside a ``f"{REDUCE_TAG}{k}"`` scope.
+# The overlap tracer counts these per iteration window and checks they
+# interleave with HALO_TAG traffic inside the open reduction windows —
+# the hop/halo staggering invariant.
+REDUCE_TAG = "glred_hop"
+
 
 # ``lax.optimization_barrier`` has no batching rule (jax <= 0.4.x), which
 # would break the batched multi-RHS solvers (repro.core.batched vmaps the
@@ -111,7 +119,19 @@ class SolverOps:
     # identity, which keeps hand-rolled SolverOps (benchmarks/table1.py)
     # working unchanged.
     dot_block_start: Callable[[jax.Array, jax.Array], jax.Array] | None = None
-    dot_block_wait: Callable[[jax.Array], jax.Array] | None = None
+    dot_block_wait: Callable[..., jax.Array] | None = None
+    # Staged-reduction extension (repro.parallel.reduction, DESIGN.md
+    # §14).  ``dot_block_advance(handle, step)`` runs ONE ladder step of
+    # an in-flight reduction — the solvers call it once per iteration per
+    # outstanding handle, which is what spreads the reduction's latency
+    # structurally over min(l, stages) iterations instead of leaving the
+    # overlap to XLA's scheduler.  None (monolithic substrates) makes
+    # ``advance`` the identity.  ``dot_block_handle_zeros(shape, dtype)``
+    # builds the zero in-flight handle for a dot block of the given
+    # payload shape — staged substrates return a (P, K[, s]) wire-dtype
+    # gather buffer; None keeps the plain (K[, s]) payload array.
+    dot_block_advance: Callable[[jax.Array, int], jax.Array] | None = None
+    dot_block_handle_zeros: Callable[..., jax.Array] | None = None
     # Global combine of LOCALLY accumulated dot-block partials — the
     # reduction half of the fused-iteration superkernel path
     # (DESIGN.md §13).  The megakernel computes each shard's (2l+1)
@@ -134,6 +154,25 @@ class SolverOps:
             return self.dot_block(mat, vec)
         return self.dot_block_start(mat, vec)
 
+    def advance(self, handle: jax.Array, step: int) -> jax.Array:
+        """Run ladder step ``step`` of an in-flight reduction handle —
+        the hop-per-iteration progress call of the staged subsystem
+        (DESIGN.md §14).  ``step`` is static (the handle's pipeline age
+        minus one); monolithic substrates are already complete at issue,
+        so the default is the identity."""
+        if self.dot_block_advance is None:
+            return handle
+        return self.dot_block_advance(handle, step)
+
+    def handle_zeros(self, shape: tuple, dtype) -> jax.Array:
+        """Zero in-flight handle for a dot block with payload ``shape``
+        — what a p(l)-CG D-ring slot holds before its first start.
+        Staged substrates widen this to their (P, K[, s]) wire-dtype
+        gather buffer."""
+        if self.dot_block_handle_zeros is None:
+            return jnp.zeros(shape, dtype)
+        return self.dot_block_handle_zeros(shape, dtype)
+
     def start_partials(self, partials: jax.Array) -> jax.Array:
         """Initiate the global combine of locally-accumulated dot-block
         partials (the fused-iteration analogue of :meth:`start`): ONE
@@ -148,11 +187,16 @@ class SolverOps:
                 return _opt_barrier(partials)
             return self.combine_partials(partials)
 
-    def wait(self, dots: jax.Array) -> jax.Array:
-        """Consumption point of a previously started block (MPI_Wait)."""
+    def wait(self, dots: jax.Array, advanced: int = 0) -> jax.Array:
+        """Consumption point of a previously started block (MPI_Wait).
+
+        ``advanced`` (static) is how many ladder steps the solver already
+        ran on this handle via :meth:`advance` — p(l)-CG passes l-1, a
+        blocking start+wait passes 0; staged substrates finish the
+        remaining steps here, monolithic ones ignore it."""
         if self.dot_block_wait is None:
             return dots
-        return self.dot_block_wait(dots)
+        return self.dot_block_wait(dots, advanced=advanced)
 
     @staticmethod
     def create(
@@ -161,6 +205,10 @@ class SolverOps:
         dot_block: Callable[[jax.Array, jax.Array], jax.Array],
         combine_partials: Callable[[jax.Array], jax.Array] | None = None,
         fused_iter_factory: Callable[..., Callable] | None = None,
+        dot_block_start: Callable[[jax.Array, jax.Array], jax.Array] | None = None,
+        dot_block_wait: Callable[..., jax.Array] | None = None,
+        dot_block_advance: Callable[[jax.Array, int], jax.Array] | None = None,
+        handle_zeros: Callable[..., jax.Array] | None = None,
     ) -> "SolverOps":
         """Build SolverOps with tracer-tagged start/wait around dot_block.
 
@@ -169,16 +217,28 @@ class SolverOps:
         GLRED_WAIT_TAG scopes in the lowered HLO (DESIGN.md §6).
         ``combine_partials``/``fused_iter_factory`` wire the
         fused-iteration superkernel path (DESIGN.md §13) where the
-        substrate supports it.
+        substrate supports it.  Staged substrates override the whole
+        handle life cycle (``dot_block_start`` / ``dot_block_advance`` /
+        ``dot_block_wait`` / ``handle_zeros``,
+        ``repro.parallel.reduction.staged_ops_pieces``); the overrides
+        are wrapped in the same tracer scopes as the monolithic pair.
         """
 
-        def start(mat, vec):
-            with jax.named_scope(GLRED_START_TAG):
+        if dot_block_start is None:
+            def dot_block_start(mat, vec):  # noqa: F811 - default impl
                 return dot_block(mat, vec)
 
-        def wait(dots):
+        def start(mat, vec, _start=dot_block_start):
+            with jax.named_scope(GLRED_START_TAG):
+                return _start(mat, vec)
+
+        if dot_block_wait is None:
+            def dot_block_wait(dots, advanced=0):  # noqa: F811
+                return dots
+
+        def wait(dots, advanced=0, _wait=dot_block_wait):
             with jax.named_scope(GLRED_WAIT_TAG):
-                return _opt_barrier(dots)
+                return _opt_barrier(_wait(dots, advanced=advanced))
 
         return SolverOps(
             apply_a=apply_a,
@@ -186,6 +246,8 @@ class SolverOps:
             dot_block=dot_block,
             dot_block_start=start,
             dot_block_wait=wait,
+            dot_block_advance=dot_block_advance,
+            dot_block_handle_zeros=handle_zeros,
             combine_partials=combine_partials,
             fused_iter_factory=fused_iter_factory,
         )
@@ -207,5 +269,7 @@ class SolverOps:
 def dot1(ops: SolverOps, a: jax.Array, b: jax.Array) -> jax.Array:
     """Single global dot through the fused-block path, started and
     immediately waited — a blocking reduction (classic CG's
-    synchronization point)."""
-    return ops.wait(ops.start(a[None, :], b))[0]
+    synchronization point).  The result is normalized to the operand
+    dtype: a staged substrate may accumulate a narrowed wire payload in
+    a wider dtype (DESIGN.md §14)."""
+    return ops.wait(ops.start(a[None, :], b))[0].astype(a.dtype)

@@ -53,11 +53,13 @@ if os.path.isdir(os.path.join(_ROOT, "benchmarks")) and _ROOT not in sys.path:
     sys.path.insert(0, _ROOT)
 
 try:
-    from benchmarks.schedule_sim import iteration_time
-    from benchmarks.timing_model import CORI, HWProfile, stencil_kernel_times
+    from benchmarks.schedule_sim import iteration_time, reduction_samples
+    from benchmarks.timing_model import (CORI, HWProfile, ring_hop_time,
+                                         stencil_kernel_times)
     _BENCH_IMPORT_ERROR = None
 except ImportError as _e:               # pragma: no cover - installed tree
-    iteration_time = stencil_kernel_times = None
+    iteration_time = stencil_kernel_times = ring_hop_time = None
+    reduction_samples = None
     CORI, HWProfile = None, object
     _BENCH_IMPORT_ERROR = _e
 
@@ -165,6 +167,63 @@ def fused_iteration_bytes(n: int, l: int, dsize: int = 8,
                                  extra_bytes=extra_bytes)
 
 
+def staged_reduction_terms(hw: HWProfile, p: int, l: int, stages: int,
+                           payload: int) -> dict:
+    """Per-iteration cost pieces of the staged ring ladder
+    (``repro.parallel.reduction``, DESIGN.md §14).
+
+    The ladder's P-1 allgather hops split into ``stages`` advance steps;
+    the solver runs one step per in-flight handle per iteration, so a
+    handle consumed at pipeline age l has run min(stages, l-1) steps —
+    the rest execute back-to-back at the wait.  The model replaces the
+    monolithic term's ``alpha * tree_depth`` with the per-hop ladder
+    schedule (``stages * alpha_hop``-shaped, per the hop grouping):
+
+      * ``t_hop``            — one point-to-point hop: ``alpha_hop`` +
+                               payload wire time (``ring_hop_time``).
+      * ``t_advance_burst``  — the serialized hop chain ONE advance step
+                               adds inside the iteration body
+                               (ceil((P-1)/stages) hops).  Steps of
+                               DIFFERENT in-flight handles are
+                               independent chains (separate gather
+                               buffers) and overlap each other, so this
+                               burst — not the sum over live handles —
+                               is the ladder's per-iteration critical
+                               path: more stages → smaller burst, i.e.
+                               cheaper per-iteration ladder wait, the
+                               knob's first arm.
+      * ``t_wait_stall``     — the exposed stall at the consumption
+                               point: max(0, stages-(l-1)) remaining
+                               steps; zero once the pipeline is deep
+                               enough to advance every step (l-1 >=
+                               stages), the knob's second arm.
+      * ``fill_iters``       — iterations from issue until the ladder
+                               can have completed (the pipeline-fill
+                               cost a restart/replacement pays): more
+                               stages → longer fill.
+
+    The (l, stages) tension these terms encode is what
+    :func:`autotune_depth` co-selects over (tests/test_costs.py).
+    """
+    _require_timing_model()
+    n_hops = max(p - 1, 0)
+    stages = max(1, min(stages, max(n_hops, 1)))
+    t_hop = ring_hop_time(hw, payload)
+    group_hops = -(-n_hops // stages) if n_hops else 0     # ceil division
+    advance_steps = min(stages, max(l - 1, 0))
+    wait_steps = stages - advance_steps
+    return {
+        "t_hop": t_hop,
+        "n_hops": n_hops,
+        "group_hops": group_hops,
+        "advance_steps": advance_steps,
+        "t_advance_burst": group_hops * t_hop,
+        "t_advance_total": advance_steps * group_hops * t_hop,
+        "t_wait_stall": wait_steps * group_hops * t_hop,
+        "fill_iters": stages + 1,
+    }
+
+
 def xla_effective_depth(l: int, unroll: int) -> int:
     """Reductions a while-loop body can keep in flight under XLA.
 
@@ -183,6 +242,10 @@ class Candidate:
     unroll: int
     model_s: float                 # modeled seconds / iteration
     measured_s: float | None = None  # wall-clock seconds / iteration
+    # Reduction wiring of this candidate (DESIGN.md §14): "monolithic"
+    # all-reduce, or "staged" ring ladder with this many advance stages.
+    reduction: str = "monolithic"
+    stages: int | None = None
 
     @property
     def score(self) -> float:
@@ -201,12 +264,16 @@ class AutotuneResult:
         hdr = (f"autotune: n={self.n:,} unknowns, p={self.p} workers, "
                f"{self.hw_name}")
         rows = [hdr, f"{'method':>10s} {'l':>3s} {'unroll':>6s} "
+                     f"{'red':>6s} {'stg':>3s} "
                      f"{'model/us':>9s} {'meas/us':>9s}"]
         for c in sorted(self.candidates, key=lambda c: c.score):
             meas = f"{c.measured_s * 1e6:9.1f}" if c.measured_s is not None \
                 else f"{'-':>9s}"
             star = " *" if c == self.best else ""
+            red = "staged" if c.reduction == "staged" else "mono"
+            stg = f"{c.stages:3d}" if c.stages is not None else "  -"
             rows.append(f"{c.method:>10s} {c.l:>3d} {c.unroll:>6d} "
+                        f"{red:>6s} {stg} "
                         f"{c.model_s * 1e6:9.1f} {meas}{star}")
         return "\n".join(rows)
 
@@ -225,8 +292,20 @@ def model_iteration_time(
     dsize: int = 8,
     neighbor_bytes: int | None = None,
     iteration_bytes: float | None = None,
+    reduction: str = "monolithic",
+    stages: int | None = None,
 ) -> float:
     """Modeled seconds per SLAB iteration at the XLA-effective depth.
+
+    ``reduction="staged"`` (p(l)-CG only) replaces the monolithic glred
+    term — ``alpha * tree_depth + payload/link_bw``, hidden across the
+    XLA-effective window — with the hop-per-iteration ring ladder of
+    DESIGN.md §14 (:func:`staged_reduction_terms`): the body runs its
+    advance steps' hop bursts (overlapping local work) and the
+    consumption point pays the stall of whatever ``stages`` exceed the
+    structural window l-1.  The staged path needs no ``unroll`` credit:
+    its overlap is dataflow-forced by the solver's advance schedule, not
+    recovered by the scheduler, which is exactly the point.
 
     ``iteration_bytes`` (p(l)-CG only) recalibrates the model's local
     HBM-stream budget against a MEASURED per-worker bytes/iteration —
@@ -281,6 +360,26 @@ def model_iteration_time(
         k = {**k, "spmv": k["spmv"] * s, "axpy1": k["axpy1"] * s}
     if method != "plcg":
         return iteration_time(method, 0, k, jitter=jitter)
+    if reduction == "staged":
+        st = staged_reduction_terms(
+            hw, p, l, stages if stages is not None else max(l - 1, 1),
+            payload=reduction_payload_bytes(method, l, s, dsize))
+        body = k["spmv"] + (2 * l + 3) * k["axpy1"]
+        # One advance step's hop burst rides the body (concurrent across
+        # the distinct in-flight handles, hidden under local work until
+        # it outgrows it); the wait stall is exposed by construction.
+        if jitter <= 0:
+            return max(body, st["t_advance_burst"]) + st["t_wait_stall"]
+        # Same mean-preserving log-normal noise the monolithic event sim
+        # applies to its reductions (schedule_sim.reduction_samples) —
+        # staged candidates must not win ties merely by being scored
+        # noise-free; the max() against the body amplifies burst noise
+        # exactly as the event sim's MPI_Wait does.
+        import numpy as _np
+        rng = _np.random.default_rng(0)
+        bursts = reduction_samples(200, st["t_advance_burst"], jitter, rng)
+        stalls = reduction_samples(200, st["t_wait_stall"], jitter, rng)
+        return float(_np.mean(_np.maximum(body, bursts) + stalls))
     l_eff = xla_effective_depth(l, unroll)
     if l_eff == 0:
         # No in-flight window: the reduction serializes with the body —
@@ -305,8 +404,20 @@ def autotune_depth(
     s: int = 1,
     neighbor_bytes: int | None = None,
     iteration_bytes: Callable[[int], float] | float | None = None,
+    reduction: str = "monolithic",
+    stages_grid: tuple[int, ...] | None = None,
 ) -> AutotuneResult:
-    """Sweep (l, unroll) and pick the fastest candidate.
+    """Sweep (l, unroll) — and, with ``reduction="staged"`` or
+    ``"both"``, the ladder stage count — and pick the fastest candidate.
+
+    Staged candidates (DESIGN.md §14) sweep ``stages_grid`` (default:
+    {1, 2, l-1, l} clipped to the ladder's p-1 hops) at every depth l,
+    scoring with the per-hop latency model
+    (:func:`staged_reduction_terms`): the co-selection captures the
+    (l, stages) tension — more stages shrink the per-iteration hop burst
+    but stall at the wait once stages exceed l-1, so deeper pipelines
+    EARN finer ladders.  Staged candidates are model-ranked only
+    (``measure`` covers the monolithic solver path).
 
     ``measure(method, l, unroll) -> seconds/iter`` (see
     :func:`measured_runner`) overrides the model for ranking wherever it
@@ -326,11 +437,13 @@ def autotune_depth(
     :func:`fused_iteration_bytes`, DESIGN.md §13).
     """
     _require_timing_model()
+    if reduction not in ("monolithic", "staged", "both"):
+        raise ValueError(f"unknown reduction sweep {reduction!r}")
     if hw is None:
         hw = CORI
     cands: list[Candidate] = []
 
-    def add(method, l, unroll):
+    def add(method, l, unroll, red="monolithic", stages=None):
         ib = None
         if method == "plcg" and iteration_bytes is not None:
             ib = iteration_bytes(l) if callable(iteration_bytes) \
@@ -339,16 +452,26 @@ def autotune_depth(
                                    stencil_pts=stencil_pts, jitter=jitter,
                                    prec_factor=prec_factor, s=s,
                                    neighbor_bytes=neighbor_bytes,
-                                   iteration_bytes=ib)
-        meas = measure(method, l, unroll) if measure is not None else None
-        cands.append(Candidate(method, l, unroll, mdl, meas))
+                                   iteration_bytes=ib,
+                                   reduction=red, stages=stages)
+        meas = measure(method, l, unroll) \
+            if measure is not None and red == "monolithic" else None
+        cands.append(Candidate(method, l, unroll, mdl, meas,
+                               reduction=red, stages=stages))
 
     if include_baselines:
         add("cg", 0, 1)
         add("pcg", 0, 1)
     for l in ls:
-        for u in (unrolls if unrolls is not None else (1, l + 1)):
-            add("plcg", l, u)
+        if reduction in ("monolithic", "both"):
+            for u in (unrolls if unrolls is not None else (1, l + 1)):
+                add("plcg", l, u)
+        if reduction in ("staged", "both"):
+            grid = stages_grid if stages_grid is not None \
+                else tuple(sorted({1, 2, max(l - 1, 1), l}))
+            for st in grid:
+                add("plcg", l, l + 1, red="staged",
+                    stages=max(1, min(st, max(p - 1, 1))))
 
     best = min(cands, key=lambda c: c.score)
     return AutotuneResult(best=best, candidates=cands, n=n, p=p,

@@ -7,7 +7,10 @@ Two layers:
   code should use;
 * ``repro.parallel.distributed`` — the shard_map mechanism (halo
   exchange, operator partitioning, the fused-psum dot block) the
-  backends are built from.
+  backends are built from;
+* ``repro.parallel.reduction`` — the staged ring-reduction ladder the
+  dot block runs as when a backend is built with ``reduction="staged"``
+  (DESIGN.md §14).
 """
 
 from repro.parallel.backends import (
@@ -16,6 +19,7 @@ from repro.parallel.backends import (
     get_backend,
     register_backend,
 )
+from repro.parallel.reduction import StagedConfig
 from repro.parallel.distributed import (
     distributed_solve,
     distributed_solve_batched,
@@ -26,6 +30,7 @@ from repro.parallel.distributed import (
 
 __all__ = [
     "ReductionBackend",
+    "StagedConfig",
     "available_backends",
     "get_backend",
     "register_backend",

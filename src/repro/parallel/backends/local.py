@@ -28,10 +28,31 @@ from repro.parallel.backends.base import METHODS, ReductionBackend
 class LocalBackend(ReductionBackend):
     name = "local"
 
-    def __init__(self, jit: bool = True):
+    def __init__(self, jit: bool = True, reduction: str = "monolithic",
+                 reduction_stages: int = 2, reduction_dtype=None,
+                 virtual_shards: int = 1):
+        """``reduction="staged"`` runs the EAGER LADDER ORACLE
+        (DESIGN.md §14): the dot block splits into ``virtual_shards``
+        contiguous slices whose partials fill the gather buffer
+        directly — no wire, but bitwise the same rank-ordered
+        (optionally fp64-compensated, ``reduction_dtype=jnp.float32``)
+        combine as a staged mesh run with that many shards.  The oracle
+        is the single-device reference the distributed staged tests
+        compare against (tests/test_reduction.py)."""
+        from repro.parallel.reduction import resolve_backend_reduction
+
         self.jit = jit
+        # Same resolution policy as the distributed backends (one copy,
+        # reduction.py); the oracle's ring size is the VIRTUAL shard
+        # count and there is no mesh axis.
+        self.reduction_cfg = resolve_backend_reduction(
+            self, reduction, reduction_stages, reduction_dtype,
+            virtual_shards, axis=None)
 
     def make_ops(self, op, prec=None) -> SolverOps:
+        if self.reduction_cfg is not None:
+            from repro.parallel.reduction import oracle_solver_ops
+            return oracle_solver_ops(op, prec, self.reduction_cfg)
         return SolverOps.local(op, prec)
 
     def solve(self, op, b, method: str = "plcg", prec=None, **solver_kwargs):

@@ -66,6 +66,18 @@ def _ensure_initialized(**kwargs) -> None:
 class MultiprocessBackend(ShardMapBackend):
     name = "multiprocess"
 
+    # Capability flag (DESIGN.md §14): the staged ring ladder needs
+    # dependable point-to-point collective-permute chains, which the
+    # gloo CPU collectives backing cross-host jax.distributed runs do
+    # not guarantee for the ladder's dynamic-sliced hop pattern.  A
+    # ``reduction="staged"`` request therefore DOWNGRADES to the
+    # monolithic cross-host psum — arithmetically equivalent modulo
+    # reduction order — and records the downgrade in
+    # ``reduction_fallback`` so callers can tell which wire path ran
+    # (exercised across real process boundaries by
+    # scripts/multiprocess_parity.py --staged).
+    supports_staged_reduction = False
+
     def __init__(
         self,
         coordinator_address: str | None = None,
@@ -74,6 +86,9 @@ class MultiprocessBackend(ShardMapBackend):
         local_device_ids=None,
         n_shards: int | None = None,
         jit: bool = True,
+        reduction: str = "monolithic",
+        reduction_stages: int = 2,
+        reduction_dtype=None,
     ):
         if coordinator_address is not None:
             # Multi-controller mode: every process must execute the same
@@ -93,11 +108,20 @@ class MultiprocessBackend(ShardMapBackend):
             )
         self.n_processes = num_processes or jax.process_count()
         # Global mesh: jax.devices() spans all processes after initialize.
+        # The ShardMapBackend constructor routes the reduction request
+        # through _resolve_reduction, which consults
+        # supports_staged_reduction — so a staged request lands on the
+        # monolithic psum here, with reduction_fallback set.
         mesh = make_solver_mesh(n_shards, devices=jax.devices())
-        super().__init__(mesh=mesh, jit=jit)
+        super().__init__(mesh=mesh, jit=jit, reduction=reduction,
+                         reduction_stages=reduction_stages,
+                         reduction_dtype=reduction_dtype)
 
     def describe(self) -> str:
+        tail = ""
+        if self.reduction_fallback is not None:
+            tail = ", staged reduction request downgraded to monolithic"
         return (
             f"multiprocess (jax.distributed, {self.n_processes} process(es), "
-            f"{self.n_shards} global device(s), axis '{self.axis}')"
+            f"{self.n_shards} global device(s), axis '{self.axis}'{tail})"
         )

@@ -18,6 +18,7 @@ device_count=8`` before importing jax)::
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Callable
 
 import jax
@@ -38,22 +39,41 @@ from repro.parallel.distributed import (
     shard_map_compat,
 )
 from repro.parallel.backends.base import ReductionBackend
+from repro.parallel.reduction import (StagedConfig, oracle_solver_ops,
+                                      resolve_backend_reduction)
 
 
 class ShardMapBackend(ReductionBackend):
     name = "shard_map"
 
     def __init__(self, mesh: Mesh | None = None, n_shards: int | None = None,
-                 jit: bool = True):
+                 jit: bool = True, reduction: str = "monolithic",
+                 reduction_stages: int = 2, reduction_dtype=None):
+        """``reduction="staged"`` swaps the dot block's monolithic psum
+        for the hop-per-iteration ring ladder (DESIGN.md §14):
+        ``reduction_stages`` advance steps spread the P-1 allgather hops
+        over the solver's in-flight window, and ``reduction_dtype``
+        (e.g. jnp.float32) narrows the wire payload with fp64
+        compensated accumulation at the wait."""
         self.mesh = mesh if mesh is not None else make_solver_mesh(n_shards)
         self.axis = self.mesh.axis_names[0]
         self.n_shards = self.mesh.devices.size
         self.jit = jit
+        self.reduction_cfg = self._resolve_reduction(
+            reduction, reduction_stages, reduction_dtype)
+
+    def _resolve_reduction(self, reduction: str, stages: int,
+                           dtype) -> StagedConfig | None:
+        # One shared policy (validation, stage clamp, capability
+        # fallback) for every backend — see reduction.py.
+        return resolve_backend_reduction(self, reduction, stages, dtype,
+                                         self.n_shards, self.axis)
 
     # ------------------------------------------------------------ solve --
     def solve(self, op, b, method: str = "plcg", prec=None, **solver_kwargs):
         return distributed_solve(self.mesh, op, b, method=method, prec=prec,
-                                 jit=self.jit, **solver_kwargs)
+                                 jit=self.jit, reduction=self.reduction_cfg,
+                                 **solver_kwargs)
 
     def make_solver(self, op, method: str = "plcg", prec=None,
                     **solver_kwargs):
@@ -62,7 +82,9 @@ class ShardMapBackend(ReductionBackend):
         # distributed_solve only reads b's shape on this path.
         bspec = jax.ShapeDtypeStruct((op.n,), jnp.float32)
         fn, arrays = distributed_solve(self.mesh, op, bspec, method=method,
-                                       prec=prec, jit=False, **solver_kwargs)
+                                       prec=prec, jit=False,
+                                       reduction=self.reduction_cfg,
+                                       **solver_kwargs)
         jfn = jax.jit(fn)
         return lambda bb: jfn(bb, arrays)
 
@@ -71,6 +93,7 @@ class ShardMapBackend(ReductionBackend):
                       **solver_kwargs):
         return distributed_solve_batched(self.mesh, op, B, method=method,
                                          prec=prec, jit=self.jit,
+                                         reduction=self.reduction_cfg,
                                          **solver_kwargs)
 
     def make_batched_solver(self, op, method: str = "plcg", prec=None,
@@ -78,7 +101,7 @@ class ShardMapBackend(ReductionBackend):
         bspec = jax.ShapeDtypeStruct((op.n, 1), jnp.float32)
         fn, arrays = distributed_solve_batched(
             self.mesh, op, bspec, method=method, prec=prec, jit=False,
-            **solver_kwargs)
+            reduction=self.reduction_cfg, **solver_kwargs)
         jfn = jax.jit(fn)
         return lambda BB: jfn(BB, arrays)
 
@@ -97,15 +120,21 @@ class ShardMapBackend(ReductionBackend):
         kw = dict(solver_kwargs)
         dtype = jnp.zeros((), jnp.float64).dtype if dtype is None else dtype
         n, axis = op.n, self.axis
-        arrays, build, perm = partitioned_solver_ops(op, prec,
-                                                     self.n_shards, axis)
+        arrays, build, perm = partitioned_solver_ops(
+            op, prec, self.n_shards, axis, reduction=self.reduction_cfg)
         pre, post = _permutation_wrappers(perm)
         arr_specs = jax.tree.map(lambda _: P(axis), arrays)
         b_spec = P(axis, None)
 
         # State structure/ndims are substrate-independent: eval_shape the
         # batched init against plain local ops to derive partition specs.
-        ops_shape = SolverOps.local(op, prec)
+        # Staged mode must mirror the widened D-ring handle shapes, so
+        # the shape oracle is the eager ladder with the same config.
+        if self.reduction_cfg is None:
+            ops_shape = SolverOps.local(op, prec)
+        else:
+            ops_shape = oracle_solver_ops(
+                op, prec, dataclasses.replace(self.reduction_cfg, axis=None))
         st_struct = jax.eval_shape(
             lambda BB: batched_mod.batched_init(ops_shape, BB, method, kw),
             jax.ShapeDtypeStruct((n, s), dtype))
@@ -164,9 +193,9 @@ class ShardMapBackend(ReductionBackend):
         the local shard of ``b`` is in permuted order — irrelevant for
         schedule tracing (the staging use case), which often passes a
         ShapeDtypeStruct anyway."""
-        arrays, build, _perm = partitioned_solver_ops(op, prec,
-                                                      self.n_shards,
-                                                      self.axis)
+        arrays, build, _perm = partitioned_solver_ops(
+            op, prec, self.n_shards, self.axis,
+            reduction=self.reduction_cfg)
 
         def run(b_local, loc):
             return fn(build(loc), b_local)
@@ -193,5 +222,13 @@ class ShardMapBackend(ReductionBackend):
         return lowered.compile().as_text()
 
     def describe(self) -> str:
+        if self.reduction_cfg is not None:
+            cfg = self.reduction_cfg
+            wire = "solver-dtype" if cfg.payload_dtype is None else str(
+                jnp.dtype(cfg.payload_dtype))
+            return (f"shard_map over {self.n_shards} device(s), axis "
+                    f"'{self.axis}' (staged ring dot block: "
+                    f"{cfg.n_hops} hops / {cfg.stages} stage(s), "
+                    f"{wire} wire)")
         return (f"shard_map over {self.n_shards} device(s), "
                 f"axis '{self.axis}' (fused psum dot block)")

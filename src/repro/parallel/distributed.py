@@ -375,18 +375,30 @@ def _fused_factory_dist(op, prec, loc, n_shards: int, axis: str):
     return factory
 
 
-def partitioned_solver_ops(op, prec, n_shards: int, axis: str = "shards"):
+def partitioned_solver_ops(op, prec, n_shards: int, axis: str = "shards",
+                           reduction=None):
     """(arrays, build, perm) for a full SolverOps: build(local_arrays,
     axis) must be called inside shard_map; dot_block is ONE fused psum
     over ``axis``.  ``perm`` (``perm[new] = old``, or None) is the row
     ordering the partition imposed — callers permute b on the way in and
     un-permute x on the way out (the solver runs entirely in the
-    permuted basis; every scalar it derives is permutation-invariant)."""
+    permuted basis; every scalar it derives is permutation-invariant).
+
+    ``reduction`` (a :class:`repro.parallel.reduction.StagedConfig`, or
+    None for the monolithic psum) swaps the dot-block combine for the
+    staged ring ladder (DESIGN.md §14): the start site parks local
+    partials in a gather buffer, the solver advances one REDUCE_TAG'd
+    ``ppermute`` hop group per iteration, and the wait finishes the ring
+    and reduces the partials in rank order — the compiled dot block then
+    carries NO all-reduce at all (asserted in tests/test_distributed.py).
+    """
     op_arrays, op_build, perm = _partition_op(op, n_shards)
     pr_arrays, pr_build = _partition_prec(prec, op, n_shards, perm)
     arrays = {"op": op_arrays, "prec": pr_arrays}
 
     def build(loc) -> SolverOps:
+        from repro.parallel import reduction as reduction_mod
+
         apply_a = op_build(loc["op"], axis)
         prec_fn = pr_build(loc["prec"], axis)
 
@@ -398,15 +410,22 @@ def partitioned_solver_ops(op, prec, n_shards: int, axis: str = "shards"):
             return lax.psum(dot_block_rows(mat, vec), axis)
 
         # create() tags the issue/consume sites for the overlap tracer
-        # (DESIGN.md §6) — the psum above is the MPI_Iallreduce payload.
-        # combine_partials is the superkernel's half of the same
-        # reduction: ONE psum of the VMEM-accumulated local dot partials
-        # (DESIGN.md §13), same payload, same tagged site.
+        # (DESIGN.md §6) — monolithic: the psum above is the
+        # MPI_Iallreduce payload and combine_partials its superkernel
+        # half (ONE psum of the VMEM-accumulated local dot partials,
+        # DESIGN.md §13); staged: the whole handle life cycle comes from
+        # the ladder subsystem (same tagged sites, zero all-reduces).
+        if reduction is None:
+            staged_kw = dict(combine_partials=lambda p: lax.psum(p, axis))
+        else:
+            cfg = dataclasses.replace(reduction, n_shards=n_shards,
+                                      axis=axis)
+            staged_kw = reduction_mod.staged_ops_pieces(cfg)
         return SolverOps.create(
             apply_a=apply_a, prec=prec_fn, dot_block=dot_block,
-            combine_partials=lambda p: lax.psum(p, axis),
             fused_iter_factory=_fused_factory_dist(
                 op, prec, {**loc["op"], **loc["prec"]}, n_shards, axis),
+            **staged_kw,
         )
 
     return arrays, build, perm
@@ -471,17 +490,21 @@ def distributed_solve_batched(
     method: str = "plcg",
     prec=None,
     jit: bool = True,
+    reduction=None,
     **kwargs,
 ):
     """Solve A X = B for all s columns of B (n, s) in lock-step, domain-
     decomposed over ``mesh`` — per iteration ONE fused psum of the whole
-    (K, s) dot-block matrix (DESIGN.md §11).  Mirrors
-    :func:`distributed_solve`; the result's leaves carry a leading s-axis.
+    (K, s) dot-block matrix (DESIGN.md §11), or its staged ring-ladder
+    equivalent when ``reduction`` names a StagedConfig (DESIGN.md §14).
+    Mirrors :func:`distributed_solve`; the result's leaves carry a
+    leading s-axis.
     """
     axis = mesh.axis_names[0]
     n_shards = mesh.devices.size
     assert B.shape[0] % n_shards == 0
-    arrays, build, perm = partitioned_solver_ops(op, prec, n_shards, axis)
+    arrays, build, perm = partitioned_solver_ops(op, prec, n_shards, axis,
+                                                 reduction=reduction)
     pre, post = _permutation_wrappers(perm)
 
     def run(B_local, local_arrays):
@@ -509,17 +532,21 @@ def distributed_solve(
     method: str = "plcg",
     prec=None,
     jit: bool = True,
+    reduction=None,
     **kwargs,
 ):
     """Solve A x = b with the chosen CG variant, domain-decomposed over
     ``mesh`` (1-D).  Returns (callable_or_result, lowered-compatible fn).
 
     ``kwargs`` are forwarded to the solver (l, tol, maxit, sigmas, unroll...).
+    ``reduction`` (StagedConfig | None) selects the staged ring ladder
+    for the dot block (DESIGN.md §14).
     """
     axis = mesh.axis_names[0]
     n_shards = mesh.devices.size
     assert b.shape[0] % n_shards == 0
-    arrays, build, perm = partitioned_solver_ops(op, prec, n_shards, axis)
+    arrays, build, perm = partitioned_solver_ops(op, prec, n_shards, axis,
+                                                 reduction=reduction)
     pre, post = _permutation_wrappers(perm)
 
     def run(b_local, local_arrays):

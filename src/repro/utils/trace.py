@@ -36,7 +36,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import pipelined_cg
-from repro.core.types import GLRED_START_TAG, GLRED_WAIT_TAG, HALO_TAG
+from repro.core.types import (GLRED_START_TAG, GLRED_WAIT_TAG, HALO_TAG,
+                              REDUCE_TAG)
 from repro.utils.hlo import count_collectives
 
 # Window scope prefix used by the flat trace harness (and by the unrolled
@@ -59,17 +60,25 @@ _INSTR_RE = re.compile(
 )
 _OPNAME_RE = re.compile(r'metadata=\{[^}]*?op_name="([^"]*)"')
 _WINDOW_RE = re.compile(WINDOW_SCOPE + r"(\d+)(?:\D|$)")
+# Staged ring-ladder hops (DESIGN.md §14): ``lax.ppermute`` inside a
+# ``glred_hop{k}`` scope, k the global hop index 0..P-2.  Hop 0 is the
+# first wire movement of a freshly issued handle — counting hop-0
+# permutes per window is the staged substitute for the all-reduce-based
+# logical-reduction count (exactly one per iteration, whatever the
+# ladder's stage grouping or the slab width s).
+_HOP_RE = re.compile(REDUCE_TAG + r"(\d+)(?:\D|$)")
 
 
 @dataclasses.dataclass(frozen=True)
 class ChainEvent:
     """One tagged site in the scheduled entry computation."""
 
-    kind: str          # "start" | "wait"
+    kind: str          # "start" | "wait" | "halo" | "hop"
     window: int        # plwin{k} iteration index
     pos: int           # instruction position in the entry computation
     opcode: str
     name: str          # HLO instruction name
+    hop: int | None = None   # ladder hop index (kind == "hop" only)
 
 
 @dataclasses.dataclass
@@ -97,15 +106,39 @@ class OverlapReport:
     # single shard) report 0/0.
     n_halo_permutes: int = 0
     halos_in_flight: int = 0
+    # Staged ring-ladder metrics (DESIGN.md §14).  ``reduce_hops_per_
+    # window``: REDUCE_TAG'd ppermutes per traced window — the ladder
+    # traffic the solver advances hop-by-hop (a healthy staged p(l)-CG
+    # schedule shows >= l hops in every late window).  ``staged_starts_
+    # per_window``: hop-0 permutes per window, the staged analogue of
+    # ``starts_per_window`` — exactly 1 per iteration means one logical
+    # reduction handle enters the wire per iteration however the hops
+    # are grouped or the slab widened.  ``hops_in_flight``: ladder hops
+    # scheduled strictly inside open reduction windows — together with
+    # ``halos_in_flight`` this is the hop/halo staggering invariant (the
+    # reduction's own wire traffic interleaves with neighbour exchange
+    # inside the in-flight window).  All zero on monolithic schedules.
+    reduce_hops_per_window: dict[int, int] = dataclasses.field(
+        default_factory=dict)
+    staged_starts_per_window: dict[int, int] = dataclasses.field(
+        default_factory=dict)
+    n_reduce_hops: int = 0
+    hops_in_flight: int = 0
 
     def __str__(self) -> str:
+        staged = ""
+        if self.n_reduce_hops:
+            staged = (f"; staged ladder: {self.n_reduce_hops} hop(s), "
+                      f"{self.hops_in_flight} inside reduction windows, "
+                      f"min {min(self.reduce_hops_per_window.values())}"
+                      f"/window")
         lines = [
             f"overlap trace: window={self.window} depth l={self.l} -> "
             f"max {self.max_in_flight} reduction chain(s) in flight "
             f"({self.n_collectives} all-reduce(s), "
             f"{self.collective_bytes:.3e} B payload; "
             f"{self.halos_in_flight}/{self.n_halo_permutes} halo "
-            f"permute(s) inside reduction windows)"
+            f"permute(s) inside reduction windows{staged})"
         ]
         for k, s, w in self.chains:
             tail = f"waited @ {w}" if w is not None else "open at window end"
@@ -146,11 +179,21 @@ def extract_events(hlo_text: str) -> list[ChainEvent]:
     starts: dict[int, ChainEvent] = {}
     waits: dict[int, ChainEvent] = {}
     halos: list[ChainEvent] = []
+    hops: list[ChainEvent] = []
     for pos, (name, opcode, op_name) in enumerate(instrs):
         wm = _WINDOW_RE.search(op_name)
         if wm is None:
             continue
         k = int(wm.group(1))
+        # Staged ladder hops are counted on their own axis: a hop that
+        # executes inside the wait's scope (the steps the solver had not
+        # advanced yet) carries BOTH glred_wait and glred_hop{j} — it is
+        # a hop event, never the wait's consumption marker.
+        hm = _HOP_RE.search(op_name)
+        is_hop = hm is not None and opcode in _PERMUTE_OPS
+        if is_hop:
+            hops.append(ChainEvent("hop", k, pos, opcode, name,
+                                   hop=int(hm.group(1))))
         if GLRED_START_TAG in op_name:
             ev = ChainEvent("start", k, pos, opcode, name)
             cur = starts.get(k)
@@ -158,13 +201,13 @@ def extract_events(hlo_text: str) -> list[ChainEvent]:
             cur_coll = cur is not None and cur.opcode in _COLLECTIVE_START_OPS
             if cur is None or (is_coll and not cur_coll):
                 starts[k] = ev
-        elif GLRED_WAIT_TAG in op_name and k not in waits:
+        elif GLRED_WAIT_TAG in op_name and not is_hop and k not in waits:
             waits[k] = ChainEvent("wait", k, pos, opcode, name)
-        elif HALO_TAG in op_name and opcode in _PERMUTE_OPS:
+        elif HALO_TAG in op_name and opcode in _PERMUTE_OPS and not is_hop:
             # Every halo permute is an event (a window has one per
             # direction and hop) — the staggering metric counts them all.
             halos.append(ChainEvent("halo", k, pos, opcode, name))
-    evs = list(starts.values()) + list(waits.values()) + halos
+    evs = list(starts.values()) + list(waits.values()) + halos + hops
     evs.sort(key=lambda e: e.pos)
     return evs
 
@@ -211,6 +254,7 @@ def analyze_overlap(hlo_text: str, l: int, window: int | None = None
     starts = {e.window: e for e in events if e.kind == "start"}
     waits = {e.window: e for e in events if e.kind == "wait"}
     halos = [e for e in events if e.kind == "halo"]
+    hops = [e for e in events if e.kind == "hop"]
     if window is None:
         window = max(starts, default=-1) + 1
 
@@ -237,6 +281,20 @@ def analyze_overlap(hlo_text: str, l: int, window: int | None = None
         if any(spos < e.pos and (wpos is None or e.pos < wpos)
                for _k, spos, wpos in chains)
     )
+    # Hop staggering (DESIGN.md §14): a ladder hop inside an open chain
+    # window is reduction wire traffic riding the in-flight window —
+    # exactly where the hop-per-iteration advance schedule puts it.
+    hops_in_flight = sum(
+        1 for e in hops
+        if any(spos < e.pos and (wpos is None or e.pos < wpos)
+               for _k, spos, wpos in chains)
+    )
+    hops_per_window: dict[int, int] = {}
+    staged_starts: dict[int, int] = {}
+    for e in hops:
+        hops_per_window[e.window] = hops_per_window.get(e.window, 0) + 1
+        if e.hop == 0:
+            staged_starts[e.window] = staged_starts.get(e.window, 0) + 1
 
     colls = count_collectives(hlo_text)
     n_coll = int(sum(v["count"] for kind, v in colls.items()
@@ -249,7 +307,11 @@ def analyze_overlap(hlo_text: str, l: int, window: int | None = None
                          starts_per_window=reduction_starts_per_window(
                              hlo_text),
                          n_halo_permutes=len(halos),
-                         halos_in_flight=halos_in_flight)
+                         halos_in_flight=halos_in_flight,
+                         reduce_hops_per_window=hops_per_window,
+                         staged_starts_per_window=staged_starts,
+                         n_reduce_hops=len(hops),
+                         hops_in_flight=hops_in_flight)
 
 
 def plcg_overlap_report(

@@ -157,6 +157,111 @@ def test_iteration_bytes_calibration():
     assert res.best.model_s > 0
 
 
+def test_staged_reduction_model():
+    """ISSUE 5 satellite: the per-hop ladder model (stages*alpha_hop
+    replacing the tree-depth alpha, DESIGN.md §14).  Monotonicity of
+    the (l, stages) knob: more stages → cheaper per-iteration ladder
+    wait (smaller advance burst, cheaper residual wait steps) but
+    longer pipeline fill; the stall vanishes once the structural window
+    covers every stage (stages <= l-1); the autotuner co-selects depth
+    and stage count (deeper pipelines earn finer ladders); and wide
+    slabs still favor shallower l — the PR 2 payload-amortization
+    behaviour survives the staged wiring."""
+    from benchmarks.timing_model import CORI, ring_hop_time
+    from repro.launch.autotune import (autotune_depth, model_iteration_time,
+                                       staged_reduction_terms)
+
+    p, payload = 512, 56
+    t_hop = ring_hop_time(CORI, payload)
+    assert t_hop < CORI.alpha + payload / CORI.link_bw + 1e-18
+    assert CORI.alpha_hop < CORI.alpha     # a ring hop is not a tree stage
+
+    # More stages → smaller per-iteration advance burst (the hop chain
+    # one step serializes into the body) and strictly longer fill.
+    for l in (2, 3, 5):
+        bursts, fills = [], []
+        for st in (1, 2, 4, 8, 16, 32):
+            t = staged_reduction_terms(CORI, p, l, st, payload)
+            bursts.append(t["t_advance_burst"])
+            fills.append(t["fill_iters"])
+        assert all(a >= b for a, b in zip(bursts, bursts[1:])), bursts
+        assert bursts[0] > bursts[-1]
+        assert all(a < b for a, b in zip(fills, fills[1:])), fills
+
+    # The wait stall is zero exactly when the pipeline covers the ladder
+    # (stages <= l-1) and grows with the uncovered remainder.
+    for l in (2, 3, 5):
+        for st in range(1, l):
+            assert staged_reduction_terms(
+                CORI, p, l, st, payload)["t_wait_stall"] == 0.0, (l, st)
+        s_deep = staged_reduction_terms(CORI, p, l, l + 3, payload)
+        s_shallow = staged_reduction_terms(CORI, p, l, l + 1, payload)
+        assert s_deep["t_wait_stall"] > 0.0
+        # per-step residue is cheaper with finer stages even when both
+        # stall: each remaining step is a smaller hop group
+        assert s_deep["t_advance_burst"] <= s_shallow["t_advance_burst"]
+
+    # Hop conservation: the ladder always moves P-1 hops, stages only
+    # schedule them (the arithmetic-invariance twin of the bitwise
+    # stage-count parity test).
+    for st in (1, 3, 7, 31):
+        t = staged_reduction_terms(CORI, p, 3, st, payload)
+        assert t["n_hops"] == p - 1
+        assert t["group_hops"] == -(-(p - 1) // min(st, p - 1))
+
+    # Co-selection (latency-dominated regime): among staged candidates
+    # the best stage count does not shrink as the pipeline deepens —
+    # deeper l structurally covers more stages, so finer ladders win.
+    res = autotune_depth(n=4_000_000, p=p, ls=(2, 3, 5, 8), jitter=0.0,
+                         reduction="staged", include_baselines=False,
+                         stages_grid=(1, 2, 4, 7))
+    # Ties (several stage counts fully hidden under the body) break
+    # toward the finer ladder — "free" finer staging is still finer.
+    best_by_l = {}
+    for c in res.candidates:
+        cur = best_by_l.get(c.l)
+        if cur is None or c.score < cur.score * (1 - 1e-12) or (
+                abs(c.score - cur.score) <= 1e-12 * cur.score
+                and c.stages > cur.stages):
+            best_by_l[c.l] = c
+    ls = sorted(best_by_l)
+    stages_seq = [best_by_l[l].stages for l in ls]
+    assert all(a <= b for a, b in zip(stages_seq, stages_seq[1:])), \
+        stages_seq
+    assert stages_seq[-1] > stages_seq[0], stages_seq
+
+    # model_iteration_time integration: stages beyond the structural
+    # window only add stall...
+    t_stall = model_iteration_time(CORI, 4_000_000, p, "plcg", l=3,
+                                   jitter=0.0, reduction="staged",
+                                   stages=7)
+    t_fit = model_iteration_time(CORI, 4_000_000, p, "plcg", l=3,
+                                 jitter=0.0, reduction="staged", stages=2)
+    assert t_fit < t_stall
+    # ... and once the pipeline is deep enough to cover a FINE ladder
+    # (l-1 >= stages, small hop groups hidden under the body), the
+    # staged path beats the unpipelined monolithic reduction at the
+    # same depth — the structural-overlap claim.  At shallow depth the
+    # honest model says a 511-hop linear ring cannot win at p=512;
+    # that is the (l, stages) tension the autotuner navigates.
+    t_deep = model_iteration_time(CORI, 4_000_000, p, "plcg", l=8,
+                                  jitter=0.0, reduction="staged", stages=7)
+    t_mono_serial = model_iteration_time(CORI, 4_000_000, p, "plcg", l=8,
+                                         unroll=1, jitter=0.0)
+    assert t_deep < t_mono_serial
+
+    # Wide slabs still favor shallower l under staged wiring: the s-wide
+    # payload rides every hop, so the per-column optimum moves shallow
+    # exactly as in the monolithic model (PR 2 test, staged edition).
+    def best_staged_l(s):
+        r = autotune_depth(n=1_000_000, p=p, ls=(1, 2, 3, 5, 8), s=s,
+                           jitter=0.0, reduction="staged",
+                           include_baselines=False)
+        return r.best.l
+
+    assert best_staged_l(4096) <= best_staged_l(1)
+
+
 def test_schedule_sim_limits():
     """Steady-state checks of the event simulator against Table 1:
     p(l)-CG iteration time -> max(body, glred/l) for large glred."""

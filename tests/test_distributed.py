@@ -346,6 +346,179 @@ print("FUSED-MESH-OK")
     assert "FUSED-MESH-OK" in out
 
 
+def test_staged_reduction_hlo_structure():
+    """ISSUE 5 tentpole acceptance: with ``reduction="staged"`` the dot
+    block compiles to REDUCE_TAG'd collective-permute hops and the
+    module carries ZERO all-reduces; the tracer still sees >= l chains
+    in flight, >= l ladder hops in every traced window, EXACTLY one
+    logical reduction (hop-0 permute) per iteration, and the hop/halo
+    staggering — ladder hops scheduled inside open reduction windows."""
+    out = _run(HEADER + """
+from repro.parallel import get_backend
+from repro.utils.trace import plcg_overlap_report, batched_plcg_overlap_report
+op = Stencil2D5(32, 24)
+bspec = jax.ShapeDtypeStruct((op.n,), jnp.float64)
+for stages in (1, 2):
+    be = get_backend("shard_map", n_shards=8, reduction="staged",
+                     reduction_stages=stages)
+    for l in (2, 3):
+        rep = plcg_overlap_report(be, op, bspec, l=l, window=l + 2,
+                                  sigmas=shifts_for_operator(op, l))
+        # no all-reduce anywhere in the staged dot-block schedule
+        assert rep.n_collectives == 0, (stages, l, rep.n_collectives)
+        assert rep.max_in_flight >= l, (stages, l, str(rep))
+        # ladder hops present in every window, >= l per window
+        assert len(rep.reduce_hops_per_window) == rep.window, str(rep)
+        assert min(rep.reduce_hops_per_window.values()) >= l, \\
+            (stages, l, rep.reduce_hops_per_window)
+        # exactly ONE logical reduction handle enters the wire per
+        # iteration, whatever the stage grouping
+        assert all(v == 1 for v in rep.staged_starts_per_window.values()), \\
+            (stages, l, rep.staged_starts_per_window)
+        assert len(rep.staged_starts_per_window) == rep.window
+        # hop/halo staggering: ladder hops AND halo permutes ride inside
+        # the open reduction windows
+        assert rep.hops_in_flight >= l, (stages, l, rep.hops_in_flight)
+        assert rep.halos_in_flight >= l, (stages, l, str(rep))
+
+# batched slab (s=8): same structure — one hop-0 permute per window (the
+# vmapped ladder collapses to ONE permute per hop carrying the whole
+# (2l+1, s) payload), zero all-reduce, >= l in flight.
+be = get_backend("shard_map", n_shards=8, reduction="staged")
+Bspec = jax.ShapeDtypeStruct((op.n, 8), jnp.float64)
+rep = batched_plcg_overlap_report(be, op, Bspec, l=2,
+                                  sigmas=shifts_for_operator(op, 2))
+assert rep.n_collectives == 0, rep.n_collectives
+assert rep.max_in_flight >= 2, str(rep)
+assert all(v == 1 for v in rep.staged_starts_per_window.values()), \\
+    rep.staged_starts_per_window
+assert min(rep.reduce_hops_per_window.values()) >= 2
+print("STAGED-HLO-OK")
+""")
+    assert "STAGED-HLO-OK" in out
+
+
+def test_staged_reduction_parity():
+    """Staged-vs-monolithic residual histories are BITWISE identical on
+    stencils (the ladder's rank-order sum reproduces the monolithic
+    all-reduce's deterministic linear order), across stage counts and
+    for the batched slab; the local eager ladder oracle with
+    virtual_shards=8 matches the 8-shard mesh bitwise too.  FEM
+    SparseOp follows the PR 3 convention (tight head, bounded tail:
+    local partials differ at ULP level between substrates)."""
+    out = _run(HEADER + """
+from repro.parallel import get_backend
+op = Stencil2D5(32, 24)
+b = jnp.asarray(np.random.default_rng(1).standard_normal(op.n))
+sig = shifts_for_operator(op, 2)
+kw = dict(method="plcg", l=2, sigmas=sig, tol=1e-10, maxit=2000)
+r_mono = get_backend("shard_map", n_shards=8).solve(op, b, **kw)
+hm = np.asarray(r_mono.res_history)
+for stages in (1, 2, 7):
+    r = get_backend("shard_map", n_shards=8, reduction="staged",
+                    reduction_stages=stages).solve(op, b, **kw)
+    np.testing.assert_array_equal(np.asarray(r.res_history), hm)
+    np.testing.assert_array_equal(np.asarray(r.x), np.asarray(r_mono.x))
+# eager ladder oracle == staged mesh, bitwise
+r_o = get_backend("local", reduction="staged", virtual_shards=8).solve(
+    op, b, **kw)
+np.testing.assert_array_equal(np.asarray(r_o.res_history), hm)
+# ghysels p-CG staged (one advance inside its overlap window)
+kw_p = dict(method="pcg", tol=1e-10, maxit=2000)
+r_pm = get_backend("shard_map", n_shards=8).solve(op, b, **kw_p)
+r_ps = get_backend("shard_map", n_shards=8, reduction="staged").solve(
+    op, b, **kw_p)
+np.testing.assert_array_equal(np.asarray(r_ps.res_history),
+                              np.asarray(r_pm.res_history))
+# batched slab staged == batched monolithic, bitwise
+B = jnp.asarray(np.random.default_rng(5).standard_normal((op.n, 4)))
+kwb = dict(method="plcg", l=2, sigmas=sig, tol=1e-9, maxit=600)
+rb_m = get_backend("shard_map", n_shards=8).solve_batched(op, B, **kwb)
+rb_s = get_backend("shard_map", n_shards=8,
+                   reduction="staged").solve_batched(op, B, **kwb)
+np.testing.assert_array_equal(np.asarray(rb_s.res_history),
+                              np.asarray(rb_m.res_history))
+np.testing.assert_array_equal(np.asarray(rb_s.x), np.asarray(rb_m.x))
+# fused superkernel on the staged mesh: vector phase fuses, the ladder
+# carries the VMEM-accumulated partials — still bitwise vs unfused.
+r_f = get_backend("shard_map", n_shards=8, reduction="staged").solve(
+    op, b, fused_iteration=True, **kw)
+np.testing.assert_array_equal(np.asarray(r_f.res_history), hm)
+print("STAGED-PARITY-OK")
+""")
+    assert "STAGED-PARITY-OK" in out
+
+
+def test_staged_reduction_fem_and_fp32():
+    """Staged reduction on an unstructured FEM SparseOp (bounded-tail
+    vs monolithic, PR 3 convention) and the fp32-payload wire with fp64
+    compensated accumulation (halved hop bytes; bounded-tail parity,
+    converges at the same iteration count +-2)."""
+    out = _run(HEADER + """
+from repro.parallel import get_backend
+from repro.linalg import random_fem_mesh, rcm_reorder
+op, _perm = rcm_reorder(random_fem_mesh(0, 400))
+b = jnp.asarray(np.random.default_rng(1).standard_normal(op.n))
+sig = shifts_for_operator(op, 2)
+kw = dict(method="plcg", l=2, sigmas=sig, tol=1e-9, maxit=900)
+r_m = get_backend("shard_map", n_shards=8).solve(op, b, **kw)
+r_s = get_backend("shard_map", n_shards=8, reduction="staged").solve(
+    op, b, **kw)
+xd = np.linalg.solve(op.to_dense(), np.asarray(b))
+for r in (r_m, r_s):
+    assert bool(r.converged)
+    assert np.abs(np.asarray(r.x) - xd).max() < 1e-6
+hm, hs = np.asarray(r_m.res_history), np.asarray(r_s.res_history)
+n0 = float(r_m.norm0)
+m = (hm >= 0) & (hs >= 0)
+diff = np.abs(hs[m] - hm[m]) / n0
+assert diff[:10].max() < 1e-8, diff[:10].max()
+assert diff.max() < 5e-2, diff.max()
+assert abs(int(r_s.iters) - int(r_m.iters)) <= 5
+
+# fp32 payload on the stencil: bounded tail, same convergence
+op2 = Stencil2D5(32, 24)
+b2 = jnp.asarray(np.random.default_rng(2).standard_normal(op2.n))
+sig2 = shifts_for_operator(op2, 2)
+kw2 = dict(method="plcg", l=2, sigmas=sig2, tol=1e-9, maxit=2000)
+r64 = get_backend("shard_map", n_shards=8, reduction="staged").solve(
+    op2, b2, **kw2)
+r32 = get_backend("shard_map", n_shards=8, reduction="staged",
+                  reduction_dtype=jnp.float32).solve(op2, b2, **kw2)
+assert bool(r32.converged)
+assert abs(int(r32.iters) - int(r64.iters)) <= 2
+h64, h32 = np.asarray(r64.res_history), np.asarray(r32.res_history)
+n0 = float(r64.norm0)
+m = (h64 >= 0) & (h32 >= 0)
+diff = np.abs(h64[m] - h32[m]) / n0
+assert diff[:10].max() < 1e-5, diff[:10].max()
+assert diff.max() < 5e-2, diff.max()
+# the fp32 wire really is half-width in the compiled HLO: the hop
+# permutes carry f32 payloads
+from repro.parallel.distributed import distributed_solve
+from jax.sharding import NamedSharding, PartitionSpec as P
+be32 = get_backend("shard_map", n_shards=8, reduction="staged",
+                   reduction_dtype=jnp.float32)
+bspec = jax.ShapeDtypeStruct((op2.n,), jnp.float64)
+fn, arrays = distributed_solve(be32.mesh, op2, bspec, method="plcg", l=2,
+                               sigmas=sig2, tol=1e-9, maxit=100, jit=False,
+                               reduction=be32.reduction_cfg)
+bsh = NamedSharding(be32.mesh, P("shards"))
+ash = jax.tree.map(lambda _: bsh, arrays)
+hlo = jax.jit(fn, in_shardings=(bsh, ash)).lower(bspec, arrays)\\
+    .compile().as_text()
+hop_lines = [ln for ln in hlo.splitlines()
+             if "collective-permute" in ln and "glred_hop" in ln
+             and "-done" not in ln]
+assert hop_lines and all(" f32[" in ln for ln in hop_lines), \\
+    hop_lines[:3]
+assert not any(" all-reduce(" in ln or " all-reduce-start(" in ln
+               for ln in hlo.splitlines())
+print("STAGED-FEM-FP32-OK")
+""")
+    assert "STAGED-FEM-FP32-OK" in out
+
+
 def test_splitkv_merge_under_shard_map():
     """Cross-shard split-KV decode: sequence sharded over 8 devices,
     merged with one pmax + one fused psum == unsharded attention."""

@@ -1,0 +1,270 @@
+"""Staged ring-reduction subsystem (repro.parallel.reduction,
+DESIGN.md §14): ladder mechanics, rank-order determinism against the
+monolithic psum, the eager local oracle, mixed-precision compensated
+accumulation, and the SolverOps handle API.  Single-process tests here;
+compiled-HLO structure and mesh parity live in tests/test_distributed.py.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.types import SolverOps, dot_block_rows
+from repro.parallel.reduction import (
+    StagedConfig,
+    hop_groups,
+    hop_payload_bytes,
+    oracle_solver_ops,
+    ordered_reduce,
+    reduction_wire_bytes,
+)
+
+jax.config.update("jax_enable_x64", True)
+
+
+# ------------------------------------------------------------- ladder shape --
+def test_hop_groups_partition_the_ring():
+    for p in (2, 3, 8, 16):
+        for stages in range(1, p):
+            groups = hop_groups(p, stages)
+            assert len(groups) == stages
+            flat = [h for g in groups for h in g]
+            assert flat == list(range(p - 1)), (p, stages, groups)
+            # front-loaded: earlier steps never smaller than later ones
+            sizes = [len(g) for g in groups]
+            assert all(a >= b for a, b in zip(sizes, sizes[1:]))
+            assert max(sizes) == math.ceil((p - 1) / stages)
+
+
+def test_staged_config_validation():
+    with pytest.raises(ValueError):
+        StagedConfig(n_shards=8, stages=0)
+    with pytest.raises(ValueError):
+        StagedConfig(n_shards=8, stages=8)   # max is p-1 hops
+    cfg = StagedConfig(n_shards=8, stages=7)
+    assert cfg.n_hops == 7
+    assert StagedConfig(n_shards=1, stages=1).n_hops == 0
+    f64 = jnp.zeros((), jnp.float64).dtype
+    assert cfg.wire_dtype(f64) == f64
+    cfg32 = StagedConfig(n_shards=8, stages=2, payload_dtype=jnp.float32)
+    assert cfg32.wire_dtype(f64) == jnp.dtype(jnp.float32)
+    assert cfg32.compensated(f64)
+    assert not cfg.compensated(f64)
+
+
+def test_wire_accounting():
+    # per-hop payload: the (2l+1)[, s] block in the wire dtype
+    assert hop_payload_bytes(2, dsize=8) == 5 * 8
+    assert hop_payload_bytes(3, s=8, dsize=4) == 7 * 8 * 4
+    # fp32 halves exactly the per-hop wire payload
+    assert hop_payload_bytes(3, dsize=4) * 2 == hop_payload_bytes(3, dsize=8)
+    # total per-shard wire: P-1 hops x payload
+    assert reduction_wire_bytes(8, 2, dsize=8) == 7 * 5 * 8
+
+
+# ------------------------------------------------- ordered / compensated sum --
+def test_ordered_reduce_is_rank_order_linear():
+    rng = np.random.default_rng(0)
+    parts = jnp.asarray(rng.standard_normal((8, 5)))
+    out = ordered_reduce(parts, parts.dtype, compensated=False)
+    ref = np.asarray(parts)[0].copy()
+    for k in range(1, 8):
+        ref = ref + np.asarray(parts)[k]
+    np.testing.assert_array_equal(np.asarray(out), ref)
+
+
+def test_compensated_reduce_beats_naive_fp32():
+    # P partials with wildly mixed magnitudes: naive fp32 accumulation
+    # loses the small terms; Kahan-into-fp64 of fp32-rounded partials is
+    # exact up to the initial fp32 rounding of each partial (the
+    # DESIGN.md §14 bound: error <= P ulps of the PARTIALS, no
+    # accumulation-order growth).
+    rng = np.random.default_rng(1)
+    parts64 = rng.standard_normal(64) * np.logspace(0, 7, 64)
+    exact = math.fsum(parts64)
+    parts32 = jnp.asarray(parts64, jnp.float32).reshape(64, 1)
+    kahan = float(ordered_reduce(parts32, jnp.float64, compensated=True)[0])
+    naive32 = float(ordered_reduce(parts32, jnp.float32,
+                                   compensated=False)[0])
+    # Kahan error bounded by the sum of per-partial fp32 roundings.
+    bound = np.abs(parts64).sum() * np.finfo(np.float32).eps
+    assert abs(kahan - exact) <= bound
+    assert abs(kahan - exact) <= abs(naive32 - exact) + 1e-30
+
+
+# --------------------------------------------------------- the eager oracle --
+def _poisson_ops(n_shards=1, **kw):
+    from repro.linalg import Stencil2D5
+    op = Stencil2D5(16, 12)
+    if n_shards == 1 and not kw:
+        return op, SolverOps.local(op)
+    cfg = StagedConfig(n_shards=n_shards, axis=None, **kw)
+    return op, oracle_solver_ops(op, None, cfg)
+
+
+def test_oracle_matches_monolithic_dot_bitwise_via_rank_split():
+    """The oracle's rank-sliced partials, reduced in rank order, equal
+    the monolithic full-width row sum bitwise is NOT guaranteed (the
+    grouping differs) — but the oracle must be self-consistent: every
+    virtual shard count yields the same result as an explicit numpy
+    rank-order recombination of the same slices."""
+    op, _ = _poisson_ops()
+    rng = np.random.default_rng(2)
+    mat = jnp.asarray(rng.standard_normal((5, op.n)))
+    vec = jnp.asarray(rng.standard_normal(op.n))
+    for v in (2, 4, 8):
+        _, ops = _poisson_ops(n_shards=v, stages=min(2, v - 1))
+        dots = ops.wait(ops.start(mat, vec))
+        m = np.asarray(mat).reshape(5, v, op.n // v)
+        w = np.asarray(vec).reshape(v, op.n // v)
+        ref = (m[:, 0, :] * w[0]).sum(axis=1)
+        for r in range(1, v):
+            ref = ref + (m[:, r, :] * w[r]).sum(axis=1)
+        np.testing.assert_allclose(np.asarray(dots), ref, rtol=1e-14)
+
+
+def test_oracle_solver_parity_with_monolithic_local():
+    """End-to-end: the eager ladder oracle is a drop-in SolverOps — the
+    p(l)-CG residual history it produces converges to the same solution
+    as the monolithic local path (histories differ only by the dot
+    block's reduction grouping, a ULP-level effect on this small SPD
+    stencil)."""
+    from repro.core import pipelined_cg
+    from repro.core.chebyshev import shifts_for_operator
+    from repro.linalg import Stencil2D5
+
+    op = Stencil2D5(16, 12)
+    b = jnp.asarray(np.random.default_rng(3).standard_normal(op.n))
+    sig = shifts_for_operator(op, 2)
+    kw = dict(l=2, sigmas=sig, tol=1e-10, maxit=1500)
+    res_m = pipelined_cg.solve(SolverOps.local(op), b, **kw)
+    for v, stages in ((4, 1), (4, 3), (8, 2)):
+        cfg = StagedConfig(n_shards=v, stages=stages, axis=None)
+        res_o = pipelined_cg.solve(oracle_solver_ops(op, None, cfg), b, **kw)
+        assert bool(res_o.converged)
+        assert abs(int(res_o.iters) - int(res_m.iters)) <= 2
+        np.testing.assert_allclose(np.asarray(res_o.x), np.asarray(res_m.x),
+                                   atol=1e-9)
+
+
+def test_oracle_stage_count_invariance_is_bitwise():
+    """The ladder's defining property (DESIGN.md §14): stages only
+    regroups the hops — the wait's rank-order summation is identical —
+    so residual histories across stage counts agree BITWISE."""
+    from repro.core import pipelined_cg
+    from repro.core.chebyshev import shifts_for_operator
+    from repro.linalg import Stencil2D5
+
+    op = Stencil2D5(16, 12)
+    b = jnp.asarray(np.random.default_rng(4).standard_normal(op.n))
+    sig = shifts_for_operator(op, 3)
+    kw = dict(l=3, sigmas=sig, tol=1e-9, maxit=1500)
+    hists = []
+    for stages in (1, 2, 3, 7):
+        cfg = StagedConfig(n_shards=8, stages=stages, axis=None)
+        res = pipelined_cg.solve(oracle_solver_ops(op, None, cfg), b, **kw)
+        hists.append(np.asarray(res.res_history))
+    for h in hists[1:]:
+        np.testing.assert_array_equal(h, hists[0])
+
+
+def test_oracle_fp32_payload_bounded_tail():
+    """fp32 wire + fp64 compensated accumulation: the solver still
+    converges to the same solution at the same iteration count +-2, the
+    early history matches at fp32-rounding level, and the tail is
+    bounded (Krylov recurrences amplify the payload rounding, the PR 3
+    convention)."""
+    from repro.core import pipelined_cg
+    from repro.core.chebyshev import shifts_for_operator
+    from repro.linalg import Stencil2D5
+
+    op = Stencil2D5(16, 12)
+    b = jnp.asarray(np.random.default_rng(5).standard_normal(op.n))
+    sig = shifts_for_operator(op, 2)
+    kw = dict(l=2, sigmas=sig, tol=1e-8, maxit=1500)
+    res64 = pipelined_cg.solve(
+        oracle_solver_ops(op, None, StagedConfig(n_shards=8, stages=2,
+                                                 axis=None)), b, **kw)
+    res32 = pipelined_cg.solve(
+        oracle_solver_ops(op, None, StagedConfig(
+            n_shards=8, stages=2, axis=None,
+            payload_dtype=jnp.float32)), b, **kw)
+    assert bool(res32.converged)
+    assert abs(int(res32.iters) - int(res64.iters)) <= 2
+    h64, h32 = np.asarray(res64.res_history), np.asarray(res32.res_history)
+    n0 = float(res64.norm0)
+    m = (h64 >= 0) & (h32 >= 0)
+    diff = np.abs(h64[m] - h32[m]) / n0
+    assert diff[:10].max() < 1e-5          # head: fp32 payload rounding
+    assert diff.max() < 5e-2               # tail: bounded amplification
+    np.testing.assert_allclose(np.asarray(res32.x), np.asarray(res64.x),
+                               atol=1e-6)
+
+
+def test_fp32_solver_with_fp32_wire():
+    """Regression (review finding): a float32 SOLVER with
+    reduction_dtype=float32 must trace and converge — the staged wait
+    accumulates in the widest available dtype and the solvers normalize
+    the payload back to their own dtype at the consumption sites."""
+    from repro.core import ghysels_pcg, pipelined_cg
+    from repro.core.chebyshev import shifts_for_operator
+    from repro.linalg import Stencil2D5
+
+    op = Stencil2D5(16, 12)
+    b32 = jnp.asarray(np.random.default_rng(7).standard_normal(op.n),
+                      jnp.float32)
+    sig32 = jnp.asarray(shifts_for_operator(op, 2), jnp.float32)
+    cfg = StagedConfig(n_shards=4, stages=2, axis=None,
+                       payload_dtype=jnp.float32)
+    ops = oracle_solver_ops(op, None, cfg)
+    res = pipelined_cg.solve(ops, b32, l=2, sigmas=sig32, tol=1e-5,
+                             maxit=400)
+    assert res.res_history.dtype == jnp.float32
+    assert bool(res.converged)
+    res_p = ghysels_pcg.solve(ops, b32, tol=1e-5, maxit=400)
+    assert res_p.res_history.dtype == jnp.float32
+    assert bool(res_p.converged)
+
+
+# ------------------------------------------------------- handle API surface --
+def test_handle_zeros_shapes():
+    op, mono = _poisson_ops()
+    assert mono.handle_zeros((5,), jnp.float64).shape == (5,)
+    _, staged = _poisson_ops(n_shards=8, stages=2)
+    h = staged.handle_zeros((5,), jnp.float64)
+    assert h.shape == (8, 5) and h.dtype == jnp.float64
+    _, staged32 = _poisson_ops(n_shards=8, stages=2,
+                               payload_dtype=jnp.float32)
+    h32 = staged32.handle_zeros((7,), jnp.float64)
+    assert h32.shape == (8, 7) and h32.dtype == jnp.float32
+
+
+def test_advance_is_identity_on_monolithic_ops():
+    op, mono = _poisson_ops()
+    h = jnp.arange(5.0)
+    np.testing.assert_array_equal(np.asarray(mono.advance(h, 0)),
+                                  np.asarray(h))
+    # wait accepts (and ignores) the advanced count on monolithic ops
+    rng = np.random.default_rng(6)
+    mat = jnp.asarray(rng.standard_normal((3, op.n)))
+    vec = jnp.asarray(rng.standard_normal(op.n))
+    d0 = mono.wait(mono.start(mat, vec), advanced=0)
+    np.testing.assert_array_equal(np.asarray(d0),
+                                  np.asarray(dot_block_rows(mat, vec)))
+
+
+def test_local_backend_staged_registry():
+    from repro.parallel import get_backend
+
+    be = get_backend("local", reduction="staged", virtual_shards=8,
+                     reduction_stages=3)
+    assert be.reduction_mode == "staged"
+    assert be.reduction_fallback is None
+    assert be.supports_staged_reduction
+    cfg = be.reduction_cfg
+    assert cfg.n_shards == 8 and cfg.stages == 3
+    with pytest.raises(ValueError):
+        get_backend("local", reduction="banana")
