@@ -1,8 +1,9 @@
-"""Serving-layer benchmark: slab throughput vs sequential solves, and
-request latency percentiles through the full service loop
-(DESIGN.md §11).  Emits ``BENCH_serve.json`` for the perf trajectory.
+"""Serving-layer benchmark: slab throughput vs sequential solves,
+request latency percentiles through the full service loop, and an
+open-loop traffic replay (DESIGN.md §11/§15).  Emits
+``BENCH_serve.json`` for the perf trajectory.
 
-Two measurements on a simulated 8-device mesh (host platform devices):
+Three measurements on a simulated 8-device mesh (host platform devices):
 
 * **throughput** — the same ``s`` right-hand sides solved (a) one by one
   through a compiled single-RHS solver and (b) as one slab through the
@@ -12,6 +13,14 @@ Two measurements on a simulated 8-device mesh (host platform devices):
   collective-latency-dominated mesh (the PR acceptance bar).
 * **latency** — a burst of requests streamed through ``SolverService``
   (pack -> chunk -> retire), reporting p50/p99 retirement latency.
+* **open-loop replay** — a seeded Poisson trace with a heavy-tail
+  tolerance mix replayed on the VIRTUAL clock through the multi-slab
+  scheduler, continuous injection vs a drain-to-empty baseline.  Every
+  ``replay_*`` metric is exact deterministic arithmetic (same seed ->
+  same numbers on any machine), so CI gates goodput, p99 and
+  slot-utilization with ZERO timing tolerance, alongside the HLO-level
+  ceiling ``replay_reduction_starts_per_iter_max`` (one reduction
+  handle per iteration per slab, tracer-asserted).
 
     PYTHONPATH=src python -m benchmarks.serve_bench [--s 8] [--out PATH]
 """
@@ -32,7 +41,9 @@ jax.config.update("jax_enable_x64", True)
 from repro.core.chebyshev import shifts_for_operator  # noqa: E402
 from repro.linalg import Stencil2D5  # noqa: E402
 from repro.parallel import get_backend  # noqa: E402
-from repro.serve import SolverService  # noqa: E402
+from repro.serve import (AdmissionPolicy, SolverService,  # noqa: E402
+                         TrafficClass, VirtualClock, poisson_trace, replay)
+from repro.utils.trace import batched_plcg_overlap_report  # noqa: E402
 
 
 def time_best(fn, repeats=3):
@@ -42,6 +53,65 @@ def time_best(fn, repeats=3):
         fn()
         best = min(best, time.perf_counter() - t0)
     return best
+
+
+def replay_section(be, op, args):
+    """Open-loop replay on the virtual clock: deterministic goodput /
+    p99 / slot-utilization numbers (DESIGN.md §15)."""
+    classes = [
+        # Heavy-tail cost mix through the tolerance (a slab-key
+        # ingredient): mostly cheap loose-tol solves, a tail of
+        # expensive tight-tol ones -> two live slab keys.
+        TrafficClass("bench", op.n, weight=4.0, tol=1e-6, deadline_s=1.0),
+        TrafficClass("bench", op.n, weight=1.0, tol=1e-10, deadline_s=4.0),
+    ]
+    trace = poisson_trace(classes, rate_per_s=args.replay_rate,
+                          n_requests=args.replay_requests,
+                          seed=args.replay_seed)
+
+    def run(continuous):
+        # chunk_iters=8: retirement scans every 8 iterations keep the
+        # partial-chunk tail waste (a column converging mid-chunk stops
+        # contributing) small relative to ~30-60-iteration solves.
+        svc = SolverService(be, s=args.s, method="plcg", l=args.l,
+                            chunk_iters=8, maxit=600,
+                            clock=VirtualClock(),
+                            admission=AdmissionPolicy(max_pending=8 * args.s),
+                            max_replicas=2, replicate_watermark=1.0,
+                            continuous=continuous)
+        svc.register_operator("bench", op)
+        return svc, replay(svc, trace, iter_time_s=1e-4,
+                           tick_overhead_s=1e-4)
+
+    svc_c, rep_c = run(continuous=True)
+    _svc_d, rep_d = run(continuous=False)
+    assert rep_c.n_converged == rep_c.n_retired, "replay solves must converge"
+
+    # HLO invariant, tracer-asserted on the compiled slab schedule: ONE
+    # reduction handle per iteration carrying the whole (2l+1, s)
+    # payload — the amortization the whole serving layer exists for.
+    Bspec = jax.ShapeDtypeStruct((op.n, args.s), jnp.float64)
+    hlo = batched_plcg_overlap_report(
+        be, op, Bspec, l=args.l, window=args.l + 3,
+        sigmas=shifts_for_operator(op, args.l))
+    starts_max = max(hlo.starts_per_window.values())
+
+    metrics = rep_c.metrics()
+    metrics["replay_slot_utilization_drain"] = rep_d.slot_utilization
+    metrics["replay_reduction_starts_per_iter_max"] = starts_max
+    st = svc_c.stats()
+    metrics["replay_workers"] = st["workers"]
+    metrics["replay_stolen"] = st["stolen"]
+    print(f"replay     : {rep_c.n_arrivals} arrivals @ "
+          f"{rep_c.offered_per_s:.0f}/s (virtual), goodput "
+          f"{rep_c.goodput_per_s:.1f}/s, p50 {rep_c.latency_p50_s * 1e3:.1f} "
+          f"ms / p99 {rep_c.latency_p99_s * 1e3:.1f} ms, shed "
+          f"{rep_c.n_shed}, rejected {rep_c.n_rejected}")
+    print(f"             slot-utilization {rep_c.slot_utilization:.3f} "
+          f"continuous vs {rep_d.slot_utilization:.3f} drain-to-empty; "
+          f"{st['workers']} workers, {st['stolen']} steals; "
+          f"reduction starts/iter (HLO max) = {starts_max}")
+    return metrics
 
 
 def main():
@@ -55,6 +125,13 @@ def main():
     ap.add_argument("--ny", type=int, default=24)
     ap.add_argument("--maxit", type=int, default=120)
     ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--replay-requests", type=int, default=128)
+    # ~2x the sustainable service rate: the open-loop trace keeps a
+    # standing backlog (slot-utilization >= 0.8) and exercises the
+    # admission ceiling, while deadlines stay comfortably met.
+    ap.add_argument("--replay-rate", type=float, default=1600.0,
+                    help="open-loop arrival rate (virtual req/s)")
+    ap.add_argument("--replay-seed", type=int, default=0)
     ap.add_argument("--out", type=str, default="BENCH_serve.json")
     args = ap.parse_args()
 
@@ -124,6 +201,7 @@ def main():
         "latency_p50_s": st["latency_p50_s"],
         "latency_p99_s": st["latency_p99_s"],
     }
+    payload.update(replay_section(be, op, args))
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)
         f.write("\n")

@@ -181,10 +181,50 @@ def selftest() -> int:
                             "hops_per_window_min": 3},
                  red_gates, verbose=False) == 1, \
         "a thinned hop window must fail the floor gate"
+    # Open-loop replay gates (ISSUE 6, BENCH_serve.json; DESIGN.md §15).
+    # Every replay_* metric is virtual-clock arithmetic — bitwise
+    # deterministic across machines — so the budgets are tight: goodput
+    # floor, p99 ceiling, slot-utilization floor, and the HLO
+    # reduction-starts ceiling (a SECOND reduction handle per iteration
+    # sneaking into the slab schedule fails at +0 tolerance).
+    rp_base = {"replay_goodput_per_s": 100.0, "replay_p99_s": 0.050,
+               "replay_slot_utilization": 0.85,
+               "replay_reduction_starts_per_iter_max": 1}
+    rp_gates = [("replay_goodput_per_s", 0.10, True),
+                ("replay_p99_s", 0.10, False),
+                ("replay_slot_utilization", 0.05, True),
+                ("replay_reduction_starts_per_iter_max", 0.0, False)]
+    assert check(rp_base, dict(rp_base), rp_gates, verbose=False) == 0, \
+        "identical replay metrics must pass every replay gate"
+    assert check(rp_base, dict(rp_base, replay_goodput_per_s=85.0),
+                 rp_gates, verbose=False) == 1, \
+        "a 15% goodput drop must fail the 10% floor"
+    assert check(rp_base, dict(rp_base, replay_p99_s=0.060),
+                 rp_gates, verbose=False) == 1, \
+        "a 20% p99 blowup must fail the 10% ceiling"
+    assert check(rp_base, dict(rp_base, replay_slot_utilization=0.79),
+                 rp_gates, verbose=False) == 1, \
+        "a slot-utilization slump must fail the 5% floor"
+    assert check(rp_base,
+                 dict(rp_base, replay_reduction_starts_per_iter_max=2),
+                 rp_gates, verbose=False) == 1, \
+        "a second reduction handle per iteration must fail at +0"
+    # ... and the structural ratio: drain-to-empty serving must stay
+    # strictly worse than continuous injection on the same trace.
+    rru = [("replay_slot_utilization_drain", "replay_slot_utilization",
+            0.95)]
+    assert check_ratios({"replay_slot_utilization_drain": 0.60,
+                         "replay_slot_utilization": 0.90},
+                        rru, verbose=False) == 0
+    assert check_ratios({"replay_slot_utilization_drain": 0.88,
+                         "replay_slot_utilization": 0.90},
+                        rru, verbose=False) == 1, \
+        "drain utilization within 95% of continuous must fail"
     print("check_bench: selftest OK — injected >20% regression, a >0.6x "
           "fused/unfused bytes ratio, a >0.55x fp32 hop payload, a "
-          "staged all-reduce, and a thinned hop window all trip their "
-          "gates")
+          "staged all-reduce, a thinned hop window, and every replay "
+          "gate (goodput floor, p99 ceiling, utilization floor, "
+          "reduction-starts ceiling, drain/continuous ratio) all trip")
     return 0
 
 

@@ -68,6 +68,7 @@ from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import classic_cg, ghysels_pcg, pipelined_cg
 from repro.core.types import SolveResult, SolverOps
@@ -277,6 +278,46 @@ def solve_batched(ops: SolverOps, B: jax.Array, method: str = "plcg",
         return p.finish(jax.lax.while_loop(p.cond, outer, st))
 
     return jax.vmap(col, in_axes=1)(B)
+
+
+# --------------------------------------------------------------------------
+# Multi-slab step hooks (DESIGN.md §15).  The continuous-batching
+# scheduler (repro.serve.scheduler) runs SEVERAL slabs per tick; these
+# helpers keep the cross-slab concerns — dispatch overlap and
+# slot-utilization accounting — next to the slab machinery they measure.
+# --------------------------------------------------------------------------
+
+def dispatch_slab_chunks(slabs) -> list:
+    """Issue the chunk computation of EVERY slab before synchronizing on
+    any of them.
+
+    ``slabs`` yields ``(program, B_dev, state)`` triples; returns the new
+    states in order.  jax dispatch is asynchronous, so enqueueing all
+    chunks back-to-back lets XLA overlap independent slabs on the device
+    stream — the scheduler ticks in three phases (pack all / chunk all /
+    poll all) precisely so no slab's host-side status read serializes its
+    neighbours' device work.  Each slab still reduces its own dot block
+    as ONE (K, s) handle per iteration; running slabs concurrently
+    multiplies slabs, never handles per slab (asserted on compiled HLO in
+    tests/test_serve_replay.py).
+    """
+    return [prog.chunk(B, st) for prog, B, st in slabs]
+
+
+def slab_slot_iterations(iters_before, iters_after) -> int:
+    """Occupied-slot-iterations advanced between two status polls.
+
+    ``SlabStatus.iters`` counts solution updates per column, so the
+    element-wise delta across a chunk is exactly the number of
+    iterations each slot spent doing useful work: free/zero-padded slots
+    and bitwise-frozen converged columns contribute 0.  Summed against a
+    capacity of ``s * chunk_iters`` per chunk this yields the slab
+    slot-utilization metric the continuous-batching scheduler reports
+    (occupied-slot-iterations / total slot-iterations) — the quantity
+    that decays as a slab drains and that mid-flight injection keeps
+    high (gated in BENCH_serve.json).
+    """
+    return int(np.sum(np.asarray(iters_after) - np.asarray(iters_before)))
 
 
 class SlabProgram(NamedTuple):

@@ -1,36 +1,66 @@
-"""repro.serve — batched multi-RHS solver service (DESIGN.md §11).
+"""repro.serve — continuous-batching multi-RHS solver service
+(DESIGN.md §11/§15).
 
-The serving layer over the batched CG family: a request queue + dynamic
-batcher packs (operator, b, tol) traffic into fixed-width slabs, the
-backend-compiled slab program steps them with ONE amortized (K, s) global
-reduction per iteration, masked retirement frees converged columns for
-queued work without recompiling, and a fingerprint-keyed setup cache
-makes repeat operators skip their block-Jacobi / shift setup.
+The serving layer over the batched CG family: a request queue +
+admission layer buckets (operator, b, tol, deadline) traffic, a
+multi-slab work-stealing scheduler packs it into fixed-width slabs —
+refilling retired slots at every chunk boundary so utilization stays
+high mid-flight — each slab steps with ONE amortized (K, s) global
+reduction per iteration, deadline-expired work is shed before it wastes
+a slot, and a fingerprint-keyed setup cache makes repeat operators skip
+their block-Jacobi / shift setup.  Every timestamp flows through an
+injectable clock, so the whole scheduler is deterministic under the
+open-loop traffic-replay harness (``repro.serve.replay``).
 
     from repro.parallel import get_backend
-    from repro.serve import SolverService
+    from repro.serve import AdmissionPolicy, SolverService
 
     svc = SolverService(get_backend("shard_map", n_shards=8),
                         s=8, method="plcg", l=2, prec="block_jacobi",
-                        block_size=32)
+                        block_size=32, max_replicas=2,
+                        admission=AdmissionPolicy(max_pending=256))
     svc.register_operator("poisson", op)
-    rid = svc.submit("poisson", b, tol=1e-8)
+    rid = svc.submit("poisson", b, tol=1e-8, deadline_s=2.0)
     results = svc.drain()
     print(results[rid].iters, svc.stats())
 
 See ``examples/serve_solver.py`` (quickstart) and
-``benchmarks/serve_bench.py`` (throughput / latency percentiles).
+``benchmarks/serve_bench.py`` (throughput / latency percentiles / the
+open-loop replay section).
 """
 
-from repro.serve.batcher import RequestQueue, SolveRequest
+from repro.serve.batcher import AdmissionPolicy, RequestQueue, SolveRequest
 from repro.serve.cache import SetupCache, operator_fingerprint
+from repro.serve.clock import Clock, SystemClock, VirtualClock
+from repro.serve.errors import (AdmissionRejected, BadRequestError,
+                                ConfigError, ServeError,
+                                UnknownOperatorError)
+from repro.serve.replay import (Arrival, ReplayReport, TrafficClass,
+                                poisson_trace, replay)
+from repro.serve.scheduler import SlabScheduler, SlabWorker
 from repro.serve.service import RequestResult, SolverService
 
 __all__ = [
+    "AdmissionPolicy",
+    "AdmissionRejected",
+    "Arrival",
+    "BadRequestError",
+    "Clock",
+    "ConfigError",
+    "ReplayReport",
     "RequestQueue",
-    "SolveRequest",
-    "SetupCache",
-    "operator_fingerprint",
     "RequestResult",
+    "ServeError",
+    "SetupCache",
+    "SlabScheduler",
+    "SlabWorker",
+    "SolveRequest",
     "SolverService",
+    "SystemClock",
+    "TrafficClass",
+    "UnknownOperatorError",
+    "VirtualClock",
+    "operator_fingerprint",
+    "poisson_trace",
+    "replay",
 ]

@@ -1,4 +1,4 @@
-"""Request queue + dynamic batcher for the solver service (DESIGN.md §11).
+"""Request queue + dynamic batcher for the solver service (DESIGN.md §11/§15).
 
 Incoming ``(operator key, b, tol)`` requests are bucketed by *slab key*
 ``(op_key, tol)`` — every request in a slab shares the compiled solver
@@ -9,6 +9,16 @@ queued right now, partial slabs run with zero-padded columns (a zero RHS
 has ``norm0 == 0`` and retires at iteration 0 — exact, not approximate),
 and slots freed by retirement are re-packed from the queue between
 chunks.
+
+Since DESIGN.md §15 the batcher is also the *admission* layer: requests
+carry an optional ``deadline_s`` SLO, timestamps come from an injectable
+clock (``repro.serve.clock``), and :class:`AdmissionPolicy` decides at
+submit time whether a request is accepted (queue-depth ceiling,
+deadline feasibility) — overload is refused at the door instead of
+silently inflating every queued request's latency.  Requests that were
+admitted but whose deadline expires while they wait are *shed* by the
+scheduler at pack time (``SolveRequest.expired``): work that can no
+longer meet its SLO never occupies a slab slot.
 """
 
 from __future__ import annotations
@@ -25,17 +35,64 @@ SlabKey = tuple[Hashable, float]       # (op_key, tol)
 
 @dataclasses.dataclass
 class SolveRequest:
-    """One queued solve: right-hand side ``b`` against operator ``op_key``."""
+    """One queued solve: right-hand side ``b`` against operator ``op_key``.
+
+    ``submitted_at`` is in the submitting clock's timeframe (virtual
+    seconds under a ``VirtualClock``); ``deadline_s`` is the SLO budget
+    *relative to submission* — the request should retire by
+    ``submitted_at + deadline_s`` (None: no deadline).
+    """
 
     req_id: int
     op_key: Hashable
     b: np.ndarray
     tol: float
     submitted_at: float = dataclasses.field(default_factory=time.perf_counter)
+    deadline_s: float | None = None
 
     @property
     def slab_key(self) -> SlabKey:
         return (self.op_key, self.tol)
+
+    def expired(self, now: float) -> bool:
+        """Deadline already blown at time ``now`` (shed candidates)."""
+        return (self.deadline_s is not None
+                and now - self.submitted_at > self.deadline_s)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionPolicy:
+    """SLO-aware admission control (DESIGN.md §15).
+
+    ``max_pending``:    reject new work once this many requests are
+                        queued or in flight (None: unbounded — the
+                        pre-§15 behavior).  Bounding the queue bounds
+                        worst-case latency: under open-loop overload an
+                        unbounded queue grows without limit and EVERY
+                        request misses its SLO; rejecting early keeps
+                        the served fraction fast (goodput over
+                        throughput).
+    ``min_deadline_s``: reject deadlines at or below this floor — a
+                        deadline the service cannot possibly meet is
+                        refused immediately rather than accepted and
+                        shed later.
+    ``shed_expired``:   scheduler-side load shedding: drop queued
+                        requests whose deadline already passed instead
+                        of packing them into slab slots.
+    """
+
+    max_pending: int | None = None
+    min_deadline_s: float = 0.0
+    shed_expired: bool = True
+
+    def check(self, pending: int, deadline_s: float | None) -> str | None:
+        """Admission verdict: None to accept, else the rejection reason
+        (``"queue_full"`` / ``"deadline_infeasible"``)."""
+        if self.max_pending is not None and pending >= self.max_pending:
+            return "queue_full"
+        if deadline_s is not None and deadline_s <= self.min_deadline_s:
+            return "deadline_infeasible"
+        return None
 
 
 class RequestQueue:
@@ -52,10 +109,17 @@ class RequestQueue:
             OrderedDict()
         self._next_id = 0
 
-    def submit(self, op_key: Hashable, b: np.ndarray,
-               tol: float) -> SolveRequest:
+    def submit(self, op_key: Hashable, b: np.ndarray, tol: float,
+               deadline_s: float | None = None,
+               now: float | None = None) -> SolveRequest:
+        """Enqueue a request.  ``now`` is the submitting clock's
+        timestamp (defaults to the system clock for standalone use —
+        the service always passes its own clock's reading)."""
         req = SolveRequest(req_id=self._next_id, op_key=op_key,
-                           b=np.asarray(b), tol=float(tol))
+                           b=np.asarray(b), tol=float(tol),
+                           deadline_s=deadline_s)
+        if now is not None:
+            req.submitted_at = float(now)
         self._next_id += 1
         self._buckets.setdefault(req.slab_key, deque()).append(req)
         return req

@@ -1,0 +1,57 @@
+"""Typed error hierarchy for the serving layer (DESIGN.md §15).
+
+The service originally validated requests with ``assert`` — which
+vanishes under ``python -O``, turning a malformed request into a shape
+error (or silent corruption) deep inside a compiled slab.  Every
+client-visible failure is now a :class:`ServeError` subclass raised at
+the service boundary, so callers can distinguish "your request is
+wrong" (:class:`BadRequestError`, :class:`UnknownOperatorError`), "the
+service is misconfigured" (:class:`ConfigError`) and "the service is
+protecting itself" (:class:`AdmissionRejected` — SLO-aware admission
+control / load shedding, the open-loop overload story).
+
+``BadRequestError``/``ConfigError`` double as ``ValueError`` and
+``UnknownOperatorError`` as ``KeyError`` so pre-existing callers that
+caught the builtin types keep working.
+"""
+
+from __future__ import annotations
+
+
+class ServeError(Exception):
+    """Base class for every serving-layer failure."""
+
+
+class UnknownOperatorError(ServeError, KeyError):
+    """Request names an operator key that was never registered."""
+
+    def __init__(self, op_key):
+        super().__init__(f"operator {op_key!r} not registered")
+        self.op_key = op_key
+
+    def __str__(self) -> str:          # KeyError quotes its arg; don't
+        return self.args[0]
+
+
+class BadRequestError(ServeError, ValueError):
+    """Malformed solve request: wrong RHS shape, non-finite entries,
+    nonsensical tolerance or deadline."""
+
+
+class ConfigError(ServeError, ValueError):
+    """Service/operator registration misconfiguration (unknown
+    preconditioner kind, missing block size, bad scheduler knobs)."""
+
+
+class AdmissionRejected(ServeError):
+    """Request refused by the admission policy (queue depth above the
+    configured ceiling, or a deadline that cannot be met).
+
+    ``reason`` is machine-readable: ``"queue_full"`` or
+    ``"deadline_infeasible"``.
+    """
+
+    def __init__(self, reason: str, detail: str = ""):
+        super().__init__(f"admission rejected ({reason})"
+                         + (f": {detail}" if detail else ""))
+        self.reason = reason

@@ -1,72 +1,82 @@
-"""Solver-as-a-service: slab scheduler over the batched CG family
-(DESIGN.md §11).
+"""Solver-as-a-service: continuous-batching serve over the batched CG
+family (DESIGN.md §11/§15).
 
 ``SolverService`` is the single-threaded, deterministic serving loop the
-ROADMAP's "heavy traffic" north star asks for, built on three pieces:
+ROADMAP's "heavy traffic" north star asks for, built on four pieces:
 
-* the **request queue / dynamic batcher** (``repro.serve.batcher``) packs
-  incoming (op_key, b, tol) requests into fixed-width (n, s) slabs;
-* the backend-compiled **slab program** (``make_slab_program``) steps a
-  slab ``chunk_iters`` iterations at a time, amortizing the per-iteration
-  global reduction over all s columns — one (K, s) allreduce per
-  iteration however many requests are in flight;
+* the **request queue / admission layer** (``repro.serve.batcher``)
+  buckets incoming (op_key, b, tol, deadline) requests and applies the
+  :class:`AdmissionPolicy` (queue-depth ceiling, deadline feasibility)
+  at the door;
+* the **multi-slab scheduler** (``repro.serve.scheduler``) runs a pool
+  of slab workers — per slab key, plus replicated workers for hot keys —
+  with work stealing, continuous slot injection at every chunk boundary,
+  and deadline-based load shedding;
+* the backend-compiled **slab program** (``make_slab_program``) steps
+  each slab ``chunk_iters`` iterations at a time, amortizing the
+  per-iteration global reduction over all s columns — one (K, s)
+  allreduce per iteration per slab however many requests are in flight
+  (arXiv:1905.06850's amortized-reduction win);
 * the **setup cache** (``repro.serve.cache``) makes repeat traffic
   against a known operator skip the block-Jacobi factorization and
   Chebyshev shift estimation.
 
-Lifecycle per scheduler tick (``step``): pack free slots from the queue
-(``inject`` re-initializes exactly those columns), run one chunk, then
-retire every occupied column whose loop has stopped — converged or
-iteration-capped — recording its result and latency and freeing the slot.
-Converged-but-not-yet-retired columns are bitwise frozen by the while-loop
-batching rule (``repro.core.batched``), so a retired iterate is unaffected
-by however long its slab-mates keep running.  All device computations have
+All timestamps — request submission, retirement latency, deadline
+checks — come from an injectable clock (``repro.serve.clock``): under a
+:class:`VirtualClock` the whole service is bit-for-bit deterministic,
+which is what the open-loop traffic replay harness
+(``repro.serve.replay``) and tests/test_serve_replay.py rely on.
+
+Lifecycle per scheduler tick (``step``): route queued requests to
+workers, pack free slots (``inject`` re-initializes exactly those
+columns, uploading only the changed ones), run one chunk on every busy
+slab (dispatched back-to-back so slabs overlap), then retire every
+occupied column whose loop has stopped — converged or iteration-capped —
+recording its result and latency and freeing the slot.  Converged-but-
+not-yet-retired columns are bitwise frozen by the while-loop batching
+rule (``repro.core.batched``), so a retired iterate is unaffected by
+however long its slab-mates keep running.  All device computations have
 fixed (n, s) shapes: the request mix never forces a recompile.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import time
 from collections import deque
 from typing import Any, Hashable
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.batched import SlabProgram
-from repro.serve.batcher import RequestQueue, SlabKey, SolveRequest
+from repro.serve.batcher import (AdmissionPolicy, RequestQueue, SlabKey,
+                                 SolveRequest)
 from repro.serve.cache import SetupCache
+from repro.serve.clock import Clock, SystemClock
+from repro.serve.errors import (AdmissionRejected, BadRequestError,
+                                ConfigError, UnknownOperatorError)
+from repro.serve.scheduler import SlabScheduler
 
 
 @dataclasses.dataclass
 class RequestResult:
-    """Retired solve: solution + per-request telemetry."""
+    """Retired solve: solution + per-request telemetry.
+
+    ``shed`` results carry ``x=None`` — the request was dropped
+    unstarted because its deadline expired in queue (load shedding);
+    ``slo_met`` is converged-within-deadline (requests without a
+    deadline count as met when converged), the numerator of goodput.
+    """
 
     req_id: int
     op_key: Hashable
-    x: np.ndarray
+    x: np.ndarray | None
     iters: int
     converged: bool
     res_history: np.ndarray        # recorded residual norms (trimmed)
-    latency_s: float               # submit -> retirement wall clock
-
-
-@dataclasses.dataclass
-class _Slab:
-    """Runtime state of one compiled slab (one slab key)."""
-
-    program: SlabProgram
-    B: np.ndarray                          # (n, s) host-side RHS columns
-    slots: list[SolveRequest | None]       # len s; None = free
-    state: Any = None                      # device slab state (after init)
-    B_dev: Any = None
-
-    def free_slots(self) -> list[int]:
-        return [j for j, r in enumerate(self.slots) if r is None]
-
-    def occupied(self) -> list[int]:
-        return [j for j, r in enumerate(self.slots) if r is not None]
+    latency_s: float               # submit -> retirement (service clock)
+    worker: int = 0                # slab worker that ran it
+    deadline_s: float | None = None
+    shed: bool = False
+    slo_met: bool = True
 
 
 @dataclasses.dataclass
@@ -93,12 +103,31 @@ class SolverService:
                   built through the fingerprint cache.
     block_size:   block-Jacobi block size (default: one grid line /
                   shard-interior heuristic left to the caller).
+    clock:        time source (default :class:`SystemClock`); inject a
+                  :class:`~repro.serve.clock.VirtualClock` for
+                  deterministic scheduling/latency accounting.
+    admission:    :class:`AdmissionPolicy` (default: admit everything —
+                  the pre-§15 behavior).
+    max_replicas: slab workers allowed per slab key (>1 enables hot-key
+                  scale-out; replicas share the compiled program).
+    replicate_watermark:  spawn a replica when every existing worker's
+                  backlog is >= watermark * s.
+    steal:        idle workers steal queued requests from same-key
+                  siblings (deterministic; logged).
+    continuous:   refill freed slots at every chunk boundary.  False =
+                  drain-to-empty baseline (slots recycle only once a
+                  slab is fully empty) — kept for the utilization
+                  comparison in BENCH_serve.json.
     """
 
     def __init__(self, backend, s: int = 8, method: str = "plcg",
                  l: int = 2, chunk_iters: int = 16, maxit: int = 500,
                  prec: str | None = None, block_size: int | None = None,
-                 replace_every: int = 0, cache: SetupCache | None = None):
+                 replace_every: int = 0, cache: SetupCache | None = None,
+                 clock: Clock | None = None,
+                 admission: AdmissionPolicy | None = None,
+                 max_replicas: int = 1, replicate_watermark: float = 1.0,
+                 steal: bool = True, continuous: bool = True):
         self.backend = backend
         self.s = int(s)
         self.method = method
@@ -109,32 +138,49 @@ class SolverService:
         self.block_size = block_size
         self.replace_every = int(replace_every)
         self.cache = SetupCache() if cache is None else cache
+        self.clock = SystemClock() if clock is None else clock
+        self.admission = AdmissionPolicy() if admission is None else admission
 
         self.queue = RequestQueue()
+        self.scheduler = SlabScheduler(
+            self._make_program, max_replicas=max_replicas,
+            replicate_watermark=replicate_watermark, steal=steal,
+            continuous=continuous,
+            shed_expired=self.admission.shed_expired)
         # Retired results are held until the caller collects them
         # (``pop_result`` / ``drain``); latency percentiles come from a
         # bounded reservoir so long-lived services don't grow stats state.
         self.results: dict[int, RequestResult] = {}
         self._latencies: deque[float] = deque(maxlen=4096)
         self._operators: dict[Hashable, OperatorEntry] = {}
-        self._slabs: dict[SlabKey, _Slab] = {}
-        self.chunks_run = 0
+        # Retirement log: (req_id, worker, tick, t) in retirement order —
+        # the determinism witness the replay tests compare bitwise.
+        self.retirement_log: list[tuple[int, int, int, float]] = []
         self.retired = 0
+        self.rejected = 0
+        self.shed = 0
+        self.slo_met = 0
 
     # -------------------------------------------------------- registry ---
     def register_operator(self, key: Hashable, op,
                           block_size: int | None = None) -> None:
         """One-time (cached) setup for an operator clients will solve
         against: preconditioner factorization + Chebyshev shifts."""
+        if not hasattr(op, "n") or not hasattr(op, "apply"):
+            raise ConfigError(
+                f"operator for {key!r} must expose .n and .apply "
+                f"(got {type(op).__name__})")
         prec = None
         if self.prec_kind == "jacobi":
             prec = self.cache.jacobi(op)
         elif self.prec_kind == "block_jacobi":
             bs = block_size or self.block_size
-            assert bs, "block_jacobi needs a block_size"
+            if not bs:
+                raise ConfigError("block_jacobi needs a block_size "
+                                  "(service or register_operator kwarg)")
             prec = self.cache.block_jacobi(op, bs)
         elif self.prec_kind is not None:
-            raise ValueError(f"unknown prec kind {self.prec_kind!r}")
+            raise ConfigError(f"unknown prec kind {self.prec_kind!r}")
         kw: dict = {"maxit": self.maxit}
         if self.method == "plcg":
             kw.update(l=self.l,
@@ -147,106 +193,112 @@ class SolverService:
         self._operators[key] = OperatorEntry(op=op, prec=prec,
                                              solver_kwargs=kw)
 
+    def _make_program(self, key: SlabKey):
+        """Compile the slab program for one slab key (scheduler callback;
+        replicas share the result)."""
+        op_key, tol = key
+        entry = self._operators[op_key]
+        return self.backend.make_slab_program(
+            entry.op, s=self.s, method=self.method, prec=entry.prec,
+            chunk_iters=self.chunk_iters, tol=tol, **entry.solver_kwargs)
+
     # --------------------------------------------------------- clients ---
-    def submit(self, op_key: Hashable, b, tol: float = 1e-8) -> int:
-        """Enqueue a solve; returns the request id (see ``results``)."""
+    @property
+    def pending(self) -> int:
+        """Admitted-but-unfinished request count (queue + worker queues +
+        in-flight slots) — the admission policy's queue-depth metric."""
+        return (len(self.queue) + self.scheduler.backlog()
+                + self.scheduler.in_flight())
+
+    def submit(self, op_key: Hashable, b, tol: float = 1e-8,
+               deadline_s: float | None = None) -> int:
+        """Enqueue a solve; returns the request id (see ``results``).
+
+        Raises :class:`UnknownOperatorError` / :class:`BadRequestError`
+        on malformed requests and :class:`AdmissionRejected` when the
+        admission policy refuses the work (queue full, hopeless
+        deadline).
+        """
         entry = self._operators.get(op_key)
-        assert entry is not None, f"operator {op_key!r} not registered"
+        if entry is None:
+            raise UnknownOperatorError(op_key)
         b = np.asarray(b)
-        assert b.shape == (entry.op.n,), (b.shape, entry.op.n)
-        return self.queue.submit(op_key, b, tol).req_id
+        if b.shape != (entry.op.n,):
+            raise BadRequestError(
+                f"RHS shape {b.shape} != ({entry.op.n},) for {op_key!r}")
+        if not np.issubdtype(b.dtype, np.floating):
+            raise BadRequestError(f"RHS dtype {b.dtype} is not floating")
+        if not np.isfinite(b).all():
+            raise BadRequestError("RHS contains non-finite entries")
+        tol = float(tol)
+        if not (tol >= 0.0):            # NaN fails this too
+            raise BadRequestError(f"tol must be >= 0 (got {tol})")
+        if deadline_s is not None:
+            deadline_s = float(deadline_s)
+            if not np.isfinite(deadline_s):
+                raise BadRequestError(f"deadline_s must be finite "
+                                      f"(got {deadline_s})")
+        reason = self.admission.check(self.pending, deadline_s)
+        if reason is not None:
+            self.rejected += 1
+            raise AdmissionRejected(reason, f"pending={self.pending}")
+        return self.queue.submit(op_key, b, tol, deadline_s=deadline_s,
+                                 now=self.clock.now()).req_id
 
     # ------------------------------------------------------- scheduler ---
-    def _slab_for(self, key: SlabKey) -> _Slab:
-        slab = self._slabs.get(key)
-        if slab is None:
-            op_key, tol = key
-            entry = self._operators[op_key]
-            program = self.backend.make_slab_program(
-                entry.op, s=self.s, method=self.method, prec=entry.prec,
-                chunk_iters=self.chunk_iters, tol=tol,
-                **entry.solver_kwargs)
-            B = np.zeros((entry.op.n, self.s))
-            slab = _Slab(program=program, B=B, slots=[None] * self.s)
-            self._slabs[key] = slab
-        return slab
+    def _dispatch_queue(self) -> None:
+        """Route every queued request to a slab worker (insertion-fair
+        over keys; FIFO within a key)."""
+        for key in self.queue.keys():
+            for req in self.queue.take(key, self.queue.pending(key)):
+                self.scheduler.dispatch(req)
 
-    def _pack(self, key: SlabKey, slab: _Slab) -> None:
-        free = slab.free_slots()
-        incoming = self.queue.take(key, len(free))
-        if not incoming and slab.state is not None:
-            return
-        refresh = np.zeros((self.s,), dtype=bool)
-        for j, req in zip(free, incoming):
-            slab.B[:, j] = req.b
-            slab.slots[j] = req
-            refresh[j] = True
-        slab.B_dev = jnp.asarray(slab.B)
-        if slab.state is None:
-            # First pack: init the whole slab (zero columns retire at 0).
-            slab.state = slab.program.init(slab.B_dev)
-        elif refresh.any():
-            slab.state = slab.program.inject(slab.B_dev, slab.state,
-                                             jnp.asarray(refresh))
-
-    def _retire(self, key: SlabKey, slab: _Slab) -> list[RequestResult]:
-        stat = slab.program.status(slab.B_dev, slab.state)
-        running = np.asarray(stat.running)
-        done = [j for j in slab.occupied() if not running[j]]
-        if not done:
-            return []
-        res = slab.program.extract(slab.B_dev, slab.state)
-        x = np.asarray(res.x)
-        iters = np.asarray(res.iters)
-        conv = np.asarray(res.converged)
-        hist = np.asarray(res.res_history)
-        now = time.perf_counter()
-        out = []
-        for j in done:
-            req = slab.slots[j]
-            h = hist[j]
-            rr = RequestResult(
-                req_id=req.req_id, op_key=req.op_key, x=x[j],
-                iters=int(iters[j]), converged=bool(conv[j]),
-                res_history=h[h >= 0], latency_s=now - req.submitted_at,
-            )
-            self.results[req.req_id] = rr
-            self._latencies.append(rr.latency_s)
-            slab.slots[j] = None
+    def _record(self, req: SolveRequest, *, worker: int, x, iters: int,
+                converged: bool, res_history, shed: bool,
+                now: float) -> RequestResult:
+        latency = now - req.submitted_at
+        met = (not shed and converged
+               and (req.deadline_s is None or latency <= req.deadline_s))
+        rr = RequestResult(
+            req_id=req.req_id, op_key=req.op_key, x=x, iters=iters,
+            converged=converged, res_history=res_history,
+            latency_s=latency, worker=worker, deadline_s=req.deadline_s,
+            shed=shed, slo_met=met)
+        self.results[req.req_id] = rr
+        if shed:
+            self.shed += 1
+        else:
+            self._latencies.append(latency)
             self.retired += 1
-            out.append(rr)
-        return out
-
-    def pop_result(self, req_id: int) -> RequestResult:
-        """Collect (and release) a retired result — the steady-state
-        client path: results held in the service are freed on collection
-        so sustained traffic doesn't accumulate solution vectors."""
-        return self.results.pop(req_id)
+            self.retirement_log.append(
+                (req.req_id, worker, self.scheduler.ticks, now))
+        if met:
+            self.slo_met += 1
+        return rr
 
     def step(self) -> list[RequestResult]:
-        """One scheduler tick over every slab with work: pack free slots,
-        run one chunk, retire finished columns.  Returns the requests
-        retired this tick."""
-        retired: list[RequestResult] = []
-        # Deterministic scheduling order: existing slabs in creation
-        # order, then new slab keys in queue-insertion order.
-        keys = list(self._slabs)
-        keys += [k for k in self.queue.keys() if k not in self._slabs]
-        for key in keys:
-            slab = self._slab_for(key)
-            self._pack(key, slab)
-            if not slab.occupied():
-                continue
-            slab.state = slab.program.chunk(slab.B_dev, slab.state)
-            self.chunks_run += 1
-            retired.extend(self._retire(key, slab))
-        return retired
+        """One scheduler tick over every slab with work: dispatch, pack
+        free slots, chunk all busy slabs, retire finished columns.
+        Returns the requests retired (or shed) this tick."""
+        self._dispatch_queue()
+        report = self.scheduler.tick(self.clock.now())
+        now = self.clock.now()
+        out = []
+        for rc in report.retired:
+            out.append(self._record(
+                rc.req, worker=rc.worker, x=rc.x, iters=rc.iters,
+                converged=rc.converged, res_history=rc.res_history,
+                shed=False, now=now))
+        for req in report.shed:
+            out.append(self._record(
+                req, worker=-1, x=None, iters=0, converged=False,
+                res_history=np.empty(0), shed=True, now=now))
+        return out
 
     def drain(self, max_ticks: int = 10_000) -> dict[int, RequestResult]:
         """Run the scheduler until queue and slabs are empty."""
         for _ in range(max_ticks):
-            if len(self.queue) == 0 and not any(
-                    s.occupied() for s in self._slabs.values()):
+            if self.pending == 0:
                 break
             self.step()
         else:
@@ -254,13 +306,32 @@ class SolverService:
                                "(requests not converging?)")
         return self.results
 
+    def pop_result(self, req_id: int) -> RequestResult:
+        """Collect (and release) a retired result — the steady-state
+        client path: results held in the service are freed on collection
+        so sustained traffic doesn't accumulate solution vectors."""
+        return self.results.pop(req_id)
+
     # ------------------------------------------------------- telemetry ---
+    @property
+    def chunks_run(self) -> int:
+        return self.scheduler.chunks_run
+
     def reset_stats(self) -> None:
         """Zero the latency reservoir and counters (e.g. after a compile
         warmup, so percentiles reflect steady-state traffic only)."""
         self._latencies.clear()
-        self.chunks_run = 0
+        self.retirement_log.clear()
+        self.scheduler.chunks_run = 0
+        self.scheduler.steal_log.clear()
+        self.scheduler.shed_log.clear()
+        for w in self.scheduler.workers:
+            w.occupied_slot_iters = 0
+            w.capacity_slot_iters = 0
         self.retired = 0
+        self.rejected = 0
+        self.shed = 0
+        self.slo_met = 0
 
     def stats(self) -> dict:
         lats = sorted(self._latencies)
@@ -270,11 +341,20 @@ class SolverService:
                 return 0.0
             return lats[min(int(p / 100 * len(lats)), len(lats) - 1)]
 
+        sched = self.scheduler
         return {
             "retired": self.retired,
-            "pending": len(self.queue),
-            "chunks_run": self.chunks_run,
-            "slabs": len(self._slabs),
+            "pending": self.pending,
+            "chunks_run": sched.chunks_run,
+            "slabs": len(sched._programs),
+            "workers": len(sched.workers),
+            "rejected": self.rejected,
+            "shed": self.shed,
+            "slo_met": self.slo_met,
+            "stolen": len(sched.steal_log),
+            "slot_utilization": sched.slot_utilization(),
+            "uploaded_cols": sum(w.uploaded_cols for w in sched.workers),
+            "full_uploads": sum(w.full_uploads for w in sched.workers),
             "latency_p50_s": pct(50),
             "latency_p99_s": pct(99),
             "setup_cache": self.cache.stats(),

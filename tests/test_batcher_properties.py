@@ -1,0 +1,155 @@
+"""Hypothesis property tests for the batcher/queue layer (DESIGN.md §15).
+
+The request queue is the admission boundary of the serving layer; its
+invariants — FIFO per slab key, globally monotone request ids, ``take``
+never over-popping, insertion-order key fairness — are what make the
+multi-slab scheduler deterministic, so they get property coverage here
+rather than example coverage in test_serve.py.  The zero-padded
+partial-slab property (a padding column retires at iteration 0, exactly)
+is checked through a real slab program at the bottom.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed "
+                    "(pip install -e .[test])")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.chebyshev import shifts_for_operator
+from repro.linalg import operators as ops_mod
+from repro.parallel import get_backend
+from repro.serve import AdmissionPolicy, RequestQueue, SolveRequest
+
+SET = dict(max_examples=50, deadline=None)
+
+# A submission script: sequence of (key_index, tol_index) pairs over a
+# small alphabet of op keys and tolerances — enough to exercise multiple
+# slab keys with interleaved traffic.
+SUBMITS = st.lists(st.tuples(st.integers(0, 3), st.integers(0, 2)),
+                   min_size=0, max_size=40)
+KEYS = ["opA", "opB", "opC", "opD"]
+TOLS = [1e-6, 1e-8, 1e-10]
+
+
+def _fill(script):
+    q = RequestQueue()
+    reqs = []
+    for i, (ki, ti) in enumerate(script):
+        reqs.append(q.submit(KEYS[ki], np.asarray([float(i)]), TOLS[ti],
+                             now=float(i)))
+    return q, reqs
+
+
+@given(script=SUBMITS)
+@settings(**SET)
+def test_monotone_req_ids_and_fifo_per_key(script):
+    """INVARIANT: req_ids are globally monotone in submission order, and
+    draining any slab key returns its requests in FIFO order."""
+    q, reqs = _fill(script)
+    assert [r.req_id for r in reqs] == list(range(len(script)))
+    for key in set(r.slab_key for r in reqs):
+        expect = [r.req_id for r in reqs if r.slab_key == key]
+        got = [r.req_id for r in q.take(key, len(script) + 1)]
+        assert got == expect
+
+
+@given(script=SUBMITS, k=st.integers(0, 10))
+@settings(**SET)
+def test_take_never_over_pops(script, k):
+    """INVARIANT: take(key, k) returns min(k, pending) requests, removes
+    exactly those, and total pending is conserved."""
+    q, reqs = _fill(script)
+    total = len(q)
+    assert total == len(script)
+    for key in {r.slab_key for r in reqs}:
+        before = q.pending(key)
+        got = q.take(key, k)
+        assert len(got) == min(k, before)
+        assert q.pending(key) == before - len(got)
+        total -= len(got)
+        assert len(q) == total
+
+
+@given(script=SUBMITS)
+@settings(**SET)
+def test_insertion_order_key_fairness(script):
+    """INVARIANT: keys() iterates slab keys in FIRST-submission order —
+    a hot new operator can never starve the oldest queued traffic of its
+    place in the packing scan."""
+    q, reqs = _fill(script)
+    first_seen = []
+    for r in reqs:
+        if r.slab_key not in first_seen:
+            first_seen.append(r.slab_key)
+    assert q.keys() == first_seen
+    # ... and the order is stable under a partial drain of a middle key.
+    if len(first_seen) >= 2:
+        mid = first_seen[len(first_seen) // 2]
+        q.take(mid, 1)
+        survivors = [key for key in first_seen if q.pending(key)]
+        assert q.keys() == survivors
+
+
+@given(deadline=st.one_of(st.none(), st.floats(0.01, 10.0)),
+       waited=st.floats(0.0, 20.0))
+@settings(**SET)
+def test_deadline_expiry(deadline, waited):
+    """INVARIANT: expired() is exactly 'waited longer than deadline_s';
+    requests without a deadline never expire."""
+    req = SolveRequest(req_id=0, op_key="k", b=np.zeros(1), tol=1e-8,
+                      deadline_s=deadline)
+    req.submitted_at = 100.0
+    assert req.expired(100.0 + waited) == \
+        (deadline is not None and waited > deadline)
+
+
+@given(pending=st.integers(0, 50),
+       max_pending=st.one_of(st.none(), st.integers(1, 40)),
+       deadline=st.one_of(st.none(), st.floats(-1.0, 5.0)))
+@settings(**SET)
+def test_admission_policy_verdicts(pending, max_pending, deadline):
+    """INVARIANT: admission rejects exactly (queue at/over ceiling) or
+    (deadline at/below the feasibility floor), queue-depth first."""
+    pol = AdmissionPolicy(max_pending=max_pending, min_deadline_s=0.0)
+    verdict = pol.check(pending, deadline)
+    if max_pending is not None and pending >= max_pending:
+        assert verdict == "queue_full"
+    elif deadline is not None and deadline <= 0.0:
+        assert verdict == "deadline_infeasible"
+    else:
+        assert verdict is None
+
+
+def test_zero_padded_partial_slab_retires_at_iter_zero():
+    """A partial slab's padding columns (zero RHS) retire at iteration 0
+    EXACTLY (norm0 == 0), never surface as results, and contribute zero
+    occupied-slot-iterations to the utilization accounting."""
+    op = ops_mod.Stencil2D5(12, 12)
+    be = get_backend("local")
+    prog = be.make_slab_program(op, s=4, method="plcg", chunk_iters=20,
+                                l=2, sigmas=shifts_for_operator(op, 2),
+                                tol=1e-9, maxit=400)
+    rng = np.random.default_rng(0)
+    B = np.zeros((op.n, 4))
+    B[:, 1] = rng.standard_normal(op.n)          # one real request
+    Bd = jnp.asarray(B)
+    st_slab = prog.init(Bd)
+    stat0 = prog.status(Bd, st_slab)
+    running0 = np.asarray(stat0.running)
+    assert not running0[0] and not running0[2] and not running0[3], \
+        "padding columns must retire immediately"
+    assert np.asarray(stat0.iters)[[0, 2, 3]].tolist() == [0, 0, 0]
+    for _ in range(40):
+        st_slab = prog.chunk(Bd, st_slab)
+        if not np.asarray(prog.status(Bd, st_slab).running).any():
+            break
+    res = prog.extract(Bd, st_slab)
+    iters = np.asarray(res.iters)
+    assert iters[1] > 0
+    assert iters[[0, 2, 3]].tolist() == [0, 0, 0]
+    # padding solutions are exactly zero (not approximately)
+    x = np.asarray(res.x)
+    for j in (0, 2, 3):
+        assert not x[j].any()

@@ -18,7 +18,9 @@ from repro.core.chebyshev import shifts_for_operator
 from repro.core.types import SolverOps
 from repro.linalg import operators as ops_mod
 from repro.parallel import get_backend
-from repro.serve import SetupCache, SolverService, operator_fingerprint
+from repro.serve import (BadRequestError, ConfigError, ServeError,
+                         SetupCache, SolverService, UnknownOperatorError,
+                         VirtualClock, operator_fingerprint)
 
 RNG = np.random.default_rng(7)
 
@@ -193,3 +195,76 @@ def test_service_end_to_end(method):
     assert st["retired"] == 8 and st["pending"] == 0
     assert st["slabs"] == 2
     assert st["latency_p99_s"] >= st["latency_p50_s"] > 0
+
+
+def test_typed_serve_errors():
+    """Malformed traffic raises the typed ServeError hierarchy — one
+    distinct exception per failure mode, all catchable as ServeError and
+    still catchable under the stdlib ancestor they shadow."""
+    op = ops_mod.Stencil2D5(8, 8)
+    svc = SolverService(get_backend("local"), s=2)
+    svc.register_operator("lap", op)
+
+    with pytest.raises(UnknownOperatorError):
+        svc.submit("nope", np.ones(op.n))
+    with pytest.raises(BadRequestError):
+        svc.submit("lap", np.ones(op.n - 1))          # wrong shape
+    with pytest.raises(BadRequestError):
+        svc.submit("lap", np.ones(op.n, dtype=np.int64))
+    bad = np.ones(op.n)
+    bad[3] = np.nan
+    with pytest.raises(BadRequestError):
+        svc.submit("lap", bad)                        # non-finite RHS
+    with pytest.raises(BadRequestError):
+        svc.submit("lap", np.ones(op.n), tol=-1.0)
+    with pytest.raises(BadRequestError):
+        svc.submit("lap", np.ones(op.n), tol=float("nan"))
+    with pytest.raises(BadRequestError):
+        svc.submit("lap", np.ones(op.n), deadline_s=float("inf"))
+    assert svc.pending == 0                           # nothing leaked in
+
+    with pytest.raises(ConfigError):
+        svc.register_operator("bad", object())        # no .n / .apply
+    with pytest.raises(ConfigError):
+        SolverService(get_backend("local"),
+                      prec="block_jacobi").register_operator("lap", op)
+    with pytest.raises(ConfigError):
+        SolverService(get_backend("local"),
+                      prec="weird").register_operator("lap", op)
+
+    # hierarchy: every serve failure is a ServeError, and each subclass
+    # keeps the stdlib lineage callers may already catch
+    assert issubclass(UnknownOperatorError, ServeError)
+    assert issubclass(UnknownOperatorError, KeyError)
+    assert issubclass(BadRequestError, ServeError)
+    assert issubclass(BadRequestError, ValueError)
+    assert issubclass(ConfigError, ServeError)
+
+
+def test_column_granular_uploads():
+    """Host->device transfer regression (DESIGN.md §15): the full (n, s)
+    slab uploads exactly once; afterwards only the columns an inject
+    changed cross the host boundary, and idle ticks transfer nothing."""
+    op = ops_mod.Stencil2D5(8, 8)
+    svc = SolverService(get_backend("local"), s=4, method="plcg", l=2,
+                        chunk_iters=60, maxit=400, clock=VirtualClock())
+    svc.register_operator("lap", op)
+    rng = np.random.default_rng(0)
+    for _ in range(4):
+        svc.submit("lap", rng.standard_normal(op.n))
+    svc.drain()
+    st = svc.stats()
+    assert st["full_uploads"] == 1
+    assert st["uploaded_cols"] == 4                   # the one full upload
+
+    svc.step()                                        # idle ticks: no work,
+    svc.step()                                        # no transfer
+    st = svc.stats()
+    assert (st["full_uploads"], st["uploaded_cols"]) == (1, 4)
+
+    for _ in range(2):                                # refill 2 of 4 slots
+        svc.submit("lap", rng.standard_normal(op.n))
+    svc.drain()
+    st = svc.stats()
+    assert st["full_uploads"] == 1, "re-upload of the whole slab"
+    assert st["uploaded_cols"] == 6, "only changed columns may transfer"

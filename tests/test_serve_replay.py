@@ -1,0 +1,262 @@
+"""Scheduler determinism under open-loop traffic replay (DESIGN.md §15).
+
+Everything here runs on the VIRTUAL clock: no ``time.sleep``, no
+``perf_counter`` — scheduler behavior (packing order, steal decisions,
+shed decisions, latency percentiles) is a pure function of the seeded
+trace, so two replays must agree BITWISE.  That is the test-archetype
+point of this layer: latency/goodput numbers in CI carry no timing
+flake at all.
+
+In-process coverage runs the local backend and the 1-device shard_map
+backend (full psum/spec staging path); the 8-device multi-slab HLO
+invariant — exactly ONE reduction handle per iteration per slab, even
+with replicated slabs under the work-stealing scheduler — runs in a
+subprocess like the rest of the distributed suite.
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.linalg import operators as ops_mod
+from repro.parallel import get_backend
+from repro.serve import (AdmissionPolicy, AdmissionRejected, SolverService,
+                         TrafficClass, VirtualClock, poisson_trace, replay)
+
+BACKENDS = ["local", "shard_map"]
+OP = ops_mod.Stencil2D5(8, 8)          # n=64: small enough to replay fast
+
+
+def _backend(name):
+    if name == "local":
+        return get_backend(name)
+    return get_backend(name, n_shards=1)
+
+
+def _service(backend_name, **over):
+    kw = dict(s=4, method="plcg", l=2, chunk_iters=8, maxit=300,
+              clock=VirtualClock(),
+              admission=AdmissionPolicy(max_pending=64),
+              max_replicas=2, replicate_watermark=0.5)
+    kw.update(over)
+    svc = SolverService(_backend(backend_name), **kw)
+    svc.register_operator("lap", OP)
+    return svc
+
+
+def _mixed_trace(seed=7, n_requests=24, rate=40.0):
+    """Heavy-tail mix: mostly loose-tol (cheap) solves, a tail of
+    tight-tol (expensive) ones — two slab keys, so the scheduler runs
+    multiple slabs."""
+    classes = [
+        TrafficClass("lap", OP.n, weight=4.0, tol=1e-4, deadline_s=2.0),
+        TrafficClass("lap", OP.n, weight=1.0, tol=1e-10, deadline_s=8.0),
+    ]
+    return poisson_trace(classes, rate_per_s=rate, n_requests=n_requests,
+                         seed=seed)
+
+
+def _run_replay(backend_name, trace, **over):
+    svc = _service(backend_name, **over)
+    rep = replay(svc, trace, iter_time_s=1e-3, tick_overhead_s=1e-3)
+    return svc, rep
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_replay_bitwise_deterministic(backend):
+    """Two replays of the same seeded trace on fresh services agree
+    BITWISE: identical retirement logs (ids, workers, ticks, virtual
+    times), identical steal and shed decisions, identical latency
+    percentiles."""
+    trace = _mixed_trace()
+    svc1, rep1 = _run_replay(backend, trace)
+    svc2, rep2 = _run_replay(backend, trace)
+    assert rep1.retirement_log == rep2.retirement_log
+    assert rep1.retirement_log, "replay must retire something"
+    assert rep1.steal_log == rep2.steal_log
+    assert rep1.shed_ids == rep2.shed_ids
+    assert rep1.rejected_arrivals == rep2.rejected_arrivals
+    st1, st2 = svc1.stats(), svc2.stats()
+    assert st1["latency_p50_s"] == st2["latency_p50_s"]
+    assert st1["latency_p99_s"] == st2["latency_p99_s"]
+    assert rep1.metrics() == rep2.metrics()
+    # the replay really ran open-loop work
+    assert rep1.n_retired + rep1.n_shed + rep1.n_rejected == len(trace)
+    assert rep1.n_converged == rep1.n_retired
+
+
+def test_replay_seed_sensitivity():
+    """Different seeds produce different traces (the determinism above
+    is not vacuous)."""
+    t1, t2 = _mixed_trace(seed=1), _mixed_trace(seed=2)
+    assert [a.t for a in t1] != [a.t for a in t2]
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_work_stealing_and_replication(backend):
+    """A hot key scales out to a replica (sharing ONE compiled program)
+    and idle replicas steal queued work from their sibling's tail; every
+    retired solution still solves its system."""
+    svc = _service(backend, replicate_watermark=0.25)
+    rng = np.random.default_rng(0)
+    # Mixed difficulty against one slab key: eigenmode RHS columns
+    # converge in a couple of iterations, random ones take dozens —
+    # retirement imbalance is what makes stealing happen.
+    ii, jj = np.meshgrid(np.arange(1, 9), np.arange(1, 9), indexing="ij")
+    mode = (np.sin(np.pi * ii / 9) * np.sin(np.pi * jj / 9)).reshape(-1)
+    sent = {}
+    for i in range(16):
+        b = mode * (1.0 + i) if i % 2 == 0 else rng.standard_normal(OP.n)
+        sent[svc.submit("lap", b, tol=1e-8)] = b
+    results = svc.drain()
+    sched = svc.scheduler
+    assert len(sched._programs) == 1, "one slab key -> one compiled program"
+    assert sched.replicas(("lap", 1e-8)) == 2, "hot key must scale out"
+    w0, w1 = sched._by_key[("lap", 1e-8)]
+    assert w0.program is w1.program, "replicas share the compiled program"
+    assert sched.steal_log, "expected at least one steal"
+    # stolen requests really were solved by the thief
+    stolen = {ev.req_id for ev in sched.steal_log}
+    for rid in stolen:
+        assert results[rid].worker == next(
+            ev.thief for ev in sched.steal_log if ev.req_id == rid)
+    for rid, b in sent.items():
+        r = results[rid]
+        assert r.converged and not r.shed
+        rel = np.linalg.norm(b - np.asarray(OP.apply(r.x))) \
+            / np.linalg.norm(b)
+        assert rel < 1e-6, (rid, rel)
+
+
+def test_shedding_and_admission_under_overload():
+    """Open-loop overload: hopeless deadlines are shed at pack time (not
+    packed into slots), a full queue rejects at the door, and goodput
+    counts only SLO-met solves."""
+    classes = [TrafficClass("lap", OP.n, weight=1.0, tol=1e-10,
+                            deadline_s=0.012)]
+    trace = poisson_trace(classes, rate_per_s=400.0, n_requests=40, seed=3)
+    # ONE slab (4 slots) and a 12-deep admission ceiling: a backlog
+    # really builds behind the busy slab, so queued requests outlive
+    # their 12 ms deadline while later ones bounce off the full queue.
+    svc = _service("local", admission=AdmissionPolicy(max_pending=12),
+                   max_replicas=1)
+    rep = replay(svc, trace, iter_time_s=1e-3, tick_overhead_s=1e-3)
+    assert rep.n_rejected > 0, "queue ceiling must reject under overload"
+    assert rep.n_shed > 0, "expired deadlines must shed"
+    assert rep.n_shed == len(rep.shed_ids) == svc.shed
+    assert rep.n_retired + rep.n_shed + rep.n_rejected == len(trace)
+    for rid in rep.shed_ids:
+        r = svc.results[rid]
+        assert r.shed and r.x is None and not r.slo_met
+    # goodput numerator == SLO-met count, never more than retired
+    assert rep.n_slo_met <= rep.n_retired
+    assert rep.goodput_per_s == rep.n_slo_met / rep.makespan_s
+    # shed decisions are logged with the wait that killed them
+    assert all(ev.waited_s > 0.012 for ev in svc.scheduler.shed_log)
+
+
+def test_continuous_injection_beats_drain_to_empty():
+    """The continuous-batching claim: refilling retired slots at chunk
+    boundaries keeps slot-utilization (occupied-slot-iterations /
+    capacity) strictly above the drain-to-empty baseline on the same
+    trace."""
+    trace = _mixed_trace(seed=11, n_requests=32, rate=60.0)
+    _svc_c, rep_c = _run_replay("local", trace, continuous=True)
+    _svc_d, rep_d = _run_replay("local", trace, continuous=False)
+    assert rep_c.n_converged == rep_c.n_retired
+    assert rep_d.n_converged == rep_d.n_retired
+    assert rep_c.slot_utilization > rep_d.slot_utilization, \
+        (rep_c.slot_utilization, rep_d.slot_utilization)
+
+
+def test_no_wall_clock_dependence():
+    """The replay path must be wall-clock-free: the harness, scheduler
+    and service never read the wall clock directly (the injectable clock
+    is the only time source — SystemClock holds the only real reads)."""
+    import inspect
+
+    from repro.serve import clock as clock_mod
+    from repro.serve import replay as replay_mod
+    from repro.serve import scheduler as scheduler_mod
+    from repro.serve import service as service_mod
+
+    for mod in (replay_mod, scheduler_mod, service_mod):
+        src = inspect.getsource(mod)
+        assert "perf_counter" not in src, mod.__name__
+        assert "time.sleep" not in src, mod.__name__
+    # the only wall-clock reads live in SystemClock, behind the seam
+    assert "perf_counter" in inspect.getsource(clock_mod)
+
+
+def test_admission_rejection_is_typed():
+    svc = _service("local", admission=AdmissionPolicy(max_pending=1))
+    svc.submit("lap", np.ones(OP.n), tol=1e-8)
+    with pytest.raises(AdmissionRejected) as ei:
+        svc.submit("lap", np.ones(OP.n), tol=1e-8)
+    assert ei.value.reason == "queue_full"
+    assert svc.stats()["rejected"] == 1
+    with pytest.raises(AdmissionRejected) as ei:
+        svc.submit("lap", np.ones(OP.n), tol=1e-8, deadline_s=0.0)
+    assert ei.value.reason in ("queue_full", "deadline_infeasible")
+
+
+# ---------------------------------------------------------------------------
+# 8-device multi-slab HLO invariant (subprocess, like test_distributed).
+# ---------------------------------------------------------------------------
+
+ENV = dict(os.environ, PYTHONPATH="src")
+ENV.pop("XLA_FLAGS", None)
+
+
+def test_multi_slab_one_reduction_handle_per_iteration():
+    """The paper's amortized-reduction invariant survives multi-slab
+    scheduling: with TWO slab keys live and a replicated hot key, every
+    compiled slab program still issues exactly ONE reduction handle per
+    iteration carrying its whole (2l+1, s) payload (tracer-asserted on
+    compiled HLO), and replicas share the compiled program."""
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+import numpy as np
+from repro.linalg import Stencil2D5
+from repro.parallel import get_backend
+from repro.serve import AdmissionPolicy, SolverService, VirtualClock
+from repro.utils.trace import batched_plcg_overlap_report
+
+op = Stencil2D5(8, 8)
+be = get_backend("shard_map", n_shards=8)
+svc = SolverService(be, s=4, method="plcg", l=2, chunk_iters=8, maxit=300,
+                    clock=VirtualClock(), max_replicas=2,
+                    replicate_watermark=0.25)
+svc.register_operator("lap", op)
+rng = np.random.default_rng(0)
+for i in range(10):
+    tol = 1e-8 if i % 3 else 1e-4      # two slab keys
+    svc.submit("lap", rng.standard_normal(op.n), tol=tol)
+results = svc.drain()
+assert all(r.converged for r in results.values())
+sched = svc.scheduler
+assert len(sched._programs) == 2, sched._programs.keys()
+assert len(sched.workers) >= 3, "hot key should have replicated"
+for key, group in sched._by_key.items():
+    for w in group:
+        assert w.program is sched._programs[key], "replica must share program"
+# Tracer: ONE reduction handle per iteration per slab, depth >= l in flight.
+Bspec = jax.ShapeDtypeStruct((op.n, 4), jnp.float64)
+rep = batched_plcg_overlap_report(be, op, Bspec, l=2, window=5)
+assert len(rep.starts_per_window) == rep.window, str(rep)
+assert all(v == 1 for v in rep.starts_per_window.values()), \\
+    rep.starts_per_window
+assert rep.max_in_flight >= 2, str(rep)
+print("MULTI-SLAB-HLO-OK", len(sched.workers))
+"""
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=ENV, cwd=os.getcwd(), timeout=900)
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-3000:])
+    assert "MULTI-SLAB-HLO-OK" in out.stdout
