@@ -39,7 +39,10 @@ import numpy as np  # noqa: E402
 jax.config.update("jax_enable_x64", True)
 
 from repro.core.chebyshev import shifts_for_operator  # noqa: E402
+from repro.core.types import TelemetrySlab  # noqa: E402
+from repro.launch.autotune import fused_iteration_bytes  # noqa: E402
 from repro.linalg import Stencil2D5  # noqa: E402
+from repro.obs import replay_timeline, solve_timeline  # noqa: E402
 from repro.parallel import get_backend  # noqa: E402
 from repro.serve import (AdmissionPolicy, SolverService,  # noqa: E402
                          TrafficClass, VirtualClock, poisson_trace, replay)
@@ -69,7 +72,7 @@ def replay_section(be, op, args):
                           n_requests=args.replay_requests,
                           seed=args.replay_seed)
 
-    def run(continuous):
+    def run(continuous, telemetry_cap=0):
         # chunk_iters=8: retirement scans every 8 iterations keep the
         # partial-chunk tail waste (a column converging mid-chunk stops
         # contributing) small relative to ~30-60-iteration solves.
@@ -78,7 +81,8 @@ def replay_section(be, op, args):
                             clock=VirtualClock(),
                             admission=AdmissionPolicy(max_pending=8 * args.s),
                             max_replicas=2, replicate_watermark=1.0,
-                            continuous=continuous)
+                            continuous=continuous,
+                            telemetry_cap=telemetry_cap)
         svc.register_operator("bench", op)
         return svc, replay(svc, trace, iter_time_s=1e-4,
                            tick_overhead_s=1e-4)
@@ -87,18 +91,42 @@ def replay_section(be, op, args):
     _svc_d, rep_d = run(continuous=False)
     assert rep_c.n_converged == rep_c.n_retired, "replay solves must converge"
 
+    # Instrumented replay (DESIGN.md §16): every slab carries the
+    # on-device telemetry ring.  In deterministic virtual time the
+    # instrumented makespan must stay within the CI overhead gate of the
+    # plain one (the ring adds no collectives and no host syncs — the
+    # schedules tick identically).
+    cap = 64
+    svc_t, rep_t = run(continuous=True, telemetry_cap=cap)
+    assert rep_t.n_retired == rep_c.n_retired
+
     # HLO invariant, tracer-asserted on the compiled slab schedule: ONE
     # reduction handle per iteration carrying the whole (2l+1, s)
     # payload — the amortization the whole serving layer exists for.
+    # Asserted on BOTH the plain and the instrumented schedule: the
+    # ring must not add a handle.
     Bspec = jax.ShapeDtypeStruct((op.n, args.s), jnp.float64)
+    sig = shifts_for_operator(op, args.l)
     hlo = batched_plcg_overlap_report(
-        be, op, Bspec, l=args.l, window=args.l + 3,
-        sigmas=shifts_for_operator(op, args.l))
+        be, op, Bspec, l=args.l, window=args.l + 3, sigmas=sig)
     starts_max = max(hlo.starts_per_window.values())
+    hlo_t = batched_plcg_overlap_report(
+        be, op, Bspec, l=args.l, window=args.l + 3, sigmas=sig,
+        telemetry_cap=cap)
+    starts_max_t = max(hlo_t.starts_per_window.values())
+
+    # Telemetry byte accounting: one ring row per iteration vs the
+    # modeled HBM traffic of one fused iteration (per column).
+    tel_bytes = TelemetrySlab(cap=cap, l=args.l).bytes_per_iter()
+    iter_bytes = fused_iteration_bytes(op.n, args.l)
 
     metrics = rep_c.metrics()
     metrics["replay_slot_utilization_drain"] = rep_d.slot_utilization
     metrics["replay_reduction_starts_per_iter_max"] = starts_max
+    metrics["replay_makespan_instrumented_s"] = rep_t.makespan_s
+    metrics["instrumented_reduction_starts_per_iter_max"] = starts_max_t
+    metrics["telemetry_bytes_per_iter"] = tel_bytes
+    metrics["telemetry_iteration_bytes_ratio"] = tel_bytes / iter_bytes
     st = svc_c.stats()
     metrics["replay_workers"] = st["workers"]
     metrics["replay_stolen"] = st["stolen"]
@@ -111,6 +139,16 @@ def replay_section(be, op, args):
           f"continuous vs {rep_d.slot_utilization:.3f} drain-to-empty; "
           f"{st['workers']} workers, {st['stolen']} steals; "
           f"reduction starts/iter (HLO max) = {starts_max}")
+    print(f"instrumented: makespan {rep_t.makespan_s:.4f} s vs "
+          f"{rep_c.makespan_s:.4f} s plain (virtual), starts/iter "
+          f"{starts_max_t}, ring row {tel_bytes} B/iter "
+          f"({100 * tel_bytes / iter_bytes:.3f}% of iteration HBM)")
+
+    # Timeline artifact: the instrumented replay as catapult JSON.
+    out_dir = os.path.dirname(os.path.abspath(args.out))
+    tl_path = os.path.join(out_dir, "TIMELINE_replay.json")
+    replay_timeline(svc_t, rep_t).save(tl_path)
+    print(f"wrote {tl_path}")
     return metrics
 
 
@@ -202,6 +240,19 @@ def main():
         "latency_p99_s": st["latency_p99_s"],
     }
     payload.update(replay_section(be, op, args))
+
+    # Scaling-study timeline artifact (DESIGN.md §16): the l=args.l
+    # STAGED solve's overlap figure — reduction windows over vector/
+    # halo/hop work, plus measured phases and the telemetry track.
+    be_staged = get_backend("shard_map", n_shards=n_dev, reduction="staged")
+    tl, _res = solve_timeline(be_staged, op, B[:, 0], l=args.l, sigmas=sig,
+                              tol=1e-10, maxit=args.maxit,
+                              telemetry_cap=128)
+    tl_path = os.path.join(os.path.dirname(os.path.abspath(args.out)),
+                           "TIMELINE_staged_solve.json")
+    tl.save(tl_path)
+    print(f"wrote {tl_path}")
+
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)
         f.write("\n")

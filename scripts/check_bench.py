@@ -220,11 +220,42 @@ def selftest() -> int:
                          "replay_slot_utilization": 0.90},
                         rru, verbose=False) == 1, \
         "drain utilization within 95% of continuous must fail"
+    # Observability gates (ISSUE 7, BENCH_serve.json; DESIGN.md §16).
+    # The instrumented virtual-time replay may cost at most 5% makespan
+    # over the plain one (it should cost exactly 0: the ring adds no
+    # collectives and no host syncs), the instrumented schedule must
+    # keep ONE reduction start per iteration at +0 tolerance, and the
+    # ring row must stay under 5% of the modeled per-iteration HBM
+    # traffic.
+    ob = [("replay_makespan_instrumented_s", "replay_makespan_s", 1.05)]
+    assert check_ratios({"replay_makespan_instrumented_s": 0.100,
+                         "replay_makespan_s": 0.100},
+                        ob, verbose=False) == 0, \
+        "zero instrumentation overhead must pass"
+    assert check_ratios({"replay_makespan_instrumented_s": 0.107,
+                         "replay_makespan_s": 0.100},
+                        ob, verbose=False) == 1, \
+        "a 7% instrumented-makespan blowup must fail the 5% gate"
+    ob_base = {"instrumented_reduction_starts_per_iter_max": 1,
+               "telemetry_iteration_bytes_ratio": 0.05}
+    ob_gates = [("instrumented_reduction_starts_per_iter_max", 0.0, False),
+                ("telemetry_iteration_bytes_ratio", 0.0, False)]
+    assert check(ob_base, dict(ob_base), ob_gates, verbose=False) == 0
+    assert check(ob_base,
+                 dict(ob_base, instrumented_reduction_starts_per_iter_max=2),
+                 ob_gates, verbose=False) == 1, \
+        "a reduction handle added by instrumentation must fail at +0"
+    assert check(ob_base,
+                 dict(ob_base, telemetry_iteration_bytes_ratio=0.08),
+                 ob_gates, verbose=False) == 1, \
+        "a fattened telemetry row must fail the byte-ratio ceiling"
     print("check_bench: selftest OK — injected >20% regression, a >0.6x "
           "fused/unfused bytes ratio, a >0.55x fp32 hop payload, a "
-          "staged all-reduce, a thinned hop window, and every replay "
+          "staged all-reduce, a thinned hop window, every replay "
           "gate (goodput floor, p99 ceiling, utilization floor, "
-          "reduction-starts ceiling, drain/continuous ratio) all trip")
+          "reduction-starts ceiling, drain/continuous ratio), and every "
+          "observability gate (instrumented makespan ratio, instrumented "
+          "starts ceiling, telemetry byte ratio) all trip")
     return 0
 
 

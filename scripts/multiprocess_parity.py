@@ -114,18 +114,32 @@ def child(coordinator: str, num_processes: int, process_id: int) -> int:
     op = Stencil2D5(32, 24)
     b = jnp.asarray(np.random.default_rng(7).standard_normal(op.n))
     sig = shifts_for_operator(op, 2)
-    be_staged = get_backend(
-        "multiprocess",
-        coordinator_address=coordinator,
-        num_processes=num_processes,
-        process_id=process_id,
-        reduction="staged",
-        reduction_dtype=jnp.float32,
-    )
+    import warnings
+
+    from repro.obs.metrics import default_registry
+    from repro.parallel.reduction import ReductionFallbackWarning
+
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        be_staged = get_backend(
+            "multiprocess",
+            coordinator_address=coordinator,
+            num_processes=num_processes,
+            process_id=process_id,
+            reduction="staged",
+            reduction_dtype=jnp.float32,
+        )
     assert not type(be_staged).supports_staged_reduction
     assert be_staged.reduction_mode == "monolithic", be_staged.reduction_mode
     assert be_staged.reduction_fallback, "fallback reason must be recorded"
     assert be_staged.reduction_cfg is None
+    # The downgrade must be LOUD (DESIGN.md §16): a structured warning
+    # at construction plus a gauge on the default metrics registry.
+    assert any(isinstance(w.message, ReductionFallbackWarning)
+               for w in caught), [str(w.message) for w in caught]
+    g = default_registry().get("backend_reduction_fallback")
+    assert g is not None
+    assert g.value(labels={"backend": "multiprocess"}) == 1.0
     kw = dict(method="plcg", l=2, sigmas=sig, tol=1e-8, maxit=800)
     res_s = be_staged.solve(op, b, **kw)
     res_m = be.solve(op, b, **kw)
@@ -135,6 +149,30 @@ def child(coordinator: str, num_processes: int, process_id: int) -> int:
     print(f"[p{process_id}] staged request -> monolithic fallback "
           f"(flagged: {be_staged.reduction_fallback!r}), history bitwise "
           f"vs monolithic", flush=True)
+
+    # ---- instrumented cross-process solve + timeline export (§16) -------
+    # Every process runs the SAME instrumented solve (telemetry values
+    # are post-psum replicated scalars — no new collectives cross the
+    # wire) and exports its own Chrome-trace JSON; the launcher/CI pick
+    # the files up as artifacts.
+    from repro.obs import Timeline, telemetry_track
+
+    tl = Timeline()
+    tl.name_thread(1, 1, "cross-process solve phases")
+    with tl.span("plcg[instrumented, cross-process]"):
+        res_t = be.solve(op, b, method="plcg", l=2, sigmas=sig, tol=1e-8,
+                         maxit=800, telemetry_cap=128)
+        jax.block_until_ready(res_t.res_history)
+    assert res_t.telemetry is not None
+    tel = np.asarray(res_t.telemetry)
+    assert (tel[:, 0] >= 0).any(), "telemetry ring never written"
+    tl.merge(telemetry_track(res_t.telemetry, l=2))
+    tl.meta["parity"] = {
+        "process_id": process_id, "num_processes": num_processes,
+        "backend": be.name, "reduction_mode": be.reduction_mode,
+    }
+    path = tl.save(f"TIMELINE_parity_proc{process_id}.json")
+    print(f"[p{process_id}] timeline -> {path}", flush=True)
 
     print(f"[p{process_id}] MULTIPROC-PARITY-OK", flush=True)
     return 0

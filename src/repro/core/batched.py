@@ -106,7 +106,8 @@ def vector_mask(method: str, kw: dict | None = None):
             eta_prev=False, zet_prev=False, i=False, norm0_cycle=False)
         return pipelined_cg._State(
             cyc=cyc, tot=False, upd=False, restarts=False, converged=False,
-            breakdown=False, hist=False, norm0=False, since_rr=False)
+            breakdown=False, hist=False, norm0=False, since_rr=False,
+            tel=False)
     raise KeyError(method)
 
 

@@ -74,7 +74,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.types import GLRED_WAIT_TAG, SolveResult, SolverOps, dot1
-from repro.kernels.fused_iter import SlabLayout, idx_layout, scal_layout
+from repro.kernels.fused_iter import (SlabLayout, idx_layout, scal_layout,
+                                      tel_layout)
 from repro.kernels.ref import fused_iter_unfused
 
 
@@ -106,6 +107,10 @@ class _State(NamedTuple):
     norm0: jax.Array      # original residual M-norm (stopping reference)
     since_rr: jax.Array   # solution updates since the last (re)start —
                           # drives periodic residual replacement
+    tel: jax.Array        # (telemetry_cap, K) on-device telemetry ring
+                          # (row layout: kernels.fused_iter.tel_layout;
+                          # (0, K) when uninstrumented — writes are
+                          # statically skipped, DESIGN.md §16)
 
 
 class PlcgProgram(NamedTuple):
@@ -151,6 +156,7 @@ def build(
     max_restarts: int = 10,
     replace_every: int = 0,
     fused_iteration: bool = False,
+    telemetry_cap: int = 0,
 ) -> PlcgProgram:
     """Construct the p(l)-CG iteration pieces for ``b`` (depth ``l`` static).
 
@@ -158,8 +164,18 @@ def build(
     superkernel built by the substrate's ``ops.fused_iter_factory``
     (DESIGN.md §13); raises if the (operator, preconditioner, backend)
     combination has no fused path.
+
+    ``telemetry_cap > 0`` appends a (cap, K) on-device telemetry ring to
+    the solver state (DESIGN.md §16): each iteration stores one row of
+    already-computed replicated scalars (residual norm, the arrived dot
+    block, restart/replacement flags, handle age) at ring slot
+    ``tot % cap`` — zero extra collectives, zero host syncs, and the
+    uninstrumented arithmetic is untouched (instrumented-vs-plain residual
+    histories are bitwise identical, tests/test_telemetry.py).  The ring
+    is returned as ``SolveResult.telemetry``.
     """
     assert l >= 1
+    assert telemetry_cap >= 0
     assert replace_every == 0 or replace_every > l, \
         "residual replacement must be rarer than the pipeline refill"
     n = b.shape[0]
@@ -176,6 +192,8 @@ def build(
     NV = layout.nv
     IX = idx_layout(l)
     IS = scal_layout(l)
+    TL = tel_layout(l)
+    TK = TL["size"]
 
     fiter = None
     if fused_iteration:
@@ -198,6 +216,28 @@ def build(
         return jnp.where(valid, arr[jnp.mod(idx, W)], jnp.zeros((), dtype))
 
     zk_row, u_row = layout.zk_row, layout.u_row
+
+    def tel_write(tel, tot, **cols):
+        """Store one telemetry row at ring slot ``tot % cap``.
+
+        Statically a no-op when uninstrumented (telemetry_cap == 0 is a
+        Python-level check — the plain solve's HLO is unchanged).  Every
+        value passed in is an already-computed replicated scalar, so the
+        write is one K-wide row store: no collectives, no host syncs
+        (DESIGN.md §16; invariants asserted in tests/test_telemetry.py).
+        """
+        if not telemetry_cap:
+            return tel
+        row = jnp.zeros((TK,), dtype)
+        for name, val in cols.items():
+            if name == "dots":
+                row = row.at[TL["dots"]:TL["size"]].set(val.astype(dtype))
+            else:
+                row = row.at[TL[name]].set(
+                    jnp.asarray(val).astype(dtype))
+        return jax.lax.dynamic_update_slice(
+            tel, row[None, :],
+            (jnp.mod(tot, telemetry_cap), jnp.int32(0)))
 
     # ------------------------------------------------------------- init ---
     def _make_cycle(x, u0_raw, r0_raw, eta0) -> _Cycle:
@@ -355,22 +395,26 @@ def build(
             gam = gam.at[jnp.mod(im, W)].set(gam_new)
             dlt = dlt.at[jnp.mod(im, W)].set(dlt_new)
             dlt_safe = jnp.where(dlt_new == 0, jnp.ones((), dtype), dlt_new)
-            return (G, gam, dlt, gam_new, dlt_safe), breakdown
+            # ``arrived`` rides along for the telemetry row (the consumed
+            # dot block is replicated scalar state) — unused and DCE'd
+            # when uninstrumented.
+            return (G, gam, dlt, gam_new, dlt_safe, arrived), breakdown
 
         def early_scal(args):
             G, gam, dlt = args
-            return (G, gam, dlt, jnp.zeros((), dtype), jnp.ones((), dtype)), \
-                jnp.asarray(False)
+            return (G, gam, dlt, jnp.zeros((), dtype), jnp.ones((), dtype),
+                    jnp.zeros((2 * l + 1,), dtype)), jnp.asarray(False)
 
         scal_args = (c.G, c.gam, c.dlt)
         if static_phase is None:
-            (G, gam, dlt, gam_new, dlt_safe), breakdown = jax.lax.cond(
-                ge_l, late_scal, early_scal, scal_args
-            )
+            (G, gam, dlt, gam_new, dlt_safe, arrived), breakdown = \
+                jax.lax.cond(ge_l, late_scal, early_scal, scal_args)
         elif static_phase == "late":
-            (G, gam, dlt, gam_new, dlt_safe), breakdown = late_scal(scal_args)
+            (G, gam, dlt, gam_new, dlt_safe, arrived), breakdown = \
+                late_scal(scal_args)
         else:
-            (G, gam, dlt, gam_new, dlt_safe), breakdown = early_scal(scal_args)
+            (G, gam, dlt, gam_new, dlt_safe, arrived), breakdown = \
+                early_scal(scal_args)
 
         d2 = ring_get(dlt, im - 1, im >= 1)       # delta_{i-l-1}
 
@@ -481,6 +525,14 @@ def build(
         )
         converged = st.converged | (ok & (rnorm / st.norm0 < tol))
 
+        tel = tel_write(
+            st.tel, st.tot,
+            iter=st.tot, upd=upd,
+            rnorm=jnp.where(ok, rnorm, -jnp.ones((), dtype)),
+            age=jnp.minimum(i + 1, l),       # in-flight handles after park
+            breakdown=breakdown, dots=arrived,
+        )
+
         cyc = _Cycle(
             S=S, G=G, D=D, gam=gam, dlt=dlt,
             eta_prev=eta_prev, zet_prev=zet_prev, i=i + 1,
@@ -489,7 +541,7 @@ def build(
         return _State(
             cyc=cyc, tot=st.tot + 1, upd=upd, restarts=st.restarts,
             converged=converged, breakdown=breakdown, hist=hist, norm0=st.norm0,
-            since_rr=st.since_rr + n_upd,
+            since_rr=st.since_rr + n_upd, tel=tel,
         )
 
     def do_restart(st: _State) -> _State:
@@ -501,10 +553,18 @@ def build(
         # A breakdown at a converged iterate is a "lucky breakdown": the
         # freshly computed residual M-norm at restart tells us directly.
         lucky = cyc.norm0_cycle / st.norm0 < tol
+        tel = tel_write(
+            st.tel, st.tot,
+            iter=st.tot, upd=st.upd,
+            rnorm=cyc.norm0_cycle,           # TRUE residual M-norm at re-init
+            age=jnp.int32(0),                # D-ring cleared by the restart
+            breakdown=st.breakdown, restart=jnp.ones((), dtype),
+            replacement=(~st.breakdown).astype(dtype),
+        )
         return _State(
             cyc=cyc, tot=st.tot + 1, upd=st.upd, restarts=st.restarts + 1,
             converged=st.converged | lucky, breakdown=jnp.asarray(False),
-            hist=st.hist, norm0=st.norm0, since_rr=jnp.int32(0),
+            hist=st.hist, norm0=st.norm0, since_rr=jnp.int32(0), tel=tel,
         )
 
     def needs_interrupt(st: _State) -> jax.Array:
@@ -535,6 +595,7 @@ def build(
             cyc=cyc0, tot=jnp.int32(0), upd=jnp.int32(0), restarts=jnp.int32(0),
             converged=norm0 == 0.0, breakdown=jnp.asarray(False),
             hist=hist0, norm0=norm0, since_rr=jnp.int32(0),
+            tel=jnp.full((telemetry_cap, TK), -1.0, dtype),
         )
 
     def finish(final: _State) -> SolveResult:
@@ -542,6 +603,7 @@ def build(
             x=final.cyc.S[layout.x_row], iters=final.upd,
             restarts=final.restarts, converged=final.converged,
             res_history=final.hist, norm0=final.norm0,
+            telemetry=final.tel if telemetry_cap else None,
         )
 
     return PlcgProgram(init=init, iteration=iteration, body=body, cond=cond,
@@ -561,13 +623,15 @@ def solve(
     unroll: int = 1,
     replace_every: int = 0,
     fused_iteration: bool = False,
+    telemetry_cap: int = 0,
 ) -> SolveResult:
     """Solve A x = b with p(l)-CG.  ``l`` is the pipeline depth (static);
     ``fused_iteration=True`` runs the vector phase through the one-pass
-    superkernel (DESIGN.md §13)."""
+    superkernel (DESIGN.md §13); ``telemetry_cap > 0`` records the
+    on-device per-iteration telemetry ring (DESIGN.md §16)."""
     prog = build(ops, b, l, tol=tol, maxit=maxit, sigmas=sigmas,
                  max_restarts=max_restarts, replace_every=replace_every,
-                 fused_iteration=fused_iteration)
+                 fused_iteration=fused_iteration, telemetry_cap=telemetry_cap)
     dtype = b.dtype
     st0 = prog.init(jnp.zeros_like(b) if x0 is None else x0.astype(dtype))
 

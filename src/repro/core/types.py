@@ -107,6 +107,65 @@ class SolveResult(NamedTuple):
     converged: jax.Array   # bool
     res_history: jax.Array # recursive residual M-norms, -1 padded
     norm0: jax.Array       # initial residual M-norm
+    # On-device iteration telemetry ring (cap, K), or None when the solve
+    # was not instrumented (telemetry_cap=0, the default).  Row layout is
+    # ``repro.kernels.fused_iter.tel_layout``; ``TelemetrySlab.unpack``
+    # decodes it.  None is an EMPTY pytree subtree, so uninstrumented
+    # results keep their pre-telemetry pytree structure — shard_map
+    # out_specs, vmap axes and donation contracts are unchanged
+    # (DESIGN.md §16).
+    telemetry: jax.Array | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetrySlab:
+    """Descriptor of the per-iteration telemetry ring (DESIGN.md §16).
+
+    The instrumented p(l)-CG solve appends a small ``(cap, K)`` ring to
+    its donated state: one row per iteration holding the already-computed
+    per-iteration scalars (residual norm, the arrived 2l+1-entry dot
+    block, restart/replacement flags, hop-group age).  Every recorded
+    value is replicated scalar state on distributed substrates — the ring
+    adds ZERO collectives and ZERO host syncs; it is drained only where
+    the state already crosses the host boundary (solve end / chunk
+    boundaries).  ``cap`` rows wrap: row ``tot % cap`` belongs to global
+    iteration ``tot`` (the "iter" column disambiguates after wrap).
+    """
+
+    cap: int
+    l: int
+
+    @property
+    def k(self) -> int:
+        from repro.kernels.fused_iter import tel_layout
+
+        return tel_layout(self.l)["size"]
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (self.cap, self.k)
+
+    def bytes_per_iter(self, dtype=jnp.float64) -> int:
+        """HBM bytes the ring write adds per iteration (one K-row store
+        + the ring-index arithmetic) — the overhead-accounting input of
+        the instrumented-replay gate (DESIGN.md §16)."""
+        return self.k * jnp.dtype(dtype).itemsize
+
+    def unpack(self, tel) -> dict:
+        """Decode a telemetry ring (…, cap, K) into named columns.
+
+        Returns a dict of (…, cap) arrays for the scalar columns plus
+        ``dots`` of shape (…, cap, 2l+1).  Rows never written (ring not
+        yet full) carry the -1.0 fill in every column.
+        """
+        from repro.kernels.fused_iter import tel_layout
+
+        tl = tel_layout(self.l)
+        out = {name: tel[..., :, tl[name]]
+               for name in ("iter", "upd", "rnorm", "age", "breakdown",
+                            "restart", "replacement")}
+        out["dots"] = tel[..., :, tl["dots"]:tl["size"]]
+        return out
 
 
 @dataclasses.dataclass(frozen=True)

@@ -135,6 +135,29 @@ def scal_layout(l: int) -> dict[str, int]:
     }
 
 
+# Telemetry-row layout (solver dtype; DESIGN.md §16).  One row of the
+# (cap, K) on-device telemetry ring per iteration — every entry is a
+# scalar the iteration ALREADY computed (replicated on distributed
+# substrates), so recording it costs one K-wide row store and no
+# communication.  Shared between the solver (which writes rows) and
+# ``repro.core.types.TelemetrySlab`` / ``repro.obs`` (which decode them),
+# the same positional-layout contract as ``idx_layout``/``scal_layout``.
+def tel_layout(l: int) -> dict[str, int]:
+    return {
+        "iter": 0,         # global iteration counter (tot) of this row
+        "upd": 1,          # solution updates after this iteration
+        "rnorm": 2,        # recursive residual M-norm |zeta| (-1: none)
+        "age": 3,          # in-flight reduction handles after this iter
+        "breakdown": 4,    # square-root breakdown flag (line 11)
+        "restart": 5,      # 1.0 on a restart boundary row
+        "replacement": 6,  # 1.0 when the restart was a due residual
+                           # replacement (not a breakdown)
+        "dots": 7,         # 2l+1 entries: the arrived dot block consumed
+                           # this iteration (zeros during pipeline fill)
+        "size": 7 + (2 * l + 1),
+    }
+
+
 # ------------------------------------------------------------ SPMV tiles --
 
 @dataclasses.dataclass(frozen=True)

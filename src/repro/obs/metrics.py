@@ -1,0 +1,312 @@
+"""Metrics registry: counters / gauges / histograms with labeled series
+(DESIGN.md §16).
+
+The serve layer used to keep per-module stat state — ints on
+``SolverService``, event lists on ``SlabScheduler``, hit/miss pairs on
+``SetupCache`` — with no unified export.  This module is the one place
+they all report through now:
+
+* a :class:`MetricsRegistry` holds named metrics; each metric holds
+  LABELED series (``counter.labels(worker="3").inc()``), the Prometheus
+  data model without the client-library dependency (none is available in
+  this environment, and none is needed for ~a hundred series);
+* everything is plain deterministic arithmetic — no wall-clock reads, no
+  background threads.  ``snapshot(clock=...)`` stamps the export with an
+  injectable clock, so under a ``VirtualClock`` two replays of the same
+  trace export byte-identical snapshots (tests/test_obs_metrics.py);
+* :class:`Histogram` is a bounded reservoir (the service's old latency
+  deque, generalized) whose ``quantile`` reproduces the service's
+  percentile arithmetic exactly — swapping the reservoir under
+  ``SolverService.stats`` changed no reported number;
+* exporters: ``to_prometheus_text`` (text exposition format; histograms
+  rendered as summaries with p50/p90/p99 quantiles) and ``to_json``.
+
+Ownership: a ``SolverService`` creates its OWN registry by default (so
+two services never share counters and replay determinism is per-service);
+pass ``registry=`` to aggregate several components onto one.  The module
+``default_registry()`` is reserved for process-global signals with no
+natural owner — e.g. the reduction-capability fallback gauge set by
+``repro.parallel.reduction.resolve_backend_reduction``.
+"""
+
+from __future__ import annotations
+
+import json
+from collections import deque
+from typing import Iterable, Mapping
+
+LabelKey = tuple[tuple[str, str], ...]
+
+
+def _label_key(labels: Mapping[str, str] | None) -> LabelKey:
+    if not labels:
+        return ()
+    return tuple(sorted((str(k), str(v)) for k, v in labels.items()))
+
+
+def _label_str(key: LabelKey) -> str:
+    if not key:
+        return ""
+    return "{" + ",".join(f'{k}="{v}"' for k, v in key) + "}"
+
+
+class _Metric:
+    """Shared labeled-series machinery; subclasses define the series
+    payload and exposition."""
+
+    kind = "untyped"
+
+    def __init__(self, name: str, help: str = "",
+                 label_names: Iterable[str] = ()):
+        self.name = name
+        self.help = help
+        self.label_names = tuple(label_names)
+        self._series: dict[LabelKey, object] = {}
+
+    def _new_series(self):
+        raise NotImplementedError
+
+    def _get(self, labels: Mapping[str, str] | None = None):
+        key = _label_key(labels)
+        if labels and self.label_names:
+            extra = set(dict(key)) - set(self.label_names)
+            if extra:
+                raise KeyError(f"{self.name}: unknown label(s) {sorted(extra)}")
+        s = self._series.get(key)
+        if s is None:
+            s = self._series[key] = self._new_series()
+        return s
+
+    def labels(self, **labels):
+        """Bound view on one labeled series (created on first use)."""
+        return _Bound(self, labels)
+
+    def series(self) -> dict[LabelKey, object]:
+        return dict(self._series)
+
+    def reset(self) -> None:
+        self._series.clear()
+
+
+class _Bound:
+    """A metric bound to one label set: forwards the write/read API."""
+
+    def __init__(self, metric: _Metric, labels: Mapping[str, str]):
+        self._metric = metric
+        self._labels = dict(labels)
+
+    def __getattr__(self, attr):
+        fn = getattr(type(self._metric), attr)
+        return lambda *a, **kw: fn(self._metric, *a,
+                                   labels=self._labels, **kw)
+
+
+class Counter(_Metric):
+    """Monotone counter.  ``inc`` only — a decreasing counter is a bug."""
+
+    kind = "counter"
+
+    def _new_series(self):
+        return [0.0]
+
+    def inc(self, amount: float = 1.0, *, labels=None) -> None:
+        if amount < 0:
+            raise ValueError(f"{self.name}: counter inc must be >= 0")
+        self._get(labels)[0] += amount
+
+    def value(self, *, labels=None) -> float:
+        return self._get(labels)[0]
+
+
+class Gauge(_Metric):
+    """Point-in-time value (set/inc/dec)."""
+
+    kind = "gauge"
+
+    def _new_series(self):
+        return [0.0]
+
+    def set(self, value: float, *, labels=None) -> None:
+        self._get(labels)[0] = float(value)
+
+    def inc(self, amount: float = 1.0, *, labels=None) -> None:
+        self._get(labels)[0] += amount
+
+    def dec(self, amount: float = 1.0, *, labels=None) -> None:
+        self._get(labels)[0] -= amount
+
+    def value(self, *, labels=None) -> float:
+        return self._get(labels)[0]
+
+
+class _Reservoir:
+    __slots__ = ("obs", "count", "sum")
+
+    def __init__(self, maxlen: int):
+        self.obs: deque[float] = deque(maxlen=maxlen)
+        self.count = 0
+        self.sum = 0.0
+
+
+class Histogram(_Metric):
+    """Bounded-reservoir distribution metric.
+
+    ``count``/``sum`` are exact over all observations; quantiles come
+    from the most recent ``maxlen`` (the service's pre-§16 latency deque
+    semantics, kept so long-lived services don't grow stats state).
+    ``quantile(p)`` is the nearest-rank arithmetic ``SolverService.stats``
+    always used — sorted reservoir indexed at ``int(p/100 * n)`` — so
+    the registry-backed percentiles are bitwise those of the old code
+    (tests/test_serve.py parity).
+    """
+
+    kind = "histogram"
+
+    def __init__(self, name: str, help: str = "",
+                 label_names: Iterable[str] = (), maxlen: int = 4096):
+        super().__init__(name, help, label_names)
+        self.maxlen = int(maxlen)
+
+    def _new_series(self):
+        return _Reservoir(self.maxlen)
+
+    def observe(self, value: float, *, labels=None) -> None:
+        r = self._get(labels)
+        r.obs.append(float(value))
+        r.count += 1
+        r.sum += float(value)
+
+    def count_(self, *, labels=None) -> int:
+        return self._get(labels).count
+
+    def sum_(self, *, labels=None) -> float:
+        return self._get(labels).sum
+
+    def reservoir(self, *, labels=None) -> deque[float]:
+        return self._get(labels).obs
+
+    def quantile(self, p: float, *, labels=None) -> float:
+        obs = sorted(self._get(labels).obs)
+        if not obs:
+            return 0.0
+        return obs[min(int(p / 100 * len(obs)), len(obs) - 1)]
+
+    def clear(self, *, labels=None) -> None:
+        r = self._get(labels)
+        r.obs.clear()
+        r.count = 0
+        r.sum = 0.0
+
+
+class MetricsRegistry:
+    """Named metrics with idempotent registration.
+
+    ``counter/gauge/histogram`` return the existing metric when the name
+    is already registered with the same kind (so components can declare
+    their metrics independently against a shared registry) and raise on
+    a kind mismatch — silently returning a counter where a gauge was
+    asked for is how stats go quietly wrong.
+    """
+
+    def __init__(self):
+        self._metrics: dict[str, _Metric] = {}
+
+    def _register(self, cls, name, help, label_names, **kw):
+        cur = self._metrics.get(name)
+        if cur is not None:
+            if not isinstance(cur, cls):
+                raise TypeError(f"metric {name!r} already registered as "
+                                f"{cur.kind}, requested {cls.kind}")
+            return cur
+        m = self._metrics[name] = cls(name, help, label_names, **kw)
+        return m
+
+    def counter(self, name: str, help: str = "",
+                label_names: Iterable[str] = ()) -> Counter:
+        return self._register(Counter, name, help, label_names)
+
+    def gauge(self, name: str, help: str = "",
+              label_names: Iterable[str] = ()) -> Gauge:
+        return self._register(Gauge, name, help, label_names)
+
+    def histogram(self, name: str, help: str = "",
+                  label_names: Iterable[str] = (),
+                  maxlen: int = 4096) -> Histogram:
+        return self._register(Histogram, name, help, label_names,
+                              maxlen=maxlen)
+
+    def get(self, name: str) -> _Metric | None:
+        return self._metrics.get(name)
+
+    def metrics(self) -> list[_Metric]:
+        return [self._metrics[k] for k in sorted(self._metrics)]
+
+    def reset(self) -> None:
+        """Zero every series of every metric (metric objects survive —
+        held references stay valid, e.g. across ``reset_stats``)."""
+        for m in self._metrics.values():
+            m.reset()
+
+    # ------------------------------------------------------------ export --
+    def snapshot(self, clock=None) -> dict:
+        """Deterministic export: sorted metrics, sorted series, stamped
+        with the injected clock (None -> no timestamp; never reads the
+        wall clock itself)."""
+        out: dict = {"time": clock.now() if clock is not None else None,
+                     "metrics": {}}
+        for m in self.metrics():
+            series = {}
+            for key in sorted(m.series()):
+                if isinstance(m, Histogram):
+                    r = m._series[key]
+                    series[_label_str(key)] = {
+                        "count": r.count, "sum": r.sum,
+                        "p50": m.quantile(50, labels=dict(key)),
+                        "p90": m.quantile(90, labels=dict(key)),
+                        "p99": m.quantile(99, labels=dict(key)),
+                    }
+                else:
+                    series[_label_str(key)] = m._series[key][0]
+            out["metrics"][m.name] = {"type": m.kind, "help": m.help,
+                                      "series": series}
+        return out
+
+    def to_json(self, clock=None, indent: int | None = None) -> str:
+        return json.dumps(self.snapshot(clock), indent=indent,
+                          sort_keys=True)
+
+    def to_prometheus_text(self) -> str:
+        """Prometheus text exposition format.  Histograms are rendered as
+        summaries (reservoir quantiles + exact _count/_sum) — honest
+        about what a bounded reservoir can report, instead of faking
+        cumulative buckets it doesn't keep."""
+        lines: list[str] = []
+        for m in self.metrics():
+            if m.help:
+                lines.append(f"# HELP {m.name} {m.help}")
+            kind = "summary" if isinstance(m, Histogram) else m.kind
+            lines.append(f"# TYPE {m.name} {kind}")
+            for key in sorted(m.series()):
+                if isinstance(m, Histogram):
+                    for q in (0.5, 0.9, 0.99):
+                        qkey = key + (("quantile", repr(q)),)
+                        lines.append(
+                            f"{m.name}{_label_str(qkey)} "
+                            f"{m.quantile(q * 100, labels=dict(key))}")
+                    r = m._series[key]
+                    lines.append(f"{m.name}_count{_label_str(key)} {r.count}")
+                    lines.append(f"{m.name}_sum{_label_str(key)} {r.sum}")
+                else:
+                    lines.append(
+                        f"{m.name}{_label_str(key)} {m._series[key][0]}")
+        return "\n".join(lines) + "\n"
+
+
+# Process-global registry for signals with no natural owner (backend
+# capability fallbacks).  Component-local stats should use their own
+# registry — see the module docstring.
+_DEFAULT = MetricsRegistry()
+
+
+def default_registry() -> MetricsRegistry:
+    return _DEFAULT

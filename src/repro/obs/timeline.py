@@ -1,0 +1,355 @@
+"""Chrome-trace timelines: measured phase spans merged with the static
+HLO overlap schedule (DESIGN.md §16).
+
+The paper's core figure is a *timeline*: global reductions staggered in
+flight while SPMV and neighbour communication run under them.  Our
+overlap tracer (``repro.utils.trace``) proves that structure statically
+from compiled HLO; this module renders it — plus measured host-side
+phase timings, per-iteration telemetry decoded from the on-device ring,
+and virtual-time serve replays — as catapult JSON that loads directly in
+``chrome://tracing`` / Perfetto.
+
+Honesty model (the benches' ``kernel_mode`` discipline, applied to
+traces):
+
+* **measured spans** (``Timeline.span``) are host wall-clock around
+  dispatched device work, annotated via ``jax.profiler.TraceAnnotation``
+  so the same regions appear in a full device profile; on this repo's
+  CPU/interpret lane they time the interpreter, and the exported
+  metadata says so (``kernel_mode``);
+* the **HLO schedule track** (``hlo_schedule_track``) has time units of
+  *instruction positions in the compiled schedule*, not seconds — it
+  shows WHAT overlaps what (reduction windows vs halo/ladder traffic),
+  never how long anything took.  Its process is labeled accordingly;
+* **replay tracks** (``replay_timeline``) are virtual-clock arithmetic:
+  exact, deterministic, and not wall time.
+
+Every process in the exported trace is labeled with its time base, and
+the trace-level ``metadata`` block carries ``kernel_mode`` plus whatever
+the caller adds — a timeline that cannot mislead is the point.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from contextlib import contextmanager
+
+import jax
+import numpy as np
+
+from repro.core.types import TelemetrySlab
+from repro.utils.trace import OverlapReport
+
+# Process ids (one per time base) for the merged trace.
+PID_HOST = 1        # measured host wall-clock (microseconds)
+PID_SCHEDULE = 2    # HLO schedule positions (instruction index)
+PID_TELEMETRY = 3   # solver iterations (index)
+PID_REPLAY = 4      # virtual-clock replay (microseconds of virtual time)
+
+_PROCESS_NAMES = {
+    PID_HOST: "host phases [measured wall-clock]",
+    PID_SCHEDULE: "hlo schedule [instruction positions, NOT time]",
+    PID_TELEMETRY: "solver telemetry [iteration index, NOT time]",
+    PID_REPLAY: "serve replay [virtual clock]",
+}
+
+
+class Timeline:
+    """A mutable catapult-JSON trace (chrome://tracing / Perfetto).
+
+    ``span``/``instant``/``counter`` append events; ``merge`` combines
+    timelines (e.g. measured host phases + the static schedule track);
+    ``to_chrome_trace``/``save`` export.  Metadata passed here (and by
+    the track builders) rides in the trace's ``metadata`` block.
+    """
+
+    def __init__(self, meta: dict | None = None):
+        self.events: list[dict] = []
+        self.meta: dict = dict(meta or {})
+        self._pids: set[int] = set()
+
+    # ------------------------------------------------------------ events --
+    def _use(self, pid: int) -> None:
+        self._pids.add(pid)
+
+    @contextmanager
+    def span(self, name: str, pid: int = PID_HOST, tid: int = 1,
+             cat: str = "phase", args: dict | None = None):
+        """Measured host-side span: wall-clock around the block, plus a
+        ``jax.profiler.TraceAnnotation`` so a device profile taken of
+        the same run shows the same region names.  NOTE: jax dispatch is
+        async — wrap a ``block_until_ready`` inside the block when the
+        span should cover device completion, not just dispatch."""
+        t0 = time.perf_counter()
+        with jax.profiler.TraceAnnotation(name):
+            try:
+                yield self
+            finally:
+                dur = time.perf_counter() - t0
+                self.add_span(name, ts_s=t0, dur_s=dur, pid=pid, tid=tid,
+                              cat=cat, args=args)
+
+    def add_span(self, name: str, ts_s: float, dur_s: float,
+                 pid: int = PID_HOST, tid: int = 1, cat: str = "phase",
+                 args: dict | None = None) -> None:
+        """Explicit complete-event span; ``ts_s``/``dur_s`` in the pid's
+        time base (seconds for measured/virtual tracks, raw units for
+        position-based tracks — see module docstring)."""
+        self._use(pid)
+        ev = {"name": name, "cat": cat, "ph": "X",
+              "ts": ts_s * 1e6, "dur": dur_s * 1e6,
+              "pid": pid, "tid": tid}
+        if args:
+            ev["args"] = args
+        self.events.append(ev)
+
+    def instant(self, name: str, ts_s: float, pid: int = PID_HOST,
+                tid: int = 1, cat: str = "event",
+                args: dict | None = None) -> None:
+        self._use(pid)
+        ev = {"name": name, "cat": cat, "ph": "i", "s": "t",
+              "ts": ts_s * 1e6, "pid": pid, "tid": tid}
+        if args:
+            ev["args"] = args
+        self.events.append(ev)
+
+    def counter(self, name: str, ts_s: float, values: dict,
+                pid: int = PID_HOST, tid: int = 1) -> None:
+        """Counter sample (rendered as a stacked chart row)."""
+        self._use(pid)
+        self.events.append({"name": name, "ph": "C", "ts": ts_s * 1e6,
+                            "pid": pid, "tid": tid, "args": values})
+
+    def name_thread(self, pid: int, tid: int, name: str) -> None:
+        self._use(pid)
+        self.events.append({"name": "thread_name", "ph": "M", "pid": pid,
+                            "tid": tid, "args": {"name": name}})
+
+    def merge(self, other: "Timeline") -> "Timeline":
+        self.events.extend(other.events)
+        self.meta.update(other.meta)
+        self._pids |= other._pids
+        return self
+
+    # ------------------------------------------------------------ export --
+    def to_chrome_trace(self) -> dict:
+        meta = dict(self.meta)
+        meta.setdefault("kernel_mode", "interpret" if jax.default_backend()
+                        not in ("tpu", "gpu") else "compiled")
+        meta.setdefault(
+            "time_bases",
+            {str(pid): _PROCESS_NAMES.get(pid, "custom")
+             for pid in sorted(self._pids)})
+        events = [{"name": "process_name", "ph": "M", "pid": pid,
+                   "args": {"name": _PROCESS_NAMES.get(pid, f"pid {pid}")}}
+                  for pid in sorted(self._pids)]
+        return {"traceEvents": events + self.events,
+                "displayTimeUnit": "ms", "metadata": meta}
+
+    def save(self, path: str) -> str:
+        with open(path, "w") as f:
+            json.dump(self.to_chrome_trace(), f, indent=1)
+            f.write("\n")
+        return path
+
+
+# ---------------------------------------------------------------- tracks --
+
+# Thread ids inside the schedule process.
+TID_REDUCTIONS = 1
+TID_SPMV = 2
+TID_HALO = 3
+TID_LADDER = 4
+
+
+def hlo_schedule_track(report: OverlapReport) -> Timeline:
+    """Static overlap track from one :class:`OverlapReport`.
+
+    Renders, in *schedule position* units (instruction index of the
+    compiled entry computation — explicitly not time):
+
+    * one span per reduction chain: issued at its start position, open
+      until its wait position (unconsumed trailing chains run to the
+      last event) — the paper's l-deep in-flight windows;
+    * one span per iteration window's vector phase (between consecutive
+      window starts) on the SPMV row — where the SPMV + recurrence work
+      the reduction hides under is scheduled;
+    * instants for every tagged halo permute and staged ladder hop, on
+      their own rows — landing *inside* the reduction spans above them
+      is the staggering claim, now visible.
+    """
+    tl = Timeline()
+    tl.name_thread(PID_SCHEDULE, TID_REDUCTIONS, "reduction windows")
+    tl.name_thread(PID_SCHEDULE, TID_SPMV, "vector phase / SPMV")
+    tl.name_thread(PID_SCHEDULE, TID_HALO, "halo exchange")
+    tl.name_thread(PID_SCHEDULE, TID_LADDER, "staged ladder hops")
+    # Timeline.add_span multiplies by 1e6 (seconds -> us); position
+    # tracks pre-divide so exported ts == instruction position.
+    u = 1e-6
+    end = max((e.pos for e in report.events), default=0) + 1
+    for k, spos, wpos in report.chains:
+        tl.add_span(f"glred chain {k}", ts_s=spos * u,
+                    dur_s=((wpos if wpos is not None else end) - spos) * u,
+                    pid=PID_SCHEDULE, tid=TID_REDUCTIONS, cat="reduction",
+                    args={"window": k, "consumed": wpos is not None})
+    starts = sorted((e.pos, e.window) for e in report.events
+                    if e.kind == "start")
+    for j, (pos, k) in enumerate(starts):
+        nxt = starts[j + 1][0] if j + 1 < len(starts) else end
+        tl.add_span(f"vector phase {k}", ts_s=pos * u, dur_s=(nxt - pos) * u,
+                    pid=PID_SCHEDULE, tid=TID_SPMV, cat="vector",
+                    args={"window": k})
+    for e in report.events:
+        if e.kind == "halo":
+            tl.instant("halo permute", ts_s=e.pos * u, pid=PID_SCHEDULE,
+                       tid=TID_HALO, cat="halo", args={"window": e.window})
+        elif e.kind == "hop":
+            tl.instant(f"hop {e.hop}", ts_s=e.pos * u, pid=PID_SCHEDULE,
+                       tid=TID_LADDER, cat="hop",
+                       args={"window": e.window, "hop": e.hop})
+    tl.meta["hlo_schedule"] = {
+        "units": "instruction positions in the compiled entry computation "
+                 "(schedule order), NOT time",
+        "l": report.l, "window": report.window,
+        "max_in_flight": report.max_in_flight,
+        "halos_in_flight": report.halos_in_flight,
+        "hops_in_flight": report.hops_in_flight,
+    }
+    return tl
+
+
+def telemetry_track(telemetry, l: int) -> Timeline:
+    """Per-iteration counter rows decoded from the on-device telemetry
+    ring (one solve's ``SolveResult.telemetry``): residual norm and
+    in-flight handle age per iteration index, restart/replacement
+    instants.  Rows are emitted in iteration order (the ring's "iter"
+    column), skipping never-written slots."""
+    tel = np.asarray(telemetry)
+    ts = TelemetrySlab(cap=tel.shape[-2], l=l)
+    cols = ts.unpack(tel)
+    tl = Timeline()
+    tl.name_thread(PID_TELEMETRY, 1, "per-iteration telemetry")
+    u = 1e-6
+    order = np.argsort(cols["iter"], kind="stable")
+    for r in order:
+        it = float(cols["iter"][r])
+        if it < 0:
+            continue                      # never written
+        vals = {"age": float(cols["age"][r])}
+        if cols["rnorm"][r] >= 0:
+            vals["rnorm"] = float(cols["rnorm"][r])
+        tl.counter("iteration", ts_s=it * u, values=vals,
+                   pid=PID_TELEMETRY, tid=1)
+        if cols["restart"][r] > 0:
+            kind = ("replacement" if cols["replacement"][r] > 0
+                    else "breakdown restart")
+            tl.instant(kind, ts_s=it * u, pid=PID_TELEMETRY, tid=1,
+                       cat="restart")
+    tl.meta["telemetry"] = {
+        "units": "solver iteration index, NOT time",
+        "cap": ts.cap, "k": ts.k, "l": l,
+    }
+    return tl
+
+
+def solve_timeline(backend, op, b, l: int = 2, window: int | None = None,
+                   sigmas=None, prec=None, fused_iteration: bool = False,
+                   telemetry_cap: int = 256, **solver_kwargs):
+    """Measured + static timeline for one instrumented solve.
+
+    Runs ``backend.solve(..., telemetry_cap=...)`` with measured host
+    phase spans (build/compile+warmup vs steady-state solve), then
+    merges (a) the static HLO overlap schedule of the same configuration
+    (``repro.utils.trace.plcg_overlap_report``) and (b) the telemetry
+    track decoded from the ring.  Returns ``(timeline, result)``.
+
+    This is the runtime reproduction of the paper's overlap figure: the
+    schedule track shows the l-deep staggering, the telemetry track what
+    the solver did per iteration, the host track what the whole solve
+    cost on THIS machine (see the trace metadata for ``kernel_mode`` —
+    on the CPU/interpret lane those spans time the interpreter).
+    """
+    from repro.utils.trace import plcg_overlap_report
+
+    tl = Timeline()
+    tl.name_thread(PID_HOST, 1, "solve phases")
+    kw = dict(solver_kwargs, l=l, sigmas=sigmas,
+              telemetry_cap=telemetry_cap,
+              fused_iteration=fused_iteration)
+    with tl.span("solve[first-call: compile + run]"):
+        res = backend.solve(op, b, method="plcg", prec=prec, **kw)
+        jax.block_until_ready(res.x)
+    with tl.span("solve[steady-state]"):
+        res = backend.solve(op, b, method="plcg", prec=prec, **kw)
+        jax.block_until_ready(res.x)
+    with tl.span("trace[lower + schedule analysis]"):
+        report = plcg_overlap_report(
+            backend, op, jax.ShapeDtypeStruct(b.shape, b.dtype), l=l,
+            window=window, sigmas=sigmas, prec=prec,
+            fused_iteration=fused_iteration, telemetry_cap=telemetry_cap)
+    tl.merge(hlo_schedule_track(report))
+    if res.telemetry is not None:
+        tl.merge(telemetry_track(res.telemetry, l=l))
+    tl.meta["solver"] = {"method": "plcg", "l": l, "n": int(op.n),
+                         "fused_iteration": fused_iteration,
+                         "telemetry_cap": telemetry_cap,
+                         "backend": type(backend).name}
+    return tl, res
+
+
+def replay_timeline(svc, rep=None) -> Timeline:
+    """Virtual-time serve timeline from a service's retirement log.
+
+    One row per slab worker; each retired request renders as a span from
+    submission to retirement (its measured-by-arithmetic latency on the
+    virtual clock), sheds and steals as instants.  Built purely from the
+    deterministic logs (``retirement_log``, ``steal_log``, ``shed_log``)
+    — same seed, same trace, byte-identical timeline JSON on any machine
+    (tests/test_obs_timeline.py)."""
+    tl = Timeline()
+    tid_of: dict[int, int] = {}
+    # Steal events carry a tick, not a timestamp — anchor them to the
+    # first retirement time seen at/after their tick (deterministic).
+    tick_t: dict[int, float] = {}
+    for _req, _w, tick, t in svc.retirement_log:
+        tick_t.setdefault(tick, t)
+
+    def tid(worker: int) -> int:
+        if worker not in tid_of:
+            tid_of[worker] = worker + 1
+            tl.name_thread(PID_REPLAY, worker + 1,
+                           f"worker {worker}" if worker >= 0 else "shed")
+        return tid_of[worker]
+
+    for req_id, worker, tick, t in svc.retirement_log:
+        rr = svc.results.get(req_id)
+        lat = rr.latency_s if rr is not None else 0.0
+        args = {"req_id": req_id, "tick": tick}
+        if rr is not None:
+            args.update(iters=rr.iters, converged=bool(rr.converged),
+                        slo_met=bool(rr.slo_met))
+        tl.add_span(f"req {req_id}", ts_s=t - lat, dur_s=lat,
+                    pid=PID_REPLAY, tid=tid(worker), cat="request",
+                    args=args)
+    for ev in svc.scheduler.shed_log:
+        tl.instant(f"shed req {ev.req_id}", ts_s=ev.t, pid=PID_REPLAY,
+                   tid=tid(-1), cat="shed",
+                   args={"waited_s": ev.waited_s, "worker": ev.worker})
+    for ev in svc.scheduler.steal_log:
+        anchors = [t for k, t in tick_t.items() if k >= ev.tick]
+        tl.instant(f"steal req {ev.req_id}", ts_s=min(anchors, default=0.0),
+                   pid=PID_REPLAY, tid=tid(ev.thief), cat="steal",
+                   args={"tick": ev.tick, "victim": ev.victim})
+    tl.meta["replay"] = {
+        "units": "virtual-clock seconds (deterministic arithmetic, "
+                 "not wall time)",
+        "retired": len(svc.retirement_log),
+        "shed": len(svc.scheduler.shed_log),
+        "stolen": len(svc.scheduler.steal_log),
+    }
+    if rep is not None:
+        tl.meta["replay"].update(goodput_per_s=rep.goodput_per_s,
+                                 p99_s=rep.latency_p99_s,
+                                 slot_utilization=rep.slot_utilization)
+    return tl

@@ -169,7 +169,9 @@ class ShardMapBackend(ReductionBackend):
         extract_j = staged(
             lambda Bl, st, loc: batched_mod.batched_extract(build(loc), Bl,
                                                             st, method, kw),
-            (b_spec, st_specs, arr_specs), batched_result_specs(axis))
+            (b_spec, st_specs, arr_specs),
+            batched_result_specs(
+                axis, telemetry=bool(kw.get("telemetry_cap", 0))))
 
         # The slab B crosses into the solver's (possibly RCM-permuted)
         # basis on every entry point and the extracted solutions map back

@@ -476,11 +476,16 @@ def batched_state_specs(method: str, state_shapes, axis: str):
     return jax.tree.map(spec, state_shapes, mask)
 
 
-def batched_result_specs(axis: str) -> SolveResult:
+def batched_result_specs(axis: str, telemetry: bool = False) -> SolveResult:
     """Out-specs of a stacked (leading s-axis) SolveResult: x is (s, n)
-    with n domain-decomposed; everything else replicated."""
+    with n domain-decomposed; everything else replicated.  ``telemetry``
+    mirrors whether the solve is instrumented (telemetry_cap > 0): the
+    telemetry ring is replicated scalar state (P()), and None on plain
+    solves — None is an empty pytree subtree, so both shapes of result
+    match their spec (DESIGN.md §16)."""
     return SolveResult(x=P(None, axis), iters=P(), restarts=P(),
-                       converged=P(), res_history=P(), norm0=P())
+                       converged=P(), res_history=P(), norm0=P(),
+                       telemetry=P() if telemetry else None)
 
 
 def distributed_solve_batched(
@@ -514,7 +519,8 @@ def distributed_solve_batched(
     arr_specs = jax.tree.map(lambda _: P(axis), arrays)
     inner = shard_map_compat(
         run, mesh=mesh, in_specs=(P(axis, None), arr_specs),
-        out_specs=batched_result_specs(axis),
+        out_specs=batched_result_specs(
+            axis, telemetry=bool(kwargs.get("telemetry_cap", 0))),
     )
 
     def fn(B, arrays):
@@ -556,6 +562,9 @@ def distributed_solve(
     out_specs = SolveResult(
         x=P(axis), iters=P(), restarts=P(), converged=P(),
         res_history=P(), norm0=P(),
+        # Replicated when instrumented (every recorded scalar is post-psum
+        # state), absent otherwise — mirrors SolveResult.telemetry.
+        telemetry=P() if kwargs.get("telemetry_cap", 0) else None,
     )
     arr_specs = jax.tree.map(lambda _: P(axis), arrays)
     inner = shard_map_compat(

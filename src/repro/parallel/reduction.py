@@ -55,6 +55,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import Any
 
 import jax
@@ -62,6 +63,15 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.types import REDUCE_TAG, dot_block_rows
+
+
+class ReductionFallbackWarning(UserWarning):
+    """A backend silently CANNOT run the requested staged ring ladder and
+    downgraded to the monolithic all-reduce.  Arithmetic is still honoured
+    — only the overlap mechanism is lost — but a scaling study run under
+    this warning is not measuring what it thinks it is, hence a real
+    warning (and a ``backend_reduction_fallback`` gauge on the default
+    metrics registry) rather than just an attribute."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -346,12 +356,21 @@ def resolve_backend_reduction(backend, reduction: str, stages: int,
     if not type(backend).supports_staged_reduction:
         # Explicit capability fallback (gloo multiprocess): the request
         # is honoured arithmetically by the monolithic psum; the flag
-        # records that no ladder ran.
+        # records that no ladder ran — surfaced three ways (attribute,
+        # structured warning, default-registry gauge) so it cannot pass
+        # unnoticed in a scaling study (DESIGN.md §16).
         backend.reduction_mode = "monolithic"
         backend.reduction_fallback = (
             f"backend {backend.name!r} does not support the staged "
             "ring ladder; dot block downgraded to the monolithic "
             "all-reduce")
+        warnings.warn(backend.reduction_fallback,
+                      ReductionFallbackWarning, stacklevel=2)
+        from repro.obs.metrics import default_registry
+        default_registry().gauge(
+            "backend_reduction_fallback",
+            "1 = staged reduction request downgraded to monolithic",
+            label_names=("backend",)).labels(backend=backend.name).set(1)
         return None
     backend.reduction_mode = "staged"
     backend.reduction_fallback = None

@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.core.chebyshev import shifts_for_operator
 from repro.linalg.preconditioners import BlockJacobi, JacobiPrec
+from repro.obs.metrics import MetricsRegistry
 
 
 def operator_fingerprint(op: Any) -> str:
@@ -49,19 +50,40 @@ def operator_fingerprint(op: Any) -> str:
 
 
 class SetupCache:
-    """Memoizes per-operator solver setup keyed by operator fingerprint."""
+    """Memoizes per-operator solver setup keyed by operator fingerprint.
 
-    def __init__(self):
+    Hit/miss accounting lives on a :class:`MetricsRegistry` (DESIGN.md
+    §16; ``SolverService`` passes its own so the cache shares the serve
+    registry); the pre-§16 ``hits``/``misses`` ints remain as read-only
+    views for one release.
+    """
+
+    def __init__(self, registry: MetricsRegistry | None = None):
         self._store: dict[tuple, Any] = {}
-        self.hits = 0
-        self.misses = 0
+        self.registry = MetricsRegistry() if registry is None else registry
+        m = self.registry
+        self._c_hits = m.counter(
+            "serve_setup_cache_hits_total",
+            "operator setups served from the fingerprint cache",
+            label_names=("kind",))
+        self._c_misses = m.counter(
+            "serve_setup_cache_misses_total",
+            "operator setups built (cache miss)", label_names=("kind",))
+
+    @property
+    def hits(self) -> int:
+        return int(sum(v[0] for v in self._c_hits.series().values()))
+
+    @property
+    def misses(self) -> int:
+        return int(sum(v[0] for v in self._c_misses.series().values()))
 
     def get(self, kind: str, key: tuple, builder: Callable[[], Any]) -> Any:
         k = (kind, *key)
         if k in self._store:
-            self.hits += 1
+            self._c_hits.labels(kind=kind).inc()
             return self._store[k]
-        self.misses += 1
+        self._c_misses.labels(kind=kind).inc()
         val = builder()
         self._store[k] = val
         return val

@@ -48,6 +48,7 @@ import numpy as np
 
 from repro.core.batched import (SlabProgram, dispatch_slab_chunks,
                                 slab_slot_iterations)
+from repro.obs.metrics import MetricsRegistry
 from repro.serve.batcher import SlabKey, SolveRequest
 
 
@@ -220,7 +221,8 @@ class SlabScheduler:
     def __init__(self, make_program: Callable[[SlabKey], SlabProgram], *,
                  max_replicas: int = 1, replicate_watermark: float = 1.0,
                  steal: bool = True, continuous: bool = True,
-                 shed_expired: bool = True):
+                 shed_expired: bool = True,
+                 registry: MetricsRegistry | None = None):
         if max_replicas < 1:
             raise ValueError(f"max_replicas must be >= 1 ({max_replicas})")
         self.make_program = make_program
@@ -232,10 +234,27 @@ class SlabScheduler:
         self.workers: list[SlabWorker] = []
         self._by_key: dict[SlabKey, list[SlabWorker]] = {}
         self._programs: dict[SlabKey, SlabProgram] = {}
+        # Event LOGS stay — they are the bitwise determinism witnesses the
+        # replay tests compare; the registry carries the aggregate COUNTS
+        # (DESIGN.md §16).  tests/test_serve.py asserts log-length ==
+        # counter parity.
         self.steal_log: list[StealEvent] = []
         self.shed_log: list[ShedEvent] = []
         self.ticks = 0
         self.chunks_run = 0
+        self.registry = MetricsRegistry() if registry is None else registry
+        m = self.registry
+        self._c_steals = m.counter(
+            "serve_steals_total",
+            "requests stolen from a same-key sibling's queue tail",
+            label_names=("thief",))
+        self._c_sheds = m.counter(
+            "serve_sheds_total",
+            "queued requests dropped at pack time (deadline expired)")
+        self._c_ticks = m.counter(
+            "serve_ticks_total", "scheduler ticks run")
+        self._c_chunks = m.counter(
+            "serve_chunks_total", "slab chunks dispatched")
 
     # --------------------------------------------------------- dispatch --
     def _spawn(self, key: SlabKey) -> SlabWorker:
@@ -273,6 +292,7 @@ class SlabScheduler:
                 self.shed_log.append(ShedEvent(
                     tick=self.ticks, worker=w.wid, req_id=req.req_id,
                     t=now, waited_s=now - req.submitted_at))
+                self._c_sheds.inc()
                 shed.append(req)
                 continue
             out.append(req)
@@ -294,11 +314,13 @@ class SlabScheduler:
                 self.shed_log.append(ShedEvent(
                     tick=self.ticks, worker=v.wid, req_id=req.req_id,
                     t=now, waited_s=now - req.submitted_at))
+                self._c_sheds.inc()
                 shed.append(req)
                 continue
             self.steal_log.append(StealEvent(
                 tick=self.ticks, thief=w.wid, victim=v.wid,
                 req_id=req.req_id))
+            self._c_steals.labels(thief=str(w.wid)).inc()
             out.append(req)
         return out
 
@@ -307,6 +329,7 @@ class SlabScheduler:
         (dispatched back-to-back so independent slabs overlap on the
         device stream), then poll/retire."""
         self.ticks += 1
+        self._c_ticks.inc()
         shed: list[SolveRequest] = []
         for w in self.workers:
             if not self.continuous and w.occupied():
@@ -323,12 +346,27 @@ class SlabScheduler:
         for w, st in zip(busy, new_states):
             w.state = st
         self.chunks_run += len(busy)
+        self._c_chunks.inc(len(busy))
         retired: list[RetiredColumn] = []
         for w in busy:
             retired.extend(w.poll())
         return TickReport(retired=retired, shed=shed, chunks_run=len(busy))
 
     # -------------------------------------------------------- telemetry --
+    def reset_stats(self) -> None:
+        """Zero event logs, chunk/utilization accounting and the backing
+        registry series (``ticks`` keeps counting: the retirement log's
+        tick column must stay monotone across a stats reset)."""
+        self.chunks_run = 0
+        self.steal_log.clear()
+        self.shed_log.clear()
+        self._c_steals.reset()
+        self._c_sheds.reset()
+        self._c_chunks.reset()
+        for w in self.workers:
+            w.occupied_slot_iters = 0
+            w.capacity_slot_iters = 0
+
     def backlog(self) -> int:
         return sum(w.backlog() for w in self.workers)
 

@@ -42,11 +42,11 @@ fixed (n, s) shapes: the request mix never forces a recompile.
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
 from typing import Any, Hashable
 
 import numpy as np
 
+from repro.obs.metrics import MetricsRegistry
 from repro.serve.batcher import (AdmissionPolicy, RequestQueue, SlabKey,
                                  SolveRequest)
 from repro.serve.cache import SetupCache
@@ -118,6 +118,18 @@ class SolverService:
                   drain-to-empty baseline (slots recycle only once a
                   slab is fully empty) — kept for the utilization
                   comparison in BENCH_serve.json.
+    registry:     :class:`~repro.obs.metrics.MetricsRegistry` all serve
+                  stats report through (DESIGN.md §16); default a fresh
+                  per-service registry so two services never share
+                  series.  The pre-§16 stat attributes (``retired``,
+                  ``rejected``, ``shed``, ``slo_met``, ``_latencies``)
+                  remain as read-only views onto it for one release.
+    telemetry_cap: rows of the on-device telemetry ring per slab column
+                  (plcg only, DESIGN.md §16).  0 (default) compiles the
+                  ring out entirely; >0 appends a (cap, 2l+8) ring to
+                  each column's donated state — zero extra collectives,
+                  zero host transfers, bitwise-invisible to the
+                  arithmetic (tests/test_telemetry.py).
     """
 
     def __init__(self, backend, s: int = 8, method: str = "plcg",
@@ -127,7 +139,9 @@ class SolverService:
                  clock: Clock | None = None,
                  admission: AdmissionPolicy | None = None,
                  max_replicas: int = 1, replicate_watermark: float = 1.0,
-                 steal: bool = True, continuous: bool = True):
+                 steal: bool = True, continuous: bool = True,
+                 registry: MetricsRegistry | None = None,
+                 telemetry_cap: int = 0):
         self.backend = backend
         self.s = int(s)
         self.method = method
@@ -137,7 +151,13 @@ class SolverService:
         self.prec_kind = prec
         self.block_size = block_size
         self.replace_every = int(replace_every)
-        self.cache = SetupCache() if cache is None else cache
+        self.telemetry_cap = int(telemetry_cap)
+        if self.telemetry_cap and method != "plcg":
+            raise ConfigError("telemetry_cap needs method='plcg' "
+                              f"(got {method!r})")
+        self.registry = MetricsRegistry() if registry is None else registry
+        self.cache = (SetupCache(registry=self.registry) if cache is None
+                      else cache)
         self.clock = SystemClock() if clock is None else clock
         self.admission = AdmissionPolicy() if admission is None else admission
 
@@ -146,20 +166,31 @@ class SolverService:
             self._make_program, max_replicas=max_replicas,
             replicate_watermark=replicate_watermark, steal=steal,
             continuous=continuous,
-            shed_expired=self.admission.shed_expired)
+            shed_expired=self.admission.shed_expired,
+            registry=self.registry)
         # Retired results are held until the caller collects them
         # (``pop_result`` / ``drain``); latency percentiles come from a
         # bounded reservoir so long-lived services don't grow stats state.
         self.results: dict[int, RequestResult] = {}
-        self._latencies: deque[float] = deque(maxlen=4096)
         self._operators: dict[Hashable, OperatorEntry] = {}
         # Retirement log: (req_id, worker, tick, t) in retirement order —
         # the determinism witness the replay tests compare bitwise.
         self.retirement_log: list[tuple[int, int, int, float]] = []
-        self.retired = 0
-        self.rejected = 0
-        self.shed = 0
-        self.slo_met = 0
+        # Request lifecycle stats, all registry series (DESIGN.md §16).
+        m = self.registry
+        self._c_retired = m.counter(
+            "serve_requests_retired_total", "requests retired with a result")
+        self._c_rejected = m.counter(
+            "serve_requests_rejected_total", "requests refused at admission")
+        self._c_shed = m.counter(
+            "serve_requests_shed_total",
+            "requests dropped unstarted (deadline expired in queue)")
+        self._c_slo = m.counter(
+            "serve_requests_slo_met_total",
+            "requests converged within their deadline")
+        self._h_latency = m.histogram(
+            "serve_request_latency_seconds",
+            "submit -> retirement latency (bounded reservoir)")
 
     # -------------------------------------------------------- registry ---
     def register_operator(self, key: Hashable, op,
@@ -185,6 +216,8 @@ class SolverService:
         if self.method == "plcg":
             kw.update(l=self.l,
                       sigmas=self.cache.sigmas(op, self.l, prec=prec))
+            if self.telemetry_cap:
+                kw.update(telemetry_cap=self.telemetry_cap)
             if self.replace_every:
                 kw.update(replace_every=self.replace_every,
                           max_restarts=10 + self.maxit // self.replace_every)
@@ -240,7 +273,7 @@ class SolverService:
                                       f"(got {deadline_s})")
         reason = self.admission.check(self.pending, deadline_s)
         if reason is not None:
-            self.rejected += 1
+            self._c_rejected.inc()
             raise AdmissionRejected(reason, f"pending={self.pending}")
         return self.queue.submit(op_key, b, tol, deadline_s=deadline_s,
                                  now=self.clock.now()).req_id
@@ -266,14 +299,14 @@ class SolverService:
             shed=shed, slo_met=met)
         self.results[req.req_id] = rr
         if shed:
-            self.shed += 1
+            self._c_shed.inc()
         else:
-            self._latencies.append(latency)
-            self.retired += 1
+            self._h_latency.observe(latency)
+            self._c_retired.inc()
             self.retirement_log.append(
                 (req.req_id, worker, self.scheduler.ticks, now))
         if met:
-            self.slo_met += 1
+            self._c_slo.inc()
         return rr
 
     def step(self) -> list[RequestResult]:
@@ -317,30 +350,40 @@ class SolverService:
     def chunks_run(self) -> int:
         return self.scheduler.chunks_run
 
+    # Thin read-only views of the registry series — the pre-§16 stats
+    # API, kept for one release (tests assert view/registry parity).
+    @property
+    def retired(self) -> int:
+        return int(self._c_retired.value())
+
+    @property
+    def rejected(self) -> int:
+        return int(self._c_rejected.value())
+
+    @property
+    def shed(self) -> int:
+        return int(self._c_shed.value())
+
+    @property
+    def slo_met(self) -> int:
+        return int(self._c_slo.value())
+
+    @property
+    def _latencies(self):
+        return self._h_latency.reservoir()
+
     def reset_stats(self) -> None:
         """Zero the latency reservoir and counters (e.g. after a compile
         warmup, so percentiles reflect steady-state traffic only)."""
-        self._latencies.clear()
+        self._h_latency.clear()
+        self._c_retired.reset()
+        self._c_rejected.reset()
+        self._c_shed.reset()
+        self._c_slo.reset()
         self.retirement_log.clear()
-        self.scheduler.chunks_run = 0
-        self.scheduler.steal_log.clear()
-        self.scheduler.shed_log.clear()
-        for w in self.scheduler.workers:
-            w.occupied_slot_iters = 0
-            w.capacity_slot_iters = 0
-        self.retired = 0
-        self.rejected = 0
-        self.shed = 0
-        self.slo_met = 0
+        self.scheduler.reset_stats()
 
     def stats(self) -> dict:
-        lats = sorted(self._latencies)
-
-        def pct(p):
-            if not lats:
-                return 0.0
-            return lats[min(int(p / 100 * len(lats)), len(lats) - 1)]
-
         sched = self.scheduler
         return {
             "retired": self.retired,
@@ -355,7 +398,33 @@ class SolverService:
             "slot_utilization": sched.slot_utilization(),
             "uploaded_cols": sum(w.uploaded_cols for w in sched.workers),
             "full_uploads": sum(w.full_uploads for w in sched.workers),
-            "latency_p50_s": pct(50),
-            "latency_p99_s": pct(99),
+            "latency_p50_s": self._h_latency.quantile(50),
+            "latency_p99_s": self._h_latency.quantile(99),
             "setup_cache": self.cache.stats(),
         }
+
+    def metrics_snapshot(self) -> dict:
+        """Registry snapshot stamped with the SERVICE clock — under a
+        VirtualClock two replays of the same trace export byte-identical
+        snapshots (DESIGN.md §16)."""
+        self._export_gauges()
+        return self.registry.snapshot(self.clock)
+
+    def metrics_text(self) -> str:
+        """Prometheus text exposition of the service registry."""
+        self._export_gauges()
+        return self.registry.to_prometheus_text()
+
+    def _export_gauges(self) -> None:
+        """Point-in-time gauges refreshed at export (cheap derived
+        state; counters/histograms update at the event sites)."""
+        g = self.registry.gauge
+        g("serve_pending_requests",
+          "admitted but unfinished requests").set(self.pending)
+        g("serve_workers", "live slab workers").set(
+            len(self.scheduler.workers))
+        g("serve_slabs", "compiled slab programs").set(
+            len(self.scheduler._programs))
+        g("serve_slot_utilization",
+          "occupied-slot-iterations / capacity").set(
+            self.scheduler.slot_utilization())

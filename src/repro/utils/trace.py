@@ -323,6 +323,7 @@ def plcg_overlap_report(
     sigmas=None,
     prec=None,
     fused_iteration: bool = False,
+    telemetry_cap: int = 0,
 ) -> OverlapReport:
     """Trace a flat ``window``-iteration p(l)-CG schedule through
     ``backend`` and report the in-flight reduction chains.
@@ -336,6 +337,11 @@ def plcg_overlap_report(
     reduction structure must be UNCHANGED — still one tagged start per
     iteration (``ops.start_partials``) consumed l windows later, still
     ``max_in_flight >= l`` (asserted in tests/test_fused_iter.py).
+
+    ``telemetry_cap > 0`` traces the INSTRUMENTED solve (DESIGN.md §16):
+    the telemetry-ring writes ride the schedule, and the report must show
+    the identical reduction structure — the zero-extra-collectives
+    invariant, asserted in tests/test_telemetry.py.
     """
     window = l + 2 if window is None else window
     if window < 1:
@@ -344,7 +350,8 @@ def plcg_overlap_report(
     def harness(ops, b_local):
         prog = pipelined_cg.build(ops, b_local, l, tol=0.0,
                                   maxit=window + l + 2, sigmas=sigmas,
-                                  fused_iteration=fused_iteration)
+                                  fused_iteration=fused_iteration,
+                                  telemetry_cap=telemetry_cap)
         st = prog.init(jnp.zeros_like(b_local))
         for k in range(window):
             with jax.named_scope(f"{WINDOW_SCOPE}{k}"):
@@ -352,7 +359,10 @@ def plcg_overlap_report(
                     st, static_phase="late" if k >= l else "early")
         # The history hangs off every arrival — returning it keeps all
         # traced chains (except the trailing un-consumed ones) live.
-        return st.hist, st.cyc.D
+        # The telemetry ring is returned too so its writes stay live in
+        # the instrumented trace (an unused ring would be DCE'd and the
+        # zero-overhead assertion would be vacuous).
+        return st.hist, st.cyc.D, st.tel
 
     hlo = backend.lower_hlo(harness, op, b, prec=prec)
     return analyze_overlap(hlo, l=l, window=window)
@@ -367,6 +377,7 @@ def batched_plcg_overlap_report(
     sigmas=None,
     prec=None,
     fused_iteration: bool = False,
+    telemetry_cap: int = 0,
 ) -> OverlapReport:
     """Overlap report for the BATCHED multi-RHS p(l)-CG slab
     (DESIGN.md §11): a flat ``window``-iteration schedule of the vmapped
@@ -378,6 +389,8 @@ def batched_plcg_overlap_report(
     amortization — ``starts_per_window[k] == 1`` for every window: one
     reduction handle per iteration carrying the whole (2l+1, s) payload,
     not s handles.  ``B`` may be a ``jax.ShapeDtypeStruct``.
+    ``telemetry_cap > 0`` traces the instrumented slab (DESIGN.md §16) —
+    same invariants, asserted in tests/test_telemetry.py.
     """
     window = l + 2 if window is None else window
     if window < 1:
@@ -387,13 +400,14 @@ def batched_plcg_overlap_report(
         def col(bcol):
             prog = pipelined_cg.build(ops, bcol, l, tol=0.0,
                                       maxit=window + l + 2, sigmas=sigmas,
-                                      fused_iteration=fused_iteration)
+                                      fused_iteration=fused_iteration,
+                                      telemetry_cap=telemetry_cap)
             st = prog.init(jnp.zeros_like(bcol))
             for k in range(window):
                 with jax.named_scope(f"{WINDOW_SCOPE}{k}"):
                     st = prog.iteration(
                         st, static_phase="late" if k >= l else "early")
-            return st.hist, st.cyc.D
+            return st.hist, st.cyc.D, st.tel
 
         return jax.vmap(col, in_axes=1)(B_local)
 

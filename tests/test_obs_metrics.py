@@ -1,0 +1,191 @@
+"""Metrics registry (DESIGN.md §16): registration semantics, labeled
+series, exporters, deterministic snapshots under a VirtualClock, and —
+the regression half — parity between the registry series and the serve
+layer's pre-§16 stat attributes, which are now thin views onto it."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.linalg import operators as ops_mod
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               default_registry)
+from repro.parallel import get_backend
+from repro.serve import SolverService, VirtualClock
+from repro.serve.replay import TrafficClass, poisson_trace, replay
+
+
+# ---------------------------------------------------------------- registry --
+
+def test_registration_idempotent_and_kind_checked():
+    r = MetricsRegistry()
+    c = r.counter("a_total", "help text")
+    assert r.counter("a_total") is c
+    with pytest.raises(TypeError):
+        r.gauge("a_total")
+    with pytest.raises(TypeError):
+        r.histogram("a_total")
+    assert isinstance(r.gauge("g"), Gauge)
+    assert isinstance(r.histogram("h"), Histogram)
+    assert r.get("a_total") is c
+    assert r.get("missing") is None
+
+
+def test_counter_semantics():
+    c = MetricsRegistry().counter("n_total", label_names=("kind",))
+    c.inc()
+    c.inc(2.5)
+    assert c.value() == 3.5
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    c.labels(kind="x").inc()
+    c.labels(kind="x").inc()
+    c.labels(kind="y").inc()
+    assert c.labels(kind="x").value() == 2
+    assert c.labels(kind="y").value() == 1
+    assert c.value() == 3.5                 # unlabeled series untouched
+    with pytest.raises(KeyError):
+        c.labels(bogus="z").inc()
+    c.reset()
+    assert c.value() == 0
+
+
+def test_gauge_semantics():
+    g = MetricsRegistry().gauge("g")
+    g.set(4.0)
+    g.inc()
+    g.dec(2.0)
+    assert g.value() == 3.0
+
+
+def test_histogram_quantile_matches_service_formula():
+    """The nearest-rank arithmetic is exactly the old SolverService
+    percentile: sorted reservoir indexed at int(p/100 * n)."""
+    h = MetricsRegistry().histogram("lat", maxlen=100)
+    vals = list(np.random.default_rng(0).standard_normal(37))
+    for v in vals:
+        h.observe(v)
+    s = sorted(vals)
+    for p in (50, 90, 99):
+        assert h.quantile(p) == s[min(int(p / 100 * len(s)), len(s) - 1)]
+    assert h.count_() == 37
+    assert h.sum_() == pytest.approx(sum(vals))
+    # bounded reservoir: count/sum stay exact past maxlen
+    h2 = MetricsRegistry().histogram("lat2", maxlen=4)
+    for v in range(10):
+        h2.observe(float(v))
+    assert h2.count_() == 10 and h2.sum_() == 45.0
+    assert list(h2.reservoir()) == [6.0, 7.0, 8.0, 9.0]
+    h2.clear()
+    assert h2.count_() == 0 and h2.quantile(50) == 0.0
+
+
+def test_exporters():
+    r = MetricsRegistry()
+    r.counter("req_total", "requests").labels(kind="a").inc(3)
+    r.gauge("depth").set(2)
+    h = r.histogram("lat")
+    h.observe(1.0)
+    h.observe(3.0)
+    text = r.to_prometheus_text()
+    assert "# TYPE req_total counter" in text
+    assert 'req_total{kind="a"} 3.0' in text
+    assert "# TYPE depth gauge" in text
+    assert "# TYPE lat summary" in text
+    assert 'lat{quantile="0.5"}' in text
+    assert "lat_count 2" in text and "lat_sum 4.0" in text
+    snap = r.snapshot(VirtualClock(start=7.0))
+    assert snap["time"] == 7.0
+    assert snap["metrics"]["req_total"]["series"]['{kind="a"}'] == 3.0
+    assert snap["metrics"]["lat"]["series"][""]["count"] == 2
+    json.loads(r.to_json())                 # round-trips
+
+
+def test_default_registry_singleton():
+    assert default_registry() is default_registry()
+    assert isinstance(default_registry().counter("smoke_total"), Counter)
+
+
+# ------------------------------------------------------------ serve parity --
+
+def _small_service():
+    op = ops_mod.Stencil2D5(8, 8)
+    svc = SolverService(get_backend("local"), s=2, method="plcg", l=2,
+                        chunk_iters=40, maxit=300, clock=VirtualClock())
+    svc.register_operator("lap", op)
+    return op, svc
+
+
+def _replay_once():
+    op, svc = _small_service()
+    classes = [TrafficClass(op_key="lap", n=op.n, tol=1e-8,
+                            deadline_s=0.5)]
+    trace = poisson_trace(classes, rate_per_s=50.0, n_requests=12, seed=4)
+    rep = replay(svc, trace, iter_time_s=1e-4, tick_overhead_s=1e-4)
+    return svc, rep
+
+
+def test_service_views_equal_registry_series():
+    """The pre-§16 attributes are thin views: every count the service,
+    scheduler and cache expose equals its backing registry series, and
+    stats() reports the same numbers."""
+    svc, rep = _replay_once()
+    r = svc.registry
+    assert svc.retired == r.get("serve_requests_retired_total").value()
+    assert svc.rejected == r.get("serve_requests_rejected_total").value()
+    assert svc.shed == r.get("serve_requests_shed_total").value()
+    assert svc.slo_met == r.get("serve_requests_slo_met_total").value()
+    h = r.get("serve_request_latency_seconds")
+    assert list(svc._latencies) == list(h.reservoir())
+    assert svc.retired == rep.n_retired > 0
+    # scheduler: logs stay the determinism witnesses, counters agree
+    sched = svc.scheduler
+    assert sched.registry is r
+    assert len(sched.shed_log) == r.get("serve_sheds_total").value()
+    steals = r.get("serve_steals_total")
+    assert len(sched.steal_log) == sum(
+        v[0] for v in steals.series().values())
+    assert sched.ticks == r.get("serve_ticks_total").value()
+    assert sched.chunks_run == r.get("serve_chunks_total").value()
+    # cache: hit/miss views
+    cache = svc.cache
+    assert cache.registry is r
+    assert cache.hits == sum(
+        v[0] for v in r.get("serve_setup_cache_hits_total").series().values())
+    assert cache.misses == sum(
+        v[0] for v in
+        r.get("serve_setup_cache_misses_total").series().values())
+    # stats() numbers come FROM the registry now
+    st = svc.stats()
+    assert st["retired"] == svc.retired
+    assert st["shed"] == svc.shed
+    assert st["latency_p50_s"] == h.quantile(50)
+    assert st["setup_cache"]["hits"] == cache.hits
+
+
+def test_reset_stats_zeroes_views_and_registry():
+    svc, _rep = _replay_once()
+    assert svc.retired > 0
+    svc.reset_stats()
+    assert svc.retired == 0 and svc.shed == 0 and svc.slo_met == 0
+    assert len(svc._latencies) == 0
+    assert svc.stats()["latency_p50_s"] == 0.0
+    assert svc.scheduler.chunks_run == 0
+    assert svc.registry.get("serve_chunks_total").value() == 0
+    assert not svc.scheduler.steal_log and not svc.scheduler.shed_log
+
+
+def test_metrics_snapshot_deterministic_across_replays():
+    """Two replays of the same seeded trace on fresh services export
+    byte-identical snapshots and Prometheus text (VirtualClock: no wall
+    time anywhere in the export)."""
+    svc1, _ = _replay_once()
+    svc2, _ = _replay_once()
+    assert json.dumps(svc1.metrics_snapshot(), sort_keys=True) == \
+        json.dumps(svc2.metrics_snapshot(), sort_keys=True)
+    assert svc1.metrics_text() == svc2.metrics_text()
+    # the snapshot carries the serve gauges refreshed at export
+    snap = svc1.metrics_snapshot()
+    assert "serve_pending_requests" in snap["metrics"]
+    assert "serve_slot_utilization" in snap["metrics"]

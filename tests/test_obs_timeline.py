@@ -1,0 +1,180 @@
+"""Chrome-trace timelines (DESIGN.md §16): the exported catapult JSON is
+structurally valid, the l=2 staged schedule track shows >= l reduction
+windows genuinely overlapping vector/halo/hop work (the ISSUE 7
+acceptance figure), and replay timelines are byte-deterministic.
+
+The 8-device staged export runs in a subprocess (device count must be
+set before jax imports), following tests/test_distributed.py."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+
+from repro.linalg import operators as ops_mod
+from repro.obs import Timeline, replay_timeline
+from repro.obs.timeline import PID_SCHEDULE, hlo_schedule_track
+from repro.parallel import get_backend
+from repro.serve import SolverService, VirtualClock
+from repro.serve.replay import TrafficClass, poisson_trace, replay
+from repro.utils.trace import ChainEvent, OverlapReport
+
+ENV = dict(os.environ, PYTHONPATH="src")
+ENV.pop("XLA_FLAGS", None)
+
+
+def _run(code: str) -> str:
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=ENV, cwd=os.getcwd(), timeout=900)
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-3000:])
+    return out.stdout
+
+
+# ---------------------------------------------------------------- timeline --
+
+def test_timeline_chrome_trace_structure(tmp_path):
+    tl = Timeline()
+    with tl.span("phase-a"):
+        pass
+    tl.instant("evt", ts_s=0.5)
+    tl.counter("c", ts_s=0.5, values={"v": 1})
+    doc = tl.to_chrome_trace()
+    assert "kernel_mode" in doc["metadata"]
+    assert "time_bases" in doc["metadata"]
+    phs = {e["ph"] for e in doc["traceEvents"]}
+    assert {"X", "i", "C", "M"} <= phs
+    p = tl.save(str(tmp_path / "t.json"))
+    with open(p) as f:
+        json.load(f)                        # loads in chrome://tracing
+
+
+def test_hlo_schedule_track_renders_chains():
+    """Synthetic report -> one reduction span per chain (position units),
+    halo/hop instants, vector-phase spans between window starts."""
+    events = [
+        ChainEvent("start", 0, 0, "all-reduce", "s0"),
+        ChainEvent("halo", 0, 1, "collective-permute", "h0"),
+        ChainEvent("start", 1, 2, "all-reduce", "s1"),
+        ChainEvent("wait", 0, 3, "fusion", "w0"),
+        ChainEvent("wait", 1, 4, "fusion", "w1"),
+    ]
+    rep = OverlapReport(
+        l=2, window=2, events=events, chains=[(0, 0, 3), (1, 2, 4)],
+        max_in_flight=2, n_collectives=2, collective_bytes=0,
+        starts_per_window={0: 1, 1: 1}, n_halo_permutes=1,
+        halos_in_flight=1, reduce_hops_per_window={},
+        staged_starts_per_window={}, n_reduce_hops=0, hops_in_flight=0)
+    tl = hlo_schedule_track(rep)
+    spans = [e for e in tl.events if e.get("ph") == "X"
+             and e.get("cat") == "reduction"]
+    assert len(spans) == 2
+    assert spans[0]["ts"] == 0 and spans[0]["dur"] == 3
+    halos = [e for e in tl.events if e.get("cat") == "halo"]
+    assert len(halos) == 1 and halos[0]["ts"] == 1
+    # the halo instant lands INSIDE reduction chain 0's span: overlap
+    assert spans[0]["ts"] < halos[0]["ts"] < spans[0]["ts"] + spans[0]["dur"]
+    assert tl.meta["hlo_schedule"]["units"].startswith("instruction")
+
+
+def _overlapped(span, events):
+    t0, t1 = span["ts"], span["ts"] + span["dur"]
+    return [e for e in events if t0 <= e["ts"] <= t1]
+
+
+def test_staged_l2_timeline_shows_overlapped_reduction_windows(tmp_path):
+    """ISSUE 7 acceptance: the exported Chrome trace of an l=2 staged
+    solve on the 8-device mesh contains >= l reduction-window spans each
+    overlapping vector-phase/halo/hop events, and the file is valid
+    catapult JSON."""
+    path = tmp_path / "staged_l2.json"
+    out = _run(f"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+import numpy as np
+from repro.parallel import get_backend
+from repro.linalg import Stencil2D5
+from repro.core.chebyshev import shifts_for_operator
+from repro.obs import solve_timeline
+op = Stencil2D5(32, 24)
+b = jnp.asarray(np.random.default_rng(3).standard_normal(op.n))
+be = get_backend("shard_map", n_shards=8, reduction="staged")
+tl, res = solve_timeline(be, op, b, l=2, sigmas=shifts_for_operator(op, 2),
+                         tol=1e-10, maxit=400, telemetry_cap=128)
+assert res.telemetry is not None and bool(res.converged)
+tl.save({str(path)!r})
+print("TIMELINE-SAVED")
+""")
+    assert "TIMELINE-SAVED" in out
+    with open(path) as f:
+        doc = json.load(f)
+    evs = doc["traceEvents"]
+    sched = [e for e in evs if e.get("pid") == PID_SCHEDULE]
+    red = [e for e in sched if e.get("cat") == "reduction"]
+    assert len(red) >= 2, [e["name"] for e in sched]
+    work = [e for e in sched
+            if e.get("cat") in ("vector", "halo", "hop") and "ts" in e]
+    n_overlapped = sum(bool(_overlapped(s, work)) for s in red)
+    assert n_overlapped >= 2, (len(red), n_overlapped)
+    # honesty metadata rode along
+    assert doc["metadata"]["kernel_mode"] in ("interpret", "compiled")
+    assert doc["metadata"]["hlo_schedule"]["l"] == 2
+    assert doc["metadata"]["solver"]["backend"] == "shard_map"
+    # measured host phases and the telemetry track are merged in
+    assert any(e.get("ph") == "X" and e.get("pid") == 1 for e in evs)
+    assert any(e.get("ph") == "C" and e.get("pid") == 3 for e in evs)
+
+
+# ------------------------------------------------------------------ replay --
+
+def _replay_once():
+    op = ops_mod.Stencil2D5(8, 8)
+    svc = SolverService(get_backend("local"), s=2, method="plcg", l=2,
+                        chunk_iters=40, maxit=300, clock=VirtualClock())
+    svc.register_operator("lap", op)
+    classes = [TrafficClass(op_key="lap", n=op.n, tol=1e-8,
+                            deadline_s=0.5)]
+    trace = poisson_trace(classes, rate_per_s=50.0, n_requests=10, seed=4)
+    rep = replay(svc, trace, iter_time_s=1e-4, tick_overhead_s=1e-4)
+    return svc, rep
+
+
+def test_replay_timeline_deterministic(tmp_path):
+    """Two same-seed replays on fresh services export byte-identical
+    timeline JSON (virtual clock: pure arithmetic)."""
+    paths = []
+    for k in range(2):
+        svc, rep = _replay_once()
+        tl = replay_timeline(svc, rep)
+        p = str(tmp_path / f"replay{k}.json")
+        tl.save(p)
+        paths.append(p)
+    b0, b1 = (open(p, "rb").read() for p in paths)
+    assert b0 == b1
+    doc = json.loads(b0)
+    spans = [e for e in doc["traceEvents"]
+             if e.get("ph") == "X" and e.get("cat") == "request"]
+    assert len(spans) == doc["metadata"]["replay"]["retired"] > 0
+    assert "virtual-clock" in doc["metadata"]["replay"]["units"]
+    assert doc["metadata"]["replay"]["goodput_per_s"] == rep.goodput_per_s
+
+
+def test_replay_timeline_renders_sheds():
+    """Deadline-starved traffic: shed instants appear on the shed row."""
+    op = ops_mod.Stencil2D5(8, 8)
+    svc = SolverService(get_backend("local"), s=2, method="plcg", l=2,
+                        chunk_iters=40, maxit=300, clock=VirtualClock())
+    svc.register_operator("lap", op)
+    rng = np.random.default_rng(0)
+    for _ in range(6):
+        svc.submit("lap", rng.standard_normal(op.n), deadline_s=1e-9)
+    svc.drain()
+    tl = replay_timeline(svc)
+    sheds = [e for e in tl.events if e.get("cat") == "shed"]
+    assert len(sheds) == len(svc.scheduler.shed_log)
+    if sheds:
+        assert svc.shed == len(sheds)

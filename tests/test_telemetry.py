@@ -1,0 +1,243 @@
+"""On-device iteration telemetry (DESIGN.md §16): the ``(cap, K)`` ring
+appended to the solver state must be free — zero extra collectives, zero
+host transfers inside the loop, bitwise-invisible to the arithmetic —
+and deterministic: the same seeded solve writes the same ring bitwise,
+on every substrate, fused or not, single or batched.
+
+Local-backend assertions run in-process; the shard_map half follows the
+tests/test_distributed.py subprocess idiom (8 fake host devices must be
+configured before jax imports)."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core.chebyshev import shifts_for_operator   # noqa: E402
+from repro.core.types import TelemetrySlab             # noqa: E402
+from repro.kernels.fused_iter import tel_layout        # noqa: E402
+from repro.linalg import Stencil2D5                    # noqa: E402
+from repro.parallel import get_backend                 # noqa: E402
+
+ENV = dict(os.environ, PYTHONPATH="src")
+ENV.pop("XLA_FLAGS", None)
+
+
+def _run(code: str) -> str:
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=ENV, cwd=os.getcwd(), timeout=900)
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-3000:])
+    return out.stdout
+
+
+HEADER = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+import numpy as np
+from repro.parallel import get_backend
+from repro.linalg import Stencil2D5
+from repro.core.chebyshev import shifts_for_operator
+op = Stencil2D5(32, 24)
+b = jnp.asarray(np.random.default_rng(3).standard_normal(op.n))
+sig = shifts_for_operator(op, 2)
+"""
+
+
+def _problem():
+    op = Stencil2D5(32, 24)
+    b = jnp.asarray(np.random.default_rng(3).standard_normal(op.n))
+    return op, b, shifts_for_operator(op, 2)
+
+
+# ---------------------------------------------------------------- layout --
+
+def test_telemetry_slab_layout():
+    """TelemetrySlab mirrors tel_layout: K = 2l+8, unpack exposes every
+    column plus the (2l+1)-wide dot block."""
+    for l in (1, 2, 3):
+        ts = TelemetrySlab(cap=32, l=l)
+        tl = tel_layout(l)
+        assert ts.k == tl["size"] == 2 * l + 8
+        assert ts.shape == (32, ts.k)
+        assert ts.bytes_per_iter() == ts.k * 8
+        cols = ts.unpack(np.zeros(ts.shape))
+        assert cols["dots"].shape == (32, 2 * l + 1)
+        for name in ("iter", "upd", "rnorm", "age", "breakdown",
+                     "restart", "replacement"):
+            assert cols[name].shape == (32,)
+
+
+def test_ring_contents_match_history():
+    """The recorded rnorm column IS the solver's residual history (same
+    accepted iterations, same values bitwise), and the ring wraps at
+    cap without disturbing either."""
+    op, b, sig = _problem()
+    be = get_backend("local")
+    res = be.solve(op, b, method="plcg", l=2, sigmas=sig, tol=1e-10,
+                   maxit=400, telemetry_cap=512)
+    assert res.telemetry is not None
+    cols = TelemetrySlab(cap=512, l=2).unpack(np.asarray(res.telemetry))
+    it = np.asarray(cols["iter"])
+    written = it >= 0
+    assert written.sum() >= int(res.iters)          # one row per loop trip
+    hist = np.asarray(res.res_history)
+    for r in np.nonzero(written)[0]:
+        k = int(it[r])
+        if cols["upd"][r] >= 0 and cols["rnorm"][r] >= 0:
+            assert hist[int(cols["upd"][r])] == cols["rnorm"][r], k
+    # small cap: ring wraps, arithmetic untouched
+    res_w = be.solve(op, b, method="plcg", l=2, sigmas=sig, tol=1e-10,
+                     maxit=400, telemetry_cap=8)
+    assert res_w.telemetry.shape == (8, 12)
+    assert np.array_equal(np.asarray(res_w.res_history), hist)
+    assert int(res_w.iters) == int(res.iters)
+
+
+# ----------------------------------------------------------- determinism --
+
+def test_instrumented_solve_is_bitwise_invisible():
+    """Instrumentation must not perturb the arithmetic: residual history
+    and solution are BITWISE identical with and without the ring, fused
+    and unfused."""
+    op, b, sig = _problem()
+    be = get_backend("local")
+    for fused in (False, True):
+        kw = dict(method="plcg", l=2, sigmas=sig, tol=1e-10, maxit=400,
+                  fused_iteration=fused)
+        plain = be.solve(op, b, **kw)
+        inst = be.solve(op, b, telemetry_cap=256, **kw)
+        assert plain.telemetry is None
+        assert inst.telemetry is not None
+        assert np.array_equal(np.asarray(plain.res_history),
+                              np.asarray(inst.res_history)), fused
+        assert np.array_equal(np.asarray(plain.x), np.asarray(inst.x)), fused
+
+
+def test_telemetry_deterministic_and_fused_parity():
+    """Same seeded solve twice -> bitwise-identical rings; the fused
+    superkernel writes the SAME ring as the unfused loop."""
+    op, b, sig = _problem()
+    be = get_backend("local")
+    kw = dict(method="plcg", l=2, sigmas=sig, tol=1e-10, maxit=400,
+              telemetry_cap=256)
+    t1 = np.asarray(be.solve(op, b, **kw).telemetry)
+    t2 = np.asarray(be.solve(op, b, **kw).telemetry)
+    assert np.array_equal(t1, t2)
+    tf = np.asarray(be.solve(op, b, fused_iteration=True, **kw).telemetry)
+    assert np.array_equal(t1, tf)
+
+
+def test_batched_telemetry_deterministic():
+    """Batched s=8 slab: one (s, cap, K) ring, run-twice bitwise, and
+    column j's ring equals the single-RHS ring of column j's problem."""
+    op, b, sig = _problem()
+    be = get_backend("local")
+    s = 8
+    B = jnp.asarray(
+        np.random.default_rng(5).standard_normal((op.n, s)))
+    kw = dict(method="plcg", l=2, sigmas=sig, tol=1e-10, maxit=400,
+              telemetry_cap=128)
+    r1 = be.solve_batched(op, B, **kw)
+    r2 = be.solve_batched(op, B, **kw)
+    assert r1.telemetry.shape == (s, 128, 12)
+    assert np.array_equal(np.asarray(r1.telemetry),
+                          np.asarray(r2.telemetry))
+    plain = be.solve_batched(op, B, method="plcg", l=2, sigmas=sig,
+                             tol=1e-10, maxit=400)
+    assert plain.telemetry is None
+    assert np.array_equal(np.asarray(plain.res_history),
+                          np.asarray(r1.res_history))
+
+
+# ------------------------------------------------------------ HLO hygiene --
+
+_TRANSFER_TOKENS = ("infeed", "outfeed", " send(", " recv(",
+                    "send-done", "recv-done")
+
+
+def _transfer_counts(text: str) -> dict:
+    return {t: text.count(t) for t in _TRANSFER_TOKENS}
+
+
+def test_no_new_host_transfers():
+    """The instrumented compiled module contains exactly the same
+    host-transfer instruction counts as the uninstrumented one — the
+    ring lives and dies on device until the caller fetches the result."""
+    op, b, sig = _problem()
+    be = get_backend("local")
+    texts = {}
+    for cap in (0, 256):
+        solver = be.make_solver(op, method="plcg", l=2, sigmas=sig,
+                                tol=1e-10, maxit=400, telemetry_cap=cap)
+        texts[cap] = solver.lower(b).compile().as_text()
+    assert _transfer_counts(texts[0]) == _transfer_counts(texts[256])
+
+
+def test_shard_map_telemetry_determinism_and_hlo():
+    """shard_map half (8 fake devices, subprocess): distributed rings are
+    run-twice bitwise (single and batched s=8), instrumentation leaves
+    distributed histories bitwise, and the instrumented schedule still
+    issues EXACTLY ONE reduction start per iteration window with no new
+    host transfers."""
+    out = _run(HEADER + """
+from repro.utils.trace import plcg_overlap_report
+be = get_backend("shard_map", n_shards=8)
+kw = dict(method="plcg", l=2, sigmas=sig, tol=1e-10, maxit=400)
+
+plain = be.solve(op, b, **kw)
+r1 = be.solve(op, b, telemetry_cap=256, **kw)
+r2 = be.solve(op, b, telemetry_cap=256, **kw)
+assert plain.telemetry is None
+assert r1.telemetry.shape == (256, 12)
+assert np.array_equal(np.asarray(r1.telemetry), np.asarray(r2.telemetry))
+assert np.array_equal(np.asarray(plain.res_history),
+                      np.asarray(r1.res_history))
+assert np.array_equal(np.asarray(plain.x), np.asarray(r1.x))
+
+B = jnp.asarray(np.random.default_rng(5).standard_normal((op.n, 8)))
+b1 = be.solve_batched(op, B, telemetry_cap=128, **kw)
+b2 = be.solve_batched(op, B, telemetry_cap=128, **kw)
+assert b1.telemetry.shape == (8, 128, 12)
+assert np.array_equal(np.asarray(b1.telemetry), np.asarray(b2.telemetry))
+
+# instrumented schedule: still exactly one reduction start per window
+bspec = jax.ShapeDtypeStruct((op.n,), jnp.float64)
+for l in (2, 3):
+    rep = plcg_overlap_report(be, op, bspec, l=l, window=l + 2,
+                              sigmas=shifts_for_operator(op, l),
+                              telemetry_cap=64)
+    assert rep.max_in_flight >= l, (l, str(rep))
+    assert len(rep.starts_per_window) == rep.window, str(rep)
+    assert all(v == 1 for v in rep.starts_per_window.values()), \\
+        (l, rep.starts_per_window)
+print("SHARD-TEL-OK")
+""")
+    assert "SHARD-TEL-OK" in out
+
+
+def test_staged_reduction_telemetry_bitwise():
+    """The staged ring-ladder substrate records the same determinism:
+    run-twice bitwise rings under reduction='staged' on the 8-device
+    mesh, and local-oracle vs mesh ladder rings bitwise (the oracle
+    property extended to telemetry)."""
+    out = _run(HEADER + """
+kw = dict(method="plcg", l=2, sigmas=sig, tol=1e-10, maxit=400,
+          telemetry_cap=128)
+be_m = get_backend("shard_map", n_shards=8, reduction="staged")
+be_o = get_backend("local", reduction="staged", virtual_shards=8)
+m1 = np.asarray(be_m.solve(op, b, **kw).telemetry)
+m2 = np.asarray(be_m.solve(op, b, **kw).telemetry)
+o1 = np.asarray(be_o.solve(op, b, **kw).telemetry)
+assert np.array_equal(m1, m2)
+assert np.array_equal(m1, o1)
+print("STAGED-TEL-OK")
+""")
+    assert "STAGED-TEL-OK" in out
