@@ -40,7 +40,6 @@ unfused path.
 """
 
 import argparse
-import json
 import time
 
 import jax
@@ -49,6 +48,11 @@ import numpy as np
 
 jax.config.update("jax_enable_x64", True)
 
+from benchmarks.lane import (  # noqa: E402
+    compiled_out,
+    resolve_kernel_mode,
+    write_payload,
+)
 from repro.core import pipelined_cg  # noqa: E402
 from repro.core.chebyshev import shifts_for_operator  # noqa: E402
 from repro.core.types import SolverOps  # noqa: E402
@@ -86,10 +90,21 @@ def main():
     ap.add_argument("--nx", type=int, default=256)
     ap.add_argument("--ny", type=int, default=256)
     ap.add_argument("--l", type=int, default=2)
-    ap.add_argument("--out", type=str, default="BENCH_iter.json")
+    ap.add_argument("--out", type=str, default=None)
     ap.add_argument("--skip-timing", action="store_true",
                     help="structural bytes only (fast CI path)")
+    ap.add_argument("--kernel-mode", choices=("auto", "compiled"),
+                    default="auto",
+                    help="'compiled' demands a real accelerator and "
+                         "writes a machine-readable skip payload to "
+                         "--out when there is none (benchmarks.lane)")
     args = ap.parse_args()
+
+    out = compiled_out(args.kernel_mode, args.out, "BENCH_iter.json")
+    mode, skip = resolve_kernel_mode(args.kernel_mode)
+    if skip is not None:
+        write_payload(out, skip)
+        return
 
     op = Stencil2D5(args.nx, args.ny)
     l = args.l
@@ -102,7 +117,7 @@ def main():
 
     # Like spmv_bench: the Pallas superkernel compiles only on a real
     # accelerator backend; on CPU CI it runs under the interpreter.
-    interpret = jax.default_backend() not in ("tpu", "gpu")
+    interpret = mode == "interpret"
 
     payload = {
         "problem": {"n": op.n, "nx": args.nx, "ny": args.ny, "l": l},
@@ -114,7 +129,8 @@ def main():
         "fused_bytes_interpret_measured": fused_meas,
         "slab_passes_unfused": unfused_bytes / (op.n * 8),
         "slab_passes_fused": fused_bytes / (op.n * 8),
-        "kernel_mode": "interpret" if interpret else "compiled",
+        "kernel_mode": mode,
+        "jax_backend": jax.default_backend(),
     }
     if not args.skip_timing:
         payload["unfused_time_per_iter_s"] = time_per_iter(
@@ -136,12 +152,7 @@ def main():
         else:
             payload["fused_time_per_iter_s"] = t_fused
             payload["fused_wall_time_comparable"] = True
-    for k, v in payload.items():
-        print(f"{k}: {v}")
-    with open(args.out, "w") as f:
-        json.dump(payload, f, indent=2)
-        f.write("\n")
-    print(f"wrote {args.out}")
+    write_payload(out, payload)
 
 
 if __name__ == "__main__":

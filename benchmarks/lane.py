@@ -1,0 +1,74 @@
+"""Bench-lane resolution: the ``kernel_mode`` honesty convention shared
+by iter/spmv/reduce benches (DESIGN.md §13/§17).
+
+Every bench JSON carries ``kernel_mode``: ``"compiled"`` when the Pallas
+kernels ran as real Mosaic/Triton compilations on an accelerator,
+``"interpret"`` when they ran under the Pallas interpreter (CPU CI) —
+a correctness vehicle whose wall clocks time the interpreter, not the
+kernel.  The default lane (``--kernel-mode auto``) takes whatever the
+container offers and labels it; the opt-in accelerator lane
+(``--kernel-mode compiled``, CI job ``compiled-bench``) DEMANDS the real
+thing and, when the container has no accelerator, refuses loudly but
+machine-readably: the bench writes a skip payload (``skipped: true`` +
+reason) to its ``--out`` and exits 0, so the CI lane stays green on
+CPU-only runners while making it impossible to mistake a skipped lane
+for measured compiled numbers (``scripts/check_bench.py --skip-ok``
+prints the reason; ``launch.autotune.recalibrate_profile`` rejects skip
+payloads outright).
+"""
+
+from __future__ import annotations
+
+import json
+
+import jax
+
+ACCEL_BACKENDS = ("tpu", "gpu")
+
+
+def resolve_kernel_mode(requested: str) -> tuple[str, dict | None]:
+    """Resolve a ``--kernel-mode`` request against the live jax backend.
+
+    Returns ``(mode, skip_payload)``: ``mode`` is the kernel mode that
+    can actually run here (``"compiled"`` iff an accelerator backend is
+    present), and ``skip_payload`` is None unless ``requested ==
+    "compiled"`` on a CPU-only container — then it is the machine-
+    readable refusal the bench must write instead of numbers.
+    """
+    backend = jax.default_backend()
+    accel = backend in ACCEL_BACKENDS
+    if requested not in ("auto", "compiled"):
+        raise ValueError(f"unknown kernel mode {requested!r}")
+    if requested == "compiled" and not accel:
+        return "interpret", {
+            "skipped": True,
+            "requested_kernel_mode": "compiled",
+            "jax_backend": backend,
+            "reason": (
+                f"kernel_mode='compiled' requested but the jax backend "
+                f"is '{backend}' — no TPU/GPU in this container, so the "
+                f"Pallas kernels can only run under the interpreter, "
+                f"whose wall clocks are not kernel numbers"),
+        }
+    return ("compiled" if accel else "interpret"), None
+
+
+def compiled_out(requested: str, out: str | None, default: str) -> str:
+    """Default output path per lane: ``BENCH_x.json`` for the auto lane,
+    ``BENCH_x_compiled.json`` for the opt-in compiled lane — the two
+    lanes must never overwrite each other's committed files."""
+    if out is not None:
+        return out
+    if requested == "compiled":
+        root, ext = default.rsplit(".", 1)
+        return f"{root}_compiled.{ext}"
+    return default
+
+
+def write_payload(out: str, payload: dict) -> None:
+    for k, v in payload.items():
+        print(f"{k}: {v}")
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"wrote {out}")

@@ -36,29 +36,89 @@ bandwidth-optimal tree all-reduce's — the ladder targets the
 latency-bound small-payload regime (K = 2l+1 entries), where per-hop
 message size and hop count dominate and aggregate bytes do not.
 
+Measured primitive wall clocks (``measured_hop_time_s`` /
+``measured_allreduce_time_s``) ride along too: one ring hop vs one
+monolithic psum of the same K-entry payload on the live mesh.  On the
+opt-in compiled lane (``--kernel-mode compiled``, accelerator required —
+CPU containers get a machine-readable skip payload instead, see
+``benchmarks.lane``) these time the real interconnect and feed
+``launch.autotune.recalibrate_profile`` (alpha / alpha_hop).
+
     PYTHONPATH=src python -m benchmarks.reduce_bench [--l 2] [--out PATH]
+        [--kernel-mode auto|compiled]
 """
 
 import argparse
-import json
 import os
+import time
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import jax  # noqa: E402  (after XLA_FLAGS)
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
+from jax import lax  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
 
 jax.config.update("jax_enable_x64", True)
 
+from benchmarks.lane import (  # noqa: E402
+    compiled_out,
+    resolve_kernel_mode,
+    write_payload,
+)
 from repro.core.chebyshev import shifts_for_operator  # noqa: E402
 from repro.linalg import Stencil2D5  # noqa: E402
 from repro.parallel import get_backend  # noqa: E402
+from repro.parallel.distributed import (  # noqa: E402
+    make_solver_mesh,
+    shard_map_compat,
+)
 from repro.parallel.reduction import (  # noqa: E402
     hop_payload_bytes,
     reduction_wire_bytes,
 )
 from repro.utils.trace import plcg_overlap_report  # noqa: E402
+
+
+def _time_best(fn, repeats=7):
+    jax.block_until_ready(fn())              # warmup / compile
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def measured_collective_times(n_dev: int, l: int) -> dict:
+    """Wall clock of the two reduction primitives on THIS mesh: one ring
+    hop (``lax.ppermute`` of the K-entry dot-block payload — the ladder's
+    unit cost, ``timing_model.ring_hop_time``) and one monolithic
+    ``lax.psum`` of the same payload.  These feed
+    ``launch.autotune.recalibrate_profile`` (alpha_hop / alpha): on a
+    real accelerator mesh they time the interconnect; on the simulated
+    CPU mesh they time XLA's intra-process collectives — the
+    ``collective_timing_basis`` key says which one a reader is holding.
+    """
+    mesh = make_solver_mesh(n_dev)
+    k = 2 * l + 1
+    x = jnp.asarray(np.arange(n_dev * k, dtype=np.float64))
+    ring = [(i, (i + 1) % n_dev) for i in range(n_dev)]
+    hop = jax.jit(shard_map_compat(
+        lambda v: lax.ppermute(v, "shards", ring), mesh=mesh,
+        in_specs=P("shards"), out_specs=P("shards")))
+    allred = jax.jit(shard_map_compat(
+        lambda v: lax.psum(v, "shards"), mesh=mesh,
+        in_specs=P("shards"), out_specs=P()))
+    return {
+        "measured_hop_time_s": _time_best(lambda: hop(x)),
+        "measured_allreduce_time_s": _time_best(lambda: allred(x)),
+        "collective_timing_basis": (
+            "accelerator interconnect"
+            if jax.default_backend() in ("tpu", "gpu")
+            else "XLA CPU intra-process collectives (simulated mesh)"),
+    }
 
 
 def main():
@@ -67,8 +127,19 @@ def main():
     ap.add_argument("--ny", type=int, default=24)
     ap.add_argument("--l", type=int, default=2)
     ap.add_argument("--stages", type=int, default=2)
-    ap.add_argument("--out", type=str, default="BENCH_reduce.json")
+    ap.add_argument("--out", type=str, default=None)
+    ap.add_argument("--kernel-mode", choices=("auto", "compiled"),
+                    default="auto",
+                    help="'compiled' demands a real accelerator mesh "
+                         "and writes a machine-readable skip payload "
+                         "to --out when there is none (benchmarks.lane)")
     args = ap.parse_args()
+
+    out = compiled_out(args.kernel_mode, args.out, "BENCH_reduce.json")
+    mode, skip = resolve_kernel_mode(args.kernel_mode)
+    if skip is not None:
+        write_payload(out, skip)
+        return
 
     n_dev = len(jax.devices())
     op = Stencil2D5(args.nx, args.ny)
@@ -110,6 +181,8 @@ def main():
 
     payload = {
         "mesh_devices": n_dev,
+        "kernel_mode": mode,
+        "jax_backend": jax.default_backend(),
         "problem": {"n": op.n, "nx": args.nx, "ny": args.ny, "l": l,
                     "stages": args.stages},
         # structural gates (deterministic):
@@ -137,12 +210,10 @@ def main():
         "iters_staged": int(r_staged.iters),
         "iters_fp32": int(r_fp32.iters),
     }
-    for k, v in payload.items():
-        print(f"{k}: {v}")
-    with open(args.out, "w") as f:
-        json.dump(payload, f, indent=2)
-        f.write("\n")
-    print(f"wrote {args.out}")
+    # Measured primitive wall clocks (informational here, the
+    # recalibration inputs on the compiled lane):
+    payload.update(measured_collective_times(n_dev, l))
+    write_payload(out, payload)
 
 
 if __name__ == "__main__":

@@ -27,7 +27,6 @@ the trajectory has a machine-independent roofline column.
 """
 
 import argparse
-import json
 import os
 import time
 
@@ -40,6 +39,12 @@ import numpy as np  # noqa: E402
 jax.config.update("jax_enable_x64", True)
 
 from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from benchmarks.lane import (  # noqa: E402
+    compiled_out,
+    resolve_kernel_mode,
+    write_payload,
+)
 from repro.kernels import ops as kops  # noqa: E402
 from repro.linalg import plan_for, random_fem_mesh  # noqa: E402
 from repro.linalg.sparse import sliced_ell_reorder  # noqa: E402
@@ -75,8 +80,19 @@ def main():
     ap.add_argument("--n", type=int, default=4096, help="mesh nodes")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--slice-rows", type=int, default=64)
-    ap.add_argument("--out", type=str, default="BENCH_spmv.json")
+    ap.add_argument("--out", type=str, default=None)
+    ap.add_argument("--kernel-mode", choices=("auto", "compiled"),
+                    default="auto",
+                    help="'compiled' demands a real accelerator and "
+                         "writes a machine-readable skip payload to "
+                         "--out when there is none (benchmarks.lane)")
     args = ap.parse_args()
+
+    out = compiled_out(args.kernel_mode, args.out, "BENCH_spmv.json")
+    mode, skip = resolve_kernel_mode(args.kernel_mode)
+    if skip is not None:
+        write_payload(out, skip)
+        return
 
     n_dev = len(jax.devices())
     op = random_fem_mesh(args.seed, args.n)
@@ -91,7 +107,7 @@ def main():
     apply_jnp = jax.jit(op.apply)
     t_jnp = time_best(lambda: apply_jnp(x))
     # Time the COMPILED kernel on a real backend; interpret on CPU CI.
-    interpret = jax.default_backend() not in ("tpu", "gpu")
+    interpret = mode == "interpret"
     kern = jax.jit(lambda xx: kops.ell_spmv_apply(
         xx, op.cols, op.vals, interpret=interpret))
     t_kern = time_best(lambda: kern(x))
@@ -133,19 +149,15 @@ def main():
         "spmv_hbm_bytes_padded": spmv_hbm_bytes(nnz, op.n, occ_padded),
         "spmv_hbm_bytes_sliced": spmv_hbm_bytes(nnz, op.n, occ_sliced),
         # informational wall-clock (not gated — container noise):
-        "kernel_mode": "interpret" if interpret else "compiled",
+        "kernel_mode": mode,
+        "jax_backend": jax.default_backend(),
         "jnp_spmv_s": t_jnp,
         "kernel_spmv_s": t_kern,
         "sliced_spmv_s": t_sliced,
         "distributed_spmv_s": t_dist,
         "jnp_spmv_gnnz_per_s": nnz / t_jnp / 1e9,
     }
-    for k, v in payload.items():
-        print(f"{k}: {v}")
-    with open(args.out, "w") as f:
-        json.dump(payload, f, indent=2)
-        f.write("\n")
-    print(f"wrote {args.out}")
+    write_payload(out, payload)
 
 
 if __name__ == "__main__":

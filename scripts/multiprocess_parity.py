@@ -1,65 +1,114 @@
 #!/usr/bin/env python
-"""Multi-controller parity check: the so-far-CI-untested ``multiprocess``
-reduction backend, actually exercised across process boundaries.
+"""Multi-controller parity check + strong-scaling study for the
+``multiprocess`` reduction backend, exercised across REAL process
+boundaries (DESIGN.md §3/§14/§17).
 
-Run with no arguments to LAUNCH: the script picks a free coordinator
-port and spawns ``--num-processes`` copies of itself (default 2), each a
-real ``jax.distributed`` controller with
+Default mode (CI ``multiprocess`` job, tests/test_multiprocess.py): pick
+a free coordinator port (retrying bind collisions via
+``repro.parallel.fabric``) and spawn ``--num-processes`` copies of this
+script (default 2), each a real ``jax.distributed`` controller with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` — a 2-process x
 4-device job whose solver mesh spans all 8 devices, so the fused
-dot-block psum and the halo ppermutes genuinely cross the process
-boundary (the paper's MPI world, DESIGN.md §3).
+dot-block psum, the halo ppermutes AND the staged ladder's tagged hop
+permutes genuinely cross the process boundary (the paper's MPI world).
 
 Each process runs the same program (multi-controller SPMD): classic CG
-and p(l)-CG on a structured stencil AND an unstructured FEM SparseOp
-(DESIGN.md §12), asserting residual-history parity against the
-single-device ``local`` backend.  Replicated outputs (histories, iter
-counts) are addressable on every process; the domain-decomposed ``x``
-stays distributed and is validated through the recursive residual.
+and p(l)-CG on a structured stencil AND an unstructured FEM SparseOp,
+asserting residual-history parity against the single-device ``local``
+backend.  The run then exercises the STAGED HOP LADDER across the real
+process boundary (DESIGN.md §17): ``reduction="staged"`` must run the
+ladder for real — mode ``staged``, no fallback, the
+``backend_reduction_fallback`` gauge pinned 0 — with residual histories
+BITWISE against the local ``virtual_shards`` ladder oracle and ZERO
+dot-block all-reduces in the compiled staged solve.
 
-The run then exercises the STAGED-REDUCTION capability fallback
-(DESIGN.md §14) across the real process boundary: requesting
-``reduction="staged"`` from the multiprocess backend must set the
-``reduction_fallback`` flag, run the monolithic cross-host psum instead
-of the ppermute ladder, and reproduce the monolithic backend's residual
-history BITWISE (same mesh, same arithmetic — the fallback is a wire
-substitution, not a solver change).
-
-CI wires this through tests/test_multiprocess.py (RUN_MULTIPROCESS=1).
+Scaling-study mode (``--study``, CI ``scaling-study`` job): a strong-
+scaling sweep at FIXED n over 1..N processes (default 1,2,4 ranks x 1
+device — the paper's Cori curve shape, reproduced on our own fabric):
+per-P measured seconds/iteration staged vs monolithic (two-budget
+differencing, min over repeats), bitwise parity vs the ladder oracle,
+compiled-HLO structure (all-reduce count, hops/window), and per-process
+hop/halo staggering timelines via the DESIGN.md §16 exporter
+(``TIMELINE_scaling_proc*.json`` at the widest P).  Emits
+``BENCH_scaling.json``; CI gates it via scripts/check_bench.py —
+bitwise-parity floor, zero-all-reduce ceiling, hops floor, and
+staged <= monolithic wall clock at P=2 (on a 1-core container every
+collective costs a scheduler slice, so the P-1-hop ladder cannot
+wall-clock-win at P>=3 — those rows gate at the documented
+hop-serialization ceiling instead; see DESIGN.md §17).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import os
-import socket
-import subprocess
 import sys
 
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_SRC = os.path.join(_ROOT, "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
 
-def free_port() -> int:
-    with socket.socket() as s:
-        s.bind(("127.0.0.1", 0))
-        return s.getsockname()[1]
+from repro.parallel.fabric import FabricError, launch_fabric  # noqa: E402
+
+STUDY_MARKER = "SCALING-JSON "
 
 
-def child(coordinator: str, num_processes: int, process_id: int) -> int:
+def _child_jax_setup():
     import jax
 
     # Cross-process CPU collectives need the gloo TCP backend (the
-    # launcher also sets JAX_CPU_COLLECTIVES_IMPLEMENTATION for jax
-    # versions that read the env var instead).
+    # backend constructor also selects it; doing it here too keeps the
+    # setup explicit for jax versions that read the env var instead).
     try:
         jax.config.update("jax_cpu_collectives_implementation", "gloo")
     except AttributeError:  # pragma: no cover - very old/new jax
         pass
     jax.config.update("jax_enable_x64", True)
+    return jax
+
+
+def _time_per_iter(be, op, b, sig, l, iters=(20, 60), repeats=5):
+    """Measured seconds/iteration on a live backend: two fixed budgets
+    (tol=0 disables early exit), differenced to cancel init/launch
+    overhead, min over ``repeats`` (launch.autotune.measured_runner's
+    policy)."""
+    import time
+
+    import jax
+
+    def run(maxit):
+        solver = be.make_solver(op, "plcg", None, l=l, sigmas=sig,
+                                tol=0.0, maxit=maxit)
+        jax.block_until_ready(solver(b).x)          # compile + warmup
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            jax.block_until_ready(solver(b).x)
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    lo, hi = iters
+    t_lo, t_hi = run(lo), run(hi)
+    if t_hi <= t_lo:
+        return t_hi / hi
+    return (t_hi - t_lo) / (hi - lo)
+
+
+def child(coordinator: str, num_processes: int, process_id: int) -> int:
+    jax = _child_jax_setup()
+    import warnings
+
     import jax.numpy as jnp
     import numpy as np
 
     from repro.core.chebyshev import shifts_for_operator
     from repro.linalg import Stencil2D5, random_fem_mesh, rcm_reorder
+    from repro.obs.metrics import default_registry
     from repro.parallel import get_backend
+    from repro.parallel.reduction import ReductionFallbackWarning
+    from repro.utils.trace import plcg_overlap_report
 
     be = get_backend(
         "multiprocess",
@@ -106,19 +155,15 @@ def child(coordinator: str, num_processes: int, process_id: int) -> int:
                   f"{int(res_m.iters)} vs local {int(res_l.iters)}, "
                   f"max|dh|/norm0 {diff.max():.2e}", flush=True)
 
-    # ---- staged-reduction capability fallback (DESIGN.md §14) -----------
-    # Request the staged ring ladder across the real process boundary:
-    # the backend must flag the downgrade and run the monolithic psum —
-    # bitwise-identical histories to the plain multiprocess backend
-    # (same mesh, same arithmetic; only the requested wire path differs).
+    # ---- staged hop ladder across the real process boundary (§17) -------
+    # The ladder must RUN — no capability downgrade, no warning, gauge
+    # pinned 0 — with tagged per-hop permutes as the only dot-block wire
+    # traffic and histories bitwise vs the single-device virtual-shards
+    # ladder oracle (same ring size, same rank-ordered combine).
     op = Stencil2D5(32, 24)
     b = jnp.asarray(np.random.default_rng(7).standard_normal(op.n))
     sig = shifts_for_operator(op, 2)
-    import warnings
-
-    from repro.obs.metrics import default_registry
-    from repro.parallel.reduction import ReductionFallbackWarning
-
+    stages = 2
     with warnings.catch_warnings(record=True) as caught:
         warnings.simplefilter("always")
         be_staged = get_backend(
@@ -127,28 +172,60 @@ def child(coordinator: str, num_processes: int, process_id: int) -> int:
             num_processes=num_processes,
             process_id=process_id,
             reduction="staged",
-            reduction_dtype=jnp.float32,
+            reduction_stages=stages,
         )
-    assert not type(be_staged).supports_staged_reduction
-    assert be_staged.reduction_mode == "monolithic", be_staged.reduction_mode
-    assert be_staged.reduction_fallback, "fallback reason must be recorded"
-    assert be_staged.reduction_cfg is None
-    # The downgrade must be LOUD (DESIGN.md §16): a structured warning
-    # at construction plus a gauge on the default metrics registry.
-    assert any(isinstance(w.message, ReductionFallbackWarning)
-               for w in caught), [str(w.message) for w in caught]
+    assert type(be_staged).supports_staged_reduction
+    assert be_staged.reduction_mode == "staged", be_staged.reduction_mode
+    assert be_staged.reduction_fallback is None
+    assert be_staged.reduction_cfg is not None
+    assert not any(isinstance(w.message, ReductionFallbackWarning)
+                   for w in caught), [str(w.message) for w in caught]
     g = default_registry().get("backend_reduction_fallback")
     assert g is not None
-    assert g.value(labels={"backend": "multiprocess"}) == 1.0
+    assert g.value(labels={"backend": "multiprocess"}) == 0.0
+    assert be_staged.cross_process_edges() == num_processes
+    assert be_staged.hop_wire() == "gloo", be_staged.hop_wire()
+
     kw = dict(method="plcg", l=2, sigmas=sig, tol=1e-8, maxit=800)
     res_s = be_staged.solve(op, b, **kw)
-    res_m = be.solve(op, b, **kw)
-    hs, hm2 = np.asarray(res_s.res_history), np.asarray(res_m.res_history)
-    assert np.array_equal(hs, hm2), np.abs(hs - hm2).max()
+    oracle = get_backend("local", reduction="staged",
+                         virtual_shards=n_dev, reduction_stages=stages)
+    res_o = oracle.solve(op, b, **kw)
+    hs, ho = np.asarray(res_s.res_history), np.asarray(res_o.res_history)
+    assert np.array_equal(hs, ho), np.abs(hs - ho).max()
     assert bool(res_s.converged)
-    print(f"[p{process_id}] staged request -> monolithic fallback "
-          f"(flagged: {be_staged.reduction_fallback!r}), history bitwise "
-          f"vs monolithic", flush=True)
+
+    # fp32 wire payload: both sides round at the start site and Kahan-
+    # accumulate at the wait, so cross-process stays bitwise vs the
+    # fp32-wire oracle too.
+    be_32 = get_backend(
+        "multiprocess", coordinator_address=coordinator,
+        num_processes=num_processes, process_id=process_id,
+        reduction="staged", reduction_stages=stages,
+        reduction_dtype=jnp.float32)
+    or_32 = get_backend("local", reduction="staged", virtual_shards=n_dev,
+                        reduction_stages=stages,
+                        reduction_dtype=jnp.float32)
+    h32s = np.asarray(be_32.solve(op, b, **kw).res_history)
+    h32o = np.asarray(or_32.solve(op, b, **kw).res_history)
+    assert np.array_equal(h32s, h32o), np.abs(h32s - h32o).max()
+
+    # Compiled staged solve: ZERO dot-block all-reduces on the wire —
+    # only tagged hop permutes, one logical start per window.
+    bspec = jax.ShapeDtypeStruct((op.n,), jnp.float64)
+    rep = plcg_overlap_report(be_staged, op, bspec, l=2, window=4,
+                              sigmas=sig)
+    assert rep.n_collectives == 0, rep.n_collectives
+    assert min(rep.reduce_hops_per_window.values()) >= 1, \
+        rep.reduce_hops_per_window
+    assert max(rep.staged_starts_per_window.values()) == 1, \
+        rep.staged_starts_per_window
+    print(f"[p{process_id}] staged ladder CROSS-PROCESS: bitwise vs "
+          f"virtual-shards oracle (fp64 + fp32 wire), 0 dot-block "
+          f"all-reduces, hops/window "
+          f"{dict(rep.reduce_hops_per_window)}, "
+          f"{be_staged.cross_process_edges()} cross-process edge(s)/hop "
+          f"over {be_staged.hop_wire()}", flush=True)
 
     # ---- instrumented cross-process solve + timeline export (§16) -------
     # Every process runs the SAME instrumented solve (telemetry values
@@ -170,6 +247,7 @@ def child(coordinator: str, num_processes: int, process_id: int) -> int:
     tl.meta["parity"] = {
         "process_id": process_id, "num_processes": num_processes,
         "backend": be.name, "reduction_mode": be.reduction_mode,
+        "staged_wire": be_staged.hop_wire(),
     }
     path = tl.save(f"TIMELINE_parity_proc{process_id}.json")
     print(f"[p{process_id}] timeline -> {path}", flush=True)
@@ -178,8 +256,101 @@ def child(coordinator: str, num_processes: int, process_id: int) -> int:
     return 0
 
 
-def launch(num_processes: int, devices_per_process: int) -> int:
-    coordinator = f"127.0.0.1:{free_port()}"
+def study_child(coordinator: str, num_processes: int, process_id: int,
+                args) -> int:
+    """One rank of one strong-scaling point: measure staged vs monolithic
+    seconds/iteration at fixed n, assert ladder parity, extract the
+    compiled hop/halo schedule, optionally export this rank's timeline."""
+    jax = _child_jax_setup()
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.chebyshev import shifts_for_operator
+    from repro.linalg import Stencil2D5
+    from repro.parallel import get_backend
+    from repro.utils.trace import plcg_overlap_report
+
+    kw_be = dict(coordinator_address=coordinator,
+                 num_processes=num_processes, process_id=process_id)
+    be_mono = get_backend("multiprocess", **kw_be)
+    n_dev = be_mono.n_shards
+    stages = max(1, min(args.stages, max(n_dev - 1, 1)))
+    be_staged = get_backend("multiprocess", **kw_be, reduction="staged",
+                            reduction_stages=stages)
+    assert be_staged.reduction_mode == "staged"
+
+    op = Stencil2D5(args.nx, args.ny)
+    l = args.l
+    sig = shifts_for_operator(op, l)
+    b = jnp.asarray(np.random.default_rng(7).standard_normal(op.n))
+    budgets = (args.budget_lo, args.budget_hi)
+
+    t_mono = _time_per_iter(be_mono, op, b, sig, l, iters=budgets,
+                            repeats=args.repeats)
+    t_staged = _time_per_iter(be_staged, op, b, sig, l, iters=budgets,
+                              repeats=args.repeats)
+
+    # Bitwise ladder parity vs the single-device virtual-shards oracle.
+    kw = dict(method="plcg", l=l, sigmas=sig, tol=1e-8, maxit=1200)
+    res_s = be_staged.solve(op, b, **kw)
+    oracle = get_backend("local", reduction="staged",
+                         virtual_shards=n_dev, reduction_stages=stages)
+    res_o = oracle.solve(op, b, **kw)
+    hs, ho = np.asarray(res_s.res_history), np.asarray(res_o.res_history)
+    parity_bitwise = bool(np.array_equal(hs, ho))
+
+    # Compiled staged schedule: the structural columns of the study.
+    bspec = jax.ShapeDtypeStruct((op.n,), jnp.float64)
+    rep = plcg_overlap_report(be_staged, op, bspec, l=l, window=l + 2,
+                              sigmas=sig)
+
+    if args.emit_timelines:
+        # Per-rank hop/halo staggering timeline via the §16 exporter:
+        # measured host spans + the compiled schedule track (reduction
+        # windows vs ladder hops vs halo permutes) + the telemetry ring.
+        from repro.obs.timeline import solve_timeline
+
+        tl, _res = solve_timeline(be_staged, op, b, l=l, sigmas=sig,
+                                  telemetry_cap=128, tol=1e-8, maxit=1200)
+        tl.meta["scaling_study"] = {
+            "process_id": process_id, "num_processes": num_processes,
+            "n": int(op.n), "stages": stages,
+            "wire": be_staged.hop_wire(),
+            "cross_process_edges": be_staged.cross_process_edges(),
+        }
+        path = tl.save(f"TIMELINE_scaling_proc{process_id}.json")
+        print(f"[p{process_id}] timeline -> {path}", flush=True)
+
+    row = {
+        "procs": num_processes,
+        "devices": n_dev,
+        "stages": stages,
+        "staged_iter_time_s": t_staged,
+        "monolithic_iter_time_s": t_mono,
+        "staged_over_monolithic": t_staged / t_mono,
+        "parity_bitwise": parity_bitwise,
+        "staged_allreduces": rep.n_collectives,
+        # P=1 has a hopless ladder (0-hop ring): empty window dicts.
+        "hops_per_window_min": min(rep.reduce_hops_per_window.values(),
+                                   default=0),
+        "staged_starts_per_window_max":
+            max(rep.staged_starts_per_window.values(), default=0),
+        "iters_staged": int(res_s.iters),
+        "iters_oracle": int(res_o.iters),
+        "wire": be_staged.hop_wire(),
+        "cross_process_edges": be_staged.cross_process_edges(),
+    }
+    if process_id == 0:
+        print(STUDY_MARKER + json.dumps(row), flush=True)
+    print(f"[p{process_id}] P={num_processes} staged "
+          f"{t_staged * 1e6:.0f}us/iter vs mono {t_mono * 1e6:.0f}us/iter "
+          f"(x{t_staged / t_mono:.2f}), parity_bitwise={parity_bitwise}, "
+          f"allreduces={rep.n_collectives}", flush=True)
+    print(f"[p{process_id}] SCALING-OK", flush=True)
+    return 0
+
+
+def _fabric_env(devices_per_process: int) -> dict:
     env = dict(
         os.environ,
         XLA_FLAGS=f"--xla_force_host_platform_device_count="
@@ -188,35 +359,118 @@ def launch(num_processes: int, devices_per_process: int) -> int:
         JAX_CPU_COLLECTIVES_IMPLEMENTATION="gloo",
     )
     env.setdefault("PYTHONPATH", "src")
-    procs = [
-        subprocess.Popen(
-            [sys.executable, os.path.abspath(__file__),
-             "--coordinator", coordinator,
-             "--num-processes", str(num_processes),
-             "--process-id", str(k)],
-            env=env, stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
-            text=True,
-        )
-        for k in range(num_processes)
-    ]
-    outs = []
-    code = 0
-    for k, p in enumerate(procs):
-        try:
-            out, _ = p.communicate(timeout=900)
-        except subprocess.TimeoutExpired:
-            p.kill()
-            out, _ = p.communicate()
-            out += "\n[launcher] TIMEOUT"
-        outs.append(out)
-        code |= p.returncode if p.returncode is not None else 1
+    return env
+
+
+def launch(num_processes: int, devices_per_process: int) -> int:
+    """Default parity mode: one fabric, assert every rank's OK marker."""
+    try:
+        res = launch_fabric(
+            lambda coord, k: [sys.executable, os.path.abspath(__file__),
+                              "--coordinator", coord,
+                              "--num-processes", str(num_processes),
+                              "--process-id", str(k)],
+            num_processes, env=_fabric_env(devices_per_process),
+            timeout_s=900)
+    except FabricError as e:
+        print(f"[launcher] FAILED: {e}")
+        return 1
+    for out in res.outputs:
         sys.stdout.write(out)
-    if code == 0 and all("MULTIPROC-PARITY-OK" in o for o in outs):
+    if all("MULTIPROC-PARITY-OK" in o for o in res.outputs):
         print(f"[launcher] {num_processes} processes x "
-              f"{devices_per_process} devices: PARITY OK")
+              f"{devices_per_process} devices: PARITY OK "
+              f"(coordinator {res.coordinator}, attempt {res.attempts})")
         return 0
     print("[launcher] FAILED")
     return 1
+
+
+def study(args) -> int:
+    """Strong-scaling sweep: fixed n, 1..N processes, staged vs
+    monolithic, aggregated into the gated ``BENCH_scaling.json``."""
+    procs_list = [int(p) for p in args.procs.split(",")]
+    rows = []
+    for p in procs_list:
+        try:
+            res = launch_fabric(
+                lambda coord, k, _p=p: [
+                    sys.executable, os.path.abspath(__file__),
+                    "--coordinator", coord,
+                    "--num-processes", str(_p),
+                    "--process-id", str(k),
+                    "--study-child",
+                    "--nx", str(args.nx), "--ny", str(args.ny),
+                    "--l", str(args.l), "--stages", str(args.stages),
+                    "--repeats", str(args.repeats),
+                    "--budget-lo", str(args.budget_lo),
+                    "--budget-hi", str(args.budget_hi),
+                ] + (["--emit-timelines"] if _p == max(procs_list) else []),
+                p, env=_fabric_env(args.devices_per_process),
+                timeout_s=args.timeout)
+        except FabricError as e:
+            print(f"[study] P={p} FAILED: {e}")
+            return 1
+        for out in res.outputs:
+            sys.stdout.write(out)
+        if not all("SCALING-OK" in o for o in res.outputs):
+            print(f"[study] P={p} FAILED (missing rank OK marker)")
+            return 1
+        frag = [ln for ln in res.outputs[0].splitlines()
+                if ln.startswith(STUDY_MARKER)]
+        assert frag, "study child emitted no row"
+        rows.append(json.loads(frag[-1][len(STUDY_MARKER):]))
+        print(f"[study] P={p} done (coordinator {res.coordinator}, "
+              f"attempt {res.attempts})")
+
+    n = args.nx * args.ny
+    multi = [r for r in rows if r["procs"] >= 2]
+    payload = {
+        "study": {
+            "n": n, "nx": args.nx, "ny": args.ny, "l": args.l,
+            "stages_requested": args.stages,
+            "procs": procs_list,
+            "devices_per_process": args.devices_per_process,
+            "repeats": args.repeats,
+            "iter_budgets": [args.budget_lo, args.budget_hi],
+            "wall_clock_basis": (
+                "compiled XLA CPU ranks over gloo TCP loopback; "
+                "strong scaling at fixed n — NOT the paper's Cori "
+                "fabric (see DESIGN.md §17 for what is and is not "
+                "comparable)"),
+        },
+        "rows": rows,
+        # Gated structural columns (deterministic on any machine):
+        "scaling_parity_bitwise": int(all(r["parity_bitwise"]
+                                          for r in rows)),
+        "scaling_staged_allreduces_max": max(r["staged_allreduces"]
+                                             for r in rows),
+        "scaling_hops_per_window_min": min(
+            (r["hops_per_window_min"] for r in multi), default=0),
+        "scaling_staged_starts_max": max(
+            (r["staged_starts_per_window_max"] for r in rows), default=0),
+    }
+    t1 = next((r for r in rows if r["procs"] == 1), None)
+    for r in rows:
+        p = r["procs"]
+        payload[f"staged_iter_time_p{p}_s"] = r["staged_iter_time_s"]
+        payload[f"monolithic_iter_time_p{p}_s"] = r["monolithic_iter_time_s"]
+        if p >= 2:
+            payload[f"staged_over_monolithic_p{p}"] = \
+                r["staged_over_monolithic"]
+        if t1 is not None:
+            payload[f"staged_speedup_p{p}"] = \
+                t1["staged_iter_time_s"] / r["staged_iter_time_s"]
+            payload[f"monolithic_speedup_p{p}"] = \
+                t1["monolithic_iter_time_s"] / r["monolithic_iter_time_s"]
+    for k, v in payload.items():
+        if k not in ("rows", "study"):
+            print(f"{k}: {v}")
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out}")
+    return 0
 
 
 def main(argv=None) -> int:
@@ -224,10 +478,35 @@ def main(argv=None) -> int:
     ap.add_argument("--coordinator", type=str, default=None)
     ap.add_argument("--num-processes", type=int, default=2)
     ap.add_argument("--process-id", type=int, default=None)
-    ap.add_argument("--devices-per-process", type=int, default=4)
+    ap.add_argument("--devices-per-process", type=int, default=None)
+    # ---- scaling study ----
+    ap.add_argument("--study", action="store_true",
+                    help="run the strong-scaling study (launcher mode)")
+    ap.add_argument("--study-child", action="store_true")
+    ap.add_argument("--procs", type=str, default="1,2,4",
+                    help="comma-separated process counts for --study")
+    ap.add_argument("--nx", type=int, default=96)
+    ap.add_argument("--ny", type=int, default=64)
+    ap.add_argument("--l", type=int, default=2)
+    ap.add_argument("--stages", type=int, default=2)
+    ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--budget-lo", type=int, default=20)
+    ap.add_argument("--budget-hi", type=int, default=60)
+    ap.add_argument("--timeout", type=float, default=900.0)
+    ap.add_argument("--emit-timelines", action="store_true")
+    ap.add_argument("--out", type=str, default="BENCH_scaling.json")
     args = ap.parse_args(argv)
+    if args.study:
+        if args.devices_per_process is None:
+            args.devices_per_process = 1     # P ranks == P shards
+        return study(args)
+    if args.devices_per_process is None:
+        args.devices_per_process = 4
     if args.process_id is None:
         return launch(args.num_processes, args.devices_per_process)
+    if args.study_child:
+        return study_child(args.coordinator, args.num_processes,
+                           args.process_id, args)
     return child(args.coordinator, args.num_processes, args.process_id)
 
 

@@ -55,11 +55,11 @@ if os.path.isdir(os.path.join(_ROOT, "benchmarks")) and _ROOT not in sys.path:
 try:
     from benchmarks.schedule_sim import iteration_time, reduction_samples
     from benchmarks.timing_model import (CORI, HWProfile, ring_hop_time,
-                                         stencil_kernel_times)
+                                         stencil_kernel_times, tree_depth)
     _BENCH_IMPORT_ERROR = None
 except ImportError as _e:               # pragma: no cover - installed tree
     iteration_time = stencil_kernel_times = ring_hop_time = None
-    reduction_samples = None
+    reduction_samples = tree_depth = None
     CORI, HWProfile = None, object
     _BENCH_IMPORT_ERROR = _e
 
@@ -222,6 +222,83 @@ def staged_reduction_terms(hw: HWProfile, p: int, l: int, stages: int,
         "t_wait_stall": wait_steps * group_hops * t_hop,
         "fill_iters": stages + 1,
     }
+
+
+def recalibrate_profile(
+    hw: HWProfile,
+    iter_payload: dict | None = None,
+    spmv_payload: dict | None = None,
+    reduce_payload: dict | None = None,
+) -> HWProfile:
+    """Replace an :class:`HWProfile`'s stream/latency terms with numbers
+    MEASURED by the compiled bench lane (DESIGN.md §17): the payloads are
+    the parsed ``BENCH_iter_compiled.json`` / ``BENCH_spmv_compiled.json``
+    / ``BENCH_reduce_compiled.json`` emitted by
+    ``benchmarks.* --kernel-mode compiled`` on a real accelerator.
+
+    * ``iter_payload``  → ``mem_bw``: the fused superkernel's one-pass
+      HBM bytes over its compiled wall clock — the achieved (not
+      datasheet) stream rate the body model divides by.
+    * ``spmv_payload``  → ``flop_rate``: 2*nnz FLOPs over the compiled
+      ELL kernel's wall clock (the gather-bound achieved rate).
+    * ``reduce_payload`` → ``alpha_hop`` / ``alpha``: the measured
+      single-hop ppermute and monolithic psum wall clocks, with the
+      payload wire term backed out so ``ring_hop_time`` /
+      ``alpha * tree_depth`` reproduce the measurements.
+
+    kernel-mode honesty is ENFORCED, not assumed: a payload whose
+    ``skipped`` flag is set (the compiled lane's machine-readable refusal
+    on CPU-only containers, ``benchmarks.lane``) or whose ``kernel_mode``
+    is not ``"compiled"`` raises — interpreter wall clocks must never
+    recalibrate an accelerator profile.  Fields without a payload keep
+    the profile's analytic values; the returned profile is renamed
+    ``<name>+measured`` so downstream tables show which numbers are live.
+    """
+    _require_timing_model()
+
+    def usable(payload, name):
+        if payload is None:
+            return None
+        if payload.get("skipped"):
+            raise ValueError(
+                f"{name} payload is a skip marker, not measurements "
+                f"({payload.get('reason', 'no reason recorded')}) — "
+                "recalibration needs the compiled lane's numbers")
+        if payload.get("kernel_mode") != "compiled":
+            raise ValueError(
+                f"{name} payload has kernel_mode="
+                f"{payload.get('kernel_mode')!r}: interpret-lane wall "
+                "clocks time the Pallas interpreter / simulated mesh, "
+                "not the hardware — run --kernel-mode compiled on an "
+                "accelerator")
+        return payload
+
+    updates: dict = {}
+    it = usable(iter_payload, "iter_bench")
+    if it is not None:
+        if not it.get("fused_wall_time_comparable"):
+            raise ValueError(
+                "iter_bench payload carries no comparable fused wall "
+                "clock (fused_wall_time_comparable is false)")
+        updates["mem_bw"] = (it["fused_bytes_per_iter"]
+                             / it["fused_time_per_iter_s"])
+    sp = usable(spmv_payload, "spmv_bench")
+    if sp is not None:
+        updates["flop_rate"] = (2.0 * sp["problem"]["nnz"]
+                                / sp["kernel_spmv_s"])
+    rd = usable(reduce_payload, "reduce_bench")
+    if rd is not None:
+        payload_bytes = rd.get("staged_hop_payload_bytes_fp64", 0)
+        wire = payload_bytes / hw.link_bw
+        updates["alpha_hop"] = max(
+            rd["measured_hop_time_s"] - wire, 1e-9)
+        depth = tree_depth(hw, rd.get("mesh_devices", 2))
+        updates["alpha"] = max(
+            (rd["measured_allreduce_time_s"] - wire) / max(depth, 1),
+            1e-9)
+    if not updates:
+        return hw
+    return dataclasses.replace(hw, name=f"{hw.name}+measured", **updates)
 
 
 def xla_effective_depth(l: int, unroll: int) -> int:

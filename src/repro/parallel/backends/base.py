@@ -46,14 +46,15 @@ class ReductionBackend(abc.ABC):
 
     name: ClassVar[str]
 
-    # Capability flag (DESIGN.md §14): whether this substrate can run the
-    # dot block as the staged ring-reduction ladder
+    # Capability flag (DESIGN.md §14/§17): whether this substrate can run
+    # the dot block as the staged ring-reduction ladder
     # (``repro.parallel.reduction``) — tagged ppermute hops the solver
-    # advances.  Backends that cannot (the gloo-collectives multiprocess
-    # substrate) accept ``reduction="staged"`` but DOWNGRADE to the
-    # monolithic psum, recording the request in ``reduction_fallback`` so
-    # callers can assert which wire path actually ran
-    # (scripts/multiprocess_parity.py does).
+    # advances.  Every in-tree backend supports it (multiprocess runs the
+    # ladder over real process boundaries since DESIGN.md §17); an
+    # out-of-tree backend that cannot may set this False to accept
+    # ``reduction="staged"`` but DOWNGRADE to the monolithic psum,
+    # recording the request in ``reduction_fallback`` so callers can
+    # assert which wire path actually ran.
     supports_staged_reduction: ClassVar[bool] = True
     # Instance attributes set by constructors: the reduction mode that
     # actually runs, and why it differs from the request (or None).

@@ -1,0 +1,196 @@
+"""Multi-node fabric launcher: typed process-group life cycle for
+``jax.distributed`` jobs (DESIGN.md §17).
+
+The multiprocess backend (``repro.parallel.backends.multiprocess``) is a
+*multi-controller* substrate: every rank runs the same program and the
+collectives — the staged hop ladder's tagged ppermutes included — block
+until every peer participates.  That SPMD discipline has two failure
+modes a CI fabric must convert into clean errors instead of hangs:
+
+* **coordinator port collision** — ``jax.distributed.initialize`` binds
+  a fixed TCP port; two jobs racing for the same port (parallel CI
+  shards) make one of them die at startup.  :func:`launch_fabric`
+  allocates a fresh ephemeral port per attempt and RETRIES the whole
+  group when a child's output shows a bind failure.
+* **peer death** — a rank that dies mid-solve leaves every other rank
+  blocked inside a gloo/NCCL collective with no timeout of its own.
+  The launcher polls the group; the moment any child exits nonzero it
+  kills the survivors and raises :class:`FabricProcessError` (or
+  :class:`FabricTimeoutError` when the wall-clock budget runs out) —
+  the kill-one-process test in tests/test_fabric.py asserts the error
+  arrives in seconds, not at the collective's 900 s budget.
+
+The module is pure host-side process plumbing (subprocess + sockets, no
+jax import) so it stays importable — and testable — on any container.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import socket
+import subprocess
+import time
+from typing import Callable, Sequence
+
+# Output fragments that identify a coordinator bind collision — the one
+# startup failure that is retryable by construction (fresh port, same
+# program).  Matched case-insensitively against a dead child's output.
+BIND_COLLISION_MARKERS = (
+    "address already in use",
+    "failed to bind",
+    "errno: 98",
+    "bind address",
+)
+
+
+class FabricError(RuntimeError):
+    """Base class for multi-process fabric failures."""
+
+
+class FabricTimeoutError(FabricError):
+    """The process group exceeded its wall-clock budget: at least one
+    rank was still running (typically blocked inside a collective whose
+    peer never arrived) when the launcher's watchdog fired.  Survivors
+    are killed before this is raised — no orphan ranks."""
+
+
+class FabricProcessError(FabricError):
+    """A rank exited nonzero (or was killed) while its peers were still
+    running.  The launcher kills the survivors — who would otherwise
+    hang in their next collective waiting for the dead peer — and
+    reports which rank failed plus the tail of every rank's output."""
+
+
+@dataclasses.dataclass
+class FabricResult:
+    """Outputs of one successful fabric run."""
+
+    outputs: list[str]            # per-rank combined stdout/stderr
+    coordinator: str              # "host:port" the group actually used
+    attempts: int                 # 1 + bind-collision retries
+
+
+def free_port(host: str = "127.0.0.1") -> int:
+    """One ephemeral port, currently free.  Inherently racy — another
+    process may claim it before the coordinator binds — which is why
+    :func:`launch_fabric` retries bind collisions instead of trusting
+    this value."""
+    with socket.socket() as s:
+        s.bind((host, 0))
+        return s.getsockname()[1]
+
+
+def pick_coordinator(host: str = "127.0.0.1") -> str:
+    return f"{host}:{free_port(host)}"
+
+
+def _tail(text: str, n: int = 2000) -> str:
+    return text[-n:] if len(text) > n else text
+
+
+def _kill_all(procs: Sequence[subprocess.Popen]) -> list[str]:
+    """Kill survivors and drain outputs.  Idempotent: the launcher's
+    ``finally`` re-runs it after the error paths already have."""
+    outs = []
+    for p in procs:
+        if p.poll() is None:
+            p.kill()
+        try:
+            out, _ = p.communicate(timeout=30)
+        except (subprocess.TimeoutExpired, ValueError, OSError):
+            out = ""                # already drained / stream closed
+        outs.append(out or "")
+    return outs
+
+
+def _looks_like_bind_collision(output: str) -> bool:
+    low = output.lower()
+    return any(m in low for m in BIND_COLLISION_MARKERS)
+
+
+def launch_fabric(
+    child_argv: Callable[[str, int], list[str]],
+    num_processes: int,
+    *,
+    env: dict | None = None,
+    timeout_s: float = 900.0,
+    poll_s: float = 0.2,
+    max_port_retries: int = 3,
+    host: str = "127.0.0.1",
+) -> FabricResult:
+    """Run one multi-controller process group to completion.
+
+    ``child_argv(coordinator, process_id)`` builds rank k's argv; every
+    rank is spawned with the same ``env`` (stdout+stderr merged, text
+    mode).  The launcher then supervises:
+
+    * all ranks exit 0 → :class:`FabricResult` with per-rank outputs;
+    * any rank exits nonzero → survivors killed; if the dead rank's
+      output shows a coordinator bind collision
+      (``BIND_COLLISION_MARKERS``) the whole group relaunches on a
+      fresh port, up to ``max_port_retries`` times; otherwise
+      :class:`FabricProcessError`;
+    * ``timeout_s`` elapses → survivors killed, :class:`FabricTimeoutError`.
+
+    The watchdog property under test in tests/test_fabric.py: killing
+    one rank mid-run produces a typed error within ~``poll_s`` of the
+    death, never a hang at the full ``timeout_s``.
+    """
+    if num_processes < 1:
+        raise ValueError(f"num_processes must be >= 1, got {num_processes}")
+    last_outputs: list[str] = []
+    for attempt in range(1, max_port_retries + 2):
+        coordinator = pick_coordinator(host)
+        procs = [
+            subprocess.Popen(
+                child_argv(coordinator, k), env=env,
+                stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
+            )
+            for k in range(num_processes)
+        ]
+        deadline = time.monotonic() + timeout_s
+        try:
+            while True:
+                codes = [p.poll() for p in procs]
+                if all(c == 0 for c in codes):
+                    outs = [p.communicate()[0] or "" for p in procs]
+                    return FabricResult(outputs=outs,
+                                        coordinator=coordinator,
+                                        attempts=attempt)
+                dead = [(k, c) for k, c in enumerate(codes)
+                        if c is not None and c != 0]
+                if dead:
+                    outs = _kill_all(procs)
+                    last_outputs = outs
+                    k0, c0 = dead[0]
+                    if _looks_like_bind_collision(outs[k0]):
+                        # Relaunch the group on a fresh port; when this
+                        # was the last allowed attempt the for-loop ends
+                        # and the persisted-collision error below fires.
+                        break
+                    detail = "\n".join(
+                        f"--- rank {k} (exit {p.poll()}) ---\n"
+                        f"{_tail(outs[k])}"
+                        for k, p in enumerate(procs))
+                    raise FabricProcessError(
+                        f"rank {k0} of {num_processes} exited {c0} while "
+                        f"peers were running (coordinator {coordinator}); "
+                        f"survivors killed to avoid a collective hang\n"
+                        f"{detail}")
+                if time.monotonic() > deadline:
+                    outs = _kill_all(procs)
+                    running = [k for k, c in enumerate(codes) if c is None]
+                    raise FabricTimeoutError(
+                        f"fabric of {num_processes} rank(s) exceeded "
+                        f"{timeout_s:.0f}s (ranks {running} still running, "
+                        f"coordinator {coordinator}); group killed\n"
+                        + "\n".join(f"--- rank {k} ---\n{_tail(o)}"
+                                    for k, o in enumerate(outs)))
+                time.sleep(poll_s)
+        finally:
+            _kill_all(procs)
+    raise FabricProcessError(
+        f"coordinator bind collision persisted through "
+        f"{max_port_retries} port retries\n"
+        + "\n".join(f"--- rank {k} ---\n{_tail(o)}"
+                    for k, o in enumerate(last_outputs)))

@@ -354,11 +354,14 @@ def resolve_backend_reduction(backend, reduction: str, stages: int,
             f"unknown reduction mode {reduction!r} "
             "(want 'monolithic' or 'staged')")
     if not type(backend).supports_staged_reduction:
-        # Explicit capability fallback (gloo multiprocess): the request
-        # is honoured arithmetically by the monolithic psum; the flag
-        # records that no ladder ran — surfaced three ways (attribute,
-        # structured warning, default-registry gauge) so it cannot pass
-        # unnoticed in a scaling study (DESIGN.md §16).
+        # Explicit capability fallback: the request is honoured
+        # arithmetically by the monolithic psum; the flag records that
+        # no ladder ran — surfaced three ways (attribute, structured
+        # warning, default-registry gauge) so it cannot pass unnoticed
+        # in a scaling study (DESIGN.md §16).  No in-tree backend
+        # declines any more — multiprocess runs the ladder over real
+        # process boundaries since DESIGN.md §17 — but the policy stays
+        # for out-of-tree backends registered via register_backend.
         backend.reduction_mode = "monolithic"
         backend.reduction_fallback = (
             f"backend {backend.name!r} does not support the staged "
@@ -374,6 +377,14 @@ def resolve_backend_reduction(backend, reduction: str, stages: int,
         return None
     backend.reduction_mode = "staged"
     backend.reduction_fallback = None
+    # Pin the gauge at 0 for granted requests: "no fallback happened" is
+    # an asserted invariant of the cross-process fabric (DESIGN.md §17,
+    # tests/test_fabric.py), so it must be observable, not just absent.
+    from repro.obs.metrics import default_registry
+    default_registry().gauge(
+        "backend_reduction_fallback",
+        "1 = staged reduction request downgraded to monolithic",
+        label_names=("backend",)).labels(backend=backend.name).set(0)
     n_shards = max(n_shards, 1)
     stages = max(1, min(stages, max(n_shards - 1, 1)))
     return StagedConfig(n_shards=n_shards, stages=stages,

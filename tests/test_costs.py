@@ -274,3 +274,48 @@ def test_schedule_sim_limits():
     # classic CG: spmv + 2 glred
     tcg = iteration_time("cg", 0, k, n_iters=500)
     assert abs(tcg - (10e-6 + 1200e-6)) / 1210e-6 < 0.05
+
+
+def test_recalibrate_profile_from_compiled_lane():
+    """ISSUE 8: the compiled bench lane's payloads replace the profile's
+    analytic stream/latency terms — and interpret/skip payloads are
+    REJECTED, so interpreter wall clocks can never recalibrate an
+    accelerator profile."""
+    import pytest
+
+    from benchmarks.timing_model import CORI, ring_hop_time, tree_depth
+    from repro.launch.autotune import recalibrate_profile
+
+    it = {"kernel_mode": "compiled", "fused_wall_time_comparable": True,
+          "fused_bytes_per_iter": 8.0e6, "fused_time_per_iter_s": 1e-5}
+    sp = {"kernel_mode": "compiled", "problem": {"nnz": 50_000},
+          "kernel_spmv_s": 2e-6}
+    rd = {"kernel_mode": "compiled", "mesh_devices": 8,
+          "staged_hop_payload_bytes_fp64": 40,
+          "measured_hop_time_s": 3e-6, "measured_allreduce_time_s": 9e-6}
+    hw = recalibrate_profile(CORI, it, sp, rd)
+    assert hw.name == "cori-haswell+measured"
+    assert abs(hw.mem_bw - 8.0e6 / 1e-5) < 1.0
+    assert abs(hw.flop_rate - 2.0 * 50_000 / 2e-6) < 1.0
+    # The measured primitives must be reproduced by the model they feed:
+    # ring_hop_time gives back the hop measurement, the monolithic glred
+    # latency term gives back the psum measurement.
+    assert abs(ring_hop_time(hw, 40) - 3e-6) < 1e-12
+    assert abs(hw.alpha * tree_depth(hw, 8) + 40 / hw.link_bw
+               - 9e-6) < 1e-10
+    # Untouched fields inherit (no payload for link_bw).
+    assert hw.link_bw == CORI.link_bw
+
+    # Rejections: skip marker, interpret lane, no comparable wall clock.
+    with pytest.raises(ValueError, match="skip marker"):
+        recalibrate_profile(CORI, iter_payload={
+            "skipped": True, "reason": "no accelerator"})
+    with pytest.raises(ValueError, match="kernel_mode='interpret'"):
+        recalibrate_profile(CORI, spmv_payload={
+            "kernel_mode": "interpret", "problem": {"nnz": 1},
+            "kernel_spmv_s": 1.0})
+    with pytest.raises(ValueError, match="comparable fused wall clock"):
+        recalibrate_profile(CORI, iter_payload={
+            "kernel_mode": "compiled", "fused_wall_time_comparable": False})
+    # No payloads -> the profile passes through untouched.
+    assert recalibrate_profile(CORI) is CORI

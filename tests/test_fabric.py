@@ -1,0 +1,178 @@
+"""Multi-node fabric launcher + multiprocess staged-capability tests
+(DESIGN.md §17).
+
+Two layers, both tier-1 (no RUN_MULTIPROCESS gate):
+
+* ``repro.parallel.fabric`` — pure host-side process plumbing, tested
+  with throwaway ``python -c`` children so every case runs in seconds:
+  clean success, a rank dying mid-run (typed error, survivors killed —
+  NOT a hang at the collective's timeout), the wall-clock watchdog, and
+  the coordinator-port bind-collision retry.
+* the PR 8 fallback removal — ``multiprocess`` now RUNS the staged hop
+  ladder instead of downgrading it: capability flag True, no
+  ``ReductionFallbackWarning``, the ``backend_reduction_fallback`` gauge
+  pinned 0, and the single-process degradation bitwise against the
+  ``local`` virtual-shards oracle.  The cross-process version of the
+  same assertions lives in scripts/multiprocess_parity.py (CI
+  ``multiprocess`` job).
+"""
+
+import sys
+import time
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.parallel.fabric import (
+    FabricProcessError,
+    FabricResult,
+    FabricTimeoutError,
+    free_port,
+    launch_fabric,
+    pick_coordinator,
+)
+
+
+def _argv_script(body: str):
+    """child_argv factory: every rank runs ``body`` with COORD/RANK
+    interpolated (no jax import — fabric children here are throwaway)."""
+    def child_argv(coordinator, k):
+        code = body.replace("COORD", coordinator).replace("RANK", str(k))
+        return [sys.executable, "-c", code]
+    return child_argv
+
+
+def test_free_port_is_bindable():
+    import socket
+
+    port = free_port()
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", port))     # still free — nothing claimed it
+    host, _, p = pick_coordinator().partition(":")
+    assert host == "127.0.0.1" and int(p) > 0
+
+
+def test_launch_fabric_success_collects_all_ranks():
+    res = launch_fabric(
+        _argv_script("print('rank RANK on COORD ok')"), 3, timeout_s=60,
+        poll_s=0.05)
+    assert isinstance(res, FabricResult)
+    assert res.attempts == 1
+    assert len(res.outputs) == 3
+    for k, out in enumerate(res.outputs):
+        assert f"rank {k} on {res.coordinator} ok" in out
+
+
+def test_kill_one_process_raises_typed_error_not_hang():
+    # Rank 1 dies almost immediately; rank 0 would sleep far past any
+    # reasonable test budget — exactly a rank blocked in a collective
+    # whose peer died.  The watchdog must kill it and raise the typed
+    # error within ~poll_s of the death, never wait out the sleep.
+    body = ("import sys, time\n"
+            "if RANK == 1:\n"
+            "    print('rank 1 dying', flush=True); sys.exit(3)\n"
+            "time.sleep(120)\n")
+    t0 = time.monotonic()
+    with pytest.raises(FabricProcessError) as ei:
+        launch_fabric(_argv_script(body), 2, timeout_s=300, poll_s=0.05)
+    elapsed = time.monotonic() - t0
+    assert elapsed < 30, f"watchdog took {elapsed:.1f}s — a hang"
+    msg = str(ei.value)
+    assert "rank 1 of 2 exited 3" in msg
+    assert "survivors killed" in msg
+    assert "rank 1 dying" in msg          # per-rank output tail attached
+
+
+def test_timeout_raises_typed_error_and_kills_group():
+    t0 = time.monotonic()
+    with pytest.raises(FabricTimeoutError) as ei:
+        launch_fabric(_argv_script("import time; time.sleep(120)"), 2,
+                      timeout_s=1.0, poll_s=0.05)
+    assert time.monotonic() - t0 < 30
+    assert "exceeded 1s" in str(ei.value)
+    assert "[0, 1]" in str(ei.value)      # both ranks were still running
+
+
+def test_bind_collision_retries_on_fresh_port(tmp_path):
+    # First attempt: rank 0 reports the coordinator bind failure and
+    # dies (the parallel-CI port race).  The launcher must relaunch the
+    # WHOLE group on a fresh port; second attempt succeeds.  A flag file
+    # makes the failure one-shot.
+    flag = tmp_path / "collided_once"
+    body = (f"import pathlib, sys\n"
+            f"flag = pathlib.Path({str(flag)!r})\n"
+            f"if RANK == 0 and not flag.exists():\n"
+            f"    flag.touch()\n"
+            f"    print('RuntimeError: Address already in use')\n"
+            f"    sys.exit(1)\n"
+            f"print('rank RANK up on COORD')\n")
+    res = launch_fabric(_argv_script(body), 2, timeout_s=60, poll_s=0.05)
+    assert res.attempts == 2
+    assert all("up on" in o for o in res.outputs)
+    assert res.coordinator in res.outputs[0]
+
+
+def test_persistent_bind_collision_exhausts_retries():
+    body = ("import sys\n"
+            "print('bind address in use: errno: 98'); sys.exit(1)\n")
+    with pytest.raises(FabricProcessError, match="persisted through"):
+        launch_fabric(_argv_script(body), 1, timeout_s=60, poll_s=0.05,
+                      max_port_retries=2)
+
+
+# ---------------------------------------------------------------------------
+# Fallback removal: multiprocess RUNS the staged ladder (DESIGN.md §17).
+# ---------------------------------------------------------------------------
+
+def test_multiprocess_supports_staged_reduction_flag():
+    from repro.parallel.backends.multiprocess import MultiprocessBackend
+
+    # THE PR 8 regression guard: the PR 5–7 capability downgrade
+    # (supports_staged_reduction = False + warning + monolithic fallback)
+    # is gone for good.
+    assert MultiprocessBackend.supports_staged_reduction is True
+
+
+def test_multiprocess_staged_runs_without_fallback():
+    import jax.numpy as jnp
+
+    from repro.obs.metrics import default_registry
+    from repro.parallel import get_backend
+    from repro.parallel.reduction import ReductionFallbackWarning
+
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        be = get_backend("multiprocess", reduction="staged",
+                         reduction_stages=1)
+    assert not any(isinstance(w.message, ReductionFallbackWarning)
+                   for w in caught), [str(w.message) for w in caught]
+    assert be.reduction_mode == "staged"
+    assert be.reduction_fallback is None
+    assert be.reduction_cfg is not None
+    gauge = default_registry().get("backend_reduction_fallback")
+    assert gauge is not None
+    assert gauge.value(labels={"backend": "multiprocess"}) == 0.0
+    # Single-process degradation: no second controller in tier-1, so the
+    # wire introspection reports the degenerate case honestly.
+    assert be.n_processes == 1
+    assert be.hop_wire() == "intra-process"
+    assert be.cross_process_edges() == 0
+    assert "staged ring dot block" in be.describe()
+
+    # ... and the ladder actually runs: bitwise vs the local
+    # virtual-shards oracle at the same ring size and stage count.
+    from repro.core.chebyshev import shifts_for_operator
+    from repro.linalg import Stencil2D5
+
+    op = Stencil2D5(16, 12)
+    b = jnp.asarray(np.random.default_rng(5).standard_normal(op.n))
+    sig = shifts_for_operator(op, 2)
+    kw = dict(method="plcg", l=2, sigmas=sig, tol=1e-10, maxit=400)
+    res = be.solve(op, b, **kw)
+    oracle = get_backend("local", reduction="staged",
+                         virtual_shards=be.n_shards, reduction_stages=1)
+    res_o = oracle.solve(op, b, **kw)
+    h, ho = np.asarray(res.res_history), np.asarray(res_o.res_history)
+    assert np.array_equal(h, ho)
+    assert bool(res.converged)

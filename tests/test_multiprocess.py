@@ -31,3 +31,41 @@ def test_two_process_parity():
     )
     assert out.returncode == 0, (out.stdout[-3000:], out.stderr[-2000:])
     assert out.stdout.count("MULTIPROC-PARITY-OK") == 2, out.stdout[-3000:]
+
+
+def test_scaling_study_smoke(tmp_path):
+    """One 2-process strong-scaling point end to end (DESIGN.md §17):
+    the study must emit a gateable BENCH payload whose deterministic
+    columns hold — bitwise ladder parity across the process boundary,
+    zero dot-block all-reduces, a populated hop schedule — plus the
+    per-process timeline artifacts.  (The full 1->4 sweep with timing
+    budgets runs in the CI ``scaling-study`` job, not here.)"""
+    import json
+
+    # The study runs from tmp_path (its TIMELINE_scaling_proc*.json land
+    # in the cwd), so the script and src tree need absolute paths.
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ, PYTHONPATH=os.path.join(repo, "src"))
+    env.pop("XLA_FLAGS", None)
+    out_json = tmp_path / "BENCH_scaling_smoke.json"
+    out = subprocess.run(
+        [sys.executable,
+         os.path.join(repo, "scripts", "multiprocess_parity.py"),
+         "--study", "--procs", "2", "--repeats", "2",
+         "--budget-lo", "5", "--budget-hi", "15",
+         "--out", str(out_json)],
+        capture_output=True, text=True, env=env, cwd=str(tmp_path),
+        timeout=900,
+    )
+    assert out.returncode == 0, (out.stdout[-3000:], out.stderr[-2000:])
+    assert out.stdout.count("SCALING-OK") == 2, out.stdout[-3000:]
+    payload = json.loads(out_json.read_text())
+    assert payload["scaling_parity_bitwise"] == 1
+    assert payload["scaling_staged_allreduces_max"] == 0
+    assert payload["scaling_hops_per_window_min"] >= 1
+    assert payload["staged_iter_time_p2_s"] > 0
+    assert payload["monolithic_iter_time_p2_s"] > 0
+    [row] = payload["rows"]
+    assert row["wire"] == "gloo" and row["cross_process_edges"] == 2
+    for k in range(2):
+        assert (tmp_path / f"TIMELINE_scaling_proc{k}.json").exists()
