@@ -1,0 +1,205 @@
+"""Stability-governor benchmark: governed vs ungoverned attainable
+accuracy at deep pipeline depth under seeded fault injection
+(DESIGN.md §18).  Emits ``BENCH_stability.json``; CI gates it via
+``scripts/check_bench.py``.  Every gated column is DETERMINISTIC —
+seeded chaos, fixed shapes, compiled-HLO structure — so container
+timing noise cannot move any of them:
+
+* ``stability_governed_recovered``    — 1 when the governed stable
+                                        p(l)-CG solve reaches tol under
+                                        the injected reduction-payload
+                                        fault, certified against the
+                                        TRUE residual.  Floor-gated: the
+                                        recovery claim is the PR.
+* ``stability_ungoverned_stagnated``  — 1 when the same fault defeats
+                                        ungoverned ghysels p(l)-CG at
+                                        the same depth (it must: this is
+                                        the failure the governor exists
+                                        for).
+* ``stability_recovery_ratio``        — ungoverned / governed final TRUE
+                                        relative residual: the
+                                        attainable-accuracy gap the
+                                        governor closes (~10^3 here).
+* ``stability_governor_replacements`` — governed replacement count; the
+                                        gap/patience split rides along
+                                        from the telemetry ring's action
+                                        column (§16: every governor
+                                        action is exported).
+* ``stability_reduction_starts_per_iter_max`` / ``_staged_*`` — the
+                                        sacred ceiling: the GOVERNED
+                                        compiled schedule still issues
+                                        exactly ONE pipelined reduction
+                                        start per iteration (fused psum
+                                        and staged ladder), zero staged
+                                        dot-block all-reduces.
+* ``stability_ladder_depths_tried`` / ``stability_ladder_typed_error``
+                                      — catastrophic corruption (30%
+                                        payload noise) demotes the host
+                                        ladder 4 -> 2 -> 1 and raises a
+                                        typed StagnationError: governed
+                                        solves never return silent
+                                        non-convergence.
+
+    PYTHONPATH=src python -m benchmarks.stability_bench [--out PATH]
+"""
+
+import argparse
+import json
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402  (after XLA_FLAGS)
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.chaos import ChaosConfig, chaos_ops  # noqa: E402
+from repro.core import pipelined_cg  # noqa: E402
+from repro.core.types import SolverOps, TelemetrySlab  # noqa: E402
+from repro.linalg import Stencil2D5  # noqa: E402
+from repro.linalg.preconditioners import JacobiPrec  # noqa: E402
+from repro.parallel import get_backend  # noqa: E402
+from repro.stability import (  # noqa: E402
+    GovernorConfig,
+    StagnationError,
+    diagnose,
+    governed_solve,
+)
+from repro.stability import model as gov_model  # noqa: E402
+from repro.utils.trace import plcg_overlap_report  # noqa: E402
+
+L = 4
+TOL = 1e-5
+CHAOS = ChaosConfig(seed=7, payload_rel_amp=1e-5)
+CATASTROPHIC = ChaosConfig(seed=3, payload_rel_amp=3e-1)
+TEL_CAP = 512
+
+
+def _problem():
+    op = Stencil2D5(48, 24)
+    prec = JacobiPrec.from_operator(op)
+    b = jnp.asarray(np.random.default_rng(0).standard_normal(op.n))
+    return op, prec, SolverOps.local(op, prec), b
+
+
+def _true_rel(op, b, x):
+    r = np.asarray(b) - np.asarray(op.apply(jnp.asarray(np.asarray(x))))
+    return float(np.linalg.norm(r) / np.linalg.norm(np.asarray(b)))
+
+
+def recovery_rows() -> dict:
+    """The governed-vs-ungoverned recovery point: same operator, same
+    seeded fault, same depth; only the recurrence + governor differ."""
+    op, prec, ops, b = _problem()
+    cops = chaos_ops(ops, CHAOS)
+    kw = dict(l=L, tol=TOL, maxit=400, max_restarts=120)
+
+    ungov = pipelined_cg.solve(cops, b, **kw)
+    ungov_rel = _true_rel(op, b, ungov.x)
+
+    gov = pipelined_cg.solve(cops, b, recurrence="stable",
+                             governor=GovernorConfig(),
+                             telemetry_cap=TEL_CAP, **kw)
+    gov_rel = _true_rel(op, b, gov.x)
+    d = diagnose(gov)
+
+    # Governor action counts straight from the telemetry ring (§16):
+    # the ring's action column is the exported audit trail, so the bench
+    # counts what an operator's dashboard would see.
+    cols = TelemetrySlab(cap=TEL_CAP, l=L).unpack(np.asarray(gov.telemetry))
+    written = np.asarray(cols["iter"]) >= 0
+    act = np.asarray(cols["action"])[written]
+    return {
+        "stability_l": L,
+        "stability_tol": TOL,
+        "stability_chaos_seed": CHAOS.seed,
+        "stability_chaos_payload_rel_amp": CHAOS.payload_rel_amp,
+        "stability_ungoverned_true_rel": ungov_rel,
+        "stability_governed_true_rel": gov_rel,
+        "stability_ungoverned_stagnated": int(not bool(ungov.converged)
+                                              and ungov_rel > TOL),
+        "stability_governed_recovered": int(d["converged"]
+                                            and gov_rel < TOL),
+        "stability_recovery_ratio": ungov_rel / gov_rel,
+        "stability_governed_iters": d["iters"],
+        "stability_ungoverned_iters": int(ungov.iters),
+        "stability_governor_replacements": d["replacements"],
+        "stability_gap_replacements":
+            int((act == gov_model.ACTION_GAP_REPLACE).sum()),
+        "stability_patience_replacements":
+            int((act == gov_model.ACTION_PATIENCE_REPLACE).sum()),
+    }
+
+
+def ladder_rows() -> dict:
+    """Catastrophic corruption: the demotion ladder walks 4 -> 2 -> 1
+    and raises the typed error — proven, not assumed."""
+    op, prec, _ops, b = _problem()
+    be = get_backend("local")
+    try:
+        governed_solve(be, op, b, l=L, prec=prec,
+                       ops_transform=lambda o: chaos_ops(o, CATASTROPHIC),
+                       tol=1e-6, maxit=400, max_restarts=60)
+    except StagnationError as e:
+        tried = [a["l"] for a in e.diagnosis["attempts"]]
+        return {
+            "stability_ladder_depths_tried": len(tried),
+            "stability_ladder_final_l": tried[-1],
+            "stability_ladder_typed_error": 1,
+        }
+    return {"stability_ladder_depths_tried": 0,
+            "stability_ladder_final_l": -1,
+            "stability_ladder_typed_error": 0}
+
+
+def hlo_rows() -> dict:
+    """The governed compiled schedule on the 8-device mesh: exactly one
+    reduction start per iteration, fused psum and staged ladder alike,
+    zero staged dot-block all-reduces."""
+    op = Stencil2D5(32, 24)
+    from repro.core.chebyshev import shifts_for_operator
+
+    sig = shifts_for_operator(op, L)
+    bspec = jax.ShapeDtypeStruct((op.n,), jnp.float64)
+    gov = GovernorConfig()
+
+    be = get_backend("shard_map", n_shards=8)
+    rep = plcg_overlap_report(be, op, bspec, l=L, window=L + 2, sigmas=sig,
+                              recurrence="stable", governor=gov)
+    be_s = get_backend("shard_map", n_shards=8, reduction="staged")
+    rep_s = plcg_overlap_report(be_s, op, bspec, l=L, window=L + 2,
+                                sigmas=sig, recurrence="stable",
+                                governor=gov)
+    return {
+        "stability_reduction_starts_per_iter_max":
+            max(rep.starts_per_window.values()),
+        "stability_in_flight_min": rep.max_in_flight,
+        "stability_staged_starts_per_iter_max":
+            max(rep_s.staged_starts_per_window.values()),
+        "stability_staged_allreduces": rep_s.n_collectives,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", type=str, default="BENCH_stability.json")
+    args = ap.parse_args(argv)
+
+    payload = {}
+    payload.update(recovery_rows())
+    payload.update(ladder_rows())
+    payload.update(hlo_rows())
+    for k, v in payload.items():
+        print(f"{k}: {v}")
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

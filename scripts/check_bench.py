@@ -316,6 +316,74 @@ def selftest() -> int:
     assert check_ratios(dict(ok_sc, staged_iter_time_p4_s=2.6),
                         sr, verbose=False) == 1, \
         "a P=4 ladder past the 2.5x serialization ceiling must fail"
+    # Stability-governor gates (ISSUE 9, BENCH_stability.json; DESIGN.md
+    # §18).  The recovery demonstration gates at zero tolerance on its
+    # deterministic 0/1 columns: governed-recovered floor (the governed
+    # stable solver must reach tol under the seeded fault), ungoverned-
+    # stagnated floor (the fault must still defeat the ungoverned
+    # solver — otherwise the bench demonstrates nothing), the typed-
+    # ladder floor, and the sacred reduction-starts ceilings (a governed
+    # compile may never issue a second pipelined reduction start per
+    # iteration, nor any staged dot-block all-reduce).
+    st_base = {"stability_governed_recovered": 1,
+               "stability_ungoverned_stagnated": 1,
+               "stability_ladder_typed_error": 1,
+               "stability_reduction_starts_per_iter_max": 1,
+               "stability_staged_starts_per_iter_max": 1,
+               "stability_staged_allreduces": 0,
+               "stability_recovery_ratio": 2600.0,
+               "stability_governor_replacements": 12}
+    st_gates = [("stability_governed_recovered", 0.0, True),
+                ("stability_ungoverned_stagnated", 0.0, True),
+                ("stability_ladder_typed_error", 0.0, True),
+                ("stability_reduction_starts_per_iter_max", 0.0, False),
+                ("stability_staged_starts_per_iter_max", 0.0, False),
+                ("stability_staged_allreduces", 0.0, False),
+                ("stability_recovery_ratio", 0.5, True),
+                ("stability_governor_replacements", 0.5, True)]
+    assert check(st_base, dict(st_base), st_gates, verbose=False) == 0, \
+        "identical stability metrics must pass every stability gate"
+    assert check(st_base, dict(st_base, stability_governed_recovered=0),
+                 st_gates, verbose=False) == 1, \
+        "a failed governed recovery must fail the floor"
+    assert check(st_base, dict(st_base, stability_ungoverned_stagnated=0),
+                 st_gates, verbose=False) == 1, \
+        "an ungoverned solve that no longer stagnates must fail (the " \
+        "bench would be demonstrating nothing)"
+    assert check(st_base, dict(st_base, stability_ladder_typed_error=0),
+                 st_gates, verbose=False) == 1, \
+        "silent non-convergence from the ladder must fail"
+    assert check(st_base,
+                 dict(st_base, stability_reduction_starts_per_iter_max=2),
+                 st_gates, verbose=False) == 1, \
+        "a second reduction start in a governed compile must fail at +0"
+    assert check(st_base,
+                 dict(st_base, stability_staged_starts_per_iter_max=2),
+                 st_gates, verbose=False) == 1, \
+        "a second staged hop-0 start per window must fail at +0"
+    assert check(st_base, dict(st_base, stability_staged_allreduces=1),
+                 st_gates, verbose=False) == 1, \
+        "a staged dot-block all-reduce under the governor must fail at +0"
+    assert check(st_base, dict(st_base, stability_recovery_ratio=1200.0),
+                 st_gates, verbose=False) == 1, \
+        "a halved attainable-accuracy gap must fail the 50% floor"
+    assert check(st_base, dict(st_base, stability_governor_replacements=5),
+                 st_gates, verbose=False) == 1, \
+        "a governor that stopped firing must fail the replacement floor"
+    # ... and the accuracy ratio gates within the fresh file: governed
+    # final TRUE residual <= tol, ungoverned >= 100x tol.
+    st_r = [("stability_governed_true_rel", "stability_tol", 1.0),
+            ("stability_tol", "stability_ungoverned_true_rel", 0.01)]
+    ok_st = {"stability_governed_true_rel": 7.7e-6, "stability_tol": 1e-5,
+             "stability_ungoverned_true_rel": 2.0e-2}
+    assert check_ratios(ok_st, st_r, verbose=False) == 0
+    assert check_ratios(dict(ok_st, stability_governed_true_rel=1.2e-5),
+                        st_r, verbose=False) == 1, \
+        "a governed TRUE residual above tol must fail"
+    assert check_ratios(dict(ok_st, stability_ungoverned_true_rel=5e-4),
+                        st_r, verbose=False) == 1, \
+        "an ungoverned residual within 100x of tol must fail (the " \
+        "demonstration margin collapsed)"
     # Skip-payload handling (the opt-in compiled lane): a skip marker
     # passes ONLY under --skip-ok; real payloads ignore the flag.
     skipped = {"skipped": True, "reason": "no accelerator",
@@ -335,8 +403,12 @@ def selftest() -> int:
           "starts ceiling, telemetry byte ratio), every scaling-study "
           "gate (bitwise-parity floor, zero-all-reduce ceiling, hop "
           "floor, staged<=monolithic at P=2, the P=4 serialization "
-          "ceiling), and the skip-payload rules (pass only under "
-          "--skip-ok) all trip")
+          "ceiling), every stability gate (governed-recovered floor, "
+          "ungoverned-stagnated floor, typed-ladder floor, the governed "
+          "reduction-starts and staged all-reduce ceilings, the "
+          "recovery-ratio and replacement floors, the governed<=tol and "
+          "ungoverned>=100x-tol accuracy ratios), and the skip-payload "
+          "rules (pass only under --skip-ok) all trip")
     return 0
 
 

@@ -22,6 +22,15 @@ ladder for real — mode ``staged``, no fallback, the
 BITWISE against the local ``virtual_shards`` ladder oracle and ZERO
 dot-block all-reduces in the compiled staged solve.
 
+Chaos mode (``--chaos``, DESIGN.md §18): spawn the same real process
+group, inject a seeded reduction-payload fault (``repro.chaos``) into
+every rank's staged dot-block wait, and run a GOVERNED stable p(l)-CG
+solve.  Every rank must emit a byte-identical ``CHAOS-GOV`` row —
+replacement count, iteration count and bitwise residual-history hash —
+proving the stability governor fires identically on every process
+(divergent governor control flow would deadlock or diverge the very
+next collective).
+
 Scaling-study mode (``--study``, CI ``scaling-study`` job): a strong-
 scaling sweep at FIXED n over 1..N processes (default 1,2,4 ranks x 1
 device — the paper's Cori curve shape, reproduced on our own fabric):
@@ -53,6 +62,7 @@ if _SRC not in sys.path:
 from repro.parallel.fabric import FabricError, launch_fabric  # noqa: E402
 
 STUDY_MARKER = "SCALING-JSON "
+CHAOS_MARKER = "CHAOS-GOV "
 
 
 def _child_jax_setup():
@@ -350,6 +360,122 @@ def study_child(coordinator: str, num_processes: int, process_id: int,
     return 0
 
 
+def chaos_child(coordinator: str, num_processes: int,
+                process_id: int) -> int:
+    """One rank of the cross-process chaos drill (DESIGN.md §18): run a
+    GOVERNED stable p(l)-CG solve over the real staged ladder with a
+    seeded reduction-payload fault injected at the dot-block wait, and
+    emit a ``CHAOS-GOV`` marker the launcher byte-compares across ranks.
+
+    The injected noise is a value-hash of the post-combine (replicated)
+    payload, so every rank perturbs identically and the governor's
+    replacement decisions — control flow driven by the perturbed dots —
+    stay lockstep SPMD: same replacement count, same residual history,
+    bit for bit.  A rank whose governor fired differently would diverge
+    at the next collective; the identical markers prove it did not.
+    """
+    jax = _child_jax_setup()
+    import hashlib
+
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.chaos import ChaosConfig, chaos_ops
+    from repro.core import pipelined_cg
+    from repro.core.chebyshev import shifts_for_operator
+    from repro.linalg import Stencil2D5
+    from repro.parallel import get_backend
+    from repro.parallel.fabric import touch_heartbeat
+    from repro.stability import GovernorConfig
+    from repro.stability import model as gov_model
+
+    touch_heartbeat()
+    be = get_backend(
+        "multiprocess", coordinator_address=coordinator,
+        num_processes=num_processes, process_id=process_id,
+        reduction="staged", reduction_stages=2)
+    assert be.reduction_mode == "staged", be.reduction_mode
+    print(f"[p{process_id}] {be.describe()}", flush=True)
+
+    op = Stencil2D5(32, 24)
+    b = jnp.asarray(np.random.default_rng(7).standard_normal(op.n))
+    sig = shifts_for_operator(op, 2)
+    chaos = ChaosConfig(seed=7, payload_rel_amp=1e-5)
+    kw = dict(l=2, sigmas=sig, tol=1e-5, maxit=400,
+              recurrence="stable", governor=GovernorConfig())
+
+    # Only replicated pieces come back through the shard_map (out_specs
+    # P()): the residual history, governor vector and scalars are all
+    # post-psum values, identical on every device.
+    def fn(ops, bb):
+        res = pipelined_cg.solve(chaos_ops(ops, chaos), bb, **kw)
+        return res.res_history, res.governor, res.iters, res.converged
+
+    hist, gov, iters, conv = be.run(fn, op, b)
+    touch_heartbeat()
+    hist, gov = np.asarray(hist), np.asarray(gov)
+    repl = int(gov[gov_model.REPL])
+    assert bool(conv), "governed chaos solve failed to converge"
+    assert repl >= 1, "governor never fired under injected perturbation"
+    row = {
+        "converged": bool(conv),
+        "iters": int(iters),
+        "replacements": repl,
+        "stagnated": int(gov[gov_model.STAGNATED]),
+        "governor_sha": hashlib.sha256(gov.tobytes()).hexdigest(),
+        "history_sha": hashlib.sha256(hist.tobytes()).hexdigest(),
+    }
+    print(CHAOS_MARKER + json.dumps(row, sort_keys=True), flush=True)
+    print(f"[p{process_id}] governed chaos solve: iters {row['iters']}, "
+          f"{repl} governed replacement(s), history sha "
+          f"{row['history_sha'][:16]}", flush=True)
+    print(f"[p{process_id}] CHAOS-OK", flush=True)
+    return 0
+
+
+def chaos(num_processes: int, devices_per_process: int) -> int:
+    """Chaos launcher: every rank must emit the SAME ``CHAOS-GOV`` row —
+    the governor fired identically (same count, same iterations, same
+    bitwise history) on every process under the injected fault."""
+    try:
+        res = launch_fabric(
+            lambda coord, k: [sys.executable, os.path.abspath(__file__),
+                              "--coordinator", coord,
+                              "--num-processes", str(num_processes),
+                              "--process-id", str(k),
+                              "--chaos-child"],
+            num_processes, env=_fabric_env(devices_per_process),
+            timeout_s=900)
+    except FabricError as e:
+        print(f"[launcher] FAILED: {e}")
+        return 1
+    for out in res.outputs:
+        sys.stdout.write(out)
+    if not all("CHAOS-OK" in o for o in res.outputs):
+        print("[launcher] FAILED (missing rank CHAOS-OK marker)")
+        return 1
+    rows = []
+    for k, out in enumerate(res.outputs):
+        frag = [ln for ln in out.splitlines()
+                if ln.startswith(CHAOS_MARKER)]
+        if not frag:
+            print(f"[launcher] FAILED (rank {k} emitted no chaos row)")
+            return 1
+        rows.append(frag[-1])
+    if len(set(rows)) != 1:
+        print("[launcher] FAILED (governor rows differ across ranks):")
+        for k, r in enumerate(rows):
+            print(f"  rank {k}: {r}")
+        return 1
+    row = json.loads(rows[0][len(CHAOS_MARKER):])
+    print(f"[launcher] {num_processes} processes x "
+          f"{devices_per_process} devices: CHAOS-GOV OK — governor "
+          f"fired identically on every rank "
+          f"({row['replacements']} replacement(s), "
+          f"{row['iters']} iters, coordinator {res.coordinator})")
+    return 0
+
+
 def _fabric_env(devices_per_process: int) -> dict:
     env = dict(
         os.environ,
@@ -483,6 +609,11 @@ def main(argv=None) -> int:
     ap.add_argument("--study", action="store_true",
                     help="run the strong-scaling study (launcher mode)")
     ap.add_argument("--study-child", action="store_true")
+    # ---- chaos drill (DESIGN.md §18) ----
+    ap.add_argument("--chaos", action="store_true",
+                    help="run the cross-process governed chaos drill "
+                         "(launcher mode)")
+    ap.add_argument("--chaos-child", action="store_true")
     ap.add_argument("--procs", type=str, default="1,2,4",
                     help="comma-separated process counts for --study")
     ap.add_argument("--nx", type=int, default=96)
@@ -501,9 +632,15 @@ def main(argv=None) -> int:
             args.devices_per_process = 1     # P ranks == P shards
         return study(args)
     if args.devices_per_process is None:
-        args.devices_per_process = 4
+        args.devices_per_process = 4 if not (args.chaos or args.chaos_child) \
+            else 2
     if args.process_id is None:
+        if args.chaos:
+            return chaos(args.num_processes, args.devices_per_process)
         return launch(args.num_processes, args.devices_per_process)
+    if args.chaos_child:
+        return chaos_child(args.coordinator, args.num_processes,
+                           args.process_id)
     if args.study_child:
         return study_child(args.coordinator, args.num_processes,
                            args.process_id, args)

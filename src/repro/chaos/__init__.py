@@ -1,0 +1,15 @@
+"""Deterministic fault injection for the pipelined-reduction stack
+(DESIGN.md §18): seeded reduction-payload perturbation (``inject``) and
+process-level fault plans — slow ranks, rank kills — for the fabric
+watchdog (``faults``).  Used by tests/test_stability.py,
+benchmarks/stability_bench.py and ``scripts/multiprocess_parity.py
+--chaos`` to PROVE governed recovery rather than assume it.
+"""
+
+from repro.chaos.inject import ChaosConfig, chaos_ops, perturb_payload
+from repro.chaos.faults import (KILL_EXIT_CODE, FaultPlan, apply_from_env)
+
+__all__ = [
+    "ChaosConfig", "chaos_ops", "perturb_payload",
+    "FaultPlan", "apply_from_env", "KILL_EXIT_CODE",
+]

@@ -1,0 +1,108 @@
+"""Process-level fault plans for the multi-controller fabric
+(DESIGN.md §18).
+
+The in-jax injection layer (``repro.chaos.inject``) perturbs VALUES; it
+cannot make a rank slow or dead — those faults live at the process
+level, where ``repro.parallel.fabric`` already supervises the group.  A
+:class:`FaultPlan` describes one scripted fault per group and ships it
+to the chosen rank via environment variables; the child calls
+:func:`apply_from_env` once at startup.
+
+Honesty notes (DESIGN.md §18): a *per-hop* delay inside a compiled XLA
+collective is not injectable without recompiling the program, so the
+delay fault is a **startup skew** — the delayed rank enters the SPMD
+program late, which (lockstep collectives) stalls every subsequent
+collective the group runs, the observable signature of one straggler
+rank.  The kill fault is a hard ``os._exit`` from a daemon timer — the
+process dies mid-collective without unwinding, exactly what the fabric
+watchdog must convert into a typed error with heartbeat ages
+(tests/test_fabric.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+import time
+
+ENV_KILL_RANK = "REPRO_CHAOS_KILL_RANK"
+ENV_KILL_AFTER = "REPRO_CHAOS_KILL_AFTER_S"
+ENV_DELAY_RANK = "REPRO_CHAOS_DELAY_RANK"
+ENV_DELAY_S = "REPRO_CHAOS_DELAY_S"
+ENV_JITTER_S = "REPRO_CHAOS_JITTER_S"
+ENV_SEED = "REPRO_CHAOS_SEED"
+
+KILL_EXIT_CODE = 137          # mimic SIGKILL's conventional exit status
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """One scripted process-level fault for a fabric launch.
+
+    ``kill_rank``/``kill_after_s``   hard-kill that rank after the delay;
+    ``delay_rank``/``delay_s``       startup skew for that rank, plus a
+                                     deterministic seed-derived jitter of
+                                     up to ``jitter_s``.
+    """
+
+    kill_rank: int | None = None
+    kill_after_s: float = 1.0
+    delay_rank: int | None = None
+    delay_s: float = 0.0
+    jitter_s: float = 0.0
+    seed: int = 0
+
+    def env(self) -> dict[str, str]:
+        """Environment fragment encoding this plan (same for all ranks —
+        each child matches its own process id against the plan)."""
+        out = {ENV_SEED: str(self.seed)}
+        if self.kill_rank is not None:
+            out[ENV_KILL_RANK] = str(self.kill_rank)
+            out[ENV_KILL_AFTER] = repr(float(self.kill_after_s))
+        if self.delay_rank is not None:
+            out[ENV_DELAY_RANK] = str(self.delay_rank)
+            out[ENV_DELAY_S] = repr(float(self.delay_s))
+            out[ENV_JITTER_S] = repr(float(self.jitter_s))
+        return out
+
+
+def _jitter(seed: int, rank: int, cap: float) -> float:
+    if cap <= 0:
+        return 0.0
+    h = (seed * 2654435761 + rank * 40503) & 0xFFFFFFFF
+    h ^= h >> 16
+    return cap * ((h & 0xFFFF) / float(1 << 16))
+
+
+def apply_from_env(process_id: int, environ=None) -> dict:
+    """Install this rank's share of the fault plan (child-side).
+
+    Reads the ``REPRO_CHAOS_*`` variables; sleeps the startup skew
+    inline and arms the kill timer on a daemon thread.  Returns a small
+    dict describing what was installed (for child-side logging).
+    Harmless no-op when no plan is present.
+    """
+    env = os.environ if environ is None else environ
+    seed = int(env.get(ENV_SEED, "0"))
+    installed: dict = {}
+
+    delay_rank = env.get(ENV_DELAY_RANK)
+    if delay_rank is not None and int(delay_rank) == process_id:
+        delay = float(env.get(ENV_DELAY_S, "0"))
+        delay += _jitter(seed, process_id, float(env.get(ENV_JITTER_S, "0")))
+        time.sleep(delay)
+        installed["delayed_s"] = delay
+
+    kill_rank = env.get(ENV_KILL_RANK)
+    if kill_rank is not None and int(kill_rank) == process_id:
+        after = float(env.get(ENV_KILL_AFTER, "1.0"))
+
+        def _die():
+            time.sleep(after)
+            os._exit(KILL_EXIT_CODE)
+
+        threading.Thread(target=_die, daemon=True).start()
+        installed["kill_after_s"] = after
+
+    return installed

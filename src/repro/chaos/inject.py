@@ -1,0 +1,110 @@
+"""Deterministic reduction-payload fault injection (DESIGN.md §18).
+
+The one place the paper's algorithm is exposed to the network is the
+pipelined global reduction: a corrupted or rounding-noisy allreduce
+payload poisons the scalar phase, which poisons the recurrences, which
+caps attainable accuracy.  ``chaos_ops`` wraps a backend-built
+:class:`~repro.core.types.SolverOps` so that every reduction WAIT —
+the consumption point where the combined payload becomes scalar-phase
+input — returns a deterministically perturbed value:
+
+* the perturbation is **multiplicative and relative**
+  (``x * (1 + amp * noise)``), so ULP-scale (``amp ~ 1e-16``) through
+  catastrophic (``amp ~ 1``) corruption shares one knob;
+* ``noise`` is a pure **value hash** of the payload bits mixed with the
+  seed — no RNG state, no trace-time randomness, and (crucially) the
+  SAME noise on every rank: the wait's output is the post-combine
+  payload, replicated across shards, so a replicated input hashes to a
+  replicated perturbation and the scalar phase — hence all control flow
+  (breakdown, governor arms, convergence) — stays rank-identical.  The
+  cross-process assertion lives in ``scripts/multiprocess_parity.py
+  --chaos``.
+
+Only the wait is wrapped.  ``apply_a`` / ``prec`` stay clean, which is
+what makes governed recovery possible: a residual replacement recomputes
+``b - A x`` in clean arithmetic, so each governor action discards the
+accumulated payload corruption (tests/test_stability.py,
+benchmarks/stability_bench.py).  Process-level faults (slow ranks, rank
+kills) are ``repro.chaos.faults``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import SolverOps
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosConfig:
+    """Seeded reduction-payload perturbation.
+
+    ``payload_rel_amp``  relative perturbation amplitude (0 disables);
+    ``payload_prob``     fraction of payload entries perturbed (gated by
+                         a second value hash, so the choice of WHICH
+                         entries is as deterministic as the noise);
+    ``seed``             mixes into both hashes.
+    """
+
+    seed: int = 0
+    payload_rel_amp: float = 0.0
+    payload_prob: float = 1.0
+
+
+def _mix(h: jax.Array) -> jax.Array:
+    """32-bit integer finalizer (splitmix-style avalanche)."""
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x7FEB352D)
+    h = h ^ (h >> 15)
+    h = h * jnp.uint32(0x846CA68B)
+    h = h ^ (h >> 16)
+    return h
+
+
+def _value_hash(x: jax.Array, seed: int, salt: int) -> jax.Array:
+    """uint32 hash of each element's float32 bit pattern + seed + salt."""
+    bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    key = (seed * 2654435761 + salt * 40503) & 0xFFFFFFFF
+    return _mix(bits ^ jnp.uint32(key))
+
+
+def perturb_payload(x: jax.Array, cfg: ChaosConfig) -> jax.Array:
+    """Deterministically perturb a reduction payload, dtype-preserving."""
+    if cfg.payload_rel_amp == 0.0:
+        return x
+    # noise in [-1, 1): top 24 hash bits -> uniform [0, 1) -> shift.
+    h = _value_hash(x, cfg.seed, salt=1)
+    noise = (h >> 8).astype(x.dtype) * (1.0 / (1 << 24)) * 2.0 - 1.0
+    if cfg.payload_prob < 1.0:
+        g = _value_hash(x, cfg.seed, salt=2)
+        gate = ((g >> 8).astype(x.dtype) * (1.0 / (1 << 24))
+                < cfg.payload_prob)
+        noise = jnp.where(gate, noise, jnp.zeros_like(noise))
+    amp = jnp.asarray(cfg.payload_rel_amp, x.dtype)
+    return (x * (1.0 + amp * noise)).astype(x.dtype)
+
+
+def chaos_ops(ops: SolverOps, cfg: ChaosConfig) -> SolverOps:
+    """Wrap ``ops`` so every reduction wait returns a perturbed payload.
+
+    The wrap sits AFTER the substrate's own wait (staged ladders finish
+    their remaining hops first), i.e. on the replicated post-combine
+    value — the injection point that models a corrupted wire without
+    desynchronizing ranks.  Everything else (SPMV, preconditioner, the
+    start/advance half of the handle life cycle, tracer tags) passes
+    through untouched, so the compiled solve keeps exactly one reduction
+    start per iteration (asserted in tests/test_stability.py).
+    """
+    base_wait = ops.dot_block_wait
+
+    if base_wait is None:
+        def wrapped(dots, advanced=0):
+            return perturb_payload(dots, cfg)
+    else:
+        def wrapped(dots, advanced=0, _wait=base_wait):
+            return perturb_payload(_wait(dots, advanced=advanced), cfg)
+
+    return dataclasses.replace(ops, dot_block_wait=wrapped)

@@ -107,7 +107,7 @@ def vector_mask(method: str, kw: dict | None = None):
         return pipelined_cg._State(
             cyc=cyc, tot=False, upd=False, restarts=False, converged=False,
             breakdown=False, hist=False, norm0=False, since_rr=False,
-            tel=False)
+            tel=False, gov=False)
     raise KeyError(method)
 
 

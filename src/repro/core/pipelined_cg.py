@@ -77,6 +77,7 @@ from repro.core.types import GLRED_WAIT_TAG, SolveResult, SolverOps, dot1
 from repro.kernels.fused_iter import (SlabLayout, idx_layout, scal_layout,
                                       tel_layout)
 from repro.kernels.ref import fused_iter_unfused
+from repro.stability import model as gov_model
 
 
 class _Cycle(NamedTuple):
@@ -111,6 +112,9 @@ class _State(NamedTuple):
                           # (row layout: kernels.fused_iter.tel_layout;
                           # (0, K) when uninstrumented — writes are
                           # statically skipped, DESIGN.md §16)
+    gov: jax.Array        # (gov_model.N_SLOTS,) stability-governor state
+                          # (repro.stability.model; zeros and statically
+                          # untouched when ungoverned, DESIGN.md §18)
 
 
 class PlcgProgram(NamedTuple):
@@ -157,6 +161,8 @@ def build(
     replace_every: int = 0,
     fused_iteration: bool = False,
     telemetry_cap: int = 0,
+    recurrence: str = "ghysels",
+    governor: "gov_model.GovernorConfig | None" = None,
 ) -> PlcgProgram:
     """Construct the p(l)-CG iteration pieces for ``b`` (depth ``l`` static).
 
@@ -173,6 +179,26 @@ def build(
     uninstrumented arithmetic is untouched (instrumented-vs-plain residual
     histories are bitwise identical, tests/test_telemetry.py).  The ring
     is returned as ``SolveResult.telemetry``.
+
+    ``recurrence`` selects the vector-phase basis recurrence
+    (:class:`~repro.kernels.fused_iter.SlabLayout`): ``"ghysels"`` (the
+    paper's formulation, the default) or ``"stable"`` (the coupled
+    variant of arXiv:1902.03100, DESIGN.md §18).  Both run the identical
+    one-reduction-per-iteration communication structure.
+
+    ``governor`` (a :class:`repro.stability.model.GovernorConfig`) arms
+    the stability governor (DESIGN.md §18): each late iteration updates
+    a first-order attainable-accuracy gap estimate from the already
+    replicated scalar phase (zero extra reductions) and, when the gap
+    or a patience stall trips, schedules a residual replacement through
+    the SAME interrupt machinery as breakdowns — per-column masked in
+    the batched drivers.  Replacements that keep failing to improve the
+    true residual flip the terminal STAGNATED flag, which stops the
+    loop early (``repro.stability.governor`` turns it into pipeline
+    demotion / :class:`~repro.stability.governor.StagnationError`).
+    ``None`` (the default) statically skips every governor computation:
+    ungoverned solves are bitwise identical to the pre-governor solver
+    (tests/test_stability.py).
     """
     assert l >= 1
     assert telemetry_cap >= 0
@@ -182,13 +208,18 @@ def build(
     dtype = b.dtype
     sig = jnp.zeros((l,), dtype) if sigmas is None else jnp.asarray(sigmas, dtype)
     assert sig.shape == (l,)
+    if recurrence not in ("ghysels", "stable"):
+        raise ValueError(
+            f"unknown recurrence {recurrence!r}: expected 'ghysels' "
+            f"(paper Alg. 1) or 'stable' (coupled recurrence, "
+            f"DESIGN.md §18)")
 
     RB = max(l + 1, 3)        # per-basis ring length
     W = 3 * l + 4             # G / Hessenberg window
     tot_max = maxit + (max_restarts + 1) * (l + 1)
     H = tot_max + 2
 
-    layout = SlabLayout(l=l, RB=RB)
+    layout = SlabLayout(l=l, RB=RB, recurrence=recurrence)
     NV = layout.nv
     IX = idx_layout(l)
     IS = scal_layout(l)
@@ -523,14 +554,63 @@ def build(
             lambda h: h,
             st.hist,
         )
-        converged = st.converged | (ok & (rnorm / st.norm0 < tol))
+        # ---- stability governor: detection arms (DESIGN.md §18) ----------
+        # Pure replicated-scalar work on values the scalar phase already
+        # produced (the arrived dot block, the fresh Hessenberg entries) —
+        # zero extra reductions, statically absent when ungoverned.
+        gov = st.gov
+        gov_cols = {}
+        if governor is None:
+            converged = st.converged | (ok & (rnorm / st.norm0 < tol))
+        else:
+            M = gov_model
+            eps_c = jnp.asarray(governor.resolved_eps(dtype), dtype)
+            # G(col, col) is the arrived block's last entry — the squared
+            # scale of the newest basis vector.
+            basis = jnp.sqrt(jnp.abs(arrived[2 * l]))
+            # Grow by whichever is larger: the first-order eps model or
+            # the per-iteration drift rate MEASURED over the previous
+            # cycle (RATE; 0 until a restart measures one).  Under
+            # injected corruption far beyond eps the measured rate
+            # dominates and the gap arm fires within ~one cycle.
+            inc = M.gap_step(jnp.zeros((), dtype), gam_new, d2, dlt_safe,
+                             basis, eps_c, governor.kappa)
+            gap_acc = gov[M.GAP] + jnp.maximum(inc, gov[M.RATE])
+            gap = jnp.where(ge_l, gap_acc, gov[M.GAP])
+            rel = rnorm / st.norm0
+            improved = ok & (rel < governor.improve_ratio * gov[M.BEST])
+            best = jnp.where(improved, rel, gov[M.BEST])
+            best_upd = jnp.where(improved, upd.astype(dtype),
+                                 gov[M.BEST_UPD])
+            # Gap arm: the recursive residual is within ``safety`` of the
+            # (modeled + measured) gap — it can no longer be trusted.
+            # The recursion claiming convergence (rel < tol) is the same
+            # situation: both schedule a replacement, whose clean
+            # true-residual recompute either certifies convergence (the
+            # restart's lucky check) or re-seeds the gap with the
+            # measured discrepancy.  A governed solve therefore never
+            # sets ``converged`` from the recursion alone.
+            gap_due = ok & ((governor.safety * gap >= rel) | (rel < tol))
+            pat_due = ok & (rel >= tol) & (
+                upd.astype(dtype) - best_upd
+                >= governor.resolved_patience(l))
+            code = jnp.where(
+                gap_due, jnp.asarray(M.ACTION_GAP_REPLACE, dtype),
+                jnp.where(pat_due,
+                          jnp.asarray(M.ACTION_PATIENCE_REPLACE, dtype),
+                          jnp.zeros((), dtype)))
+            due = jnp.where(gov[M.DUE] > 0, gov[M.DUE], code)
+            gov = (gov.at[M.GAP].set(gap).at[M.BEST].set(best)
+                      .at[M.BEST_UPD].set(best_upd).at[M.DUE].set(due))
+            gov_cols = {"gap": gap, "action": code}
+            converged = st.converged
 
         tel = tel_write(
             st.tel, st.tot,
             iter=st.tot, upd=upd,
             rnorm=jnp.where(ok, rnorm, -jnp.ones((), dtype)),
             age=jnp.minimum(i + 1, l),       # in-flight handles after park
-            breakdown=breakdown, dots=arrived,
+            breakdown=breakdown, dots=arrived, **gov_cols,
         )
 
         cyc = _Cycle(
@@ -541,7 +621,7 @@ def build(
         return _State(
             cyc=cyc, tot=st.tot + 1, upd=upd, restarts=st.restarts,
             converged=converged, breakdown=breakdown, hist=hist, norm0=st.norm0,
-            since_rr=st.since_rr + n_upd, tel=tel,
+            since_rr=st.since_rr + n_upd, tel=tel, gov=gov,
         )
 
     def do_restart(st: _State) -> _State:
@@ -553,18 +633,78 @@ def build(
         # A breakdown at a converged iterate is a "lucky breakdown": the
         # freshly computed residual M-norm at restart tells us directly.
         lucky = cyc.norm0_cycle / st.norm0 < tol
+
+        # ---- governor accounting: consume the pending action ------------
+        # ``norm0_cycle`` IS the true residual M-norm at the re-init, so
+        # the fruitfulness of a governor-triggered replacement is judged
+        # against clean arithmetic, not the (possibly corrupted)
+        # recursive residual.  demote_after consecutive fruitless
+        # replacements flip the terminal STAGNATED flag (DESIGN.md §18).
+        gov = st.gov
+        gov_cols = {}
+        if governor is not None:
+            M = gov_model
+            was_due = gov[M.DUE]
+            fired = was_due > 0
+            rel_now = cyc.norm0_cycle / st.norm0   # TRUE rel residual
+            # Measured true-vs-recursive gap: the recursion's latest
+            # claim vs what the clean recompute actually found.  This
+            # re-seeds the gap model on EVERY restart (breakdowns too),
+            # so corruption far beyond the first-order eps model —
+            # injected payload noise, a sick reduction wire — is
+            # captured the first time a restart measures it, and the
+            # gap arm then stops trusting recursive claims below it.
+            eps_c = jnp.asarray(governor.resolved_eps(dtype), dtype)
+            rec_rel = jnp.abs(st.cyc.zet_prev) / st.norm0
+            measured = jnp.maximum(rel_now - rec_rel, jnp.zeros((), dtype))
+            # The fresh cycle starts from a clean residual, so its gap
+            # restarts near zero — but grows at the drift RATE this cycle
+            # just exhibited (total measured gap / cycle length), which
+            # sets the next replacement period adaptively.
+            i_f = jnp.maximum(st.cyc.i.astype(dtype), jnp.ones((), dtype))
+            rate_new = measured / i_f
+            gap_new = eps_c
+            fruitful = rel_now < governor.improve_ratio * gov[M.LAST_REL]
+            fruitless = jnp.where(
+                fired,
+                jnp.where(fruitful, jnp.zeros((), dtype),
+                          gov[M.FRUITLESS] + 1),
+                gov[M.FRUITLESS])
+            stag = jnp.where(fruitless >= governor.demote_after,
+                             jnp.ones((), dtype), gov[M.STAGNATED])
+            action = jnp.where(stag > gov[M.STAGNATED],
+                               jnp.asarray(M.ACTION_STAGNATED, dtype),
+                               was_due)
+            gov = (gov.at[M.DUE].set(jnp.zeros((), dtype))
+                      .at[M.REPL].set(gov[M.REPL]
+                                      + fired.astype(dtype))
+                      .at[M.FRUITLESS].set(fruitless)
+                      .at[M.STAGNATED].set(stag)
+                      .at[M.GAP].set(gap_new)
+                      .at[M.RATE].set(rate_new)
+                      .at[M.LAST_REL].set(jnp.where(fired, rel_now,
+                                                    gov[M.LAST_REL]))
+                      # Track the true residual as BEST too (it is the
+                      # honest one), and restart the patience clock: the
+                      # refill produces no updates, so the arm must wait
+                      # a full window before escalating again.
+                      .at[M.BEST].set(jnp.minimum(gov[M.BEST], rel_now))
+                      .at[M.BEST_UPD].set(st.upd.astype(dtype)))
+            gov_cols = {"gap": gov[M.GAP], "action": action}
+
         tel = tel_write(
             st.tel, st.tot,
             iter=st.tot, upd=st.upd,
             rnorm=cyc.norm0_cycle,           # TRUE residual M-norm at re-init
             age=jnp.int32(0),                # D-ring cleared by the restart
             breakdown=st.breakdown, restart=jnp.ones((), dtype),
-            replacement=(~st.breakdown).astype(dtype),
+            replacement=(~st.breakdown).astype(dtype), **gov_cols,
         )
         return _State(
             cyc=cyc, tot=st.tot + 1, upd=st.upd, restarts=st.restarts + 1,
             converged=st.converged | lucky, breakdown=jnp.asarray(False),
             hist=st.hist, norm0=st.norm0, since_rr=jnp.int32(0), tel=tel,
+            gov=gov,
         )
 
     def needs_interrupt(st: _State) -> jax.Array:
@@ -574,18 +714,29 @@ def build(
             # current iterate (true-residual recompute) once enough
             # solution updates have accumulated since the last (re)start.
             due = due | (st.since_rr >= replace_every)
+        if governor is not None:
+            # Governor-scheduled replacement: same interrupt machinery,
+            # so batched drivers apply it per-column masked at segment
+            # boundaries (DESIGN.md §18).
+            due = due | (st.gov[gov_model.DUE] > 0)
         return due
 
     def body(st: _State) -> _State:
         return jax.lax.cond(needs_interrupt(st), do_restart, iteration, st)
 
     def cond(st: _State) -> jax.Array:
-        return (
+        keep = (
             (~st.converged)
             & (st.tot < tot_max)
             & (st.upd < maxit)
             & (st.restarts <= max_restarts)
         )
+        if governor is not None:
+            # Terminal stagnation: stop burning iterations; the host
+            # ladder (repro.stability.governor) demotes l or raises a
+            # typed StagnationError from the returned governor vector.
+            keep = keep & ~(st.gov[gov_model.STAGNATED] > 0)
+        return keep
 
     def init(x0: jax.Array) -> _State:
         cyc0 = init_cycle(x0)
@@ -596,6 +747,8 @@ def build(
             converged=norm0 == 0.0, breakdown=jnp.asarray(False),
             hist=hist0, norm0=norm0, since_rr=jnp.int32(0),
             tel=jnp.full((telemetry_cap, TK), -1.0, dtype),
+            gov=(gov_model.gov_init(dtype) if governor is not None
+                 else jnp.zeros((gov_model.N_SLOTS,), dtype)),
         )
 
     def finish(final: _State) -> SolveResult:
@@ -604,6 +757,7 @@ def build(
             restarts=final.restarts, converged=final.converged,
             res_history=final.hist, norm0=final.norm0,
             telemetry=final.tel if telemetry_cap else None,
+            governor=final.gov if governor is not None else None,
         )
 
     return PlcgProgram(init=init, iteration=iteration, body=body, cond=cond,
@@ -624,14 +778,19 @@ def solve(
     replace_every: int = 0,
     fused_iteration: bool = False,
     telemetry_cap: int = 0,
+    recurrence: str = "ghysels",
+    governor: "gov_model.GovernorConfig | None" = None,
 ) -> SolveResult:
     """Solve A x = b with p(l)-CG.  ``l`` is the pipeline depth (static);
     ``fused_iteration=True`` runs the vector phase through the one-pass
     superkernel (DESIGN.md §13); ``telemetry_cap > 0`` records the
-    on-device per-iteration telemetry ring (DESIGN.md §16)."""
+    on-device per-iteration telemetry ring (DESIGN.md §16);
+    ``recurrence="stable"`` selects the coupled basis recurrence and
+    ``governor`` arms the stability governor (DESIGN.md §18)."""
     prog = build(ops, b, l, tol=tol, maxit=maxit, sigmas=sigmas,
                  max_restarts=max_restarts, replace_every=replace_every,
-                 fused_iteration=fused_iteration, telemetry_cap=telemetry_cap)
+                 fused_iteration=fused_iteration, telemetry_cap=telemetry_cap,
+                 recurrence=recurrence, governor=governor)
     dtype = b.dtype
     st0 = prog.init(jnp.zeros_like(b) if x0 is None else x0.astype(dtype))
 

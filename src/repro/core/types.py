@@ -115,6 +115,11 @@ class SolveResult(NamedTuple):
     # out_specs, vmap axes and donation contracts are unchanged
     # (DESIGN.md §16).
     telemetry: jax.Array | None = None
+    # Final stability-governor state vector (repro.stability.GOV_SLOTS) or
+    # None when the solve ran ungoverned (governor=None, the default).
+    # Same empty-subtree contract as ``telemetry``: ungoverned results
+    # keep the pre-governor pytree structure (DESIGN.md §18).
+    governor: jax.Array | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -163,7 +168,7 @@ class TelemetrySlab:
         tl = tel_layout(self.l)
         out = {name: tel[..., :, tl[name]]
                for name in ("iter", "upd", "rnorm", "age", "breakdown",
-                            "restart", "replacement")}
+                            "restart", "replacement", "gap", "action")}
         out["dots"] = tel[..., :, tl["dots"]:tl["size"]]
         return out
 

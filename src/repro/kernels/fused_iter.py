@@ -63,10 +63,23 @@ class SlabLayout:
     ring, the search direction p and the iterate x.  One array, one
     trailing N axis — exactly what a column-tiled kernel (and a
     ``donate_argnums``'d jit boundary) wants.
+
+    ``recurrence`` selects the top-basis update of the vector phase
+    (DESIGN.md §18): ``"ghysels"`` (default) recurs z^(l) through its own
+    independent three-term recurrence (the paper's Alg. 1 line 22);
+    ``"stable"`` recurs u first and recomputes z^(l)_{i+1} = M^{-1}
+    u_{i+1} from it — the coupled recurrence of Cools/Cornelis/Vanroose
+    (arXiv:1902.03100), which pins the auxiliary basis to the u ring so
+    local rounding in the z recurrence can no longer drift independently.
+    Exactly one pointwise preconditioner apply per iteration either way,
+    and the early (pipeline-fill) phase is bitwise identical in both
+    modes.  A trace-time choice: both kernel paths branch at build time,
+    so the compiled HLO carries only the selected variant.
     """
 
     l: int
     RB: int
+    recurrence: str = "ghysels"
 
     @property
     def u_off(self) -> int:
@@ -152,9 +165,15 @@ def tel_layout(l: int) -> dict[str, int]:
         "restart": 5,      # 1.0 on a restart boundary row
         "replacement": 6,  # 1.0 when the restart was a due residual
                            # replacement (not a breakdown)
-        "dots": 7,         # 2l+1 entries: the arrived dot block consumed
+        "gap": 7,          # governor's attainable-accuracy gap estimate
+                           # (relative units; -1/0 when ungoverned,
+                           # DESIGN.md §18)
+        "action": 8,       # governor action on this row: 0 none,
+                           # 1 gap-arm replacement, 2 patience-arm
+                           # replacement, 3 stagnation declared
+        "dots": 9,         # 2l+1 entries: the arrived dot block consumed
                            # this iteration (zeros during pipeline fill)
-        "size": 7 + (2 * l + 1),
+        "size": 9 + (2 * l + 1),
     }
 
 
@@ -267,6 +286,10 @@ def build_fused_iteration(
     IS = scal_layout(l)
     nd = 2 * l + 1
     has_prec = inv_diag is not None
+    if layout.recurrence not in ("ghysels", "stable"):
+        raise ValueError(f"unknown recurrence {layout.recurrence!r} "
+                         "(want 'ghysels' or 'stable')")
+    stable = layout.recurrence == "stable"
 
     def kernel(s_ref, idx_ref, scal_ref, *rest):
         *extra_refs, o_ref, acc_ref = rest
@@ -292,14 +315,35 @@ def build_fused_iteration(
         # ---- (K1) SPMV + pointwise preconditioner ------------------------
         az = spmv.tile(extra_refs, z_top, pid, bn)
         u_new0 = az - scal[IS["sig_i"]] * u_i
-        z_new0 = prec_ref[...] * u_new0 if has_prec else u_new0
+        u_new = jnp.where(
+            late,
+            (u_new0 - scal[IS["gam_new"]] * u_i
+             - scal[IS["d2"]] * u_im1) / scal[IS["dlt_safe"]],
+            u_new0)
+        if stable:
+            # Coupled recurrence (arXiv:1902.03100, DESIGN.md §18): the
+            # top basis vector is recomputed as M^{-1} u_{i+1} from the
+            # freshly recurred u instead of recurring independently.
+            # Early iterations are bitwise-unchanged: u_new == u_new0
+            # there, so prec(u_new) == the ghysels path's z_new0.
+            z_new = prec_ref[...] * u_new if has_prec else u_new
+            z_fill = z_new
+        else:
+            z_new0 = prec_ref[...] * u_new0 if has_prec else u_new0
+            zl_im1 = get(idx[IX["zl_im1"]])
+            z_new = jnp.where(
+                late,
+                (z_new0 - scal[IS["gam_new"]] * z_top
+                 - scal[IS["d2"]] * zl_im1) / scal[IS["dlt_safe"]],
+                z_new0)
+            z_fill = z_new0
 
         out = s
         # ---- pipeline-fill copies (lines 5-7) ----------------------------
         for k in range(l):
             row = idx[IX["fill"] + k]
             fill_k = idx[IX["f_fill"] + k] != 0
-            out = put(out, row, jnp.where(fill_k, z_new0, get(row)))
+            out = put(out, row, jnp.where(fill_k, z_fill, get(row)))
 
         # ---- (K4) stable basis recurrences (masked late) -----------------
         recs = []
@@ -313,17 +357,6 @@ def build_fused_iteration(
             recs.append(val)
             out = put(out, idx[IX["rec_w"] + k], val)
 
-        zl_im1 = get(idx[IX["zl_im1"]])
-        z_new = jnp.where(
-            late,
-            (z_new0 - scal[IS["gam_new"]] * z_top
-             - scal[IS["d2"]] * zl_im1) / scal[IS["dlt_safe"]],
-            z_new0)
-        u_new = jnp.where(
-            late,
-            (u_new0 - scal[IS["gam_new"]] * u_i
-             - scal[IS["d2"]] * u_im1) / scal[IS["dlt_safe"]],
-            u_new0)
         out = put(out, idx[IX["z_w"]], z_new)
         out = put(out, idx[IX["u_w"]], u_new)
 

@@ -76,13 +76,33 @@ def fused_iter_unfused(S, idx, scal, apply_a, prec, layout):
 
     az = apply_a(z_top)
     u_new0 = az - scal[IS["sig_i"]] * u_i
-    z_new0 = prec(u_new0)
+    u_new = jnp.where(
+        late,
+        (u_new0 - scal[IS["gam_new"]] * u_i
+         - scal[IS["d2"]] * u_im1) / scal[IS["dlt_safe"]],
+        u_new0)
+    if layout.recurrence == "stable":
+        # Coupled recurrence (arXiv:1902.03100, DESIGN.md §18): recompute
+        # the top basis vector as M^{-1} u_{i+1} from the recurred u
+        # instead of recurring z independently.  Early iterations are
+        # bitwise-unchanged (u_new == u_new0 there).
+        z_new = prec(u_new)
+        z_fill = z_new
+    else:
+        z_new0 = prec(u_new0)
+        zl_im1 = get(idx[IX["zl_im1"]])
+        z_new = jnp.where(
+            late,
+            (z_new0 - scal[IS["gam_new"]] * z_top
+             - scal[IS["d2"]] * zl_im1) / scal[IS["dlt_safe"]],
+            z_new0)
+        z_fill = z_new0
 
     out = S
     for k in range(l):
         row = idx[IX["fill"] + k]
         fill_k = idx[IX["f_fill"] + k] != 0
-        out = put(out, row, jnp.where(fill_k, z_new0, get(row)))
+        out = put(out, row, jnp.where(fill_k, z_fill, get(row)))
 
     recs = []
     for k in range(l):
@@ -95,17 +115,6 @@ def fused_iter_unfused(S, idx, scal, apply_a, prec, layout):
         recs.append(val)
         out = put(out, idx[IX["rec_w"] + k], val)
 
-    zl_im1 = get(idx[IX["zl_im1"]])
-    z_new = jnp.where(
-        late,
-        (z_new0 - scal[IS["gam_new"]] * z_top
-         - scal[IS["d2"]] * zl_im1) / scal[IS["dlt_safe"]],
-        z_new0)
-    u_new = jnp.where(
-        late,
-        (u_new0 - scal[IS["gam_new"]] * u_i
-         - scal[IS["d2"]] * u_im1) / scal[IS["dlt_safe"]],
-        u_new0)
     out = put(out, idx[IX["z_w"]], z_new)
     out = put(out, idx[IX["u_w"]], u_new)
 

@@ -301,6 +301,34 @@ def recalibrate_profile(
     return dataclasses.replace(hw, name=f"{hw.name}+measured", **updates)
 
 
+def governed_overhead(l: int, stages: int | None = None,
+                      replace_period: int = 256) -> float:
+    """Multiplicative per-iteration factor a GOVERNED solve pays at
+    depth l (DESIGN.md §18).
+
+    The stability governor (``repro.stability``) periodically replaces
+    the recursive residual; each replacement re-enters the pipeline fill
+    — ``l + 1`` iterations produce no solution update (plus the staged
+    ladder's own fill, ``stages + 1``, when the reduction is staged).
+    The attainable-accuracy analysis (arXiv:1804.02962) says the
+    true-vs-recursive gap grows with the recurrence depth, so the
+    replacement period SHRINKS with l — modeled first-order as
+    ``replace_period / l`` (``replace_period`` is the calibration point:
+    the l=1 period, either the default or measured from a governed
+    solve's telemetry ``replacements / iters``).  The overhead factor
+
+        1 + refill_iters / period(l)
+
+    is what tilts the autotuner's (l, stages) co-selection when the
+    governor is armed: deep pipelines stop being free once every
+    replacement pays their refill — the stability/latency trade the
+    paper flags, now priced into the sweep (tests/test_costs.py).
+    """
+    refill = (l + 1) + (stages + 1 if stages else 0)
+    period = max(replace_period / max(l, 1), 1.0)
+    return 1.0 + refill / period
+
+
 def xla_effective_depth(l: int, unroll: int) -> int:
     """Reductions a while-loop body can keep in flight under XLA.
 
@@ -483,6 +511,8 @@ def autotune_depth(
     iteration_bytes: Callable[[int], float] | float | None = None,
     reduction: str = "monolithic",
     stages_grid: tuple[int, ...] | None = None,
+    governed: bool = False,
+    replace_period: int = 256,
 ) -> AutotuneResult:
     """Sweep (l, unroll) — and, with ``reduction="staged"`` or
     ``"both"``, the ladder stage count — and pick the fastest candidate.
@@ -512,6 +542,15 @@ def autotune_depth(
     a callable ``l -> bytes`` since the slab (and hence the traffic)
     grows with depth (:func:`measured_iteration_bytes` /
     :func:`fused_iteration_bytes`, DESIGN.md §13).
+
+    ``governed=True`` scores p(l)-CG candidates for a solve with the
+    stability governor armed (DESIGN.md §18): the modeled time is
+    multiplied by :func:`governed_overhead` — the refill cost of the
+    depth-dependent replacement period (calibrate ``replace_period``
+    from a governed run's telemetry).  Deep-l candidates lose their
+    free lunch, and staged candidates additionally pay their ladder
+    fill per replacement, so the co-selection shifts toward shallower
+    (l, stages) exactly when robustness is being bought.
     """
     _require_timing_model()
     if reduction not in ("monolithic", "staged", "both"):
@@ -531,6 +570,9 @@ def autotune_depth(
                                    neighbor_bytes=neighbor_bytes,
                                    iteration_bytes=ib,
                                    reduction=red, stages=stages)
+        if governed and method == "plcg":
+            mdl *= governed_overhead(
+                l, stages if red == "staged" else None, replace_period)
         meas = measure(method, l, unroll) \
             if measure is not None and red == "monolithic" else None
         cands.append(Candidate(method, l, unroll, mdl, meas,

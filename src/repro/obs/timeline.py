@@ -221,10 +221,11 @@ def hlo_schedule_track(report: OverlapReport) -> Timeline:
 
 def telemetry_track(telemetry, l: int) -> Timeline:
     """Per-iteration counter rows decoded from the on-device telemetry
-    ring (one solve's ``SolveResult.telemetry``): residual norm and
-    in-flight handle age per iteration index, restart/replacement
-    instants.  Rows are emitted in iteration order (the ring's "iter"
-    column), skipping never-written slots."""
+    ring (one solve's ``SolveResult.telemetry``): residual norm,
+    in-flight handle age and (on governed solves, DESIGN.md §18) the
+    governor's gap estimate per iteration index; restart/replacement
+    and governor-action instants.  Rows are emitted in iteration order
+    (the ring's "iter" column), skipping never-written slots."""
     tel = np.asarray(telemetry)
     ts = TelemetrySlab(cap=tel.shape[-2], l=l)
     cols = ts.unpack(tel)
@@ -239,6 +240,8 @@ def telemetry_track(telemetry, l: int) -> Timeline:
         vals = {"age": float(cols["age"][r])}
         if cols["rnorm"][r] >= 0:
             vals["rnorm"] = float(cols["rnorm"][r])
+        if cols["gap"][r] > 0:
+            vals["gap"] = float(cols["gap"][r])
         tl.counter("iteration", ts_s=it * u, values=vals,
                    pid=PID_TELEMETRY, tid=1)
         if cols["restart"][r] > 0:
@@ -246,6 +249,14 @@ def telemetry_track(telemetry, l: int) -> Timeline:
                     else "breakdown restart")
             tl.instant(kind, ts_s=it * u, pid=PID_TELEMETRY, tid=1,
                        cat="restart")
+        act = float(cols["action"][r])
+        if act > 0:
+            kind = {1.0: "governor: gap-arm replacement",
+                    2.0: "governor: patience-arm replacement",
+                    3.0: "governor: stagnation declared"}.get(
+                        act, f"governor: action {act:g}")
+            tl.instant(kind, ts_s=it * u, pid=PID_TELEMETRY, tid=1,
+                       cat="governor", args={"action": act})
     tl.meta["telemetry"] = {
         "units": "solver iteration index, NOT time",
         "cap": ts.cap, "k": ts.k, "l": l,
@@ -287,7 +298,9 @@ def solve_timeline(backend, op, b, l: int = 2, window: int | None = None,
         report = plcg_overlap_report(
             backend, op, jax.ShapeDtypeStruct(b.shape, b.dtype), l=l,
             window=window, sigmas=sigmas, prec=prec,
-            fused_iteration=fused_iteration, telemetry_cap=telemetry_cap)
+            fused_iteration=fused_iteration, telemetry_cap=telemetry_cap,
+            recurrence=solver_kwargs.get("recurrence", "ghysels"),
+            governor=solver_kwargs.get("governor"))
     tl.merge(hlo_schedule_track(report))
     if res.telemetry is not None:
         tl.merge(telemetry_track(res.telemetry, l=l))

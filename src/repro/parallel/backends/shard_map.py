@@ -171,7 +171,8 @@ class ShardMapBackend(ReductionBackend):
                                                             st, method, kw),
             (b_spec, st_specs, arr_specs),
             batched_result_specs(
-                axis, telemetry=bool(kw.get("telemetry_cap", 0))))
+                axis, telemetry=bool(kw.get("telemetry_cap", 0)),
+                governor=kw.get("governor") is not None))
 
         # The slab B crosses into the solver's (possibly RCM-permuted)
         # basis on every entry point and the extracted solutions map back

@@ -476,16 +476,20 @@ def batched_state_specs(method: str, state_shapes, axis: str):
     return jax.tree.map(spec, state_shapes, mask)
 
 
-def batched_result_specs(axis: str, telemetry: bool = False) -> SolveResult:
+def batched_result_specs(axis: str, telemetry: bool = False,
+                         governor: bool = False) -> SolveResult:
     """Out-specs of a stacked (leading s-axis) SolveResult: x is (s, n)
     with n domain-decomposed; everything else replicated.  ``telemetry``
     mirrors whether the solve is instrumented (telemetry_cap > 0): the
     telemetry ring is replicated scalar state (P()), and None on plain
     solves — None is an empty pytree subtree, so both shapes of result
-    match their spec (DESIGN.md §16)."""
+    match their spec (DESIGN.md §16).  ``governor`` mirrors whether the
+    solve is governed (same contract: replicated scalar state when
+    armed, absent otherwise — DESIGN.md §18)."""
     return SolveResult(x=P(None, axis), iters=P(), restarts=P(),
                        converged=P(), res_history=P(), norm0=P(),
-                       telemetry=P() if telemetry else None)
+                       telemetry=P() if telemetry else None,
+                       governor=P() if governor else None)
 
 
 def distributed_solve_batched(
@@ -520,7 +524,8 @@ def distributed_solve_batched(
     inner = shard_map_compat(
         run, mesh=mesh, in_specs=(P(axis, None), arr_specs),
         out_specs=batched_result_specs(
-            axis, telemetry=bool(kwargs.get("telemetry_cap", 0))),
+            axis, telemetry=bool(kwargs.get("telemetry_cap", 0)),
+            governor=kwargs.get("governor") is not None),
     )
 
     def fn(B, arrays):
@@ -563,8 +568,10 @@ def distributed_solve(
         x=P(axis), iters=P(), restarts=P(), converged=P(),
         res_history=P(), norm0=P(),
         # Replicated when instrumented (every recorded scalar is post-psum
-        # state), absent otherwise — mirrors SolveResult.telemetry.
+        # state), absent otherwise — mirrors SolveResult.telemetry; the
+        # governor vector follows the same contract (DESIGN.md §18).
         telemetry=P() if kwargs.get("telemetry_cap", 0) else None,
+        governor=P() if kwargs.get("governor") is not None else None,
     )
     arr_specs = jax.tree.map(lambda _: P(axis), arrays)
     inner = shard_map_compat(

@@ -27,8 +27,11 @@ jax import) so it stays importable — and testable — on any container.
 from __future__ import annotations
 
 import dataclasses
+import os
+import shutil
 import socket
 import subprocess
+import tempfile
 import time
 from typing import Callable, Sequence
 
@@ -41,6 +44,49 @@ BIND_COLLISION_MARKERS = (
     "errno: 98",
     "bind address",
 )
+
+# Env var carrying rank k's heartbeat file path.  The launcher sets it
+# per rank; children call :func:`touch_heartbeat` at progress points
+# (startup, per solve chunk) so the error messages can distinguish a
+# WEDGED rank (alive but silent — e.g. blocked in a collective) from a
+# dead or merely slow one by the age of its last heartbeat.
+ENV_HEARTBEAT = "REPRO_FABRIC_HEARTBEAT"
+
+
+def touch_heartbeat(environ=None) -> str | None:
+    """Child-side progress marker: touch the heartbeat file the launcher
+    assigned this rank (``ENV_HEARTBEAT``).  No-op (returns None) when
+    running outside a fabric; cheap enough to call per chunk."""
+    env = os.environ if environ is None else environ
+    path = env.get(ENV_HEARTBEAT)
+    if not path:
+        return None
+    with open(path, "a"):
+        os.utime(path, None)
+    return path
+
+
+def _heartbeat_age(path: str | None, now: float, spawned: float) -> float:
+    """Seconds since the rank last touched its heartbeat file; falls back
+    to time-since-spawn when the rank never touched it."""
+    if path:
+        try:
+            return max(now - os.path.getmtime(path), 0.0)
+        except OSError:
+            pass
+    return max(now - spawned, 0.0)
+
+
+def _rank_status(code: int | None, hb_age: float, wedge_after_s: float
+                 ) -> str:
+    """One human line per rank: exit status + heartbeat age.  ``wedged``
+    means alive but heartbeat-silent past the threshold — the signature
+    of a rank blocked in a collective whose peer died."""
+    if code is None:
+        state = "wedged" if hb_age > wedge_after_s else "running"
+    else:
+        state = f"exit {code}"
+    return f"{state}, last heartbeat {hb_age:.1f}s ago"
 
 
 class FabricError(RuntimeError):
@@ -117,12 +163,19 @@ def launch_fabric(
     poll_s: float = 0.2,
     max_port_retries: int = 3,
     host: str = "127.0.0.1",
+    wedge_after_s: float = 5.0,
 ) -> FabricResult:
     """Run one multi-controller process group to completion.
 
     ``child_argv(coordinator, process_id)`` builds rank k's argv; every
-    rank is spawned with the same ``env`` (stdout+stderr merged, text
-    mode).  The launcher then supervises:
+    rank is spawned with ``env`` (default: the launcher's environment)
+    plus a per-rank ``ENV_HEARTBEAT`` file path (stdout+stderr merged,
+    text mode).  Children that call :func:`touch_heartbeat` at progress
+    points get per-rank "last heartbeat N s ago" lines in every fabric
+    error — a surviving rank whose heartbeat is older than
+    ``wedge_after_s`` is reported ``wedged`` (alive but stuck, the
+    blocked-collective signature) rather than merely ``running``.
+    The launcher supervises:
 
     * all ranks exit 0 → :class:`FabricResult` with per-rank outputs;
     * any rank exits nonzero → survivors killed; if the dead rank's
@@ -139,16 +192,32 @@ def launch_fabric(
     if num_processes < 1:
         raise ValueError(f"num_processes must be >= 1, got {num_processes}")
     last_outputs: list[str] = []
+    base_env = dict(os.environ if env is None else env)
     for attempt in range(1, max_port_retries + 2):
         coordinator = pick_coordinator(host)
+        hb_dir = tempfile.mkdtemp(prefix="repro-fabric-hb-")
+        hb_paths = [os.path.join(hb_dir, f"rank{k}.hb")
+                    for k in range(num_processes)]
+        spawned = time.time()
         procs = [
             subprocess.Popen(
-                child_argv(coordinator, k), env=env,
+                child_argv(coordinator, k),
+                env={**base_env, ENV_HEARTBEAT: hb_paths[k]},
                 stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
             )
             for k in range(num_processes)
         ]
         deadline = time.monotonic() + timeout_s
+
+        def statuses(codes):
+            now = time.time()
+            return [
+                _rank_status(codes[k],
+                             _heartbeat_age(hb_paths[k], now, spawned),
+                             wedge_after_s)
+                for k in range(num_processes)
+            ]
+
         try:
             while True:
                 codes = [p.poll() for p in procs]
@@ -160,6 +229,10 @@ def launch_fabric(
                 dead = [(k, c) for k, c in enumerate(codes)
                         if c is not None and c != 0]
                 if dead:
+                    # Snapshot status BEFORE killing survivors: the exit
+                    # codes and heartbeat ages at detection time are the
+                    # diagnosis, not the post-kill wreckage.
+                    stat = statuses(codes)
                     outs = _kill_all(procs)
                     last_outputs = outs
                     k0, c0 = dead[0]
@@ -169,26 +242,28 @@ def launch_fabric(
                         # and the persisted-collision error below fires.
                         break
                     detail = "\n".join(
-                        f"--- rank {k} (exit {p.poll()}) ---\n"
-                        f"{_tail(outs[k])}"
-                        for k, p in enumerate(procs))
+                        f"--- rank {k} ({stat[k]}) ---\n{_tail(outs[k])}"
+                        for k in range(num_processes))
                     raise FabricProcessError(
                         f"rank {k0} of {num_processes} exited {c0} while "
                         f"peers were running (coordinator {coordinator}); "
                         f"survivors killed to avoid a collective hang\n"
                         f"{detail}")
                 if time.monotonic() > deadline:
+                    stat = statuses(codes)
                     outs = _kill_all(procs)
                     running = [k for k, c in enumerate(codes) if c is None]
                     raise FabricTimeoutError(
                         f"fabric of {num_processes} rank(s) exceeded "
                         f"{timeout_s:.0f}s (ranks {running} still running, "
                         f"coordinator {coordinator}); group killed\n"
-                        + "\n".join(f"--- rank {k} ---\n{_tail(o)}"
-                                    for k, o in enumerate(outs)))
+                        + "\n".join(
+                            f"--- rank {k} ({stat[k]}) ---\n{_tail(o)}"
+                            for k, o in enumerate(outs)))
                 time.sleep(poll_s)
         finally:
             _kill_all(procs)
+            shutil.rmtree(hb_dir, ignore_errors=True)
     raise FabricProcessError(
         f"coordinator bind collision persisted through "
         f"{max_port_retries} port retries\n"

@@ -29,7 +29,8 @@ See ``examples/serve_solver.py`` (quickstart) and
 open-loop replay section).
 """
 
-from repro.serve.batcher import AdmissionPolicy, RequestQueue, SolveRequest
+from repro.serve.batcher import (AdmissionPolicy, RequestQueue,
+                                 RetryPolicy, SolveRequest)
 from repro.serve.cache import SetupCache, operator_fingerprint
 from repro.serve.clock import Clock, SystemClock, VirtualClock
 from repro.serve.errors import (AdmissionRejected, BadRequestError,
@@ -50,6 +51,7 @@ __all__ = [
     "ReplayReport",
     "RequestQueue",
     "RequestResult",
+    "RetryPolicy",
     "ServeError",
     "SetupCache",
     "SlabScheduler",

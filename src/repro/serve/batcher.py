@@ -49,6 +49,10 @@ class SolveRequest:
     tol: float
     submitted_at: float = dataclasses.field(default_factory=time.perf_counter)
     deadline_s: float | None = None
+    # Times this request has been requeued by the service's RetryPolicy
+    # (shed -> backoff -> resubmit); drives the exponential backoff and
+    # the bounded give-up.
+    retries: int = 0
 
     @property
     def slab_key(self) -> SlabKey:
@@ -93,6 +97,36 @@ class AdmissionPolicy:
         if deadline_s is not None and deadline_s <= self.min_deadline_s:
             return "deadline_infeasible"
         return None
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded retry with exponential backoff for shed requests
+    (DESIGN.md §15).
+
+    A request whose deadline expired in queue is shed by the scheduler;
+    with a retry policy armed the service REQUEUES it instead of
+    dropping it — after ``backoff(retries)`` seconds of service-clock
+    delay and with a fresh SLO window — up to ``max_retries`` times.
+    The backoff is pure arithmetic on the service clock, so replays
+    under a :class:`~repro.serve.clock.VirtualClock` retry at exactly
+    the same virtual instants (tests/test_serve_replay.py).
+
+    ``max_retries = 0`` disables requeueing (the pre-§18 behavior);
+    the policy then only supplies the :class:`AdmissionRejected`
+    ``retry_after_s`` hint.
+    """
+
+    max_retries: int = 2
+    backoff_base_s: float = 0.05
+    backoff_factor: float = 2.0
+    backoff_cap_s: float = 1.0
+
+    def backoff(self, retries: int) -> float:
+        """Delay before retry number ``retries + 1`` (exponential,
+        capped)."""
+        return min(self.backoff_cap_s,
+                   self.backoff_base_s * self.backoff_factor ** retries)
 
 
 class RequestQueue:

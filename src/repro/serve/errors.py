@@ -48,10 +48,17 @@ class AdmissionRejected(ServeError):
     configured ceiling, or a deadline that cannot be met).
 
     ``reason`` is machine-readable: ``"queue_full"`` or
-    ``"deadline_infeasible"``.
+    ``"deadline_infeasible"``.  ``retry_after_s`` is the service's
+    backoff hint: resubmit no sooner than this many (service-clock)
+    seconds, or None when retrying cannot help (an infeasible deadline
+    stays infeasible; a service without a retry policy offers no hint).
     """
 
-    def __init__(self, reason: str, detail: str = ""):
+    def __init__(self, reason: str, detail: str = "",
+                 retry_after_s: float | None = None):
+        hint = (f"; retry after {retry_after_s:g}s"
+                if retry_after_s is not None else "")
         super().__init__(f"admission rejected ({reason})"
-                         + (f": {detail}" if detail else ""))
+                         + (f": {detail}" if detail else "") + hint)
         self.reason = reason
+        self.retry_after_s = retry_after_s

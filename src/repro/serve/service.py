@@ -42,13 +42,14 @@ fixed (n, s) shapes: the request mix never forces a recompile.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from typing import Any, Hashable
 
 import numpy as np
 
 from repro.obs.metrics import MetricsRegistry
-from repro.serve.batcher import (AdmissionPolicy, RequestQueue, SlabKey,
-                                 SolveRequest)
+from repro.serve.batcher import (AdmissionPolicy, RequestQueue, RetryPolicy,
+                                 SlabKey, SolveRequest)
 from repro.serve.cache import SetupCache
 from repro.serve.clock import Clock, SystemClock
 from repro.serve.errors import (AdmissionRejected, BadRequestError,
@@ -118,6 +119,14 @@ class SolverService:
                   drain-to-empty baseline (slots recycle only once a
                   slab is fully empty) — kept for the utilization
                   comparison in BENCH_serve.json.
+    retry:        :class:`~repro.serve.batcher.RetryPolicy` — requeue
+                  shed requests after exponential backoff (bounded by
+                  ``max_retries``, fresh SLO window per attempt) instead
+                  of dropping them, and attach a ``retry_after_s`` hint
+                  to queue-full :class:`AdmissionRejected`.  None
+                  (default) keeps the drop-on-shed behavior.  Pure
+                  service-clock arithmetic: deterministic under a
+                  VirtualClock replay.
     registry:     :class:`~repro.obs.metrics.MetricsRegistry` all serve
                   stats report through (DESIGN.md §16); default a fresh
                   per-service registry so two services never share
@@ -126,7 +135,7 @@ class SolverService:
                   remain as read-only views onto it for one release.
     telemetry_cap: rows of the on-device telemetry ring per slab column
                   (plcg only, DESIGN.md §16).  0 (default) compiles the
-                  ring out entirely; >0 appends a (cap, 2l+8) ring to
+                  ring out entirely; >0 appends a (cap, 2l+10) ring to
                   each column's donated state — zero extra collectives,
                   zero host transfers, bitwise-invisible to the
                   arithmetic (tests/test_telemetry.py).
@@ -141,7 +150,8 @@ class SolverService:
                  max_replicas: int = 1, replicate_watermark: float = 1.0,
                  steal: bool = True, continuous: bool = True,
                  registry: MetricsRegistry | None = None,
-                 telemetry_cap: int = 0):
+                 telemetry_cap: int = 0,
+                 retry: RetryPolicy | None = None):
         self.backend = backend
         self.s = int(s)
         self.method = method
@@ -160,6 +170,11 @@ class SolverService:
                       else cache)
         self.clock = SystemClock() if clock is None else clock
         self.admission = AdmissionPolicy() if admission is None else admission
+        self.retry = retry
+        # Backoff queue of requeued shed requests: (due_t, req_id, req)
+        # min-heap on the service clock — req_id tiebreak keeps the pop
+        # order deterministic under a VirtualClock.
+        self._retry_q: list[tuple[float, int, SolveRequest]] = []
 
         self.queue = RequestQueue()
         self.scheduler = SlabScheduler(
@@ -188,6 +203,9 @@ class SolverService:
         self._c_slo = m.counter(
             "serve_requests_slo_met_total",
             "requests converged within their deadline")
+        self._c_retried = m.counter(
+            "serve_requests_retried_total",
+            "shed requests requeued by the retry policy")
         self._h_latency = m.histogram(
             "serve_request_latency_seconds",
             "submit -> retirement latency (bounded reservoir)")
@@ -239,9 +257,10 @@ class SolverService:
     @property
     def pending(self) -> int:
         """Admitted-but-unfinished request count (queue + worker queues +
-        in-flight slots) — the admission policy's queue-depth metric."""
+        in-flight slots + backoff-delayed retries) — the admission
+        policy's queue-depth metric."""
         return (len(self.queue) + self.scheduler.backlog()
-                + self.scheduler.in_flight())
+                + self.scheduler.in_flight() + len(self._retry_q))
 
     def submit(self, op_key: Hashable, b, tol: float = 1e-8,
                deadline_s: float | None = None) -> int:
@@ -274,7 +293,14 @@ class SolverService:
         reason = self.admission.check(self.pending, deadline_s)
         if reason is not None:
             self._c_rejected.inc()
-            raise AdmissionRejected(reason, f"pending={self.pending}")
+            # Backoff hint: queue pressure drains, so suggest the retry
+            # policy's first backoff; an infeasible deadline gets none
+            # (resubmitting the same deadline can never be admitted).
+            hint = (self.retry.backoff(0)
+                    if self.retry is not None and reason == "queue_full"
+                    else None)
+            raise AdmissionRejected(reason, f"pending={self.pending}",
+                                    retry_after_s=hint)
         return self.queue.submit(op_key, b, tol, deadline_s=deadline_s,
                                  now=self.clock.now()).req_id
 
@@ -309,10 +335,31 @@ class SolverService:
             self._c_slo.inc()
         return rr
 
+    def _release_due_retries(self, now: float) -> None:
+        """Move backoff-expired retries back onto the workers (fresh SLO
+        window: the deadline re-anchors at the release instant)."""
+        while self._retry_q and self._retry_q[0][0] <= now:
+            _due, _rid, req = heapq.heappop(self._retry_q)
+            req.submitted_at = now
+            self.scheduler.dispatch(req)
+
+    def _maybe_requeue(self, req: SolveRequest, now: float) -> bool:
+        """Shed-path retry: True when the request was requeued with
+        backoff instead of dropped (bounded by the policy)."""
+        if self.retry is None or req.retries >= self.retry.max_retries:
+            return False
+        delay = self.retry.backoff(req.retries)
+        req.retries += 1
+        heapq.heappush(self._retry_q, (now + delay, req.req_id, req))
+        self._c_retried.inc()
+        return True
+
     def step(self) -> list[RequestResult]:
-        """One scheduler tick over every slab with work: dispatch, pack
-        free slots, chunk all busy slabs, retire finished columns.
-        Returns the requests retired (or shed) this tick."""
+        """One scheduler tick over every slab with work: release due
+        retries, dispatch, pack free slots, chunk all busy slabs, retire
+        finished columns.  Returns the requests retired (or shed) this
+        tick."""
+        self._release_due_retries(self.clock.now())
         self._dispatch_queue()
         report = self.scheduler.tick(self.clock.now())
         now = self.clock.now()
@@ -323,16 +370,23 @@ class SolverService:
                 converged=rc.converged, res_history=rc.res_history,
                 shed=False, now=now))
         for req in report.shed:
+            if self._maybe_requeue(req, now):
+                continue
             out.append(self._record(
                 req, worker=-1, x=None, iters=0, converged=False,
                 res_history=np.empty(0), shed=True, now=now))
         return out
 
     def drain(self, max_ticks: int = 10_000) -> dict[int, RequestResult]:
-        """Run the scheduler until queue and slabs are empty."""
+        """Run the scheduler until queue and slabs are empty.  When the
+        only remaining work is backoff-delayed retries, the clock sleeps
+        to the next due instant (advancing a VirtualClock exactly)."""
         for _ in range(max_ticks):
             if self.pending == 0:
                 break
+            if self._retry_q and self.pending == len(self._retry_q):
+                self.clock.sleep(
+                    max(self._retry_q[0][0] - self.clock.now(), 0.0))
             self.step()
         else:
             raise RuntimeError("drain: max_ticks exceeded "
@@ -365,6 +419,10 @@ class SolverService:
         return int(self._c_shed.value())
 
     @property
+    def retried(self) -> int:
+        return int(self._c_retried.value())
+
+    @property
     def slo_met(self) -> int:
         return int(self._c_slo.value())
 
@@ -380,6 +438,7 @@ class SolverService:
         self._c_rejected.reset()
         self._c_shed.reset()
         self._c_slo.reset()
+        self._c_retried.reset()
         self.retirement_log.clear()
         self.scheduler.reset_stats()
 
@@ -393,6 +452,7 @@ class SolverService:
             "workers": len(sched.workers),
             "rejected": self.rejected,
             "shed": self.shed,
+            "retried": self.retried,
             "slo_met": self.slo_met,
             "stolen": len(sched.steal_log),
             "slot_utilization": sched.slot_utilization(),

@@ -1,0 +1,27 @@
+"""Stability-governed deep pipelines (DESIGN.md §18).
+
+``repro.stability`` keeps deep p(l)-CG honest about rounding: the
+attainable-accuracy gap model and governor policy (``model``), and the
+host-side depth-demotion ladder with its typed stagnation diagnosis
+(``governor``).  The solver-side wiring lives in
+``repro.core.pipelined_cg`` (``recurrence=`` / ``governor=``); the
+fault-injection layer that exercises all of it is ``repro.chaos``.
+"""
+
+from repro.stability.model import (ACTION_GAP_REPLACE, ACTION_NONE,
+                                   ACTION_PATIENCE_REPLACE,
+                                   ACTION_STAGNATED, BEST, BEST_UPD, DUE,
+                                   FRUITLESS, GAP, LAST_REL, N_SLOTS, REPL,
+                                   STAGNATED, GovernorConfig, gap_step,
+                                   gov_init)
+from repro.stability.governor import (StagnationError, diagnose,
+                                      governed_solve)
+
+__all__ = [
+    "GovernorConfig", "gap_step", "gov_init",
+    "StagnationError", "diagnose", "governed_solve",
+    "GAP", "BEST", "BEST_UPD", "DUE", "REPL", "FRUITLESS", "STAGNATED",
+    "LAST_REL", "N_SLOTS",
+    "ACTION_NONE", "ACTION_GAP_REPLACE", "ACTION_PATIENCE_REPLACE",
+    "ACTION_STAGNATED",
+]

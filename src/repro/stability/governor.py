@@ -1,0 +1,120 @@
+"""Host-side governed solve: the pipeline-depth demotion ladder
+(DESIGN.md §18).
+
+The in-solver governor (``repro.core.pipelined_cg`` with a
+:class:`~repro.stability.model.GovernorConfig`) detects and repairs
+accuracy loss *within* one compiled solve — residual replacements
+through the interrupt machinery, terminal STAGNATED when replacements
+stop helping.  What it cannot do from inside a ``lax.while_loop`` is
+change the pipeline depth: ``l`` is a static trace parameter.  That
+escalation lives here, on the host:
+
+    result, attempts = governed_solve(backend, op, b, l=8, ...)
+
+Each stagnated attempt halves ``l`` (never below ``min_l``) and
+warm-restarts from the returned iterate — the attainable-accuracy model
+says shallower pipelines round less (arXiv:1804.02962), so demotion
+trades the hidden-latency budget for accuracy only when the governor
+has PROVEN the current depth cannot reach tol.  When even ``l = min_l``
+stagnates, a typed :class:`StagnationError` carries the full diagnosis
+instead of a silently non-converged result.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.stability import model as M
+from repro.stability.model import GovernorConfig
+
+
+class StagnationError(RuntimeError):
+    """The governed solve stagnated at every pipeline depth down to
+    ``min_l``: residual replacements stopped improving the TRUE residual
+    before tol was reached.  ``diagnosis`` holds the per-attempt
+    governor summaries (depth, replacements, best relative residual) so
+    the failure is actionable — typically a genuinely inconsistent
+    system, a broken operator, or injected corruption beyond the
+    replacement model's reach."""
+
+    def __init__(self, message: str, diagnosis: dict | None = None):
+        super().__init__(message)
+        self.diagnosis = diagnosis or {}
+
+
+def diagnose(result) -> dict:
+    """Summarize a governed ``SolveResult``'s final governor vector."""
+    if result.governor is None:
+        raise ValueError("result carries no governor state "
+                         "(solve ran with governor=None)")
+    g = np.asarray(result.governor)
+    return {
+        "gap": float(g[M.GAP]),
+        "best_rel": float(g[M.BEST]),
+        "replacements": int(g[M.REPL]),
+        "fruitless": int(g[M.FRUITLESS]),
+        "stagnated": bool(g[M.STAGNATED] > 0),
+        "last_replacement_rel": float(g[M.LAST_REL]),
+        "converged": bool(np.asarray(result.converged)),
+        "iters": int(np.asarray(result.iters)),
+    }
+
+
+def governed_solve(backend, op, b, *, l: int, prec=None,
+                   governor: GovernorConfig | None = None,
+                   recurrence: str = "stable", min_l: int = 1,
+                   ops_transform=None, **solver_kwargs):
+    """Solve with the stability governor armed, demoting the pipeline
+    depth on stagnation.
+
+    Returns ``(result, attempts)`` where ``attempts`` is the list of
+    per-depth :func:`diagnose` dicts (each tagged with its ``l``).  The
+    ladder: solve at ``l``; any outcome the governor could NOT certify
+    against the true residual — explicit STAGNATED, or the restart /
+    iteration budget exhausted without truth-certified convergence
+    (catastrophic corruption burns the budget in breakdown restarts
+    without ever letting a governed replacement fire) — demotes: halve
+    ``l`` (floor ``min_l``) and warm-restart from the returned iterate.
+    A failed attempt at ``min_l`` raises :class:`StagnationError`; a
+    governed solve never returns silent non-convergence.
+
+    ``ops_transform`` (optional) rewrites the backend's
+    :class:`~repro.core.types.SolverOps` before the solve — the wire
+    point ``repro.chaos.chaos_ops`` uses to inject reduction-payload
+    faults in tests and benchmarks.
+    """
+    assert min_l >= 1
+    cfg = governor if governor is not None else GovernorConfig()
+    x0 = solver_kwargs.pop("x0", None)
+    attempts: list[dict] = []
+    cur_l = int(l)
+
+    def run(cur_l, x0):
+        kw = dict(solver_kwargs, l=cur_l, recurrence=recurrence,
+                  governor=cfg, **({} if x0 is None else {"x0": x0}))
+        if ops_transform is None:
+            return backend.solve(op, b, method="plcg", prec=prec, **kw)
+        from repro.core import pipelined_cg
+        return backend.run(
+            lambda ops, bb: pipelined_cg.solve(ops_transform(ops), bb, **kw),
+            op, b, prec=prec)
+
+    while True:
+        res = run(cur_l, x0)
+        d = diagnose(res)
+        d["l"] = cur_l
+        attempts.append(d)
+        if d["converged"]:
+            return res, attempts
+        if cur_l <= min_l:
+            why = "stagnated" if d["stagnated"] else "exhausted its budget"
+            raise StagnationError(
+                f"governed p(l)-CG {why} at every depth down to l={min_l}: "
+                f"best relative residual {d['best_rel']:.3e} after "
+                f"{d['replacements']} governed replacement(s) at l={cur_l} "
+                f"({len(attempts)} depth(s) tried)",
+                diagnosis={"attempts": attempts})
+        # Warm restart shallower: the iterate is the best clean state we
+        # have (every replacement re-derived it from b - A x).
+        x0 = res.x
+        cur_l = max(min_l, cur_l // 2)

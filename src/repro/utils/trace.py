@@ -324,6 +324,8 @@ def plcg_overlap_report(
     prec=None,
     fused_iteration: bool = False,
     telemetry_cap: int = 0,
+    recurrence: str = "ghysels",
+    governor=None,
 ) -> OverlapReport:
     """Trace a flat ``window``-iteration p(l)-CG schedule through
     ``backend`` and report the in-flight reduction chains.
@@ -342,6 +344,11 @@ def plcg_overlap_report(
     the telemetry-ring writes ride the schedule, and the report must show
     the identical reduction structure — the zero-extra-collectives
     invariant, asserted in tests/test_telemetry.py.
+
+    ``recurrence``/``governor`` trace the stable-recurrence and governed
+    solves (DESIGN.md §18): the governor is replicated-scalar work in
+    the scalar phase, so a governed schedule must STILL show exactly one
+    reduction start per window — asserted in tests/test_stability.py.
     """
     window = l + 2 if window is None else window
     if window < 1:
@@ -351,7 +358,8 @@ def plcg_overlap_report(
         prog = pipelined_cg.build(ops, b_local, l, tol=0.0,
                                   maxit=window + l + 2, sigmas=sigmas,
                                   fused_iteration=fused_iteration,
-                                  telemetry_cap=telemetry_cap)
+                                  telemetry_cap=telemetry_cap,
+                                  recurrence=recurrence, governor=governor)
         st = prog.init(jnp.zeros_like(b_local))
         for k in range(window):
             with jax.named_scope(f"{WINDOW_SCOPE}{k}"):
@@ -361,8 +369,9 @@ def plcg_overlap_report(
         # traced chains (except the trailing un-consumed ones) live.
         # The telemetry ring is returned too so its writes stay live in
         # the instrumented trace (an unused ring would be DCE'd and the
-        # zero-overhead assertion would be vacuous).
-        return st.hist, st.cyc.D, st.tel
+        # zero-overhead assertion would be vacuous); same for the
+        # governor vector on governed traces.
+        return st.hist, st.cyc.D, st.tel, st.gov
 
     hlo = backend.lower_hlo(harness, op, b, prec=prec)
     return analyze_overlap(hlo, l=l, window=window)
@@ -378,6 +387,8 @@ def batched_plcg_overlap_report(
     prec=None,
     fused_iteration: bool = False,
     telemetry_cap: int = 0,
+    recurrence: str = "ghysels",
+    governor=None,
 ) -> OverlapReport:
     """Overlap report for the BATCHED multi-RHS p(l)-CG slab
     (DESIGN.md §11): a flat ``window``-iteration schedule of the vmapped
@@ -401,13 +412,15 @@ def batched_plcg_overlap_report(
             prog = pipelined_cg.build(ops, bcol, l, tol=0.0,
                                       maxit=window + l + 2, sigmas=sigmas,
                                       fused_iteration=fused_iteration,
-                                      telemetry_cap=telemetry_cap)
+                                      telemetry_cap=telemetry_cap,
+                                      recurrence=recurrence,
+                                      governor=governor)
             st = prog.init(jnp.zeros_like(bcol))
             for k in range(window):
                 with jax.named_scope(f"{WINDOW_SCOPE}{k}"):
                     st = prog.iteration(
                         st, static_phase="late" if k >= l else "early")
-            return st.hist, st.cyc.D, st.tel
+            return st.hist, st.cyc.D, st.tel, st.gov
 
         return jax.vmap(col, in_axes=1)(B_local)
 

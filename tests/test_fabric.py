@@ -25,12 +25,14 @@ import numpy as np
 import pytest
 
 from repro.parallel.fabric import (
+    ENV_HEARTBEAT,
     FabricProcessError,
     FabricResult,
     FabricTimeoutError,
     free_port,
     launch_fabric,
     pick_coordinator,
+    touch_heartbeat,
 )
 
 
@@ -82,6 +84,40 @@ def test_kill_one_process_raises_typed_error_not_hang():
     assert "rank 1 of 2 exited 3" in msg
     assert "survivors killed" in msg
     assert "rank 1 dying" in msg          # per-rank output tail attached
+    # §18 forensics: every rank's detail line carries its exit status
+    # and heartbeat age, so wedged vs dead is readable from the error.
+    assert "last heartbeat" in msg
+    assert "(exit 3," in msg
+
+
+def test_wedged_rank_distinguished_from_slow_one():
+    # Rank 0 heartbeats once at startup then blocks "in a collective";
+    # rank 1 dies after the heartbeat has gone stale.  With a tight
+    # wedge threshold the error must report rank 0 as WEDGED (alive but
+    # heartbeat-silent) and rank 1 with its exit status.
+    body = ("import os, sys, time\n"
+            "hb = os.environ.get('" + ENV_HEARTBEAT + "')\n"
+            "open(hb, 'a').close(); os.utime(hb, None)\n"
+            "if RANK == 1:\n"
+            "    time.sleep(1.5); sys.exit(5)\n"
+            "time.sleep(120)\n")
+    with pytest.raises(FabricProcessError) as ei:
+        launch_fabric(_argv_script(body), 2, timeout_s=300, poll_s=0.05,
+                      wedge_after_s=0.5)
+    msg = str(ei.value)
+    assert "rank 1 of 2 exited 5" in msg
+    assert "(wedged," in msg              # rank 0: alive, heartbeat stale
+    assert "(exit 5," in msg
+
+
+def test_touch_heartbeat_helper(tmp_path):
+    # Outside a fabric: no env var, clean no-op.
+    assert touch_heartbeat({}) is None
+    # Inside: touches (creates) the assigned file and returns its path.
+    p = str(tmp_path / "rank0.hb")
+    assert touch_heartbeat({ENV_HEARTBEAT: p}) == p
+    import os
+    assert os.path.exists(p)
 
 
 def test_timeout_raises_typed_error_and_kills_group():

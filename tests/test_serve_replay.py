@@ -158,6 +158,83 @@ def test_shedding_and_admission_under_overload():
     assert all(ev.waited_s > 0.012 for ev in svc.scheduler.shed_log)
 
 
+def test_retry_requeues_shed_request_to_success():
+    """A shed request with the retry policy armed is REQUEUED with
+    backoff instead of dropped: the retry releases with a fresh SLO
+    window and retires converged — no shed result, one retried count,
+    all on the virtual clock."""
+    from repro.serve import RetryPolicy, VirtualClock
+
+    clock = VirtualClock()
+    svc = _service("local", clock=clock,
+                   retry=RetryPolicy(max_retries=2, backoff_base_s=0.05))
+    req = svc.submit("lap", np.ones(OP.n), tol=1e-8, deadline_s=0.01)
+    clock.advance(0.05)          # deadline blows while queued
+    out = svc.step()             # pack-time shed -> requeue, not drop
+    assert out == []             # nothing retired OR shed this tick
+    assert svc.retried == 1 and svc.shed == 0
+    assert svc.pending == 1      # still owned by the service (backoff)
+    results = svc.drain()        # drain sleeps the clock to the due time
+    r = results[req]
+    assert r.converged and not r.shed and r.slo_met
+    assert svc.stats()["retried"] == 1 and svc.stats()["shed"] == 0
+
+
+def test_retry_exhaustion_finally_sheds():
+    """Bounded give-up: a request whose deadline blows on every attempt
+    is requeued exactly ``max_retries`` times, then shed for real."""
+    from repro.serve import RetryPolicy, VirtualClock
+
+    clock = VirtualClock()
+    svc = _service("local", clock=clock,
+                   retry=RetryPolicy(max_retries=2, backoff_base_s=0.05))
+    req = svc.submit("lap", np.ones(OP.n), tol=1e-8, deadline_s=0.01)
+    shed_seen = []
+    for _ in range(6):           # initial + 2 retries, with slack
+        clock.advance(1.0)       # every wait blows the (fresh) window
+        # advance again between release and pack so the re-anchored
+        # deadline is ALSO expired by pack time
+        svc._release_due_retries(clock.now())
+        clock.advance(1.0)
+        shed_seen += [r for r in svc.step() if r.shed]
+        if shed_seen:
+            break
+    assert svc.retried == 2      # both retry budget entries consumed
+    assert [r.req_id for r in shed_seen] == [req]
+    assert svc.results[req].shed and svc.results[req].x is None
+
+
+def test_retry_replay_deterministic():
+    """The overload trace of test_shedding_and_admission_under_overload
+    with the retry policy armed: retries fire (> 0), every request still
+    accounts exactly once (retired/shed/rejected partition the trace),
+    and two fresh replays agree on every count and id — the backoff is
+    pure service-clock arithmetic."""
+    from repro.serve import RetryPolicy
+
+    classes = [TrafficClass("lap", OP.n, weight=1.0, tol=1e-10,
+                            deadline_s=0.012)]
+    trace = poisson_trace(classes, rate_per_s=400.0, n_requests=40, seed=3)
+
+    def run():
+        svc = _service("local", admission=AdmissionPolicy(max_pending=12),
+                       max_replicas=1,
+                       retry=RetryPolicy(max_retries=1,
+                                         backoff_base_s=0.005))
+        rep = replay(svc, trace, iter_time_s=1e-3, tick_overhead_s=1e-3)
+        return svc, rep
+
+    svc1, rep1 = run()
+    svc2, rep2 = run()
+    assert svc1.retried > 0
+    assert svc1.retried == svc2.retried
+    assert rep1.shed_ids == rep2.shed_ids
+    assert rep1.n_retired == rep2.n_retired
+    assert rep1.n_rejected == rep2.n_rejected
+    assert rep1.n_retired + rep1.n_shed + rep1.n_rejected == len(trace)
+    assert svc1.stats()["retried"] == svc1.retried
+
+
 def test_continuous_injection_beats_drain_to_empty():
     """The continuous-batching claim: refilling retired slots at chunk
     boundaries keeps slot-utilization (occupied-slot-iterations /
@@ -197,10 +274,37 @@ def test_admission_rejection_is_typed():
     with pytest.raises(AdmissionRejected) as ei:
         svc.submit("lap", np.ones(OP.n), tol=1e-8)
     assert ei.value.reason == "queue_full"
+    assert ei.value.retry_after_s is None       # no retry policy: no hint
     assert svc.stats()["rejected"] == 1
     with pytest.raises(AdmissionRejected) as ei:
         svc.submit("lap", np.ones(OP.n), tol=1e-8, deadline_s=0.0)
     assert ei.value.reason in ("queue_full", "deadline_infeasible")
+
+
+def test_queue_full_rejection_carries_retry_hint():
+    """With the retry policy armed, queue-full rejections carry the
+    backoff hint (resubmit no sooner than backoff(0)); infeasible
+    deadlines never do — waiting cannot fix those."""
+    from repro.serve import RetryPolicy
+
+    pol = RetryPolicy(max_retries=2, backoff_base_s=0.05)
+    svc = _service("local",
+                   admission=AdmissionPolicy(max_pending=1,
+                                             min_deadline_s=0.001),
+                   retry=pol)
+    svc.submit("lap", np.ones(OP.n), tol=1e-8)
+    with pytest.raises(AdmissionRejected) as ei:
+        svc.submit("lap", np.ones(OP.n), tol=1e-8)
+    assert ei.value.reason == "queue_full"
+    assert ei.value.retry_after_s == pol.backoff(0)
+    assert "retry after" in str(ei.value)
+    svc2 = _service("local",
+                    admission=AdmissionPolicy(min_deadline_s=0.001),
+                    retry=pol)
+    with pytest.raises(AdmissionRejected) as ei:
+        svc2.submit("lap", np.ones(OP.n), tol=1e-8, deadline_s=0.0005)
+    assert ei.value.reason == "deadline_infeasible"
+    assert ei.value.retry_after_s is None
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,187 @@
+"""Hypothesis property tests for the stability layer (DESIGN.md §18).
+
+Three families of invariants that example tests cannot pin down:
+
+* the **gap estimator** (``repro.stability.model.gap_step``) is monotone
+  — never decreasing across an iteration, and non-decreasing in every
+  magnitude input (larger Hessenberg entries / basis norms / injected
+  perturbation can only WIDEN the predicted true-vs-recursive gap,
+  never shrink it) — the property that makes "governor fires no later
+  under more corruption" a theorem rather than a tuning accident;
+* the **demotion ladder** (``governed_solve``) never tries a depth
+  below ``min_l >= 1``, follows the exact halving schedule, and always
+  terminates in either a converged result or a typed
+  :class:`StagnationError` — proven against a stub backend so the
+  ladder arithmetic gets thousands of cheap examples;
+* the serve :class:`RetryPolicy` backoff is non-negative, monotone in
+  the retry count, and capped — the arithmetic the deterministic-replay
+  test (tests/test_serve_replay.py) relies on.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed "
+                    "(pip install -e .[test])")
+from hypothesis import given, settings, strategies as st
+
+from repro.serve import RetryPolicy
+from repro.stability import (
+    GovernorConfig,
+    StagnationError,
+    gov_init,
+    governed_solve,
+)
+from repro.stability import model as M
+from repro.stability.governor import diagnose
+
+SET = dict(max_examples=200, deadline=None)
+
+FINITE = st.floats(min_value=-1e12, max_value=1e12,
+                   allow_nan=False, allow_infinity=False)
+MAG = st.floats(min_value=0.0, max_value=1e12,
+                allow_nan=False, allow_infinity=False)
+GAP = st.floats(min_value=0.0, max_value=1e6,
+                allow_nan=False, allow_infinity=False)
+EPS = st.floats(min_value=1e-20, max_value=1e-3,
+                allow_nan=False, allow_infinity=False)
+
+
+def _gap(gap, gam, d2, dlt, basis, eps, kappa=1.0):
+    import jax.numpy as jnp
+
+    from repro.stability.model import gap_step
+    return float(gap_step(jnp.float64(gap), jnp.float64(gam),
+                          jnp.float64(d2), jnp.float64(dlt),
+                          jnp.float64(basis), jnp.float64(eps), kappa))
+
+
+# ------------------------------------------------------------ gap estimator --
+
+@settings(**SET)
+@given(gap=GAP, gam=FINITE, d2=FINITE, dlt=FINITE, basis=MAG, eps=EPS)
+def test_gap_step_never_decreases(gap, gam, d2, dlt, basis, eps):
+    """One governed iteration can only widen the predicted gap: the
+    estimator is an accumulator of non-negative rounding mass."""
+    out = _gap(gap, gam, d2, dlt, basis, eps)
+    assert out >= gap
+    assert np.isfinite(out)
+
+
+@settings(**SET)
+@given(gap=GAP, gam=MAG, d2=MAG, dlt=FINITE, basis=MAG, eps=EPS,
+       scale=st.floats(min_value=1.0, max_value=1e6))
+def test_gap_step_monotone_in_perturbation_magnitude(gap, gam, d2, dlt,
+                                                     basis, eps, scale):
+    """Scaling the magnitude inputs up — larger Hessenberg entries or a
+    larger basis norm, the signature of injected perturbation — never
+    shrinks the increment: the governor fires no LATER under more
+    corruption."""
+    lo = _gap(gap, gam, d2, dlt, basis, eps)
+    hi = _gap(gap, gam * scale, d2 * scale, dlt, basis * scale, eps)
+    assert hi >= lo
+
+
+@settings(**SET)
+@given(gap=GAP, gam=FINITE, d2=FINITE, basis=MAG, eps=EPS)
+def test_gap_step_breakdown_safe(gap, gam, d2, basis, eps):
+    """A vanishing pivot (dlt == 0, the breakdown the restart machinery
+    handles) must not poison the estimator with inf/nan."""
+    out = _gap(gap, gam, d2, 0.0, basis, eps)
+    assert np.isfinite(out)
+    assert out >= gap
+
+
+# ---------------------------------------------------------- demotion ladder --
+
+class _StubResult:
+    """Shape-compatible stand-in for SolveResult: just the fields
+    diagnose()/governed_solve() consume."""
+
+    def __init__(self, converged, l):
+        g = np.array(np.asarray(gov_init(np.float64)))
+        g[M.STAGNATED] = 0.0 if converged else 1.0
+        self.governor = g
+        self.converged = np.asarray(converged)
+        self.iters = np.asarray(7)
+        self.x = np.zeros(3)
+
+
+class _StubBackend:
+    """Records every depth the ladder tries; converges only at depths in
+    ``succeed_at``."""
+
+    def __init__(self, succeed_at=()):
+        self.succeed_at = set(succeed_at)
+        self.tried = []
+
+    def solve(self, op, b, method, prec=None, **kw):
+        l = kw["l"]
+        self.tried.append(l)
+        return _StubResult(l in self.succeed_at, l)
+
+
+def _ladder(l, min_l):
+    """Expected halving schedule from l down to min_l."""
+    seq, cur = [], l
+    while True:
+        seq.append(cur)
+        if cur <= min_l:
+            return seq
+        cur = max(min_l, cur // 2)
+
+
+@settings(max_examples=300, deadline=None)
+@given(l=st.integers(min_value=1, max_value=64),
+       min_l=st.integers(min_value=1, max_value=64))
+def test_governed_solve_never_below_min_l(l, min_l):
+    """Whatever the starting depth, a fully-stagnating ladder tries
+    EXACTLY the halving schedule, never a depth below min_l (>= 1), and
+    raises a typed StagnationError at the floor."""
+    min_l = min(min_l, l)
+    be = _StubBackend(succeed_at=())
+    with pytest.raises(StagnationError) as ei:
+        governed_solve(be, object(), np.zeros(3), l=l, min_l=min_l)
+    assert be.tried == _ladder(l, min_l)
+    assert min(be.tried) >= min_l >= 1
+    assert len(ei.value.diagnosis["attempts"]) == len(be.tried)
+
+
+@settings(max_examples=300, deadline=None)
+@given(l=st.integers(min_value=1, max_value=64),
+       min_l=st.integers(min_value=1, max_value=64),
+       stop=st.integers(min_value=0, max_value=6))
+def test_governed_solve_stops_at_first_convergence(l, min_l, stop):
+    """Converging at any rung stops the ladder right there: no further
+    demotion, result returned, attempts list exactly the rungs tried."""
+    min_l = min(min_l, l)
+    sched = _ladder(l, min_l)
+    stop = min(stop, len(sched) - 1)
+    be = _StubBackend(succeed_at={sched[stop]})
+    res, attempts = governed_solve(be, object(), np.zeros(3), l=l,
+                                   min_l=min_l)
+    assert be.tried == sched[:stop + 1]
+    assert attempts[-1]["converged"]
+    assert attempts[-1]["l"] == sched[stop]
+    assert diagnose(res)["converged"]
+
+
+# ------------------------------------------------------------- retry policy --
+
+@settings(**SET)
+@given(base=st.floats(min_value=1e-6, max_value=10.0),
+       factor=st.floats(min_value=1.0, max_value=10.0),
+       cap=st.floats(min_value=1e-6, max_value=100.0),
+       r1=st.integers(min_value=0, max_value=60),
+       r2=st.integers(min_value=0, max_value=60))
+def test_retry_backoff_monotone_capped(base, factor, cap, r1, r2):
+    """Exponential backoff is non-negative, monotone in the retry count
+    and never exceeds the cap — the arithmetic deterministic replay
+    depends on."""
+    pol = RetryPolicy(backoff_base_s=base, backoff_factor=factor,
+                      backoff_cap_s=cap)
+    lo, hi = sorted((r1, r2))
+    assert 0.0 <= pol.backoff(lo) <= pol.backoff(hi) <= cap

@@ -60,18 +60,18 @@ def _problem():
 # ---------------------------------------------------------------- layout --
 
 def test_telemetry_slab_layout():
-    """TelemetrySlab mirrors tel_layout: K = 2l+8, unpack exposes every
+    """TelemetrySlab mirrors tel_layout: K = 2l+10, unpack exposes every
     column plus the (2l+1)-wide dot block."""
     for l in (1, 2, 3):
         ts = TelemetrySlab(cap=32, l=l)
         tl = tel_layout(l)
-        assert ts.k == tl["size"] == 2 * l + 8
+        assert ts.k == tl["size"] == 2 * l + 10
         assert ts.shape == (32, ts.k)
         assert ts.bytes_per_iter() == ts.k * 8
         cols = ts.unpack(np.zeros(ts.shape))
         assert cols["dots"].shape == (32, 2 * l + 1)
         for name in ("iter", "upd", "rnorm", "age", "breakdown",
-                     "restart", "replacement"):
+                     "restart", "replacement", "gap", "action"):
             assert cols[name].shape == (32,)
 
 
@@ -96,7 +96,7 @@ def test_ring_contents_match_history():
     # small cap: ring wraps, arithmetic untouched
     res_w = be.solve(op, b, method="plcg", l=2, sigmas=sig, tol=1e-10,
                      maxit=400, telemetry_cap=8)
-    assert res_w.telemetry.shape == (8, 12)
+    assert res_w.telemetry.shape == (8, 14)
     assert np.array_equal(np.asarray(res_w.res_history), hist)
     assert int(res_w.iters) == int(res.iters)
 
@@ -147,7 +147,7 @@ def test_batched_telemetry_deterministic():
               telemetry_cap=128)
     r1 = be.solve_batched(op, B, **kw)
     r2 = be.solve_batched(op, B, **kw)
-    assert r1.telemetry.shape == (s, 128, 12)
+    assert r1.telemetry.shape == (s, 128, 14)
     assert np.array_equal(np.asarray(r1.telemetry),
                           np.asarray(r2.telemetry))
     plain = be.solve_batched(op, B, method="plcg", l=2, sigmas=sig,
@@ -196,7 +196,7 @@ plain = be.solve(op, b, **kw)
 r1 = be.solve(op, b, telemetry_cap=256, **kw)
 r2 = be.solve(op, b, telemetry_cap=256, **kw)
 assert plain.telemetry is None
-assert r1.telemetry.shape == (256, 12)
+assert r1.telemetry.shape == (256, 14)
 assert np.array_equal(np.asarray(r1.telemetry), np.asarray(r2.telemetry))
 assert np.array_equal(np.asarray(plain.res_history),
                       np.asarray(r1.res_history))
@@ -205,7 +205,7 @@ assert np.array_equal(np.asarray(plain.x), np.asarray(r1.x))
 B = jnp.asarray(np.random.default_rng(5).standard_normal((op.n, 8)))
 b1 = be.solve_batched(op, B, telemetry_cap=128, **kw)
 b2 = be.solve_batched(op, B, telemetry_cap=128, **kw)
-assert b1.telemetry.shape == (8, 128, 12)
+assert b1.telemetry.shape == (8, 128, 14)
 assert np.array_equal(np.asarray(b1.telemetry), np.asarray(b2.telemetry))
 
 # instrumented schedule: still exactly one reduction start per window
