@@ -1,0 +1,202 @@
+"""Elastic-recovery benchmark: the kill-a-rank drill's outcome plus the
+serve self-healing replay (DESIGN.md §19).  Emits
+``BENCH_recovery.json``; CI gates it via ``scripts/check_bench.py``.
+
+Every GATED column is DETERMINISTIC — seeded kills, fixed shapes,
+virtual-clock replay, bitwise parity flags — so container timing noise
+cannot move any of them.  The two wall-clock columns (detection and
+respawn latency) ride along informationally.
+
+* ``recovery_parity_bitwise``      — 1 when the cross-process drill's
+                                     resumed residual history is BITWISE
+                                     identical to the local
+                                     virtual-shards oracle that never
+                                     died.  Floor-gated at +0: the
+                                     resume-exactly claim IS the PR.
+* ``recovery_recomputed_iters``    — solution updates replayed after the
+                                     kill; ratio-gated <= 1x
+                                     ``recovery_checkpoint_every`` (the
+                                     §19 bound: a kill costs at most one
+                                     checkpoint interval of rework).
+* ``recovery_attempts``            — fabric launches (2: killed + clean).
+* ``recovery_detection_s`` / ``recovery_respawn_s``
+                                   — wall-clock from kill to teardown,
+                                     and teardown to restored state
+                                     (informational, not gated).
+* ``recovery_resume_bitwise``      — 1 when the single-process
+                                     save -> kill -> resume history is
+                                     bitwise equal to the uninterrupted
+                                     solve (the substrate-level half of
+                                     the same claim, cheap enough to
+                                     re-prove here).
+* ``recovery_serve_worker_deaths`` / ``_resubmitted`` / ``_shed`` /
+  ``_all_converged``               — the self-healing serve replay: one
+                                     injected WorkerFault, four
+                                     in-flight columns resubmitted with
+                                     fresh SLO windows, none shed, all
+                                     converged.
+* ``recovery_serve_deterministic_replay``
+                                   — 1 when two identical fault replays
+                                     produce identical metrics
+                                     snapshots under VirtualClock.
+* ``recovery_serve_exhausted_shed`` — with a zero retry budget the same
+                                     fault sheds all four (typed,
+                                     accounted — never an infinite
+                                     resubmit loop).
+
+    PYTHONPATH=src python -m benchmarks.recovery_bench [--out PATH]
+        [--skip-drill]   # substrate + serve columns only (the
+                         # cross-process drill needs ~4 min and its own
+                         # fabric; CI's recovery-drill job runs it)
+"""
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+
+DRILL_TIMEOUT_S = 900
+RESULT_MARKER = "RECOVERY-RESULT "
+
+
+def drill_rows(timeout_s: float = DRILL_TIMEOUT_S) -> dict:
+    """Run the cross-process kill-a-rank drill (2 fabric processes, rank
+    1 killed mid-solve) and lift its RECOVERY-RESULT summary into bench
+    columns."""
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)          # children pick their own device split
+    out = subprocess.run(
+        [sys.executable, "scripts/multiprocess_parity.py", "--recovery"],
+        capture_output=True, text=True, env=env, timeout=timeout_s)
+    if out.returncode != 0:
+        raise SystemExit(f"recovery drill failed (exit {out.returncode}):\n"
+                         f"{out.stdout[-3000:]}\n{out.stderr[-3000:]}")
+    row = None
+    for line in out.stdout.splitlines():
+        if line.startswith(RESULT_MARKER):
+            row = json.loads(line[len(RESULT_MARKER):])
+    if row is None:
+        raise SystemExit("drill printed no RECOVERY-RESULT line:\n"
+                         + out.stdout[-3000:])
+    return {
+        "recovery_procs": row["procs"],
+        "recovery_devices_per_process": row["devices_per_process"],
+        "recovery_kill_rank": row["kill_rank"],
+        "recovery_kill_upd": row["kill_upd"],
+        "recovery_resumed_upd": row["resumed_upd"],
+        "recovery_recomputed_iters": row["recomputed_iters"],
+        "recovery_checkpoint_every": row["checkpoint_every"],
+        "recovery_detection_s": row["detection_s"],
+        "recovery_respawn_s": row["respawn_s"],
+        "recovery_attempts": row["attempts"],
+        "recovery_iters": row["iters"],
+        "recovery_parity_bitwise": row["parity_bitwise"],
+        "recovery_converged": row["converged"],
+    }
+
+
+def resume_rows() -> dict:
+    """Single-process half of the bitwise-resume claim: save -> kill ->
+    resume equals the uninterrupted solve, bit for bit."""
+    import tempfile
+
+    from repro.checkpoint import LAST_RESTORE, CheckpointConfig
+    from repro.linalg import Stencil2D5
+    from repro.parallel import get_backend
+
+    op = Stencil2D5(32, 24)
+    b = np.asarray(np.random.default_rng(0).standard_normal(op.n))
+    be = get_backend("local")
+    kw = dict(method="plcg", l=2, tol=1e-10, maxit=400)
+    with tempfile.TemporaryDirectory(prefix="repro-recovery-bench-") as d:
+        full = be.solve(op, b, checkpoint=CheckpointConfig(
+            every=20, directory=d), **kw)
+        resumed = be.solve(op, b, checkpoint=CheckpointConfig(
+            every=20, directory=d, resume=True), **kw)
+    h_f = np.asarray(full.res_history)
+    h_r = np.asarray(resumed.res_history)
+    bitwise = bool(np.array_equal(h_f, h_r)) and bool(LAST_RESTORE)
+    return {
+        "recovery_resume_bitwise": int(bitwise and bool(resumed.converged)),
+        "recovery_resume_upd": int(LAST_RESTORE[-1].meta["upd"])
+        if LAST_RESTORE else -1,
+    }
+
+
+def _serve_replay(fault_tick: int, max_retries: int):
+    from repro.linalg import Stencil2D5
+    from repro.parallel import get_backend
+    from repro.serve import RetryPolicy, SolverService, VirtualClock
+    from repro.serve.errors import WorkerFault
+
+    op = Stencil2D5(12, 12)
+    state = {"fired": False}
+
+    def injector(tick, worker):
+        if tick == fault_tick and not state["fired"]:
+            state["fired"] = True
+            raise WorkerFault(f"injected at tick {tick}")
+
+    svc = SolverService(get_backend("local"), s=4, method="plcg", l=2,
+                        chunk_iters=25, maxit=600, clock=VirtualClock(),
+                        retry=RetryPolicy(max_retries=max_retries),
+                        fault_injector=injector)
+    svc.register_operator("lap", op)
+    rng = np.random.default_rng(3)
+    ids = [svc.submit("lap", rng.standard_normal(op.n)) for _ in range(4)]
+    results = svc.drain()
+    return svc, ids, results
+
+
+def serve_rows() -> dict:
+    """Self-healing serve under a one-shot WorkerFault: heal, account,
+    replay deterministically; shed only when the retry budget is zero."""
+    svc, ids, results = _serve_replay(fault_tick=2, max_retries=3)
+    all_conv = all(results[r].converged and not results[r].shed for r in ids)
+    svc2, _, _ = _serve_replay(fault_tick=2, max_retries=3)
+    deterministic = svc.metrics_snapshot() == svc2.metrics_snapshot()
+    svc0, ids0, res0 = _serve_replay(fault_tick=2, max_retries=0)
+    exhausted_shed = sum(1 for r in ids0 if res0[r].shed)
+    return {
+        "recovery_serve_worker_deaths": int(svc.worker_deaths),
+        "recovery_serve_resubmitted": int(svc.resubmitted),
+        "recovery_serve_shed": int(svc.shed),
+        "recovery_serve_all_converged": int(all_conv),
+        "recovery_serve_deterministic_replay": int(deterministic),
+        "recovery_serve_exhausted_shed": int(exhausted_shed),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", type=str, default="BENCH_recovery.json")
+    ap.add_argument("--skip-drill", action="store_true",
+                    help="omit the cross-process drill columns (~4 min); "
+                         "substrate + serve columns only")
+    args = ap.parse_args(argv)
+
+    # jax import deferred past argparse; single host device is all the
+    # in-process columns need (the drill children pick their own split).
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+
+    payload = {}
+    payload.update(resume_rows())
+    payload.update(serve_rows())
+    if not args.skip_drill:
+        payload.update(drill_rows())
+    for k, v in payload.items():
+        print(f"{k}: {v}")
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

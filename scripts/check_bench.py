@@ -384,6 +384,65 @@ def selftest() -> int:
                         st_r, verbose=False) == 1, \
         "an ungoverned residual within 100x of tol must fail (the " \
         "demonstration margin collapsed)"
+    # Elastic-recovery gates (ISSUE 10, BENCH_recovery.json; DESIGN.md
+    # §19).  Deterministic 0/1 columns gate at zero tolerance: the
+    # cross-process drill's resumed history must stay BITWISE against
+    # the never-killed oracle, the resumed solve must converge, the
+    # single-process resume must stay bitwise, the serve replay must
+    # stay deterministic with all healed columns converged and nothing
+    # shed.  Counter floors/ceilings pin the healing path itself: one
+    # worker death, four resubmissions, zero sheds with budget — and all
+    # four shed (typed, finite) when the budget is zero.
+    rc_base = {"recovery_parity_bitwise": 1, "recovery_converged": 1,
+               "recovery_resume_bitwise": 1,
+               "recovery_serve_worker_deaths": 1,
+               "recovery_serve_resubmitted": 4,
+               "recovery_serve_shed": 0,
+               "recovery_serve_all_converged": 1,
+               "recovery_serve_deterministic_replay": 1,
+               "recovery_serve_exhausted_shed": 4}
+    rc_gates = [("recovery_parity_bitwise", 0.0, True),
+                ("recovery_converged", 0.0, True),
+                ("recovery_resume_bitwise", 0.0, True),
+                ("recovery_serve_worker_deaths", 0.0, False),
+                ("recovery_serve_resubmitted", 0.0, True),
+                ("recovery_serve_shed", 0.0, False),
+                ("recovery_serve_all_converged", 0.0, True),
+                ("recovery_serve_deterministic_replay", 0.0, True),
+                ("recovery_serve_exhausted_shed", 0.0, True)]
+    assert check(rc_base, dict(rc_base), rc_gates, verbose=False) == 0, \
+        "identical recovery metrics must pass every recovery gate"
+    assert check(rc_base, dict(rc_base, recovery_parity_bitwise=0),
+                 rc_gates, verbose=False) == 1, \
+        "a non-bitwise resumed drill history must fail the parity floor"
+    assert check(rc_base, dict(rc_base, recovery_resume_bitwise=0),
+                 rc_gates, verbose=False) == 1, \
+        "a perturbed single-process resume must fail the floor"
+    assert check(rc_base, dict(rc_base, recovery_serve_shed=1),
+                 rc_gates, verbose=False) == 1, \
+        "a shed request with retry budget left must fail at +0"
+    assert check(rc_base, dict(rc_base, recovery_serve_worker_deaths=2),
+                 rc_gates, verbose=False) == 1, \
+        "a second worker death in the one-fault replay must fail"
+    assert check(rc_base,
+                 dict(rc_base, recovery_serve_deterministic_replay=0),
+                 rc_gates, verbose=False) == 1, \
+        "a nondeterministic fault replay must fail the floor"
+    assert check(rc_base, dict(rc_base, recovery_serve_exhausted_shed=3),
+                 rc_gates, verbose=False) == 1, \
+        "a zero-budget replay that fails to shed every column must fail"
+    # ... and the §19 rework bound as a within-file ratio: a kill may
+    # cost at most ONE checkpoint interval of recomputed updates.
+    rc_r = [("recovery_recomputed_iters", "recovery_checkpoint_every", 1.0)]
+    assert check_ratios({"recovery_recomputed_iters": 20,
+                         "recovery_checkpoint_every": 20},
+                        rc_r, verbose=False) == 0, \
+        "recomputed == every is exactly the bound — must pass"
+    assert check_ratios({"recovery_recomputed_iters": 23,
+                         "recovery_checkpoint_every": 20},
+                        rc_r, verbose=False) == 1, \
+        "recomputing past one checkpoint interval must fail (the " \
+        "boundary landed off the update grid)"
     # Skip-payload handling (the opt-in compiled lane): a skip marker
     # passes ONLY under --skip-ok; real payloads ignore the flag.
     skipped = {"skipped": True, "reason": "no accelerator",
@@ -407,8 +466,12 @@ def selftest() -> int:
           "ungoverned-stagnated floor, typed-ladder floor, the governed "
           "reduction-starts and staged all-reduce ceilings, the "
           "recovery-ratio and replacement floors, the governed<=tol and "
-          "ungoverned>=100x-tol accuracy ratios), and the skip-payload "
-          "rules (pass only under --skip-ok) all trip")
+          "ungoverned>=100x-tol accuracy ratios), every elastic-recovery "
+          "gate (drill bitwise-parity and convergence floors, the "
+          "single-process resume floor, the serve death/resubmit/shed "
+          "counters, the deterministic-replay floor, the zero-budget "
+          "shed floor, the one-interval rework ratio), and the "
+          "skip-payload rules (pass only under --skip-ok) all trip")
     return 0
 
 

@@ -53,16 +53,22 @@ import argparse
 import json
 import os
 import sys
+import tempfile
+import time
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 _SRC = os.path.join(_ROOT, "src")
 if _SRC not in sys.path:
     sys.path.insert(0, _SRC)
 
-from repro.parallel.fabric import FabricError, launch_fabric  # noqa: E402
+from repro.parallel.fabric import (FabricError, launch_fabric,  # noqa: E402
+                                   run_resilient)
 
 STUDY_MARKER = "SCALING-JSON "
 CHAOS_MARKER = "CHAOS-GOV "
+RECOVERY_MARKER = "RECOVERY-JSON "
+RECOVERY_KILL = "RECOVERY-KILL "
+RECOVERY_RESUMED = "RECOVERY-RESUMED "
 
 
 def _child_jax_setup():
@@ -433,6 +439,234 @@ def chaos_child(coordinator: str, num_processes: int,
     return 0
 
 
+def recovery_child(coordinator: str, num_processes: int, process_id: int,
+                   args) -> int:
+    """One rank of the kill-a-rank recovery drill (DESIGN.md §19).
+
+    Every rank runs the same checkpointed staged p(l)-CG solve over the
+    real process fabric, touching its heartbeat and ticking the
+    environment-scripted iteration faults at every drained-ring
+    boundary.  On attempt 1 the fault plan kills one rank mid-solve; on
+    attempt 2 (clean environment, ``resume=True`` on the shared
+    checkpoint directory) the group restores the last snapshot, resumes
+    and converges — rank 0 then replays the UNINTERRUPTED local
+    virtual-shards oracle of the same segmented config and asserts the
+    resumed cross-process history is bitwise identical to it (head from
+    the checkpoint, tail recomputed — one history, no seam).
+    """
+    jax = _child_jax_setup()           # noqa: F841 - configures x64/gloo
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.chaos import install_iteration_faults
+    from repro.checkpoint import LAST_RESTORE, CheckpointConfig
+    from repro.core.chebyshev import shifts_for_operator
+    from repro.linalg import Stencil2D5
+    from repro.parallel import get_backend
+    from repro.parallel.fabric import install_sigterm_handler, touch_heartbeat
+
+    # A peer death leaves this rank blocked in a collective; the
+    # launcher's SIGTERM must turn that into a prompt, distinct-status
+    # exit instead of a watchdog-escalated SIGKILL.
+    install_sigterm_handler()
+    touch_heartbeat()
+    faults = install_iteration_faults(process_id)
+
+    be = get_backend(
+        "multiprocess", coordinator_address=coordinator,
+        num_processes=num_processes, process_id=process_id,
+        reduction="staged", reduction_stages=args.stages)
+    assert be.reduction_mode == "staged", be.reduction_mode
+    n_dev = be.n_shards
+    print(f"[p{process_id}] attempt {args.attempt}: {be.describe()}, "
+          f"faults armed={faults.armed}", flush=True)
+
+    op = Stencil2D5(32, 24)            # the parity/chaos drill problem
+    b = jnp.asarray(np.random.default_rng(7).standard_normal(op.n))
+    sig = shifts_for_operator(op, args.l)
+    # Staged + UNFUSED is the bitwise-elastic configuration: fused
+    # iterations compile different (per-substrate) contraction orders,
+    # so their cross-substrate parity is certified, not bitwise
+    # (DESIGN.md §19 honesty notes).
+    kw = dict(l=args.l, sigmas=sig, tol=1e-10, maxit=400,
+              fused_iteration=False)
+
+    def on_boundary(upd: int) -> None:
+        # ``upd`` = global solution updates (boundaries land at exact
+        # multiples of ``every`` updates; plcg's post-restart ring
+        # refill advances tot but not upd).
+        touch_heartbeat()
+        if faults.kill_at_iter is not None and upd >= faults.kill_at_iter:
+            # Last words before the scripted death: which boundary this
+            # rank died at, for the launcher's recomputed-iters metric.
+            print(RECOVERY_KILL + json.dumps(
+                {"rank": process_id, "upd": int(upd), "t": time.time()}),
+                flush=True)
+        faults.tick(upd)
+
+    cfg = CheckpointConfig(every=args.every, directory=args.ckpt_dir,
+                           keep=3, resume=True, on_boundary=on_boundary)
+    res = be.solve(op, b, method="plcg", checkpoint=cfg, **kw)
+    hist = np.asarray(res.res_history)
+    resumed_tot = resumed_upd = 0
+    if LAST_RESTORE:
+        resumed_tot = int(LAST_RESTORE[-1].meta["tot"])
+        resumed_upd = int(LAST_RESTORE[-1].meta["upd"])
+        print(RECOVERY_RESUMED + json.dumps(
+            {"rank": process_id, "tot": resumed_tot, "upd": resumed_upd,
+             "t": time.time(),
+             "path": os.path.basename(LAST_RESTORE[-1].path)}), flush=True)
+    assert bool(res.converged), "recovery solve failed to converge"
+
+    if process_id == 0:
+        # Uninterrupted oracle: the SAME segmented config (same
+        # effective replacement cadence) on the local virtual-shards
+        # ladder, never killed, never restored.  directory=None keeps
+        # the segmented drive without persisting.
+        oracle = get_backend("local", reduction="staged",
+                             virtual_shards=n_dev,
+                             reduction_stages=args.stages)
+        res_o = oracle.solve(op, b, method="plcg",
+                             checkpoint=CheckpointConfig(every=args.every),
+                             **kw)
+        ho = np.asarray(res_o.res_history)
+        parity = bool(hist.shape == ho.shape and np.array_equal(hist, ho))
+        row = {
+            "attempt": args.attempt,
+            "procs": num_processes,
+            "devices": n_dev,
+            "resumed_tot": resumed_tot,
+            "resumed_upd": resumed_upd,
+            "iters": int(res.iters),
+            "iters_oracle": int(res_o.iters),
+            "converged": bool(res.converged),
+            "parity_bitwise": parity,
+        }
+        print(RECOVERY_MARKER + json.dumps(row), flush=True)
+        assert parity, (
+            "resumed cross-process history diverged from the "
+            f"uninterrupted local oracle (max |dh| = "
+            f"{np.abs(hist - ho).max() if hist.shape == ho.shape else 'shape'})")
+    print(f"[p{process_id}] RECOVERY-OK", flush=True)
+    return 0
+
+
+def recovery(args) -> int:
+    """Kill-a-rank recovery drill launcher (DESIGN.md §19).
+
+    Attempt 1 ships a seeded iteration-indexed kill plan for one rank
+    (``repro.chaos``); the launcher's watchdog converts the death into
+    a typed :class:`FabricProcessError`, ``run_resilient`` tears the
+    group down and respawns a clean fabric on a fresh coordinator port;
+    attempt 2 resumes from the shared checkpoint directory and must
+    converge with a residual history BITWISE equal to the uninterrupted
+    local virtual-shards oracle.  Emits a ``RECOVERY-RESULT`` JSON line
+    (detection/respawn seconds, recomputed iterations, parity bit) that
+    benchmarks/recovery_bench.py turns into the gated
+    ``BENCH_recovery.json``.
+    """
+    from repro.chaos import ChaosConfig
+
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="repro-recovery-")
+    plan_env = ChaosConfig(
+        seed=7, kill_rank=args.kill_rank,
+        kill_rank_at_iter=args.kill_at).fault_plan().env()
+    t_attempt: dict[int, float] = {}
+
+    def attempt_env(attempt: int) -> dict:
+        # Called right before each fabric launch: timestamping here is
+        # what separates detection (death -> teardown done) from
+        # respawn (relaunch -> solve resumed).  The kill plan is armed
+        # on the FIRST attempt only; the respawn runs clean.
+        t_attempt[attempt] = time.time()
+        return dict(plan_env) if attempt == 1 else {}
+
+    def argv(coordinator: str, k: int, p: int, a: int) -> list[str]:
+        return [sys.executable, os.path.abspath(__file__),
+                "--coordinator", coordinator,
+                "--num-processes", str(p),
+                "--process-id", str(k),
+                "--recovery-child",
+                "--ckpt-dir", ckpt_dir,
+                "--every", str(args.every),
+                "--l", str(args.l), "--stages", str(args.stages),
+                "--attempt", str(a)]
+
+    try:
+        rr = run_resilient(argv, args.num_processes, max_failures=1,
+                           env=_fabric_env(args.devices_per_process),
+                           attempt_env=attempt_env, timeout_s=args.timeout)
+    except FabricError as e:
+        print(f"[recovery] FAILED: {e}")
+        return 1
+
+    for out in rr.result.outputs:
+        sys.stdout.write(out)
+    if len(rr.failures) != 1:
+        print(f"[recovery] FAILED (expected exactly 1 scripted rank "
+              f"failure, saw {len(rr.failures)})")
+        return 1
+    if not all("RECOVERY-OK" in o for o in rr.result.outputs):
+        print("[recovery] FAILED (missing rank RECOVERY-OK marker)")
+        return 1
+
+    def rows(outputs, marker):
+        found = []
+        for out in outputs:
+            found += [json.loads(ln[len(marker):])
+                      for ln in out.splitlines() if ln.startswith(marker)]
+        return found
+
+    # The kill marker rides on the FAILED attempt's harvested outputs.
+    kills = rows(getattr(rr.failures[0], "outputs", []), RECOVERY_KILL)
+    resumed = rows(rr.result.outputs, RECOVERY_RESUMED)
+    results = rows(rr.result.outputs, RECOVERY_MARKER)
+    if not (kills and resumed and results):
+        print(f"[recovery] FAILED (markers missing: kills={len(kills)} "
+              f"resumed={len(resumed)} results={len(results)})")
+        return 1
+    kill = kills[-1]
+    res0 = next(r for r in resumed if r["rank"] == 0)
+    row = results[-1]
+
+    # Solution-update units throughout: boundaries land at exact
+    # multiples of ``every`` updates, so losing at most one interval
+    # means recomputed <= every exactly.
+    recomputed = int(kill["upd"]) - int(res0["upd"])
+    detection_s = max(t_attempt[2] - float(kill["t"]), 0.0)
+    respawn_s = max(float(res0["t"]) - t_attempt[2], 0.0)
+    ok = (row["parity_bitwise"] and row["converged"]
+          and 0 < recomputed <= args.every)
+    summary = {
+        "procs": args.num_processes,
+        "devices_per_process": args.devices_per_process,
+        "kill_rank": args.kill_rank,
+        "kill_upd": int(kill["upd"]),
+        "resumed_upd": int(res0["upd"]),
+        "recomputed_iters": recomputed,
+        "checkpoint_every": args.every,
+        "detection_s": detection_s,
+        "respawn_s": respawn_s,
+        "attempts": rr.attempts,
+        "iters": row["iters"],
+        "parity_bitwise": int(bool(row["parity_bitwise"])),
+        "converged": int(bool(row["converged"])),
+    }
+    print("RECOVERY-RESULT " + json.dumps(summary))
+    print(f"[recovery] killed rank {args.kill_rank} at update "
+          f"{kill['upd']}, detected + torn down in {detection_s:.1f}s, "
+          f"respawned + resumed from update {res0['upd']} in "
+          f"{respawn_s:.1f}s ({recomputed} updates recomputed <= "
+          f"every={args.every}), resumed history bitwise vs local "
+          f"oracle: {bool(row['parity_bitwise'])}")
+    if not ok:
+        print("[recovery] FAILED (acceptance gate)")
+        return 1
+    print(f"[recovery] {args.num_processes} processes x "
+          f"{args.devices_per_process} devices: RECOVERY OK")
+    return 0
+
+
 def chaos(num_processes: int, devices_per_process: int) -> int:
     """Chaos launcher: every rank must emit the SAME ``CHAOS-GOV`` row —
     the governor fired identically (same count, same iterations, same
@@ -614,6 +848,19 @@ def main(argv=None) -> int:
                     help="run the cross-process governed chaos drill "
                          "(launcher mode)")
     ap.add_argument("--chaos-child", action="store_true")
+    # ---- recovery drill (DESIGN.md §19) ----
+    ap.add_argument("--recovery", action="store_true",
+                    help="run the kill-a-rank checkpoint/restore drill "
+                         "(launcher mode)")
+    ap.add_argument("--recovery-child", action="store_true")
+    ap.add_argument("--ckpt-dir", type=str, default=None)
+    ap.add_argument("--every", type=int, default=20,
+                    help="checkpoint interval (solution updates)")
+    ap.add_argument("--kill-rank", type=int, default=1)
+    ap.add_argument("--kill-at", type=int, default=35,
+                    help="kill the rank at the first boundary reaching "
+                         "this iteration")
+    ap.add_argument("--attempt", type=int, default=1)
     ap.add_argument("--procs", type=str, default="1,2,4",
                     help="comma-separated process counts for --study")
     ap.add_argument("--nx", type=int, default=96)
@@ -632,15 +879,21 @@ def main(argv=None) -> int:
             args.devices_per_process = 1     # P ranks == P shards
         return study(args)
     if args.devices_per_process is None:
-        args.devices_per_process = 4 if not (args.chaos or args.chaos_child) \
-            else 2
+        small = (args.chaos or args.chaos_child
+                 or args.recovery or args.recovery_child)
+        args.devices_per_process = 2 if small else 4
     if args.process_id is None:
         if args.chaos:
             return chaos(args.num_processes, args.devices_per_process)
+        if args.recovery:
+            return recovery(args)
         return launch(args.num_processes, args.devices_per_process)
     if args.chaos_child:
         return chaos_child(args.coordinator, args.num_processes,
                            args.process_id)
+    if args.recovery_child:
+        return recovery_child(args.coordinator, args.num_processes,
+                              args.process_id, args)
     if args.study_child:
         return study_child(args.coordinator, args.num_processes,
                            args.process_id, args)

@@ -7,9 +7,11 @@ benchmarks/stability_bench.py and ``scripts/multiprocess_parity.py
 """
 
 from repro.chaos.inject import ChaosConfig, chaos_ops, perturb_payload
-from repro.chaos.faults import (KILL_EXIT_CODE, FaultPlan, apply_from_env)
+from repro.chaos.faults import (KILL_EXIT_CODE, FaultPlan, IterationFaults,
+                                apply_from_env, install_iteration_faults)
 
 __all__ = [
     "ChaosConfig", "chaos_ops", "perturb_payload",
     "FaultPlan", "apply_from_env", "KILL_EXIT_CODE",
+    "IterationFaults", "install_iteration_faults",
 ]

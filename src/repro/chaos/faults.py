@@ -28,6 +28,10 @@ import time
 
 ENV_KILL_RANK = "REPRO_CHAOS_KILL_RANK"
 ENV_KILL_AFTER = "REPRO_CHAOS_KILL_AFTER_S"
+ENV_KILL_AT_ITER = "REPRO_CHAOS_KILL_AT_ITER"
+ENV_STALL_RANK = "REPRO_CHAOS_STALL_RANK"
+ENV_STALL_AT_ITER = "REPRO_CHAOS_STALL_AT_ITER"
+ENV_STALL_FOR_S = "REPRO_CHAOS_STALL_FOR_S"
 ENV_DELAY_RANK = "REPRO_CHAOS_DELAY_RANK"
 ENV_DELAY_S = "REPRO_CHAOS_DELAY_S"
 ENV_JITTER_S = "REPRO_CHAOS_JITTER_S"
@@ -41,13 +45,34 @@ class FaultPlan:
     """One scripted process-level fault for a fabric launch.
 
     ``kill_rank``/``kill_after_s``   hard-kill that rank after the delay;
+    ``kill_rank``/``kill_at_iter``   hard-kill that rank at the first
+                                     segment boundary whose iteration
+                                     count reaches ``kill_at_iter``
+                                     (iteration-deterministic, for
+                                     recovery drills; overrides the
+                                     time-based kill);
+    ``stall_rank``/``stall_at_iter``/``stall_for_s``
+                                     one-shot sleep of ``stall_for_s``
+                                     (plus seeded jitter) at the first
+                                     boundary reaching ``stall_at_iter``
+                                     — the wedged-but-alive rank the
+                                     heartbeat watchdog must flag;
     ``delay_rank``/``delay_s``       startup skew for that rank, plus a
                                      deterministic seed-derived jitter of
                                      up to ``jitter_s``.
+
+    Iteration-indexed faults fire from :func:`iteration_fault_tick`,
+    which the checkpointing driver invokes at every drained-ring segment
+    boundary (``CheckpointConfig.on_boundary``, DESIGN.md §19) — the
+    only host-visible points of a compiled solve.
     """
 
     kill_rank: int | None = None
     kill_after_s: float = 1.0
+    kill_at_iter: int | None = None
+    stall_rank: int | None = None
+    stall_at_iter: int = 0
+    stall_for_s: float = 0.0
     delay_rank: int | None = None
     delay_s: float = 0.0
     jitter_s: float = 0.0
@@ -59,7 +84,14 @@ class FaultPlan:
         out = {ENV_SEED: str(self.seed)}
         if self.kill_rank is not None:
             out[ENV_KILL_RANK] = str(self.kill_rank)
-            out[ENV_KILL_AFTER] = repr(float(self.kill_after_s))
+            if self.kill_at_iter is not None:
+                out[ENV_KILL_AT_ITER] = str(self.kill_at_iter)
+            else:
+                out[ENV_KILL_AFTER] = repr(float(self.kill_after_s))
+        if self.stall_rank is not None:
+            out[ENV_STALL_RANK] = str(self.stall_rank)
+            out[ENV_STALL_AT_ITER] = str(self.stall_at_iter)
+            out[ENV_STALL_FOR_S] = repr(float(self.stall_for_s))
         if self.delay_rank is not None:
             out[ENV_DELAY_RANK] = str(self.delay_rank)
             out[ENV_DELAY_S] = repr(float(self.delay_s))
@@ -95,14 +127,79 @@ def apply_from_env(process_id: int, environ=None) -> dict:
         installed["delayed_s"] = delay
 
     kill_rank = env.get(ENV_KILL_RANK)
-    if kill_rank is not None and int(kill_rank) == process_id:
+    if (kill_rank is not None and int(kill_rank) == process_id
+            and ENV_KILL_AT_ITER not in env):
         after = float(env.get(ENV_KILL_AFTER, "1.0"))
 
-        def _die():
+        def _timed_die():
             time.sleep(after)
-            os._exit(KILL_EXIT_CODE)
+            _die()
 
-        threading.Thread(target=_die, daemon=True).start()
+        threading.Thread(target=_timed_die, daemon=True).start()
         installed["kill_after_s"] = after
 
     return installed
+
+
+def _die() -> None:
+    """Hard process death without unwinding (no atexit, no flushes) —
+    what an OOM-killed or power-lost rank looks like to its peers.
+    Module-level so tests can monkeypatch it."""
+    os._exit(KILL_EXIT_CODE)
+
+
+class IterationFaults:
+    """This rank's iteration-indexed faults (kill_at_iter / stall),
+    decoded from the environment by :func:`install_iteration_faults`.
+
+    ``tick(it)`` is shaped for ``CheckpointConfig.on_boundary``: the
+    checkpointing driver calls it with the global iteration count at
+    every drained-ring segment boundary.  Faults are deterministic in
+    the ITERATION index, not in wall time — two drill runs kill at the
+    same boundary bit-for-bit.
+    """
+
+    def __init__(self, kill_at_iter: int | None = None,
+                 stall_at_iter: int | None = None,
+                 stall_for_s: float = 0.0):
+        self.kill_at_iter = kill_at_iter
+        self.stall_at_iter = stall_at_iter
+        self.stall_for_s = stall_for_s
+        self.stalled = False
+
+    @property
+    def armed(self) -> bool:
+        return self.kill_at_iter is not None or self.stall_at_iter is not None
+
+    def tick(self, it: int) -> None:
+        if (self.stall_at_iter is not None and not self.stalled
+                and it >= self.stall_at_iter):
+            self.stalled = True          # one-shot: a wedge, not a crawl
+            time.sleep(self.stall_for_s)
+        if self.kill_at_iter is not None and it >= self.kill_at_iter:
+            _die()
+
+
+def install_iteration_faults(process_id: int, environ=None) -> IterationFaults:
+    """Decode this rank's iteration-indexed faults (child-side).
+
+    Returns an :class:`IterationFaults` whose ``tick`` the caller wires
+    into ``CheckpointConfig.on_boundary``; unarmed (no-op ticks) when
+    the plan names another rank or no plan is present.
+    """
+    env = os.environ if environ is None else environ
+    seed = int(env.get(ENV_SEED, "0"))
+    kill_at = None
+    kill_rank = env.get(ENV_KILL_RANK)
+    if kill_rank is not None and int(kill_rank) == process_id:
+        at = env.get(ENV_KILL_AT_ITER)
+        kill_at = int(at) if at is not None else None
+    stall_at, stall_for = None, 0.0
+    stall_rank = env.get(ENV_STALL_RANK)
+    if stall_rank is not None and int(stall_rank) == process_id:
+        stall_at = int(env.get(ENV_STALL_AT_ITER, "0"))
+        stall_for = float(env.get(ENV_STALL_FOR_S, "0"))
+        stall_for += _jitter(seed, process_id,
+                             float(env.get(ENV_JITTER_S, "0")))
+    return IterationFaults(kill_at_iter=kill_at, stall_at_iter=stall_at,
+                           stall_for_s=stall_for)

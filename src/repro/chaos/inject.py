@@ -40,18 +40,51 @@ from repro.core.types import SolverOps
 
 @dataclasses.dataclass(frozen=True)
 class ChaosConfig:
-    """Seeded reduction-payload perturbation.
+    """Seeded reduction-payload perturbation + process-level faults.
+
+    Value level (this module):
 
     ``payload_rel_amp``  relative perturbation amplitude (0 disables);
     ``payload_prob``     fraction of payload entries perturbed (gated by
                          a second value hash, so the choice of WHICH
                          entries is as deterministic as the noise);
-    ``seed``             mixes into both hashes.
+    ``seed``             mixes into both hashes (and into the stall
+                         jitter below).
+
+    Process level (executed by ``repro.chaos.faults`` in fabric
+    children; iteration-indexed faults fire at checkpoint segment
+    boundaries, so recovery drills are deterministic and CI-runnable):
+
+    ``kill_rank``/``kill_rank_at_iter``  hard-kill that rank at the
+                         first boundary reaching the iteration index;
+    ``stall_rank``/``stall_rank_at_iter``/``stall_rank_for_s``
+                         one-shot seeded-jitter sleep at a boundary —
+                         the wedged-rank signature for the heartbeat
+                         watchdog.
+
+    ``fault_plan()`` converts the process-level fields into the
+    :class:`repro.chaos.faults.FaultPlan` a fabric launch ships to its
+    children.
     """
 
     seed: int = 0
     payload_rel_amp: float = 0.0
     payload_prob: float = 1.0
+    kill_rank: int | None = None
+    kill_rank_at_iter: int | None = None
+    stall_rank: int | None = None
+    stall_rank_at_iter: int = 0
+    stall_rank_for_s: float = 0.0
+
+    def fault_plan(self):
+        from repro.chaos.faults import FaultPlan
+
+        return FaultPlan(kill_rank=self.kill_rank,
+                         kill_at_iter=self.kill_rank_at_iter,
+                         stall_rank=self.stall_rank,
+                         stall_at_iter=self.stall_rank_at_iter,
+                         stall_for_s=self.stall_rank_for_s,
+                         seed=self.seed)
 
 
 def _mix(h: jax.Array) -> jax.Array:

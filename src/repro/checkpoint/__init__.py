@@ -1,0 +1,47 @@
+"""Elastic checkpoint/restore for pipelined solves (DESIGN.md §19).
+
+``CheckpointConfig(every=k)`` arms a segmented host driver that
+snapshots the solver state at drained-ring cycle boundaries to a
+content-hashed, versioned on-disk format, and resumes bitwise on the
+same substrate (truth-certified via one true-residual recompute on
+restore).  ``every=0`` leaves the solvers' compiled path untouched.
+"""
+
+from repro.checkpoint.format import (CKPT_VERSION,
+                                     CheckpointCertificationError,
+                                     CheckpointCorruptError, CheckpointError,
+                                     CheckpointMismatchError,
+                                     CheckpointVersionError, content_hash,
+                                     load_checkpoint, save_checkpoint)
+from repro.checkpoint.solve import (LAST_RESTORE, CheckpointConfig,
+                                    checkpoint_path, checkpointed_solve,
+                                    effective_kw, latest_checkpoint,
+                                    list_checkpoints, load_slab_checkpoint,
+                                    make_rel_fn, run_segmented,
+                                    save_slab_checkpoint, state_payload,
+                                    state_restore)
+
+__all__ = [
+    "CKPT_VERSION",
+    "CheckpointError",
+    "CheckpointCorruptError",
+    "CheckpointVersionError",
+    "CheckpointMismatchError",
+    "CheckpointCertificationError",
+    "CheckpointConfig",
+    "content_hash",
+    "save_checkpoint",
+    "load_checkpoint",
+    "checkpoint_path",
+    "list_checkpoints",
+    "latest_checkpoint",
+    "checkpointed_solve",
+    "effective_kw",
+    "make_rel_fn",
+    "run_segmented",
+    "state_payload",
+    "state_restore",
+    "save_slab_checkpoint",
+    "load_slab_checkpoint",
+    "LAST_RESTORE",
+]

@@ -189,7 +189,17 @@ def solve(
     tol: float = 1e-6,
     maxit: int = 1000,
     replace_every: int = 0,
+    checkpoint=None,
 ) -> SolveResult:
+    if checkpoint is not None and checkpoint.armed:
+        # Segmented checkpointing driver (DESIGN.md §19): snapshots at
+        # residual-replacement boundaries.  every=0/None keeps the
+        # compiled while-loop below byte-identical to pre-§19.
+        from repro.checkpoint import checkpointed_solve
+
+        return checkpointed_solve(
+            ops, b, "pcg", x0, checkpoint,
+            dict(tol=tol, maxit=maxit, replace_every=replace_every))
     prog = build(ops, b, tol=tol, maxit=maxit, replace_every=replace_every)
     st0 = prog.init(jnp.zeros_like(b) if x0 is None else x0)
     return prog.finish(jax.lax.while_loop(prog.cond, prog.body, st0))

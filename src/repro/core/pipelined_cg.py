@@ -780,13 +780,28 @@ def solve(
     telemetry_cap: int = 0,
     recurrence: str = "ghysels",
     governor: "gov_model.GovernorConfig | None" = None,
+    checkpoint=None,
 ) -> SolveResult:
     """Solve A x = b with p(l)-CG.  ``l`` is the pipeline depth (static);
     ``fused_iteration=True`` runs the vector phase through the one-pass
     superkernel (DESIGN.md §13); ``telemetry_cap > 0`` records the
     on-device per-iteration telemetry ring (DESIGN.md §16);
-    ``recurrence="stable"`` selects the coupled basis recurrence and
-    ``governor`` arms the stability governor (DESIGN.md §18)."""
+    ``recurrence="stable"`` selects the coupled basis recurrence,
+    ``governor`` arms the stability governor (DESIGN.md §18) and
+    ``checkpoint`` (a ``repro.checkpoint.CheckpointConfig`` with
+    ``every > 0``) arms the segmented checkpointing driver
+    (DESIGN.md §19; ``every=0``/None leaves this compiled path
+    untouched)."""
+    if checkpoint is not None and checkpoint.armed:
+        from repro.checkpoint import checkpointed_solve
+
+        return checkpointed_solve(
+            ops, b, "plcg", x0, checkpoint,
+            dict(l=l, tol=tol, maxit=maxit, sigmas=sigmas,
+                 max_restarts=max_restarts, replace_every=replace_every,
+                 fused_iteration=fused_iteration,
+                 telemetry_cap=telemetry_cap, recurrence=recurrence,
+                 governor=governor))
     prog = build(ops, b, l, tol=tol, maxit=maxit, sigmas=sigmas,
                  max_restarts=max_restarts, replace_every=replace_every,
                  fused_iteration=fused_iteration, telemetry_cap=telemetry_cap,

@@ -56,6 +56,13 @@ class LocalBackend(ReductionBackend):
         return SolverOps.local(op, prec)
 
     def solve(self, op, b, method: str = "plcg", prec=None, **solver_kwargs):
+        ckpt = solver_kwargs.get("checkpoint")
+        if ckpt is not None and getattr(ckpt, "armed", False):
+            # The checkpointing driver (DESIGN.md §19) segments the solve
+            # on the host, so it cannot live under an outer jit; it jits
+            # its own segment/interrupt pieces internally.
+            ops = self.make_ops(op, prec)
+            return METHODS[method](ops, b, solver_kwargs)
         if self.jit:
             return self.make_solver(op, method, prec, **solver_kwargs)(b)
         ops = self.make_ops(op, prec)

@@ -71,6 +71,16 @@ class ShardMapBackend(ReductionBackend):
 
     # ------------------------------------------------------------ solve --
     def solve(self, op, b, method: str = "plcg", prec=None, **solver_kwargs):
+        ckpt = solver_kwargs.pop("checkpoint", None)
+        if ckpt is not None and getattr(ckpt, "armed", False):
+            # Host-segmented checkpointing driver (DESIGN.md §19) — the
+            # pieces jit+shard_map themselves; no outer jit here.
+            from repro.parallel.distributed import \
+                distributed_checkpointed_solve
+            return distributed_checkpointed_solve(
+                self.mesh, op, b, method=method, prec=prec,
+                reduction=self.reduction_cfg, checkpoint=ckpt,
+                **solver_kwargs)
         return distributed_solve(self.mesh, op, b, method=method, prec=prec,
                                  jit=self.jit, reduction=self.reduction_cfg,
                                  **solver_kwargs)

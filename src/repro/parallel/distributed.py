@@ -536,6 +536,136 @@ def distributed_solve_batched(
     return jax.jit(fn)(B, arrays)
 
 
+def distributed_checkpointed_solve(
+    mesh: Mesh,
+    op: LinearOperator,
+    b: jax.Array,
+    method: str = "plcg",
+    prec=None,
+    reduction=None,
+    checkpoint=None,
+    x0=None,
+    pieces: bool = False,
+    **kwargs,
+):
+    """Checkpointed solve on the shard_map substrate (DESIGN.md §19).
+
+    The segmented driver of ``repro.checkpoint`` with every compiled
+    piece shard_map-wrapped: ``seg`` runs the solver between interrupt
+    boundaries (the in-loop arithmetic is the UNCHANGED program pieces,
+    so histories stay bitwise vs the monolithic while-loop), ``gather``
+    all-gathers the domain-decomposed vector leaves into fully
+    replicated hosts arrays at each drained-ring boundary, and only
+    process 0 writes.  The host evaluates ``cond``/``needs_interrupt``
+    directly on the replicated scalar leaves — deterministic, so every
+    process takes the same branch (SPMD-safe).  Snapshots store the
+    state in the partition-imposed row ordering (``perm``); stencil and
+    diagonal operators impose none, which is what makes their restores
+    substrate-elastic.
+    """
+    from repro import checkpoint as ckpt_mod
+    from repro.core.batched import BUILDERS
+    from repro.parallel.reduction import oracle_solver_ops
+
+    cfg = checkpoint
+    axis = mesh.axis_names[0]
+    n_shards = mesh.devices.size
+    assert b.shape[0] % n_shards == 0
+    arrays, build, perm = partitioned_solver_ops(op, prec, n_shards, axis,
+                                                 reduction=reduction)
+    pre, post = _permutation_wrappers(perm)
+    kw = ckpt_mod.effective_kw(method, kwargs, cfg.every)
+    b_p = pre(jnp.asarray(b))
+    x0_p = jnp.zeros_like(b_p) if x0 is None else pre(x0.astype(b_p.dtype))
+
+    # Host-side program: cond / needs_interrupt touch only replicated
+    # scalar leaves and finish only slices the state, so a shape-oracle
+    # ops (never executed through a collective) is sufficient.  The
+    # staged oracle shares the staged mesh's handle-ring structure
+    # (DESIGN.md §14), so the eval_shape'd state tree matches.
+    ops_shape = SolverOps.local(op, prec) if reduction is None else \
+        oracle_solver_ops(op, prec, dataclasses.replace(
+            reduction, n_shards=n_shards, axis=None))
+    prog_host = BUILDERS[method](ops_shape, b_p, **kw)
+    if prog_host.needs_interrupt is None or prog_host.interrupt is None:
+        raise ckpt_mod.CheckpointError(
+            f"method {method!r} exposes no interrupt boundary")
+    st_shapes = jax.eval_shape(prog_host.init,
+                               jax.ShapeDtypeStruct(b_p.shape, b_p.dtype))
+    vec = batched_mod.vector_mask(method)
+    st_specs = jax.tree.map(
+        lambda sh, v: P(*([None] * (sh.ndim - 1) + [axis])) if v else P(),
+        st_shapes, vec)
+    arr_specs = jax.tree.map(lambda _: P(axis), arrays)
+
+    def _prog(bl, loc):
+        return BUILDERS[method](build(loc), bl, **kw)
+
+    def _init(bl, xl, loc):
+        return _prog(bl, loc).init(xl)
+
+    def _seg(bl, st, loc):
+        p = _prog(bl, loc)
+        return lax.while_loop(lambda t: p.cond(t) & ~p.needs_interrupt(t),
+                              p.step, st)
+
+    def _int(bl, st, loc):
+        return _prog(bl, loc).interrupt(st)
+
+    rel_fn = ckpt_mod.make_rel_fn(method, kw)
+
+    def _rel(bl, st, loc):
+        return rel_fn(build(loc), bl, st)
+
+    def _gather(st):
+        # Vector leaves -> fully replicated global arrays (tiled
+        # all_gather on the trailing n axis); everything else is already
+        # replicated at a drained-ring boundary (post-psum scalars) —
+        # EXCEPT the in-flight D ring, which the checkpoint excludes.
+        return jax.tree.map(
+            lambda v, is_vec: lax.all_gather(v, axis, axis=v.ndim - 1,
+                                             tiled=True) if is_vec else v,
+            st, vec)
+
+    sm = partial(shard_map_compat, mesh=mesh)
+    init_j = jax.jit(sm(_init, in_specs=(P(axis), P(axis), arr_specs),
+                        out_specs=st_specs))
+    seg_j = jax.jit(sm(_seg, in_specs=(P(axis), st_specs, arr_specs),
+                       out_specs=st_specs))
+    int_j = jax.jit(sm(_int, in_specs=(P(axis), st_specs, arr_specs),
+                       out_specs=st_specs))
+    rel_j = jax.jit(sm(_rel, in_specs=(P(axis), st_specs, arr_specs),
+                       out_specs=P()))
+    gather_j = jax.jit(sm(_gather, in_specs=(st_specs,),
+                          out_specs=jax.tree.map(lambda _: P(), st_shapes)))
+
+    st = init_j(b_p, x0_p, arrays)
+    if pieces:
+        # Structural introspection for tests: the EXACT jitted pieces
+        # the segmented driver runs (lowerable for HLO assertions —
+        # e.g. "the seg piece keeps one pipelined reduction start per
+        # iteration"), plus the initial state to lower them against.
+        return {"init": init_j, "seg": seg_j, "interrupt": int_j,
+                "rel": rel_j, "gather": gather_j, "state": st,
+                "b_p": b_p, "arrays": arrays, "prog_host": prog_host}
+    mask = ckpt_mod.solve.exclude_mask(method, st)
+    meta_base = ckpt_mod.solve.solver_meta(method, b.shape[0], b.dtype, kw,
+                                           cfg.every)
+    meta_base["treedef"] = ckpt_mod.solve.state_treedef_str(st)
+    rel_of = lambda s: rel_j(b_p, s, arrays)
+    if cfg.resume:
+        st = ckpt_mod.solve.try_restore(st, cfg, meta_base, mask, rel_of)
+    snapshot = ckpt_mod.solve.make_snapshot_fn(
+        cfg, meta_base, mask, method, rel_of, gather=gather_j,
+        is_writer=jax.process_index() == 0)
+    st = ckpt_mod.run_segmented(
+        st, cond=prog_host.cond, needs=prog_host.needs_interrupt,
+        seg=lambda s: seg_j(b_p, s, arrays), method=method,
+        interrupt=lambda s: int_j(b_p, s, arrays), cfg=cfg,
+        snapshot=snapshot)
+    return post(prog_host.finish(st))
+
+
 def distributed_solve(
     mesh: Mesh,
     op: LinearOperator,

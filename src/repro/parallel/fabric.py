@@ -29,6 +29,7 @@ from __future__ import annotations
 import dataclasses
 import os
 import shutil
+import signal
 import socket
 import subprocess
 import tempfile
@@ -51,6 +52,36 @@ BIND_COLLISION_MARKERS = (
 # WEDGED rank (alive but silent — e.g. blocked in a collective) from a
 # dead or merely slow one by the age of its last heartbeat.
 ENV_HEARTBEAT = "REPRO_FABRIC_HEARTBEAT"
+
+# Exit status a rank reports when it shut down cleanly on the launcher's
+# SIGTERM (128 + SIGTERM, the shell convention) — distinct from a crash
+# and from SIGKILL's 137, so post-mortems can tell "peer died, launcher
+# tore me down gracefully" from "I am the one that died".
+SIGTERM_EXIT_CODE = 143
+
+
+def install_sigterm_handler(*flushes: Callable[[], None],
+                            exit_code: int = SIGTERM_EXIT_CODE) -> None:
+    """Child-side graceful-teardown hook: on SIGTERM, run the ``flushes``
+    (telemetry ring dumps, ``Timeline.save`` closures, ...) then exit
+    with ``exit_code``.
+
+    The launcher's :func:`_kill_all` sends SIGTERM first and escalates
+    to SIGKILL after a grace period — installing this handler is what
+    turns a survivor's teardown from hard data loss into a flushed,
+    distinct-status exit (DESIGN.md §19).  Flush errors are swallowed:
+    a failing flush must not block the group teardown.
+    """
+
+    def _on_term(signum, frame):
+        for fn in flushes:
+            try:
+                fn()
+            except Exception:
+                pass
+        os._exit(exit_code)
+
+    signal.signal(signal.SIGTERM, _on_term)
 
 
 def touch_heartbeat(environ=None) -> str | None:
@@ -134,13 +165,32 @@ def _tail(text: str, n: int = 2000) -> str:
     return text[-n:] if len(text) > n else text
 
 
-def _kill_all(procs: Sequence[subprocess.Popen]) -> list[str]:
-    """Kill survivors and drain outputs.  Idempotent: the launcher's
-    ``finally`` re-runs it after the error paths already have."""
+def _kill_all(procs: Sequence[subprocess.Popen],
+              grace_s: float = 2.0) -> list[str]:
+    """Tear down survivors and drain outputs: SIGTERM every live rank
+    (letting :func:`install_sigterm_handler` flush telemetry/timeline
+    buffers and exit with a distinct status), then escalate to SIGKILL
+    for whoever is still alive after ``grace_s``.  Idempotent: the
+    launcher's ``finally`` re-runs it after the error paths already
+    have."""
+    live = [p for p in procs if p.poll() is None]
+    for p in live:
+        try:
+            p.terminate()
+        except OSError:
+            pass
+    deadline = time.monotonic() + max(grace_s, 0.0)
+    while live and time.monotonic() < deadline:
+        live = [p for p in live if p.poll() is None]
+        if live:
+            time.sleep(0.05)
+    for p in live:
+        try:
+            p.kill()
+        except OSError:
+            pass
     outs = []
     for p in procs:
-        if p.poll() is None:
-            p.kill()
         try:
             out, _ = p.communicate(timeout=30)
         except (subprocess.TimeoutExpired, ValueError, OSError):
@@ -164,6 +214,7 @@ def launch_fabric(
     max_port_retries: int = 3,
     host: str = "127.0.0.1",
     wedge_after_s: float = 5.0,
+    term_grace_s: float = 2.0,
 ) -> FabricResult:
     """Run one multi-controller process group to completion.
 
@@ -233,7 +284,7 @@ def launch_fabric(
                     # codes and heartbeat ages at detection time are the
                     # diagnosis, not the post-kill wreckage.
                     stat = statuses(codes)
-                    outs = _kill_all(procs)
+                    outs = _kill_all(procs, term_grace_s)
                     last_outputs = outs
                     k0, c0 = dead[0]
                     if _looks_like_bind_collision(outs[k0]):
@@ -244,28 +295,106 @@ def launch_fabric(
                     detail = "\n".join(
                         f"--- rank {k} ({stat[k]}) ---\n{_tail(outs[k])}"
                         for k in range(num_processes))
-                    raise FabricProcessError(
+                    err = FabricProcessError(
                         f"rank {k0} of {num_processes} exited {c0} while "
                         f"peers were running (coordinator {coordinator}); "
                         f"survivors killed to avoid a collective hang\n"
                         f"{detail}")
+                    # Full (undisplayed) outputs ride on the error so a
+                    # recovery supervisor can harvest child markers —
+                    # checkpoint paths, kill iterations — post-mortem.
+                    err.outputs = outs
+                    err.failed_rank = k0
+                    raise err
                 if time.monotonic() > deadline:
                     stat = statuses(codes)
-                    outs = _kill_all(procs)
+                    outs = _kill_all(procs, term_grace_s)
                     running = [k for k, c in enumerate(codes) if c is None]
-                    raise FabricTimeoutError(
+                    err = FabricTimeoutError(
                         f"fabric of {num_processes} rank(s) exceeded "
                         f"{timeout_s:.0f}s (ranks {running} still running, "
                         f"coordinator {coordinator}); group killed\n"
                         + "\n".join(
                             f"--- rank {k} ({stat[k]}) ---\n{_tail(o)}"
                             for k, o in enumerate(outs)))
+                    err.outputs = outs
+                    err.failed_rank = running[0] if running else None
+                    raise err
                 time.sleep(poll_s)
         finally:
-            _kill_all(procs)
+            _kill_all(procs, term_grace_s)
             shutil.rmtree(hb_dir, ignore_errors=True)
     raise FabricProcessError(
         f"coordinator bind collision persisted through "
         f"{max_port_retries} port retries\n"
         + "\n".join(f"--- rank {k} ---\n{_tail(o)}"
                     for k, o in enumerate(last_outputs)))
+
+
+@dataclasses.dataclass
+class RecoveryResult:
+    """Outcome of a :func:`run_resilient` supervision."""
+
+    result: FabricResult          # the attempt that completed
+    attempts: int                 # fabric launches, including the last
+    failures: list[FabricError]   # one per failed attempt, in order
+    procs_per_attempt: list[int]  # group size of each attempt
+
+
+def run_resilient(
+    child_argv: Callable[[str, int, int, int], list[str]],
+    num_processes: int,
+    *,
+    max_failures: int = 1,
+    shrink: bool = False,
+    min_processes: int = 1,
+    env: dict | None = None,
+    attempt_env: Callable[[int], dict] | None = None,
+    **launch_kw,
+) -> RecoveryResult:
+    """Elastic fabric supervisor (DESIGN.md §19 recovery state machine).
+
+    Runs ``launch_fabric`` and, on :class:`FabricProcessError` /
+    :class:`FabricTimeoutError` (a dead or wedged rank — survivors are
+    already torn down by the launcher), RESPAWNS a fresh process group:
+    a new coordinator port, new gloo/NCCL rendezvous, and — because each
+    child rebuilds its backend from the operator — a fresh partition of
+    the problem via the existing ``PartitionPlan`` machinery.  Children
+    that checkpoint (``CheckpointConfig(..., resume=True)`` on a shared
+    directory) resume the solve from the last snapshot instead of from
+    zero; ``multiprocess_parity.py --recovery`` is the end-to-end drill.
+
+    ``child_argv(coordinator, process_id, num_processes, attempt)``
+    builds rank k's argv — the extended signature (vs ``launch_fabric``)
+    is what lets a shrunk regroup tell its children the new world size.
+    ``shrink=True`` drops one rank per failure (never below
+    ``min_processes``) — elastic downsizing for hardware that stays
+    dead.  ``attempt_env(attempt)`` merges attempt-specific variables
+    (e.g. a chaos plan armed only on the first attempt) over ``env``.
+    Exhausting ``max_failures`` re-raises the last fabric error.
+    """
+    failures: list[FabricError] = []
+    procs_hist: list[int] = []
+    procs = num_processes
+    for attempt in range(1, max_failures + 2):
+        procs_hist.append(procs)
+        aenv = dict(os.environ if env is None else env)
+        if attempt_env is not None:
+            aenv.update(attempt_env(attempt))
+        p, a = procs, attempt
+
+        def argv(coordinator: str, k: int, _p=p, _a=a) -> list[str]:
+            return child_argv(coordinator, k, _p, _a)
+
+        try:
+            result = launch_fabric(argv, procs, env=aenv, **launch_kw)
+            return RecoveryResult(result=result, attempts=attempt,
+                                  failures=failures,
+                                  procs_per_attempt=procs_hist)
+        except (FabricProcessError, FabricTimeoutError) as e:
+            failures.append(e)
+            if attempt > max_failures:
+                raise
+            if shrink and procs > min_processes:
+                procs -= 1
+    raise AssertionError("unreachable")

@@ -43,6 +43,14 @@ class ConfigError(ServeError, ValueError):
     preconditioner kind, missing block size, bad scheduler knobs)."""
 
 
+class WorkerFault(ServeError, RuntimeError):
+    """A slab worker's backing program/process faulted mid-serve (device
+    runtime error, dead fabric rank, injected chaos fault).  The
+    scheduler tears the worker down and hands its unretired in-flight
+    requests back to the service for resubmission through the retry
+    policy (DESIGN.md §19 self-healing serve)."""
+
+
 class AdmissionRejected(ServeError):
     """Request refused by the admission policy (queue depth above the
     configured ceiling, or a deadline that cannot be met).

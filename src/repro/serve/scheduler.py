@@ -46,10 +46,22 @@ from typing import Callable, Hashable, NamedTuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.batched import (SlabProgram, dispatch_slab_chunks,
-                                slab_slot_iterations)
+from repro.core.batched import SlabProgram, slab_slot_iterations
 from repro.obs.metrics import MetricsRegistry
 from repro.serve.batcher import SlabKey, SolveRequest
+from repro.serve.errors import WorkerFault
+
+try:                                     # jax >= 0.4.14
+    from jax.errors import JaxRuntimeError as _JaxRuntimeError
+except ImportError:                      # pragma: no cover - old jax
+    class _JaxRuntimeError(Exception):
+        """Placeholder: never raised when jax lacks JaxRuntimeError."""
+
+# Exceptions the scheduler treats as "this worker's backing
+# program/process died" (tear down + resubmit) rather than a scheduler
+# bug (propagate).  Injected chaos faults raise WorkerFault directly;
+# a dead fabric rank surfaces as a jax runtime error at dispatch/poll.
+WORKER_FAULT_TYPES = (WorkerFault, _JaxRuntimeError)
 
 
 class StealEvent(NamedTuple):
@@ -70,6 +82,17 @@ class ShedEvent(NamedTuple):
     req_id: int
     t: float
     waited_s: float
+
+
+class DeathEvent(NamedTuple):
+    """One worker teardown: ``worker`` faulted at ``tick``; its
+    unretired requests (``req_ids``) went back to the service for
+    resubmission through the retry policy."""
+
+    tick: int
+    worker: int
+    req_ids: tuple[int, ...]
+    reason: str
 
 
 class RetiredColumn(NamedTuple):
@@ -200,11 +223,15 @@ class SlabWorker:
 @dataclasses.dataclass
 class TickReport:
     """What one scheduler tick did (the service turns this into results
-    and telemetry)."""
+    and telemetry).  ``failed`` are the in-flight/queued requests of
+    workers that died this tick — NOT results: the service resubmits
+    them through the retry policy or shed-records them."""
 
     retired: list[RetiredColumn]
     shed: list[SolveRequest]
     chunks_run: int
+    failed: list[SolveRequest] = dataclasses.field(default_factory=list)
+    deaths: list[DeathEvent] = dataclasses.field(default_factory=list)
 
 
 class SlabScheduler:
@@ -222,7 +249,9 @@ class SlabScheduler:
                  max_replicas: int = 1, replicate_watermark: float = 1.0,
                  steal: bool = True, continuous: bool = True,
                  shed_expired: bool = True,
-                 registry: MetricsRegistry | None = None):
+                 registry: MetricsRegistry | None = None,
+                 fault_injector: Callable[[int, SlabWorker], None]
+                 | None = None):
         if max_replicas < 1:
             raise ValueError(f"max_replicas must be >= 1 ({max_replicas})")
         self.make_program = make_program
@@ -231,7 +260,14 @@ class SlabScheduler:
         self.steal = steal
         self.continuous = continuous
         self.shed_expired = shed_expired
+        # fault_injector(tick, worker) runs before each busy worker's
+        # chunk dispatch; raising WorkerFault simulates a backing
+        # process death at a deterministic tick (the serve recovery
+        # drill's injection point — DESIGN.md §19).
+        self.fault_injector = fault_injector
         self.workers: list[SlabWorker] = []
+        self._next_wid = 0               # wids never reuse: a respawned
+        # worker is a NEW identity (death/steal/shed logs stay unambiguous)
         self._by_key: dict[SlabKey, list[SlabWorker]] = {}
         self._programs: dict[SlabKey, SlabProgram] = {}
         # Event LOGS stay — they are the bitwise determinism witnesses the
@@ -240,6 +276,7 @@ class SlabScheduler:
         # counter parity.
         self.steal_log: list[StealEvent] = []
         self.shed_log: list[ShedEvent] = []
+        self.death_log: list[DeathEvent] = []
         self.ticks = 0
         self.chunks_run = 0
         self.registry = MetricsRegistry() if registry is None else registry
@@ -255,16 +292,50 @@ class SlabScheduler:
             "serve_ticks_total", "scheduler ticks run")
         self._c_chunks = m.counter(
             "serve_chunks_total", "slab chunks dispatched")
+        self._c_deaths = m.counter(
+            "serve_worker_deaths_total",
+            "slab workers torn down after a backing fault")
 
     # --------------------------------------------------------- dispatch --
     def _spawn(self, key: SlabKey) -> SlabWorker:
+        # Replacement workers for a key whose predecessor died reuse the
+        # cached compiled program: respawn never recompiles.
         prog = self._programs.get(key)
         if prog is None:
             prog = self._programs[key] = self.make_program(key)
-        w = SlabWorker(len(self.workers), key, prog)
+        w = SlabWorker(self._next_wid, key, prog)
+        self._next_wid += 1
         self.workers.append(w)
         self._by_key.setdefault(key, []).append(w)
         return w
+
+    def _fail_worker(self, w: SlabWorker, exc: BaseException,
+                     deaths: list[DeathEvent]) -> list[SolveRequest]:
+        """Tear down a faulted worker: harvest its unretired in-flight
+        slots and local queue (the service resubmits them), remove it
+        from the pool, and log the death.  The key's compiled program
+        stays cached — the next dispatch for the key spawns a fresh
+        worker without recompiling."""
+        reqs = [w.slots[j] for j in w.occupied()]
+        reqs.extend(w.local)
+        w.slots = [None] * w.s
+        w.local.clear()
+        w.state = None
+        w.B_dev = None
+        if w in self.workers:
+            self.workers.remove(w)
+        group = self._by_key.get(w.key)
+        if group and w in group:
+            group.remove(w)
+            if not group:
+                del self._by_key[w.key]
+        ev = DeathEvent(tick=self.ticks, worker=w.wid,
+                        req_ids=tuple(r.req_id for r in reqs),
+                        reason=f"{type(exc).__name__}: {exc}")
+        self.death_log.append(ev)
+        deaths.append(ev)
+        self._c_deaths.inc()
+        return reqs
 
     def dispatch(self, req: SolveRequest) -> SlabWorker:
         """Route one admitted request to a worker (creating/replicating
@@ -327,11 +398,19 @@ class SlabScheduler:
     def tick(self, now: float) -> TickReport:
         """One scheduler tick: pack every worker, chunk all busy slabs
         (dispatched back-to-back so independent slabs overlap on the
-        device stream), then poll/retire."""
+        device stream), then poll/retire.
+
+        Each phase isolates worker faults (``WORKER_FAULT_TYPES``): a
+        worker whose pack/chunk/poll raises is torn down via
+        :meth:`_fail_worker` and its unretired requests come back in
+        ``TickReport.failed`` — the surviving workers' tick proceeds
+        untouched (self-healing serve, DESIGN.md §19)."""
         self.ticks += 1
         self._c_ticks.inc()
         shed: list[SolveRequest] = []
-        for w in self.workers:
+        failed: list[SolveRequest] = []
+        deaths: list[DeathEvent] = []
+        for w in list(self.workers):
             if not self.continuous and w.occupied():
                 continue                # drain-to-empty baseline
             k = len(w.free_slots())
@@ -339,18 +418,38 @@ class SlabScheduler:
             if self.steal and len(incoming) < k and not w.local:
                 incoming += self._steal(w, k - len(incoming), now, shed)
             if incoming:
-                w.pack(incoming)
-        busy = [w for w in self.workers if w.occupied()]
-        new_states = dispatch_slab_chunks(
-            (w.program, w.B_dev, w.state) for w in busy)
-        for w, st in zip(busy, new_states):
+                try:
+                    w.pack(incoming)
+                except WORKER_FAULT_TYPES as e:
+                    # pack places requests into slots before touching
+                    # the program, so occupied() covers ``incoming``.
+                    failed.extend(self._fail_worker(w, e, deaths))
+        # Chunks dispatch back-to-back (each .chunk returns an async
+        # handle-backed state), so independent slabs still overlap.
+        live: list[SlabWorker] = []
+        new_states = []
+        for w in [w for w in self.workers if w.occupied()]:
+            try:
+                if self.fault_injector is not None:
+                    self.fault_injector(self.ticks, w)
+                new_states.append(w.program.chunk(w.B_dev, w.state))
+                live.append(w)
+            except WORKER_FAULT_TYPES as e:
+                failed.extend(self._fail_worker(w, e, deaths))
+        for w, st in zip(live, new_states):
             w.state = st
-        self.chunks_run += len(busy)
-        self._c_chunks.inc(len(busy))
+        self.chunks_run += len(live)
+        self._c_chunks.inc(len(live))
         retired: list[RetiredColumn] = []
-        for w in busy:
-            retired.extend(w.poll())
-        return TickReport(retired=retired, shed=shed, chunks_run=len(busy))
+        for w in live:
+            try:
+                retired.extend(w.poll())
+            except WORKER_FAULT_TYPES as e:
+                # An async dispatch error surfaces at the poll's host
+                # transfer — same teardown, minus whatever retired.
+                failed.extend(self._fail_worker(w, e, deaths))
+        return TickReport(retired=retired, shed=shed, chunks_run=len(live),
+                          failed=failed, deaths=deaths)
 
     # -------------------------------------------------------- telemetry --
     def reset_stats(self) -> None:
@@ -360,9 +459,11 @@ class SlabScheduler:
         self.chunks_run = 0
         self.steal_log.clear()
         self.shed_log.clear()
+        self.death_log.clear()
         self._c_steals.reset()
         self._c_sheds.reset()
         self._c_chunks.reset()
+        self._c_deaths.reset()
         for w in self.workers:
             w.occupied_slot_iters = 0
             w.capacity_slot_iters = 0

@@ -151,7 +151,8 @@ class SolverService:
                  steal: bool = True, continuous: bool = True,
                  registry: MetricsRegistry | None = None,
                  telemetry_cap: int = 0,
-                 retry: RetryPolicy | None = None):
+                 retry: RetryPolicy | None = None,
+                 fault_injector=None):
         self.backend = backend
         self.s = int(s)
         self.method = method
@@ -182,7 +183,8 @@ class SolverService:
             replicate_watermark=replicate_watermark, steal=steal,
             continuous=continuous,
             shed_expired=self.admission.shed_expired,
-            registry=self.registry)
+            registry=self.registry,
+            fault_injector=fault_injector)
         # Retired results are held until the caller collects them
         # (``pop_result`` / ``drain``); latency percentiles come from a
         # bounded reservoir so long-lived services don't grow stats state.
@@ -206,6 +208,10 @@ class SolverService:
         self._c_retried = m.counter(
             "serve_requests_retried_total",
             "shed requests requeued by the retry policy")
+        self._c_resubmitted = m.counter(
+            "serve_requests_resubmitted_total",
+            "in-flight requests of a dead worker resubmitted with a "
+            "fresh SLO window")
         self._h_latency = m.histogram(
             "serve_request_latency_seconds",
             "submit -> retirement latency (bounded reservoir)")
@@ -343,7 +349,8 @@ class SolverService:
             req.submitted_at = now
             self.scheduler.dispatch(req)
 
-    def _maybe_requeue(self, req: SolveRequest, now: float) -> bool:
+    def _maybe_requeue(self, req: SolveRequest, now: float,
+                       counter=None) -> bool:
         """Shed-path retry: True when the request was requeued with
         backoff instead of dropped (bounded by the policy)."""
         if self.retry is None or req.retries >= self.retry.max_retries:
@@ -351,14 +358,19 @@ class SolverService:
         delay = self.retry.backoff(req.retries)
         req.retries += 1
         heapq.heappush(self._retry_q, (now + delay, req.req_id, req))
-        self._c_retried.inc()
+        (self._c_retried if counter is None else counter).inc()
         return True
 
     def step(self) -> list[RequestResult]:
         """One scheduler tick over every slab with work: release due
         retries, dispatch, pack free slots, chunk all busy slabs, retire
         finished columns.  Returns the requests retired (or shed) this
-        tick."""
+        tick.
+
+        Requests stranded by a worker death (``TickReport.failed``) are
+        resubmitted through the retry policy with a fresh SLO window —
+        the deadline re-anchors when the backoff releases them — and
+        shed-recorded only on exhausted retries (DESIGN.md §19)."""
         self._release_due_retries(self.clock.now())
         self._dispatch_queue()
         report = self.scheduler.tick(self.clock.now())
@@ -371,6 +383,12 @@ class SolverService:
                 shed=False, now=now))
         for req in report.shed:
             if self._maybe_requeue(req, now):
+                continue
+            out.append(self._record(
+                req, worker=-1, x=None, iters=0, converged=False,
+                res_history=np.empty(0), shed=True, now=now))
+        for req in report.failed:
+            if self._maybe_requeue(req, now, counter=self._c_resubmitted):
                 continue
             out.append(self._record(
                 req, worker=-1, x=None, iters=0, converged=False,
@@ -423,6 +441,14 @@ class SolverService:
         return int(self._c_retried.value())
 
     @property
+    def resubmitted(self) -> int:
+        return int(self._c_resubmitted.value())
+
+    @property
+    def worker_deaths(self) -> int:
+        return int(self.scheduler._c_deaths.value())
+
+    @property
     def slo_met(self) -> int:
         return int(self._c_slo.value())
 
@@ -439,6 +465,7 @@ class SolverService:
         self._c_shed.reset()
         self._c_slo.reset()
         self._c_retried.reset()
+        self._c_resubmitted.reset()
         self.retirement_log.clear()
         self.scheduler.reset_stats()
 
@@ -453,6 +480,8 @@ class SolverService:
             "rejected": self.rejected,
             "shed": self.shed,
             "retried": self.retried,
+            "resubmitted": self.resubmitted,
+            "worker_deaths": self.worker_deaths,
             "slo_met": self.slo_met,
             "stolen": len(sched.steal_log),
             "slot_utilization": sched.slot_utilization(),

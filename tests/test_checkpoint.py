@@ -1,0 +1,429 @@
+"""Checkpoint/restore tests (DESIGN.md §19): bitwise resume on the
+local and shard_map substrates, the cycle-boundary invariant's HLO
+footprint, typed failure modes (corruption, version skew, config
+mismatch, certification), and batched slab round-trips.
+
+The headline contract: a solve that is killed and resumed from its last
+checkpoint produces THE SAME residual history as one that never died —
+bit for bit from the restore iteration onward — because the segmented
+driver is arithmetic-identical to the monolithic ``lax.while_loop`` of
+the same effective config, and the snapshot boundary is a drained-ring
+interrupt where every persisted leaf is replicated and well-defined.
+Multi-device paths run in subprocesses (conftest pins one device);
+the cross-process kill-a-rank drill lives in tests/test_multiprocess.py.
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (LAST_RESTORE, CheckpointCertificationError,
+                              CheckpointConfig, CheckpointCorruptError,
+                              CheckpointMismatchError, CheckpointVersionError,
+                              CKPT_VERSION, latest_checkpoint,
+                              list_checkpoints, load_checkpoint,
+                              load_slab_checkpoint, save_checkpoint,
+                              save_slab_checkpoint)
+from repro.checkpoint import solve as ckpt_solve
+from repro.core.chebyshev import shifts_for_operator
+from repro.linalg.operators import Stencil2D5
+from repro.parallel import get_backend
+
+RNG = np.random.default_rng(11)
+
+ENV = dict(os.environ, PYTHONPATH="src")
+ENV.pop("XLA_FLAGS", None)
+
+
+def _run(code: str) -> str:
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=ENV, cwd=os.getcwd(), timeout=900)
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-3000:])
+    return out.stdout
+
+
+HEADER = """
+import os, tempfile
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+import numpy as np
+from repro.linalg.operators import Stencil2D5
+from repro.parallel import get_backend
+from repro.checkpoint import CheckpointConfig, LAST_RESTORE
+op = Stencil2D5(24, 16)
+b = np.asarray(np.random.default_rng(0).standard_normal(op.n))
+"""
+
+
+@pytest.fixture()
+def problem():
+    op = Stencil2D5(24, 16)
+    b = np.asarray(RNG.standard_normal(op.n))
+    return op, b
+
+
+# --------------------------------------------------------------------------
+# Local substrate: segmented == monolithic, save -> kill -> resume bitwise.
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method,kw", [
+    ("plcg", dict(l=2, tol=1e-10, maxit=300)),
+    ("pcg", dict(tol=1e-10, maxit=300)),
+])
+def test_resume_bitwise_local(tmp_path, problem, method, kw):
+    """Save every 15 updates, then resume from the last snapshot: the
+    resumed residual history equals the uninterrupted segmented oracle
+    bitwise from the restore iteration onward, and the segmented drive
+    itself changes nothing vs a never-checkpointed solve of the same
+    effective config."""
+    op, b = problem
+    be = get_backend("local")
+    oracle = be.solve(op, b, method=method,
+                      checkpoint=CheckpointConfig(every=15), **kw)
+    d = str(tmp_path)
+    full = be.solve(op, b, method=method,
+                    checkpoint=CheckpointConfig(every=15, directory=d), **kw)
+    assert list_checkpoints(d), "no snapshots written"
+    resumed = be.solve(op, b, method=method,
+                       checkpoint=CheckpointConfig(every=15, directory=d,
+                                                   resume=True), **kw)
+    h_o = np.asarray(oracle.res_history)
+    h_f = np.asarray(full.res_history)
+    h_r = np.asarray(resumed.res_history)
+    assert bool(full.converged) and bool(resumed.converged)
+    # persisting must not perturb the arithmetic
+    assert np.array_equal(h_o, h_f)
+    # resumed == uninterrupted from the restore iteration onward
+    assert LAST_RESTORE, "restore never happened"
+    rtot = int(LAST_RESTORE[-1].meta["tot"])
+    assert rtot > 0
+    assert np.array_equal(h_o[rtot:], h_r[rtot:])
+    # ... and the restored head is the saved history, so the whole
+    # same-substrate resumed history is bitwise identical.
+    assert np.array_equal(h_o, h_r)
+    assert int(resumed.iters) == int(oracle.iters)
+
+
+def test_every_zero_hlo_unchanged(problem):
+    """``CheckpointConfig(every=0)`` (and ``checkpoint=None``) must
+    compile to the IDENTICAL solver HLO — checkpointing off is the
+    pre-§19 program, byte for byte."""
+    from repro.core import ghysels_pcg, pipelined_cg
+    from repro.core.types import SolverOps
+
+    op, b = problem
+    ops = SolverOps.local(op)
+    bj = jnp.asarray(b)
+    sig = shifts_for_operator(op, 2)
+
+    def lower(solver, **kw):
+        return jax.jit(lambda bb: solver(ops, bb, **kw)).lower(bj).as_text()
+
+    kw = dict(l=2, sigmas=sig, tol=1e-10, maxit=300)
+    assert lower(pipelined_cg.solve, **kw) == \
+        lower(pipelined_cg.solve, checkpoint=CheckpointConfig(every=0), **kw)
+    kw = dict(tol=1e-10, maxit=300)
+    assert lower(ghysels_pcg.solve, **kw) == \
+        lower(ghysels_pcg.solve, checkpoint=CheckpointConfig(every=0), **kw)
+
+
+def test_effective_kw_validation():
+    """The checkpoint cadence must exceed plcg's pipeline depth (the
+    ring has to refill between boundaries), and every=0 never reaches
+    the segmented driver."""
+    with pytest.raises(ValueError):
+        ckpt_solve.effective_kw("plcg", dict(l=3, maxit=100), every=3)
+    with pytest.raises(ValueError):
+        ckpt_solve.effective_kw("plcg", dict(l=2, maxit=100), every=0)
+    # cadence folds into min(replace_every, every)
+    kw = ckpt_solve.effective_kw("plcg", dict(l=2, maxit=100,
+                                              replace_every=40), every=15)
+    assert kw["replace_every"] == 15
+    kw = ckpt_solve.effective_kw("pcg", dict(maxit=100, replace_every=10),
+                                 every=25)
+    assert kw["replace_every"] == 10
+
+
+def test_methods_without_interrupt_rejected():
+    """Classic CG has no interrupt boundary — checkpointing it is a
+    typed refusal, not a silent no-op."""
+    with pytest.raises(KeyError):
+        ckpt_solve.make_rel_fn("cg", {})
+
+
+# --------------------------------------------------------------------------
+# Typed failure modes: corruption, version skew, config mismatch, failed
+# certification.  (Property-based versions: test_checkpoint_properties.py.)
+# --------------------------------------------------------------------------
+
+def test_corrupt_truncated_version_errors(tmp_path):
+    path = str(tmp_path / "ckpt_0000000001.npz")
+    payload = {"leaf_000": np.arange(6, dtype=np.float64).reshape(2, 3)}
+    meta = save_checkpoint(path, payload, {"kind": "test"})
+    assert meta["version"] == CKPT_VERSION and "sha256" in meta
+    back, m2 = load_checkpoint(path)
+    assert np.array_equal(back["leaf_000"], payload["leaf_000"])
+
+    with pytest.raises(FileNotFoundError):
+        load_checkpoint(str(tmp_path / "missing.npz"))
+
+    raw = open(path, "rb").read()
+    trunc = str(tmp_path / "trunc.npz")
+    with open(trunc, "wb") as f:
+        f.write(raw[: len(raw) // 2])
+    with pytest.raises(CheckpointCorruptError):
+        load_checkpoint(trunc)
+
+    garbage = str(tmp_path / "garbage.npz")
+    with open(garbage, "wb") as f:
+        f.write(b"not a zip file at all")
+    with pytest.raises(CheckpointCorruptError):
+        load_checkpoint(garbage)
+
+    # bit-flip inside the payload -> content hash refuses
+    flipped = str(tmp_path / "flipped.npz")
+    tampered = {k: v.copy() for k, v in payload.items()}
+    tampered["leaf_000"][0, 0] += 1.0
+    save_checkpoint(flipped, tampered, {"kind": "test"})
+    raw_ok = load_checkpoint(flipped)[1]["sha256"]
+    assert raw_ok != meta["sha256"]
+    # forge: stored arrays differ from the hashed ones
+    import json as _json
+    import zipfile as _zip
+    forged = str(tmp_path / "forged.npz")
+    with _zip.ZipFile(flipped) as zin, _zip.ZipFile(forged, "w") as zout:
+        for item in zin.namelist():
+            data = zin.read(item)
+            if item == "__meta__.npy":
+                # splice the ORIGINAL meta (wrong hash) over the
+                # tampered payload
+                blob = np.frombuffer(
+                    _json.dumps(meta, sort_keys=True).encode(),
+                    dtype=np.uint8)
+                import io
+                buf = io.BytesIO()
+                np.save(buf, blob)
+                data = buf.getvalue()
+            zout.writestr(item, data)
+    with pytest.raises(CheckpointCorruptError):
+        load_checkpoint(forged)
+
+    # version skew refuses before anything else is trusted
+    vpath = str(tmp_path / "version.npz")
+    save_checkpoint(vpath, payload, {"kind": "test"})
+    pl, mv = load_checkpoint(vpath)
+    mv["version"] = CKPT_VERSION + 1
+    blob = np.frombuffer(_json.dumps(mv, sort_keys=True).encode(),
+                         dtype=np.uint8)
+    with open(vpath, "wb") as f:
+        np.savez(f, __meta__=blob, **pl)
+    with pytest.raises(CheckpointVersionError):
+        load_checkpoint(vpath)
+
+
+def test_meta_mismatch_refuses_resume(tmp_path, problem):
+    """A checkpoint written by one solver config refuses to resume a
+    different one (different tolerance here) — typed, never silent."""
+    op, b = problem
+    be = get_backend("local")
+    d = str(tmp_path)
+    kw = dict(l=2, maxit=300)
+    be.solve(op, b, method="plcg", tol=1e-10,
+             checkpoint=CheckpointConfig(every=15, directory=d), **kw)
+    with pytest.raises(CheckpointMismatchError):
+        be.solve(op, b, method="plcg", tol=1e-8,
+                 checkpoint=CheckpointConfig(every=15, directory=d,
+                                             resume=True), **kw)
+
+
+def test_certification_catches_tampered_state(tmp_path, problem):
+    """A checkpoint whose state was altered — but whose content hash was
+    recomputed, so the format layer cannot object — fails the restore-
+    time true-residual certification."""
+    op, b = problem
+    be = get_backend("local")
+    d = str(tmp_path)
+    kw = dict(l=2, tol=1e-10, maxit=300)
+    be.solve(op, b, method="plcg",
+             checkpoint=CheckpointConfig(every=15, directory=d), **kw)
+    path = latest_checkpoint(d)
+    payload, meta = load_checkpoint(path)
+    for k, v in payload.items():
+        if v.ndim >= 1 and v.dtype == np.float64 and v.shape[-1] == op.n:
+            payload[k] = v * (1.0 + 1e-3)       # perturb the iterate
+    save_checkpoint(path, payload, meta)        # fresh, VALID hash
+    with pytest.raises(CheckpointCertificationError):
+        be.solve(op, b, method="plcg",
+                 checkpoint=CheckpointConfig(every=15, directory=d,
+                                             resume=True), **kw)
+
+
+def test_gc_keeps_newest(tmp_path, problem):
+    op, b = problem
+    be = get_backend("local")
+    d = str(tmp_path)
+    be.solve(op, b, method="plcg", l=2, tol=1e-10, maxit=300,
+             checkpoint=CheckpointConfig(every=15, directory=d, keep=2))
+    paths = list_checkpoints(d)
+    assert len(paths) <= 2
+    tots = [int(os.path.basename(p)[5:15]) for p in paths]
+    assert tots == sorted(tots)
+
+
+# --------------------------------------------------------------------------
+# Batched slab round-trip (same-substrate bitwise).
+# --------------------------------------------------------------------------
+
+def test_slab_checkpoint_roundtrip(tmp_path):
+    """Persist a mid-flight slab at a chunk boundary, reload it onto a
+    fresh template, keep solving both: bitwise-identical iterates and
+    statuses — serve workers respawn without losing in-flight work."""
+    op = Stencil2D5(16, 16)
+    B = jnp.asarray(RNG.standard_normal((op.n, 4)))
+    be = get_backend("local")
+    sig = shifts_for_operator(op, 2)
+    prog = be.make_slab_program(op, s=4, method="plcg", chunk_iters=20,
+                                l=2, sigmas=sig, tol=1e-9, maxit=800)
+    st = prog.init(B)
+    for _ in range(3):
+        st = prog.chunk(B, st)
+
+    path = str(tmp_path / "slab.npz")
+    meta = dict(s=4, method="plcg", n=int(op.n))
+    save_slab_checkpoint(path, B, st, meta)
+    B2, st2, m2 = load_slab_checkpoint(path, prog.init(B), expect_meta=meta)
+    assert m2["kind"] == "slab"
+    assert np.array_equal(np.asarray(B2), np.asarray(B))
+
+    for _ in range(30):
+        st = prog.chunk(B, st)
+        st2 = prog.chunk(B2, st2)
+    x1 = np.asarray(prog.extract(B, st).x)
+    x2 = np.asarray(prog.extract(B2, st2).x)
+    assert x1.tobytes() == x2.tobytes()
+    s1, s2 = prog.status(B, st), prog.status(B2, st2)
+    assert np.array_equal(np.asarray(s1.running), np.asarray(s2.running))
+
+    # structural mismatch is typed: different slab meta refuses
+    with pytest.raises(CheckpointMismatchError):
+        load_slab_checkpoint(path, prog.init(B),
+                             expect_meta=dict(s=8, method="plcg"))
+
+
+# --------------------------------------------------------------------------
+# shard_map substrate (subprocess: 4 fake host devices).
+# --------------------------------------------------------------------------
+
+def test_shard_map_resume_bitwise_and_elastic():
+    """Staged+unfused checkpointed solves on a 4-shard mesh: bitwise vs
+    the local virtual-shards segmented oracle, bitwise resume, and an
+    ELASTIC restore — the distributed checkpoint restored by the local
+    substrate continues bitwise (the D ring is excluded and rebuilt
+    drained; vector leaves re-place onto whatever shards restore them)."""
+    out = _run(HEADER + """
+kw = dict(l=2, tol=1e-10, maxit=300, fused_iteration=False)
+be = get_backend("shard_map", n_shards=4, reduction="staged")
+beL = get_backend("local", reduction="staged", virtual_shards=4)
+oracle = beL.solve(op, b, method="plcg",
+                   checkpoint=CheckpointConfig(every=15), **kw)
+with tempfile.TemporaryDirectory() as d:
+    full = be.solve(op, b, method="plcg",
+                    checkpoint=CheckpointConfig(every=15, directory=d), **kw)
+    resumed = be.solve(op, b, method="plcg",
+                       checkpoint=CheckpointConfig(every=15, directory=d,
+                                                   resume=True), **kw)
+    rtot = int(LAST_RESTORE[-1].meta["tot"])
+    # elastic: the DISTRIBUTED snapshot restored on the LOCAL ladder
+    res_elastic = beL.solve(op, b, method="plcg",
+                            checkpoint=CheckpointConfig(every=15, directory=d,
+                                                        resume=True), **kw)
+h_o = np.asarray(oracle.res_history)
+h_f = np.asarray(full.res_history)
+h_r = np.asarray(resumed.res_history)
+h_e = np.asarray(res_elastic.res_history)
+assert bool(full.converged) and bool(resumed.converged)
+assert np.array_equal(h_o, h_f), "staged ladder lost cross-substrate parity"
+assert rtot > 0
+assert np.array_equal(h_f[rtot:], h_r[rtot:])
+assert np.array_equal(h_f, h_r)
+assert np.array_equal(h_f[rtot:], h_e[rtot:]), "elastic restore diverged"
+print("SHARD-RESUME-OK", rtot)
+""")
+    assert "SHARD-RESUME-OK" in out
+
+
+def test_shard_map_resume_monolithic_and_fused():
+    """The other reduction/iteration configs resume bitwise against
+    their own uninterrupted runs (cross-substrate parity for these is
+    certified, not bitwise — DESIGN.md §19 honesty notes)."""
+    out = _run(HEADER + """
+for red, fused in [(None, False), ("staged", True)]:
+    be = get_backend("shard_map", n_shards=4,
+                     **({"reduction": red} if red else {}))
+    kw = dict(l=2, tol=1e-10, maxit=300, fused_iteration=fused)
+    with tempfile.TemporaryDirectory() as d:
+        full = be.solve(op, b, method="plcg",
+                        checkpoint=CheckpointConfig(every=15, directory=d),
+                        **kw)
+        resumed = be.solve(op, b, method="plcg",
+                           checkpoint=CheckpointConfig(every=15, directory=d,
+                                                       resume=True), **kw)
+    rtot = int(LAST_RESTORE[-1].meta["tot"])
+    h_f = np.asarray(full.res_history)
+    h_r = np.asarray(resumed.res_history)
+    assert bool(full.converged) and rtot > 0
+    assert np.array_equal(h_f[rtot:], h_r[rtot:]), (red, fused)
+    print("CONFIG-OK", red, fused, rtot)
+print("SHARD-RESUME2-OK")
+""")
+    assert "SHARD-RESUME2-OK" in out
+
+
+def test_checkpointed_seg_keeps_one_reduction_start():
+    """The cycle-boundary invariant's HLO footprint: the segmented
+    driver's compiled ``seg`` piece (the between-boundaries while loop)
+    still issues EXACTLY ONE tagged dot-block all-reduce per iteration —
+    checkpointing must not add collectives to the iteration body, for
+    either pipelined method."""
+    out = _run(HEADER + """
+from repro.core.chebyshev import shifts_for_operator
+from repro.parallel.distributed import (distributed_checkpointed_solve,
+                                        make_solver_mesh)
+mesh = make_solver_mesh(4)
+sig = shifts_for_operator(op, 2)
+
+def count_glred_ar(txt):
+    return sum(1 for line in txt.splitlines()
+               if (" all-reduce(" in line or " all-reduce-start(" in line)
+               and "glred_start" in line)
+
+pieces = distributed_checkpointed_solve(
+    mesh, op, jnp.asarray(b), method="plcg",
+    checkpoint=CheckpointConfig(every=15), pieces=True,
+    l=2, sigmas=sig, tol=1e-10, maxit=300)
+seg_txt = pieces["seg"].lower(pieces["b_p"], pieces["state"],
+                              pieces["arrays"]).compile().as_text()
+n = count_glred_ar(seg_txt)
+assert n == 1, f"plcg seg piece has {n} tagged reduction starts, want 1"
+int_txt = pieces["interrupt"].lower(pieces["b_p"], pieces["state"],
+                                    pieces["arrays"]).compile().as_text()
+assert count_glred_ar(int_txt) >= 1   # true-residual recompute + re-init
+
+pieces = distributed_checkpointed_solve(
+    mesh, op, jnp.asarray(b), method="pcg",
+    checkpoint=CheckpointConfig(every=15), pieces=True,
+    tol=1e-10, maxit=300)
+seg_txt = pieces["seg"].lower(pieces["b_p"], pieces["state"],
+                              pieces["arrays"]).compile().as_text()
+n = count_glred_ar(seg_txt)
+assert n == 1, f"pcg seg piece has {n} tagged reduction starts, want 1"
+print("SEG-HLO-OK")
+""")
+    assert "SEG-HLO-OK" in out

@@ -1,0 +1,149 @@
+"""Hypothesis property tests for the checkpoint format (DESIGN.md §19).
+
+The on-disk format's contract, stated as properties over ARBITRARY
+payloads rather than the solver states the integration tests use:
+
+* save -> load is bitwise lossless (arrays and meta);
+* any truncation of the file raises a typed :class:`CheckpointError`
+  (never a partial payload);
+* any single-byte corruption either raises a typed error or provably
+  changed nothing (a flip in redundant zip metadata that the reader
+  never trusts) — corrupted STATE can never load silently;
+* a foreign format version always refuses with
+  :class:`CheckpointVersionError`.
+
+``hypothesis`` is an optional test dependency (declared in
+pyproject.toml's ``test`` extra); environments without it skip this
+module instead of failing collection.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed "
+                    "(pip install -e .[test])")
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import (CKPT_VERSION, CheckpointCorruptError,
+                              CheckpointError, CheckpointVersionError,
+                              content_hash, load_checkpoint, save_checkpoint)
+
+SET = dict(max_examples=25, deadline=None)
+
+_DTYPES = [np.float64, np.float32, np.int64, np.int32, np.bool_]
+
+
+@st.composite
+def payloads(draw):
+    """A checkpoint payload: 1..5 named arrays of arbitrary small shapes
+    and mixed dtypes, deterministic from a drawn seed."""
+    n_leaves = draw(st.integers(1, 5))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    out = {}
+    for i in range(n_leaves):
+        dt = _DTYPES[draw(st.integers(0, len(_DTYPES) - 1))]
+        ndim = draw(st.integers(0, 3))
+        shape = tuple(draw(st.integers(1, 5)) for _ in range(ndim))
+        a = rng.standard_normal(shape)
+        out[f"leaf_{i:03d}"] = (a > 0) if dt is np.bool_ \
+            else a.astype(dt) if np.issubdtype(dt, np.floating) \
+            else (a * 100).astype(dt)
+    return out
+
+
+@given(payload=payloads(), tag=st.text(
+    alphabet=st.characters(min_codepoint=32, max_codepoint=126), max_size=20))
+@settings(**SET)
+def test_save_load_bitwise(tmp_path_factory, payload, tag):
+    d = tmp_path_factory.mktemp("ckpt")
+    path = str(d / "ckpt_0000000001.npz")
+    meta_in = {"kind": "prop", "tag": tag, "count": len(payload)}
+    stored = save_checkpoint(path, payload, meta_in)
+    assert stored["version"] == CKPT_VERSION
+    assert stored["sha256"] == content_hash(payload)
+    back, meta = load_checkpoint(path)
+    assert set(back) == set(payload)
+    for k in payload:
+        assert back[k].dtype == payload[k].dtype
+        assert back[k].shape == payload[k].shape
+        assert back[k].tobytes() == payload[k].tobytes()
+    assert meta["tag"] == tag and meta["count"] == len(payload)
+
+
+@given(payload=payloads(), frac=st.floats(0.01, 0.99))
+@settings(**SET)
+def test_truncation_is_typed(tmp_path_factory, payload, frac):
+    d = tmp_path_factory.mktemp("ckpt")
+    path = str(d / "ckpt_0000000001.npz")
+    save_checkpoint(path, payload, {"kind": "prop"})
+    raw = open(path, "rb").read()
+    cut = max(1, int(len(raw) * frac))
+    with open(path, "wb") as f:
+        f.write(raw[:cut])
+    with pytest.raises(CheckpointError):
+        load_checkpoint(path)
+
+
+@given(payload=payloads(), pos=st.floats(0.0, 1.0), delta=st.integers(1, 255))
+@settings(**SET)
+def test_single_byte_corruption_never_loads_silently(tmp_path_factory,
+                                                     payload, pos, delta):
+    """Flip one byte anywhere: either a typed refusal, or — when the
+    flip hit redundant zip bookkeeping the reader never trusts — a load
+    that is BITWISE identical to the original.  A changed payload or
+    meta sneaking through would fail this property."""
+    d = tmp_path_factory.mktemp("ckpt")
+    path = str(d / "ckpt_0000000001.npz")
+    save_checkpoint(path, payload, {"kind": "prop"})
+    clean, clean_meta = load_checkpoint(path)
+    raw = bytearray(open(path, "rb").read())
+    i = min(int(pos * len(raw)), len(raw) - 1)
+    raw[i] = (raw[i] + delta) % 256
+    with open(path, "wb") as f:
+        f.write(bytes(raw))
+    try:
+        back, meta = load_checkpoint(path)
+    except CheckpointError:
+        return                         # typed refusal: the contract
+    assert set(back) == set(clean)
+    for k in clean:
+        assert back[k].tobytes() == clean[k].tobytes()
+        assert back[k].dtype == clean[k].dtype
+    assert meta == clean_meta
+
+
+@given(payload=payloads(), version=st.integers(-5, 50))
+@settings(**SET)
+def test_foreign_version_refused(tmp_path_factory, payload, version):
+    if version == CKPT_VERSION:
+        version += 1
+    d = tmp_path_factory.mktemp("ckpt")
+    path = str(d / "ckpt_0000000001.npz")
+    save_checkpoint(path, payload, {"kind": "prop"})
+    _, meta = load_checkpoint(path)
+    meta["version"] = version
+    blob = np.frombuffer(json.dumps(meta, sort_keys=True).encode(),
+                         dtype=np.uint8)
+    arrays = {k: np.asarray(v) for k, v in payload.items()}
+    with open(path, "wb") as f:
+        np.savez(f, __meta__=blob, **arrays)
+    with pytest.raises(CheckpointVersionError):
+        load_checkpoint(path)
+
+
+def test_reserved_keys_rejected(tmp_path):
+    with pytest.raises(ValueError):
+        save_checkpoint(str(tmp_path / "x.npz"),
+                        {"__meta__": np.zeros(1)}, {})
+
+
+def test_missing_file_is_filenotfound(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        load_checkpoint(str(tmp_path / "nope.npz"))
+    # FileNotFoundError is deliberately NOT a CheckpointError: "no
+    # checkpoint yet" is the caller's normal cold-start signal.
+    assert not issubclass(FileNotFoundError, CheckpointCorruptError)

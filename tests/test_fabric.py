@@ -26,12 +26,14 @@ import pytest
 
 from repro.parallel.fabric import (
     ENV_HEARTBEAT,
+    SIGTERM_EXIT_CODE,
     FabricProcessError,
     FabricResult,
     FabricTimeoutError,
     free_port,
     launch_fabric,
     pick_coordinator,
+    run_resilient,
     touch_heartbeat,
 )
 
@@ -155,6 +157,138 @@ def test_persistent_bind_collision_exhausts_retries():
     with pytest.raises(FabricProcessError, match="persisted through"):
         launch_fabric(_argv_script(body), 1, timeout_s=60, poll_s=0.05,
                       max_port_retries=2)
+
+
+# ---------------------------------------------------------------------------
+# Graceful shutdown: SIGTERM flush handler + SIGKILL escalation (§19).
+# ---------------------------------------------------------------------------
+
+def test_sigterm_handler_flushes_before_exit(tmp_path):
+    # Rank 1 dies; the launcher SIGTERMs the survivor, whose installed
+    # handler must run its flush callbacks (telemetry/timeline in prod —
+    # a sentinel file here) before exiting with the distinct 143 status.
+    sentinel = tmp_path / "flushed_rank0"
+    body = (f"import sys, time\n"
+            f"from repro.parallel.fabric import install_sigterm_handler\n"
+            f"if RANK == 1:\n"
+            f"    sys.exit(7)\n"
+            f"install_sigterm_handler(\n"
+            f"    lambda: open({str(sentinel)!r}, 'w').write('flushed'))\n"
+            f"print('handler armed', flush=True)\n"
+            f"time.sleep(120)\n")
+    import os
+
+    import repro
+    src = os.path.dirname(os.path.dirname(os.path.abspath(repro.__file__)))
+    with pytest.raises(FabricProcessError, match="rank 1 of 2 exited 7"):
+        launch_fabric(_argv_script(body), 2, timeout_s=60, poll_s=0.05,
+                      env=dict(os.environ, PYTHONPATH=src),
+                      term_grace_s=5.0)
+    # The survivor was torn down via SIGTERM within the grace window, so
+    # its flush ran — the sentinel proves buffered observability state
+    # would have hit disk.
+    assert sentinel.exists() and sentinel.read_text() == "flushed"
+    assert SIGTERM_EXIT_CODE == 143
+
+
+def test_sigkill_escalation_for_sigterm_ignoring_rank(tmp_path):
+    # A rank that ignores SIGTERM (wedged in native code, masked signal)
+    # must not hang teardown: after ``term_grace_s`` the watchdog
+    # escalates to SIGKILL and the typed error still surfaces promptly.
+    body = ("import signal, sys, time\n"
+            "if RANK == 1:\n"
+            "    sys.exit(9)\n"
+            "signal.signal(signal.SIGTERM, signal.SIG_IGN)\n"
+            "print('sigterm ignored', flush=True)\n"
+            "time.sleep(120)\n")
+    t0 = time.monotonic()
+    with pytest.raises(FabricProcessError, match="rank 1 of 2 exited 9"):
+        launch_fabric(_argv_script(body), 2, timeout_s=300, poll_s=0.05,
+                      term_grace_s=0.5)
+    elapsed = time.monotonic() - t0
+    assert elapsed < 30, (f"teardown took {elapsed:.1f}s — SIGKILL "
+                          "escalation did not fire")
+
+
+# ---------------------------------------------------------------------------
+# run_resilient: respawn-and-resume orchestration (DESIGN.md §19).
+# ---------------------------------------------------------------------------
+
+def _resilient_argv(body: str):
+    """child_argv factory for run_resilient: COORD/RANK/NPROC/ATTEMPT
+    interpolated into a throwaway ``python -c`` child."""
+    def child_argv(coordinator, k, num_processes, attempt):
+        code = (body.replace("COORD", coordinator).replace("RANK", str(k))
+                .replace("NPROC", str(num_processes))
+                .replace("ATTEMPT", str(attempt)))
+        return [sys.executable, "-c", code]
+    return child_argv
+
+
+def test_run_resilient_respawns_after_one_failure():
+    # Attempt 1: rank 1 dies (the drill's killed rank).  run_resilient
+    # must tear the fabric down, record the typed failure, and relaunch
+    # the FULL group; attempt 2 succeeds.
+    body = ("import sys\n"
+            "if ATTEMPT == 1 and RANK == 1:\n"
+            "    sys.exit(11)\n"
+            "print('rank RANK attempt ATTEMPT ok', flush=True)\n")
+    rr = run_resilient(_resilient_argv(body), 2, max_failures=1,
+                       timeout_s=60, poll_s=0.05)
+    assert rr.attempts == 2
+    assert len(rr.failures) == 1
+    assert isinstance(rr.failures[0], FabricProcessError)
+    assert rr.failures[0].failed_rank == 1
+    assert rr.procs_per_attempt == [2, 2]       # no shrink: full respawn
+    assert isinstance(rr.result, FabricResult)
+    assert all("attempt 2 ok" in o for o in rr.result.outputs)
+
+
+def test_run_resilient_attempt_env_arms_first_attempt_only():
+    # The drill pattern: the chaos fault plan is injected via env on
+    # attempt 1 ONLY, so the respawned fabric runs clean.
+    body = ("import os, sys\n"
+            "if os.environ.get('FAULT_ARMED') and RANK == 0:\n"
+            "    sys.exit(13)\n"
+            "print('rank RANK clean', flush=True)\n")
+    seen = []
+
+    def attempt_env(attempt):
+        seen.append(attempt)
+        return {"FAULT_ARMED": "1"} if attempt == 1 else {}
+
+    rr = run_resilient(_resilient_argv(body), 2, max_failures=1,
+                       attempt_env=attempt_env, timeout_s=60, poll_s=0.05)
+    assert seen == [1, 2]
+    assert rr.attempts == 2 and len(rr.failures) == 1
+    assert rr.failures[0].failed_rank == 0
+    assert all("clean" in o for o in rr.result.outputs)
+
+
+def test_run_resilient_shrink_drops_to_min_processes():
+    # Degraded-capacity mode: every attempt with >1 rank fails, so the
+    # fabric shrinks one rank per failure until it reaches
+    # ``min_processes`` and succeeds there.
+    body = ("import sys\n"
+            "if NPROC > 1:\n"
+            "    sys.exit(17)\n"
+            "print('rank RANK solo ok', flush=True)\n")
+    rr = run_resilient(_resilient_argv(body), 3, max_failures=2,
+                       shrink=True, min_processes=1, timeout_s=60,
+                       poll_s=0.05)
+    assert rr.procs_per_attempt == [3, 2, 1]
+    assert rr.attempts == 3 and len(rr.failures) == 2
+    assert len(rr.result.outputs) == 1
+    assert "solo ok" in rr.result.outputs[0]
+
+
+def test_run_resilient_exhausted_budget_reraises():
+    body = "import sys; sys.exit(19)\n"
+    t0 = time.monotonic()
+    with pytest.raises(FabricProcessError, match="exited 19"):
+        run_resilient(_resilient_argv(body), 2, max_failures=1,
+                      timeout_s=60, poll_s=0.05)
+    assert time.monotonic() - t0 < 60
 
 
 # ---------------------------------------------------------------------------
